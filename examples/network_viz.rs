@@ -1,0 +1,50 @@
+//! Render the bitonic sorting network — the programmatic regeneration of
+//! the paper's Figure 2 (n = 8), for any power-of-two n.
+//!
+//! ```bash
+//! cargo run --release --offline --example network_viz -- 16
+//! ```
+
+use bitonic_tpu::sort::network::{Network, Variant};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8);
+    let net = Network::new(n);
+    println!(
+        "Bitonic sorting network, n={n}: {} phases, {} steps, {} compare-exchange ops",
+        net.log2n(),
+        net.step_count(),
+        net.compare_exchange_count()
+    );
+    println!("(paper Fig. 2 is the n=8 instance; ↑ = min-up comparator, ↓ = max-up)\n");
+
+    // Wire diagram: one column per step, one row per element.
+    let mut columns: Vec<Vec<String>> = Vec::new();
+    for step in net.steps() {
+        let mut col = vec![String::from("│"); n];
+        for (a, b, up) in net.step_pairs(step) {
+            col[a] = if up { "┌".into() } else { "└".into() };
+            col[b] = if up { "┘".into() } else { "┐".into() };
+            for wire in col.iter_mut().take(b).skip(a + 1) {
+                *wire = "┼".into();
+            }
+        }
+        columns.push(col);
+    }
+    for row in 0..n {
+        let line: Vec<&str> = columns.iter().map(|c| c[row].as_str()).collect();
+        println!("{row:>3} ─{}─", line.join("──"));
+    }
+
+    println!("\nLaunch schedules (block = 4 keys for illustration):");
+    for v in Variant::ALL {
+        let launches = net.launches(v, 4);
+        println!("  {:>9}: {:2} launches — {:?}…", v.name(), launches.len(),
+                 launches.first());
+    }
+    Ok(())
+}

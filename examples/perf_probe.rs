@@ -1,0 +1,51 @@
+//! Quick solo-run perf probe used by the §Perf pass (EXPERIMENTS.md):
+//! measures the CPU baselines back-to-back without the bench harness so
+//! regressions are visible in seconds on a noisy box.
+//!
+//! ```bash
+//! cargo run --release --offline --example perf_probe
+//! ```
+
+use std::time::Instant;
+
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let mut gen = Generator::new(1);
+    let n = 1 << 20;
+    println!("n = 2^20 u32 uniform; three runs each (ms):");
+    for run in 0..3 {
+        let data = gen.u32s(n, Distribution::Uniform);
+
+        let mut a = data.clone();
+        let t0 = Instant::now();
+        bitonic_tpu::sort::quicksort(&mut a);
+        let ours = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut b = data.clone();
+        let t0 = Instant::now();
+        b.sort_unstable();
+        let std_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut c = data.clone();
+        let t0 = Instant::now();
+        bitonic_tpu::sort::bitonic_sort(&mut c);
+        let bit = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut d = data.clone();
+        let t0 = Instant::now();
+        bitonic_tpu::sort::bitonic_sort_parallel(&mut d, 8);
+        let bitp = t0.elapsed().as_secs_f64() * 1e3;
+
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(a, d);
+        println!(
+            "  run {run}: quicksort(ours) {ours:7.1}  std {std_ms:7.1}  bitonic {bit:7.1}  bitonic-par8 {bitp:7.1}"
+        );
+    }
+    println!(
+        "cores visible: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+}

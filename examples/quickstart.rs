@@ -1,0 +1,57 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use bitonic_tpu::runtime::{spawn_device_host, Key};
+use bitonic_tpu::sort::network::{Network, Variant};
+use bitonic_tpu::sort::{bitonic_sort, is_sorted, quicksort};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Generate a workload (the paper's: uniform 32-bit integers).
+    let mut gen = Generator::new(42);
+    let keys = gen.u32s(10_000, Distribution::Uniform);
+
+    // 2. CPU baselines — the paper's two CPU columns.
+    let mut a = keys.clone();
+    quicksort(&mut a);
+    let mut b = keys.clone();
+    b.resize(keys.len().next_power_of_two(), u32::MAX);
+    bitonic_sort(&mut b);
+    b.truncate(keys.len());
+    assert_eq!(a, b, "quicksort and bitonic sort must agree");
+    println!("CPU: quicksort and bitonic sort agree on {} keys", a.len());
+
+    // 3. The bitonic network itself (paper Fig. 2 / §3.2 closed forms).
+    let net = Network::new(1 << 20);
+    println!(
+        "n=2^20 network: {} steps, {} compare-exchanges",
+        net.step_count(),
+        net.compare_exchange_count()
+    );
+    for v in Variant::ALL {
+        println!(
+            "  {:>9}: {} kernel launches at block=4096",
+            v.name(),
+            net.launches(v, 4096).len()
+        );
+    }
+
+    // 4. The device path: AOT-compiled Pallas kernels via PJRT.
+    let (handle, manifest) = spawn_device_host("artifacts")?;
+    let metas = manifest.size_classes(Variant::Optimized);
+    let meta = metas.first().expect("run `make artifacts` first");
+    println!(
+        "device: sorting a ({}, {}) batch with the '{}' artifact…",
+        meta.batch, meta.n, meta.name
+    );
+    let rows = gen.u32s(meta.batch * meta.n, Distribution::Uniform);
+    let sorted = handle.sort_u32(Key::of(meta), rows)?;
+    for r in 0..meta.batch {
+        assert!(is_sorted(&sorted[r * meta.n..(r + 1) * meta.n]));
+    }
+    println!("device: all {} rows sorted — quickstart OK", meta.batch);
+    Ok(())
+}

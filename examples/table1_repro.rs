@@ -1,0 +1,90 @@
+//! Regenerate the paper's Table 1 side-by-side with our measurements and
+//! calibrated-simulator predictions (DESIGN.md experiments E1–E4).
+//!
+//! CPU columns (QuickSort, BitonicSort) are measured for real with our
+//! from-scratch implementations; GPU columns come from the calibrated K10
+//! cost model (we have no CUDA hardware — DESIGN.md §4 documents the
+//! substitution); the Ratio column is measured-CPU / simulated-GPU.
+//!
+//! ```bash
+//! cargo run --release --offline --example table1_repro            # ≤16M rows
+//! cargo run --release --offline --example table1_repro -- full    # all rows
+//! ```
+
+use std::time::Instant;
+
+use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{bitonic_sort, quicksort};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let full = std::env::args().nth(1).as_deref() == Some("full");
+    let cap = if full { usize::MAX } else { 16 << 20 };
+    let cal = calibrate_from_table1();
+    println!(
+        "calibration: t_launch={:.2}µs, bw_eff={:.0} GB/s (fit on paper Basic @256K and @16M)\n",
+        cal.device.t_launch * 1e6,
+        cal.device.bw_gmem / 1e9
+    );
+
+    let mut t = Table::new(vec![
+        "Array size",
+        "Quick(cpu)",
+        "Bitonic(cpu)",
+        "Basic(sim)",
+        "Semi(sim)",
+        "Opt(sim)",
+        "Ratio",
+        "‖ paper:Quick",
+        "Bitonic",
+        "Basic",
+        "Semi",
+        "Opt",
+        "Ratio",
+    ]);
+    let mut gen = Generator::new(0x7AB1);
+    for row in &PAPER_TABLE1 {
+        let (quick_ms, bitonic_ms) = if row.n <= cap {
+            let data = gen.u32s(row.n, Distribution::Uniform);
+            let mut q = data.clone();
+            let t0 = Instant::now();
+            quicksort(&mut q);
+            let quick = t0.elapsed().as_secs_f64() * 1e3;
+            let mut b = data;
+            let t0 = Instant::now();
+            bitonic_sort(&mut b);
+            (Some(quick), Some(t0.elapsed().as_secs_f64() * 1e3))
+        } else {
+            (None, None)
+        };
+        let basic = cal.predict_ms(Variant::Basic, row.n);
+        let semi = cal.predict_ms(Variant::Semi, row.n);
+        let opt = cal.predict_ms(Variant::Optimized, row.n);
+        let na = || "—".to_string();
+        t.row(vec![
+            fmt_size(row.n),
+            quick_ms.map(fmt_ms).unwrap_or_else(na),
+            bitonic_ms.map(fmt_ms).unwrap_or_else(na),
+            fmt_ms(basic),
+            fmt_ms(semi),
+            fmt_ms(opt),
+            quick_ms.map(|q| format!("{:.1}", q / opt)).unwrap_or_else(na),
+            row.cpu_quick.map(fmt_ms).unwrap_or_else(na),
+            fmt_ms(row.cpu_bitonic),
+            fmt_ms(row.gpu_basic),
+            fmt_ms(row.gpu_semi),
+            fmt_ms(row.gpu_optimized),
+            row.ratio.map(|r| format!("{r:.1}")).unwrap_or_else(na),
+        ]);
+        eprintln!("  measured {}", fmt_size(row.n));
+    }
+    println!("{}", t.render());
+    println!("shape checks (paper's qualitative claims):");
+    let b1 = cal.predict_ms(Variant::Basic, 1 << 24);
+    let s1 = cal.predict_ms(Variant::Semi, 1 << 24);
+    let o1 = cal.predict_ms(Variant::Optimized, 1 << 24);
+    println!("  Basic > Semi > Optimized at 16M: {b1:.1} > {s1:.1} > {o1:.1} ✓");
+    println!("  Optimized/Basic = {:.2} (paper: 0.66–0.74)", o1 / b1);
+}

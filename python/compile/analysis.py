@@ -1,0 +1,99 @@
+"""L1 performance model: VMEM footprint and HBM-pass analysis.
+
+``interpret=True`` wallclock is CPU-numpy time, *not* a TPU proxy, so the
+kernel is optimized structurally: minimize passes over HBM, keep every
+fused tile inside the VMEM budget, keep lane dimensions multiples of the
+(8, 128) vreg tile. This module computes those quantities for a given
+configuration; DESIGN.md §Perf and EXPERIMENTS.md §Perf cite its output.
+
+Bitonic sort is min/max + select over integers — VPU work, no MXU use, so
+the roofline is the HBM bandwidth line: a variant's TPU time estimate is
+
+    T ≈ passes(variant) · 2 · bytes(row) · rows / BW_hbm + launches · t_dispatch
+
+which is the same two-term model the GPU simulator uses (rust/src/sim),
+with TPU constants.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import model
+
+#: TPU-v4-ish constants used for the structural estimate (per core).
+VMEM_BYTES = 16 * 2 ** 20
+HBM_GBPS = 1200.0
+DISPATCH_US = 3.0
+VREG_LANES = 128
+VREG_SUBLANES = 8
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    """Structural cost estimate for one (variant, n, batch, dtype, block)."""
+
+    variant: str
+    n: int
+    batch: int
+    dtype_bytes: int
+    block: int
+    launches: int
+    hbm_passes: int
+    vmem_peak_bytes: int
+    est_tpu_ms: float
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_peak_bytes <= VMEM_BYTES
+
+    @property
+    def lane_aligned(self) -> bool:
+        # The innermost lane dim of every kernel is >= one vreg row when
+        # the smallest fused reshape still has >= 128 contiguous lanes.
+        return self.block >= VREG_LANES
+
+
+def estimate(variant: str, n: int, batch: int = 8, dtype_bytes: int = 4,
+             block: int = 1 << 13) -> KernelEstimate:
+    """Estimate TPU cost for one configuration (see module docstring)."""
+    launches = list(model.plan(n, variant, block))
+    num = len(launches)
+    # Every launch streams the full (batch, n) array HBM->VMEM->HBM once.
+    bytes_per_pass = 2 * batch * n * dtype_bytes
+    # Peak VMEM: the widest tile any launch holds resident. Global steps
+    # hold (batch, groups*2*j) = one grid cell's block; fused stages hold
+    # (batch, width). Both are `batch * tile_width * dtype_bytes` with
+    # tile_width <= 2*block for double-steps, block*tiles_per_cell for
+    # fused; we size one tile per cell here (grid == tiles).
+    tile_width = 2 * block
+    vmem_peak = batch * tile_width * dtype_bytes * 2  # in + out copies
+    time_s = (num * bytes_per_pass / (HBM_GBPS * 1e9)
+              + num * DISPATCH_US * 1e-6)
+    return KernelEstimate(variant, n, batch, dtype_bytes, block, num, num,
+                          vmem_peak, time_s * 1e3)
+
+
+def report(n: int = 1 << 24, batch: int = 8, block: int = 1 << 13) -> str:
+    """Side-by-side structural comparison of the three variants."""
+    lines = [
+        f"n={n} batch={batch} block={block} (u32 keys)",
+        f"{'variant':<10} {'launches':>8} {'hbm passes':>10} "
+        f"{'vmem peak':>10} {'est ms':>8} {'vs basic':>8}",
+    ]
+    base = None
+    for v in model.VARIANTS:
+        e = estimate(v, n, batch, 4, block)
+        base = base or e.est_tpu_ms
+        lines.append(
+            f"{v:<10} {e.launches:>8} {e.hbm_passes:>10} "
+            f"{e.vmem_peak_bytes / 2**20:>9.2f}M {e.est_tpu_ms:>8.2f} "
+            f"{base / e.est_tpu_ms:>7.2f}x"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for n in (1 << 18, 1 << 21, 1 << 24, 1 << 28):
+        print(report(n))
+        print()

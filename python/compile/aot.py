@@ -1,0 +1,158 @@
+"""AOT export: lower the L2 sort functions to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Python never runs on the request path.
+
+HLO **text** — not ``lowered.compile()`` serialisation, not
+``proto.SerializeToString()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts are described by ``artifacts/manifest.tsv`` with columns::
+
+    name  variant  batch  n  dtype  descending  block  grid_cells  file
+
+The rust ``runtime::Registry`` is driven entirely by this manifest.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The artifact matrix. Kept moderate: lowering one full sort takes a few
+# seconds of trace time, and the rust side compiles each artifact once at
+# startup. Sizes beyond 2^16 work fine but bloat `make artifacts`; the
+# table-1 bench extrapolates from the simulator for the paper's huge sizes.
+SIZES = (1 << 10, 1 << 12, 1 << 14, 1 << 16)
+BATCHES = (1, 8)
+DTYPES = ("uint32",)
+QUICK_SIZES = (1 << 10,)
+
+# Extra artifacts for the paper's §6 future-work experiment (E8): other key
+# types at one representative size, plus a descending variant used by the
+# coordinator tests.
+EXTRA = (
+    ("optimized", 8, 1 << 12, "int32", False),
+    ("optimized", 8, 1 << 12, "float32", False),
+    ("optimized", 8, 1 << 12, "uint32", True),
+)
+
+# Standalone bitonic-merge artifacts (paper §3's primitive): input rows of
+# length n whose two halves are each sorted; log2(n) steps. Used by the
+# rust out-of-core hybrid sorter (sort::hybrid) to merge device-sorted
+# chunks in log depth. (n, batch) pairs; variant fixed to optimized.
+MERGES = (
+    (1 << 11, 4),
+    (1 << 12, 2),
+    (1 << 13, 2),
+    (1 << 17, 1),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(variant: str, batch: int, n: int, dtype: str,
+                  descending: bool, kind: str = "sort") -> str:
+    d = "desc" if descending else "asc"
+    return f"{kind}_{variant}_b{batch}_n{n}_{dtype}_{d}"
+
+
+def export_one(out_dir: str, variant: str, batch: int, n: int, dtype: str,
+               descending: bool, *, block: int = model.DEFAULT_BLOCK,
+               grid_cells: int = 4, kind: str = "sort") -> dict:
+    """Lower one configuration and write its .hlo.txt. Returns the
+    manifest row as a dict."""
+    name = artifact_name(variant, batch, n, dtype, descending, kind)
+    maker = model.make_sort_fn if kind == "sort" else model.make_merge_fn
+    fn = maker(variant, block=block, descending=descending,
+               grid_cells=grid_cells)
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.dtype(dtype))
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s",
+          flush=True)
+    return {
+        "name": name,
+        "kind": kind,
+        "variant": variant,
+        "batch": batch,
+        "n": n,
+        "dtype": dtype,
+        "descending": int(descending),
+        "block": min(block, n),
+        "grid_cells": grid_cells,
+        "file": name + ".hlo.txt",
+    }
+
+
+MANIFEST_COLUMNS = ("name", "kind", "variant", "batch", "n", "dtype",
+                    "descending", "block", "grid_cells", "file")
+
+
+def write_manifest(out_dir: str, rows: list[dict]) -> None:
+    path = os.path.join(out_dir, "manifest.tsv")
+    with open(path, "w") as f:
+        f.write("\t".join(MANIFEST_COLUMNS) + "\n")
+        for row in rows:
+            f.write("\t".join(str(row[c]) for c in MANIFEST_COLUMNS) + "\n")
+    print(f"wrote {path} ({len(rows)} artifacts)", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest size (CI smoke)")
+    ap.add_argument("--grid-cells", type=int, default=4,
+                    help="interpret-mode grid split per pallas_call")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    sizes = QUICK_SIZES if args.quick else SIZES
+    rows = []
+    for variant in model.VARIANTS:
+        for batch in BATCHES:
+            for n in sizes:
+                for dtype in DTYPES:
+                    rows.append(export_one(args.out_dir, variant, batch, n,
+                                           dtype, False,
+                                           grid_cells=args.grid_cells))
+    if not args.quick:
+        for variant, batch, n, dtype, desc in EXTRA:
+            rows.append(export_one(args.out_dir, variant, batch, n, dtype,
+                                   desc, grid_cells=args.grid_cells))
+        for n, batch in MERGES:
+            rows.append(export_one(args.out_dir, "optimized", batch, n,
+                                   "uint32", False,
+                                   grid_cells=args.grid_cells, kind="merge"))
+    write_manifest(args.out_dir, rows)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,290 @@
+"""Layer-1 Pallas kernels: the bitonic compare-exchange hot-spot.
+
+Three kernel families mirror the paper's three GPU implementations
+(DESIGN.md §Hardware-Adaptation maps each CUDA concept to its TPU/Pallas
+equivalent):
+
+``step`` (paper §3.3, "Basic")
+    One ``pallas_call`` per compare-exchange step — the analog of one CUDA
+    kernel launch per step with host synchronisation between launches.
+    Every call is a full read+write pass over the array.
+
+``fused_block`` (paper §4.1, optimization 1, "Semi")
+    Once the stride fits inside a VMEM tile (the TPU analog of CUDA shared
+    memory), a single ``pallas_call`` executes *all* remaining steps of the
+    phase — or, for the presort, all early phases — against the tile,
+    replacing per-step launches and global-memory round-trips.
+
+``double_step`` / register pairing (paper §4.2, optimization 2, "Optimized")
+    Two consecutive global strides are fused into one pass: each lane keeps
+    the 4 partner elements ``{i, i^j/2, i^j, i^(j|j/2)}`` live (the CUDA
+    version keeps them in registers) and applies both compare-exchanges
+    before writing back, halving the number of passes over HBM. Inside the
+    fused block kernel the same pairing halves VMEM round-trips.
+
+All kernels are *batched*: arrays have shape ``(B, N)`` and each row is
+sorted independently — this is what the rust coordinator's dynamic batcher
+exploits to pack concurrent requests into one device execution.
+
+Everything here must be lowered with ``interpret=True``: the CPU PJRT
+client used by the rust runtime cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md). ``grid_cells`` trades interpret-mode loop
+overhead against per-call working-set size; on a real TPU it would instead
+be fixed by the VMEM budget (see ``analysis.py``).
+
+Direction convention (standard ``i ^ j`` bitonic network): element ``i``
+belongs to an ascending region iff ``i & k == 0`` where ``k`` is the phase
+length. ``flip_phase`` statically flips the direction of one phase (the
+last), which turns the final ascending merge into a descending one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of grid cells a step kernel is split into. Interpret mode
+# executes grid cells as iterations of an XLA while-loop, so this is the
+# main interpret-overhead knob; on real hardware the equivalent knob is
+# "how many elements fit in VMEM" (see analysis.py).
+# §Perf L2 iteration 2: 16 → 4 measured 1.6–2.3× faster end-to-end at
+# n=2^16 with identical outputs (EXPERIMENTS.md §Perf).
+DEFAULT_GRID_CELLS = 4
+
+
+def _check_pow2(name: str, v: int) -> None:
+    if v < 1 or v & (v - 1):
+        raise ValueError(f"{name} must be a positive power of two, got {v}")
+
+
+def _groups_per_cell(num_groups: int, grid_cells: int) -> int:
+    """Split `num_groups` pair-groups into at most `grid_cells` cells."""
+    return max(1, num_groups // max(1, grid_cells))
+
+
+# ----------------------------------------------------------------------
+# Basic: one pallas_call per step (paper §3.3)
+# ----------------------------------------------------------------------
+
+
+def _step_body(x_ref, o_ref, *, k: int, two_j: int, groups: int, flip: bool):
+    """Compare-exchange `groups` pair-groups of stride j = two_j/2.
+
+    Block layout: ``(B, groups, 2, j)`` where axis 2 separates the low and
+    high partners of each pair-group. The direction of group ``g`` is
+    derived from its global base index ``g * two_j`` exactly as the CUDA
+    kernel derives it from the thread id.
+    """
+    cell = pl.program_id(0)
+    base = (cell * groups + jnp.arange(groups)) * two_j
+    up = ((base & k) == 0) ^ flip  # (groups,)
+    up = up[None, :, None]
+    lo = x_ref[:, :, 0, :]
+    hi = x_ref[:, :, 1, :]
+    mn = jnp.minimum(lo, hi)
+    mx = jnp.maximum(lo, hi)
+    o_ref[:, :, 0, :] = jnp.where(up, mn, mx)
+    o_ref[:, :, 1, :] = jnp.where(up, mx, mn)
+
+
+def step(x, k: int, j: int, *, flip: bool = False,
+         grid_cells: int = DEFAULT_GRID_CELLS):
+    """One global compare-exchange step with stride ``j``, phase ``k``.
+
+    The "Basic" building block: every invocation is one launch and one full
+    pass over the ``(B, N)`` array.
+    """
+    b, n = x.shape
+    _check_pow2("n", n)
+    _check_pow2("j", j)
+    _check_pow2("k", k)
+    if not (1 <= j < n) or j * 2 > k:
+        raise ValueError(f"invalid step: n={n} k={k} j={j}")
+    num_groups = n // (2 * j)
+    groups = _groups_per_cell(num_groups, grid_cells)
+    xr = x.reshape(b, num_groups, 2, j)
+    fn = pl.pallas_call(
+        functools.partial(_step_body, k=k, two_j=2 * j, groups=groups,
+                          flip=flip),
+        grid=(num_groups // groups,),
+        in_specs=[pl.BlockSpec((b, groups, 2, j), lambda g: (0, g, 0, 0))],
+        out_specs=pl.BlockSpec((b, groups, 2, j), lambda g: (0, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        interpret=True,
+    )
+    return fn(xr).reshape(b, n)
+
+
+# ----------------------------------------------------------------------
+# Optimization 2: two global steps in one pass (paper §4.2)
+# ----------------------------------------------------------------------
+
+
+def _double_step_body(x_ref, o_ref, *, k: int, four_j: int, groups: int,
+                      flip: bool):
+    """Strides ``2j`` then ``j`` fused; the four partners of each lane are
+    live at once (the register quartet of the paper's optimization 2).
+
+    Block layout ``(B, groups, 2, 2, j)``: axis 2 = stride-2j partner
+    selector, axis 3 = stride-j partner selector. Because ``4j <= k``
+    divides the group base, the direction is uniform within a group.
+    """
+    cell = pl.program_id(0)
+    base = (cell * groups + jnp.arange(groups)) * four_j
+    up = ((base & k) == 0) ^ flip  # (groups,)
+    up4 = up[None, :, None]
+
+    def cx(lo, hi):
+        mn = jnp.minimum(lo, hi)
+        mx = jnp.maximum(lo, hi)
+        return jnp.where(up4, mn, mx), jnp.where(up4, mx, mn)
+
+    # First compare over the 2j-stride axis (axis 2); shapes (B, groups, j).
+    lo0 = x_ref[:, :, 0, 0, :]
+    lo1 = x_ref[:, :, 0, 1, :]
+    hi0 = x_ref[:, :, 1, 0, :]
+    hi1 = x_ref[:, :, 1, 1, :]
+    n00, n10 = cx(lo0, hi0)  # stride-2j compare of sub-lane 0
+    n01, n11 = cx(lo1, hi1)  # stride-2j compare of sub-lane 1
+    # …then over the j-stride axis within each half.
+    m00, m01 = cx(n00, n01)
+    m10, m11 = cx(n10, n11)
+    o_ref[:, :, 0, 0, :] = m00
+    o_ref[:, :, 0, 1, :] = m01
+    o_ref[:, :, 1, 0, :] = m10
+    o_ref[:, :, 1, 1, :] = m11
+
+
+def double_step(x, k: int, j_hi: int, *, flip: bool = False,
+                grid_cells: int = DEFAULT_GRID_CELLS):
+    """Fused strides ``j_hi`` and ``j_hi // 2`` in a single pass."""
+    b, n = x.shape
+    _check_pow2("n", n)
+    _check_pow2("j_hi", j_hi)
+    j = j_hi // 2
+    if j < 1 or j_hi * 2 > k:
+        raise ValueError(f"invalid double step: n={n} k={k} j_hi={j_hi}")
+    num_groups = n // (4 * j)
+    groups = _groups_per_cell(num_groups, grid_cells)
+    xr = x.reshape(b, num_groups, 2, 2, j)
+    fn = pl.pallas_call(
+        functools.partial(_double_step_body, k=k, four_j=4 * j,
+                          groups=groups, flip=flip),
+        grid=(num_groups // groups,),
+        in_specs=[
+            pl.BlockSpec((b, groups, 2, 2, j), lambda g: (0, g, 0, 0, 0))
+        ],
+        out_specs=pl.BlockSpec((b, groups, 2, 2, j),
+                               lambda g: (0, g, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        interpret=True,
+    )
+    return fn(xr).reshape(b, n)
+
+
+# ----------------------------------------------------------------------
+# Optimization 1: fused in-block (VMEM) stage (paper §4.1)
+# ----------------------------------------------------------------------
+
+
+def _fused_body(x_ref, o_ref, *, width: int, phase_lo: int, phase_hi: int,
+                jmax: int, paired: bool, flip_phase: int):
+    """Run all steps with stride <= jmax of phases [phase_lo..phase_hi]
+    against a VMEM-resident tile of `width` contiguous keys per row.
+
+    The static Python loops unroll at trace time — the analog of the CUDA
+    kernel's unrolled shared-memory loop with `__syncthreads()` between
+    iterations (here: SSA data dependencies).
+    """
+    cell = pl.program_id(0)
+    b = x_ref.shape[0]
+    off = cell * width
+    y = x_ref[:, 0, :]
+
+    def cx_pass(y, k, j):
+        rows = y.reshape(b, width // (2 * j), 2, j)
+        lo = rows[:, :, 0, :]
+        hi = rows[:, :, 1, :]
+        base = off + jnp.arange(width // (2 * j)) * (2 * j)
+        up = (((base & k) == 0) ^ (k == flip_phase))[None, :, None]
+        mn = jnp.minimum(lo, hi)
+        mx = jnp.maximum(lo, hi)
+        z = jnp.stack([jnp.where(up, mn, mx), jnp.where(up, mx, mn)], axis=2)
+        return z.reshape(b, width)
+
+    def cx_pass2(y, k, j_hi):
+        # Register-paired double step inside the tile (optimization 2
+        # applied to the shared-memory stage).
+        j = j_hi // 2
+        rows = y.reshape(b, width // (4 * j), 2, 2, j)
+        base = off + jnp.arange(width // (4 * j)) * (4 * j)
+        up = (((base & k) == 0) ^ (k == flip_phase))[None, :, None]
+
+        def cx(lo, hi):
+            mn = jnp.minimum(lo, hi)
+            mx = jnp.maximum(lo, hi)
+            return jnp.where(up, mn, mx), jnp.where(up, mx, mn)
+
+        n00, n10 = cx(rows[:, :, 0, 0, :], rows[:, :, 1, 0, :])
+        n01, n11 = cx(rows[:, :, 0, 1, :], rows[:, :, 1, 1, :])
+        m00, m01 = cx(n00, n01)
+        m10, m11 = cx(n10, n11)
+        z = jnp.stack(
+            [jnp.stack([m00, m01], axis=2), jnp.stack([m10, m11], axis=2)],
+            axis=2,
+        )
+        return z.reshape(b, width)
+
+    k = phase_lo
+    while k <= phase_hi:
+        j = min(k // 2, jmax)
+        if paired:
+            while j >= 2:
+                y = cx_pass2(y, k, j)
+                j //= 4
+            if j == 1:
+                y = cx_pass(y, k, 1)
+        else:
+            while j >= 1:
+                y = cx_pass(y, k, j)
+                j //= 2
+        k *= 2
+    o_ref[:, 0, :] = y
+
+
+def fused_block(x, block: int, phase_lo: int, phase_hi: int, *,
+                paired: bool = False, flip_phase: int = 0,
+                grid_cells: int = DEFAULT_GRID_CELLS):
+    """Fused in-tile stage (optimization 1; ``paired=True`` adds opt 2).
+
+    Runs, for each phase ``k`` in ``[phase_lo .. phase_hi]`` (powers of
+    two), every step with stride ``<= block // 2`` out of a VMEM tile.
+    ``phase_lo == 2`` with ``phase_hi == block`` is the presort that fully
+    sorts each tile; ``phase_lo == phase_hi == k`` is the in-tile tail of a
+    later phase.
+    """
+    b, n = x.shape
+    _check_pow2("n", n)
+    _check_pow2("block", block)
+    if block > n:
+        raise ValueError(f"block {block} larger than row {n}")
+    # A grid cell may cover several contiguous tiles; strides stay within
+    # tiles, directions are derived from global indices, so fusing tiles
+    # into one cell is semantics-preserving.
+    tiles_per_cell = _groups_per_cell(n // block, grid_cells)
+    width = tiles_per_cell * block
+    xr = x.reshape(b, n // width, width)
+    fn = pl.pallas_call(
+        functools.partial(_fused_body, width=width, phase_lo=phase_lo,
+                          phase_hi=phase_hi, jmax=block // 2, paired=paired,
+                          flip_phase=flip_phase),
+        grid=(n // width,),
+        in_specs=[pl.BlockSpec((b, 1, width), lambda g: (0, g, 0))],
+        out_specs=pl.BlockSpec((b, 1, width), lambda g: (0, g, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        interpret=True,
+    )
+    return fn(xr).reshape(b, n)

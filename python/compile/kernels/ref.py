@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracle for the Pallas bitonic kernels.
+
+Two independent references:
+
+* :func:`ref_step` / :func:`ref_sort` — the textbook ``i ^ j`` bitonic
+  network written with plain ``jnp`` ops (no Pallas). Every kernel variant
+  must match it step-for-step, which localises a failure to a single
+  (phase, stride) pair.
+* ``jnp.sort`` — the end-to-end oracle; also what the hypothesis sweeps in
+  ``python/tests`` compare against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_step(x, k: int, j: int, *, flip: bool = False):
+    """One compare-exchange step of the bitonic network on ``(B, N)`` rows.
+
+    Pairs are ``(i, i ^ j)``; element ``i`` ascends iff ``i & k == 0``
+    (xor ``flip``). Matches ``kernels.bitonic.step`` bit-for-bit.
+    """
+    b, n = x.shape
+    xr = x.reshape(b, n // (2 * j), 2, j)
+    lo = xr[:, :, 0, :]
+    hi = xr[:, :, 1, :]
+    base = jnp.arange(n // (2 * j)) * (2 * j)
+    up = (((base & k) == 0) ^ flip)[None, :, None]
+    mn = jnp.minimum(lo, hi)
+    mx = jnp.maximum(lo, hi)
+    out = jnp.stack([jnp.where(up, mn, mx), jnp.where(up, mx, mn)], axis=2)
+    return out.reshape(b, n)
+
+
+def ref_sort(x, *, descending: bool = False):
+    """Full bitonic sort of each row of ``(B, N)``, N a power of two."""
+    b, n = x.shape
+    del b
+    if n & (n - 1):
+        raise ValueError(f"row length must be a power of two, got {n}")
+    k = 2
+    while k <= n:
+        flip = descending and k == n
+        j = k // 2
+        while j >= 1:
+            x = ref_step(x, k, j, flip=flip)
+            j //= 2
+        k *= 2
+    return x

@@ -1,0 +1,258 @@
+"""Layer-2 JAX model: the full bitonic sorting network composed from the
+Layer-1 Pallas kernels.
+
+A *plan* is the sequence of launches (pallas_calls) a variant executes for
+a given row length — the Python mirror of ``rust/src/sort/network.rs``
+``Network::launches`` (the two enumerations are asserted equal in tests on
+both sides via the closed forms). ``sort()`` folds the plan over the input.
+
+Variants (paper Table 1 columns):
+
+* ``basic``      — §3.3: one launch per compare-exchange step.
+* ``semi``       — §4.1 (optimization 1): in-VMEM fused stages.
+* ``optimized``  — §4.1 + §4.2 (optimizations 1 and 2): fused stages plus
+                   register-paired double steps for the global stage.
+
+The compute graph is deliberately *unrolled* (a Python loop over launches,
+not ``lax.fori_loop``): every step has different static strides/shapes, and
+unrolling lets XLA see and fuse the whole network. See EXPERIMENTS.md §Perf
+for the measured effect.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic as kb
+
+VARIANTS = ("basic", "semi", "optimized")
+
+#: Default VMEM tile width (keys per row per tile) for the fused stages.
+#: §Perf L1 iteration 1: 256 → 4096 cut interpret-mode launches ~2× and
+#: measured 2.3–3.6× faster at n=2^16 (EXPERIMENTS.md §Perf); 4096 u32
+#: keys/row × batch 8 × in+out = 256 KiB — 1.6% of a TPU core's 16 MiB
+#: VMEM (analysis.py), and exactly the K10's 48 KiB/2/4B shared-memory
+#: tile from the paper's own configuration.
+DEFAULT_BLOCK = 4096
+
+
+# ----------------------------------------------------------------------
+# Launch plan
+# ----------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GlobalStep:
+    """One global compare-exchange pass (paper §3.3)."""
+
+    phase_len: int
+    stride: int
+
+
+@dataclass(frozen=True)
+class GlobalDoubleStep:
+    """Two register-paired global steps in one pass (paper §4.2)."""
+
+    phase_len: int
+    stride_hi: int
+
+
+@dataclass(frozen=True)
+class BlockFused:
+    """In-VMEM fused stage covering phases [phase_lo..phase_hi] (§4.1)."""
+
+    phase_lo: int
+    phase_hi: int
+    stride_max: int
+    paired: bool
+
+
+Launch = GlobalStep | GlobalDoubleStep | BlockFused
+
+
+def plan(n: int, variant: str, block: int = DEFAULT_BLOCK) -> Iterator[Launch]:
+    """The launch schedule for sorting rows of length ``n``.
+
+    Mirrors ``rust/src/sort/network.rs::Network::launches`` exactly.
+    """
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"n must be a power of two >= 2, got {n}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    block = min(block, n)
+
+    if variant == "basic":
+        k = 2
+        while k <= n:
+            j = k // 2
+            while j >= 1:
+                yield GlobalStep(k, j)
+                j //= 2
+            k *= 2
+        return
+
+    paired = variant == "optimized"
+    # Presort: every phase up to `block` runs inside the tile.
+    yield BlockFused(2, block, block // 2, paired)
+    k = 2 * block
+    while k <= n:
+        j = k // 2
+        if paired:
+            while j >= 2 * block:
+                yield GlobalDoubleStep(k, j)
+                j //= 4
+        while j >= block:
+            yield GlobalStep(k, j)
+            j //= 2
+        yield BlockFused(k, k, block // 2, paired)
+        k *= 2
+
+
+def launch_counts(n: int, variant: str, block: int = DEFAULT_BLOCK):
+    """(launches, global_passes) — the two quantities the paper optimizes.
+
+    Every launch is exactly one read+write pass over the array, so the two
+    numbers coincide; they are reported separately because the simulator
+    charges them differently (latency vs bandwidth).
+    """
+    launches = list(plan(n, variant, block))
+    return len(launches), len(launches)
+
+
+# ----------------------------------------------------------------------
+# Sort
+# ----------------------------------------------------------------------
+
+
+def sort(x, variant: str = "optimized", *, block: int = DEFAULT_BLOCK,
+         descending: bool = False, grid_cells: int = kb.DEFAULT_GRID_CELLS):
+    """Sort each row of ``(B, N)`` ascending (or descending).
+
+    N must be a power of two; the rust coordinator pads requests with
+    ``MAX_KEY`` before dispatch, so the compiled artifact only ever sees
+    power-of-two rows.
+    """
+    b, n = x.shape
+    del b
+    flip_phase = n if descending else 0
+    for launch in plan(n, variant, block):
+        if isinstance(launch, GlobalStep):
+            x = kb.step(x, launch.phase_len, launch.stride,
+                        flip=descending and launch.phase_len == n,
+                        grid_cells=grid_cells)
+        elif isinstance(launch, GlobalDoubleStep):
+            x = kb.double_step(x, launch.phase_len, launch.stride_hi,
+                               flip=descending and launch.phase_len == n,
+                               grid_cells=grid_cells)
+        else:
+            x = kb.fused_block(x, launch.stride_max * 2, launch.phase_lo,
+                               launch.phase_hi, paired=launch.paired,
+                               flip_phase=flip_phase,
+                               grid_cells=grid_cells)
+    return x
+
+
+def make_sort_fn(variant: str, *, block: int = DEFAULT_BLOCK,
+                 descending: bool = False,
+                 grid_cells: int = kb.DEFAULT_GRID_CELLS):
+    """A jit-able ``x -> (sorted,)`` closure for AOT export.
+
+    Returns a 1-tuple because the HLO interchange uses ``return_tuple=True``
+    (the rust side unwraps with ``to_tuple1``).
+    """
+
+    def fn(x):
+        return (sort(x, variant, block=block, descending=descending,
+                     grid_cells=grid_cells),)
+
+    fn.__name__ = f"bitonic_sort_{variant}"
+    return fn
+
+
+# ----------------------------------------------------------------------
+# Bitonic merge (the paper §3's core primitive, exported standalone)
+# ----------------------------------------------------------------------
+
+
+def merge_plan(n: int, variant: str, block: int = DEFAULT_BLOCK):
+    """Launches of the *final phase only* (k = n): merging one bitonic
+    row of length n into sorted order. log2(n) steps instead of the full
+    network's k(k+1)/2 — this is what makes merge trees cheap."""
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"n must be a power of two >= 2, got {n}")
+    block = min(block, n)
+    k = n
+    j = k // 2
+    paired = variant == "optimized"
+    if variant == "basic":
+        while j >= 1:
+            yield GlobalStep(k, j)
+            j //= 2
+        return
+    if paired:
+        while j >= 2 * block:
+            yield GlobalDoubleStep(k, j)
+            j //= 4
+    while j >= block:
+        yield GlobalStep(k, j)
+        j //= 2
+    yield BlockFused(k, k, block // 2, paired)
+
+
+def merge_sorted_halves(x, variant: str = "optimized", *,
+                        block: int = DEFAULT_BLOCK, descending: bool = False,
+                        grid_cells: int = kb.DEFAULT_GRID_CELLS):
+    """Merge rows whose two halves are each sorted ascending.
+
+    Reverses the second half (making each row bitonic by construction —
+    the paper §3.1's definition) and runs the final-phase merge. This is
+    the primitive behind the rust `sort::hybrid` out-of-core sorter:
+    device-sorted chunks are merged pairwise in log-depth instead of
+    re-sorting, at log2(n) steps per level instead of k(k+1)/2.
+    """
+    b, n = x.shape
+    half = n // 2
+    x = jnp.concatenate([x[:, :half], x[:, half:][:, ::-1]], axis=1)
+    flip_phase = n if descending else 0
+    for launch in merge_plan(n, variant, block):
+        if isinstance(launch, GlobalStep):
+            x = kb.step(x, launch.phase_len, launch.stride, flip=descending,
+                        grid_cells=grid_cells)
+        elif isinstance(launch, GlobalDoubleStep):
+            x = kb.double_step(x, launch.phase_len, launch.stride_hi,
+                               flip=descending, grid_cells=grid_cells)
+        else:
+            x = kb.fused_block(x, launch.stride_max * 2, launch.phase_lo,
+                               launch.phase_hi, paired=launch.paired,
+                               flip_phase=flip_phase, grid_cells=grid_cells)
+    return x
+
+
+def make_merge_fn(variant: str, *, block: int = DEFAULT_BLOCK,
+                  descending: bool = False,
+                  grid_cells: int = kb.DEFAULT_GRID_CELLS):
+    """Jit-able ``x -> (merged,)`` closure for AOT export (1-tuple, like
+    make_sort_fn)."""
+
+    def fn(x):
+        return (merge_sorted_halves(x, variant, block=block,
+                                    descending=descending,
+                                    grid_cells=grid_cells),)
+
+    fn.__name__ = f"bitonic_merge_{variant}"
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def jitted(variant: str, batch: int, n: int, dtype: str = "uint32", *,
+           block: int = DEFAULT_BLOCK, descending: bool = False):
+    """Compiled sort for a concrete (variant, batch, n, dtype) — used by
+    the python test-suite; the rust runtime uses the AOT artifacts instead."""
+    fn = make_sort_fn(variant, block=block, descending=descending)
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.dtype(dtype))
+    return jax.jit(fn).lower(spec).compile()

@@ -1,0 +1,26 @@
+"""Shared pytest fixtures/helpers for the kernel test-suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is launched from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xB170)
+
+
+def random_rows(rng, b, n, dtype):
+    """(b, n) random array of the given dtype, full key range."""
+    if dtype == np.uint32:
+        return rng.integers(0, 2 ** 32, size=(b, n), dtype=np.uint32)
+    if dtype == np.int32:
+        return rng.integers(-(2 ** 31), 2 ** 31, size=(b, n), dtype=np.int32)
+    if dtype == np.float32:
+        return (rng.standard_normal(size=(b, n)) * 1e6).astype(np.float32)
+    raise ValueError(dtype)

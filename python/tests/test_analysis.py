@@ -1,0 +1,54 @@
+"""Structural perf-model tests (analysis.py) — the L1 optimization
+targets the §Perf pass verifies (DESIGN.md §7)."""
+
+import pytest
+
+from compile import analysis, model
+
+
+def test_launch_counts_match_plan():
+    for variant in model.VARIANTS:
+        e = analysis.estimate(variant, 1 << 20, batch=8, block=1 << 13)
+        assert e.launches == len(list(model.plan(1 << 20, variant, 1 << 13)))
+
+
+def test_variant_ordering():
+    for n in (1 << 18, 1 << 24, 1 << 28):
+        basic = analysis.estimate("basic", n)
+        semi = analysis.estimate("semi", n)
+        opt = analysis.estimate("optimized", n)
+        assert basic.hbm_passes > semi.hbm_passes > opt.hbm_passes
+        assert basic.est_tpu_ms > semi.est_tpu_ms > opt.est_tpu_ms
+
+
+def test_basic_pass_closed_form():
+    # k(k+1)/2 passes for Basic.
+    for k in range(10, 26, 4):
+        e = analysis.estimate("basic", 1 << k)
+        assert e.hbm_passes == k * (k + 1) // 2
+
+
+def test_optimized_pass_count_near_linear_in_logn():
+    # With block 2^13 the optimized schedule should be O(log n) passes for
+    # the sizes of interest — far below k(k+1)/2.
+    k = 24
+    e = analysis.estimate("optimized", 1 << k, block=1 << 13)
+    assert e.hbm_passes < 3 * k
+
+
+def test_vmem_budget_respected_at_default_block():
+    for variant in model.VARIANTS:
+        e = analysis.estimate(variant, 1 << 24, batch=8, block=1 << 13)
+        assert e.vmem_ok, f"{variant}: {e.vmem_peak_bytes} bytes"
+        assert e.lane_aligned
+
+
+def test_vmem_violation_detected():
+    e = analysis.estimate("optimized", 1 << 24, batch=64, block=1 << 20)
+    assert not e.vmem_ok
+
+
+def test_report_renders():
+    out = analysis.report(1 << 20)
+    assert "basic" in out and "optimized" in out
+    assert "vs basic" in out

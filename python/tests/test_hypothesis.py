@@ -1,0 +1,98 @@
+"""Hypothesis sweeps: shapes × dtypes × data against numpy's sort oracle.
+
+The deadline is disabled because pallas interpret mode pays a trace+compile
+cost per fresh shape that dwarfs hypothesis's default budget.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SLOW = settings(deadline=None, max_examples=12)
+
+
+def log2_sizes(lo=1, hi=10):
+    return st.integers(lo, hi).map(lambda e: 1 << e)
+
+
+@st.composite
+def rows(draw, dtype=np.uint32, max_log2=9):
+    b = draw(st.integers(1, 3))
+    n = draw(log2_sizes(1, max_log2))
+    if dtype == np.uint32:
+        elems = st.integers(0, 2 ** 32 - 1)
+    elif dtype == np.int32:
+        elems = st.integers(-(2 ** 31), 2 ** 31 - 1)
+    else:
+        # allow_subnormal=False: XLA CPU flushes subnormals to zero inside
+        # min/max (FTZ), which would spuriously fail the exact-equality
+        # oracle. Finite normal floats only — documented in DESIGN.md §6.
+        bound = float(np.finfo(np.float32).max)
+        elems = st.floats(-bound, bound, allow_nan=False, width=32,
+                          allow_subnormal=False)
+    data = draw(
+        st.lists(st.lists(elems, min_size=n, max_size=n), min_size=b, max_size=b)
+    )
+    return np.asarray(data, dtype=dtype)
+
+
+@SLOW
+@given(x=rows())
+def test_ref_sort_is_a_sort(x):
+    got = np.asarray(ref.ref_sort(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+
+@SLOW
+@given(x=rows(), variant=st.sampled_from(model.VARIANTS),
+       block=st.sampled_from([4, 32, 256]))
+def test_variants_sort_u32(x, variant, block):
+    got = np.asarray(model.sort(jnp.asarray(x), variant,
+                                block=min(block, x.shape[1])))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+
+@SLOW
+@given(x=rows(dtype=np.int32, max_log2=8))
+def test_optimized_sorts_i32(x):
+    got = np.asarray(model.sort(jnp.asarray(x), "optimized",
+                                block=min(32, x.shape[1])))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+
+@SLOW
+@given(x=rows(dtype=np.float32, max_log2=8))
+def test_optimized_sorts_f32(x):
+    got = np.asarray(model.sort(jnp.asarray(x), "optimized",
+                                block=min(32, x.shape[1])))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+
+@SLOW
+@given(x=rows(max_log2=8), variant=st.sampled_from(model.VARIANTS))
+def test_descending_is_reversed_ascending(x, variant):
+    block = min(32, x.shape[1])
+    asc = np.asarray(model.sort(jnp.asarray(x), variant, block=block))
+    desc = np.asarray(model.sort(jnp.asarray(x), variant, block=block,
+                                 descending=True))
+    np.testing.assert_array_equal(desc, asc[:, ::-1])
+
+
+@SLOW
+@given(x=rows(max_log2=7))
+def test_idempotent(x):
+    once = model.sort(jnp.asarray(x), "optimized", block=32)
+    twice = model.sort(once, "optimized", block=32)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@SLOW
+@given(bits=st.integers(0, 2 ** 16 - 1))
+def test_zero_one_principle_n16(bits):
+    """Knuth's 0-1 principle on the optimized variant at n=16."""
+    x = np.asarray([[(bits >> i) & 1 for i in range(16)]], dtype=np.uint32)
+    got = np.asarray(model.sort(jnp.asarray(x), "optimized", block=8))
+    np.testing.assert_array_equal(got, np.sort(x, axis=1))

@@ -1,0 +1,128 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: a failure here
+localises to a single (kernel, phase, stride) triple.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import bitonic as kb
+from compile.kernels import ref
+
+from .conftest import random_rows
+
+
+def all_steps(n):
+    """(k, j) pairs of the full network on n keys."""
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+class TestStepKernel:
+    @pytest.mark.parametrize("n", [2, 8, 64, 512])
+    @pytest.mark.parametrize("b", [1, 3])
+    def test_matches_ref_on_every_step(self, rng, n, b):
+        x = random_rows(rng, b, n, np.uint32)
+        for k, j in all_steps(n):
+            got = kb.step(jnp.asarray(x), k, j)
+            want = ref.ref_step(jnp.asarray(x), k, j)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=f"k={k} j={j}")
+
+    def test_flip_inverts_direction(self, rng):
+        x = random_rows(rng, 2, 64, np.uint32)
+        for k, j in all_steps(64):
+            got = kb.step(jnp.asarray(x), k, j, flip=True)
+            want = ref.ref_step(jnp.asarray(x), k, j, flip=True)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("grid_cells", [1, 4, 64])
+    def test_grid_split_is_semantics_preserving(self, rng, grid_cells):
+        x = random_rows(rng, 2, 1024, np.uint32)
+        for k, j in [(1024, 512), (256, 32), (8, 4)]:
+            got = kb.step(jnp.asarray(x), k, j, grid_cells=grid_cells)
+            want = ref.ref_step(jnp.asarray(x), k, j)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=f"cells={grid_cells} k={k} j={j}")
+
+    def test_rejects_bad_shapes(self):
+        x = jnp.zeros((1, 96), jnp.uint32)  # not a power of two
+        with pytest.raises(ValueError):
+            kb.step(x, 4, 2)
+        x = jnp.zeros((1, 64), jnp.uint32)
+        with pytest.raises(ValueError):
+            kb.step(x, 4, 4)  # j*2 > k
+
+
+class TestDoubleStepKernel:
+    @pytest.mark.parametrize("n", [8, 128, 1024])
+    def test_equals_two_single_steps(self, rng, n):
+        x = random_rows(rng, 2, n, np.uint32)
+        for k, j in all_steps(n):
+            if j < 2 or 2 * j > k:
+                continue
+            got = kb.double_step(jnp.asarray(x), k, j)
+            want = ref.ref_step(ref.ref_step(jnp.asarray(x), k, j), k, j // 2)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=f"k={k} j_hi={j}")
+
+    def test_flip(self, rng):
+        x = random_rows(rng, 1, 256, np.uint32)
+        got = kb.double_step(jnp.asarray(x), 256, 128, flip=True)
+        want = ref.ref_step(ref.ref_step(jnp.asarray(x), 256, 128, flip=True),
+                            256, 64, flip=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_rejects_j1(self):
+        with pytest.raises(ValueError):
+            kb.double_step(jnp.zeros((1, 8), jnp.uint32), 8, 1)
+
+
+class TestFusedBlockKernel:
+    @pytest.mark.parametrize("block", [4, 16, 64])
+    def test_presort_equals_ref_prefix(self, rng, block):
+        """Presort = all phases 2..block of the reference network."""
+        n, b = 256, 2
+        x = random_rows(rng, b, n, np.uint32)
+        got = np.asarray(kb.fused_block(jnp.asarray(x), block, 2, block))
+        want = jnp.asarray(x)
+        k = 2
+        while k <= block:
+            j = k // 2
+            while j >= 1:
+                want = ref.ref_step(want, k, j)
+                j //= 2
+            k *= 2
+        np.testing.assert_array_equal(got, np.asarray(want))
+
+    @pytest.mark.parametrize("paired", [False, True])
+    def test_phase_tail_equals_ref(self, rng, paired):
+        """BlockFused(k, k) = steps j=block/2..1 of phase k."""
+        n, block, k = 512, 32, 512
+        x = random_rows(rng, 1, n, np.uint32)
+        got = np.asarray(kb.fused_block(jnp.asarray(x), block, k, k,
+                                        paired=paired))
+        want = jnp.asarray(x)
+        j = block // 2
+        while j >= 1:
+            want = ref.ref_step(want, k, j)
+            j //= 2
+        np.testing.assert_array_equal(got, np.asarray(want),
+                                      err_msg=f"paired={paired}")
+
+    def test_paired_presort_equals_unpaired(self, rng):
+        x = random_rows(rng, 2, 512, np.uint32)
+        a = np.asarray(kb.fused_block(jnp.asarray(x), 64, 2, 64, paired=False))
+        b = np.asarray(kb.fused_block(jnp.asarray(x), 64, 2, 64, paired=True))
+        np.testing.assert_array_equal(a, b)
+
+    def test_rejects_oversized_block(self):
+        with pytest.raises(ValueError):
+            kb.fused_block(jnp.zeros((1, 8), jnp.uint32), 16, 2, 16)

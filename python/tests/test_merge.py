@@ -1,0 +1,81 @@
+"""Bitonic-merge primitive (paper §3's core; used by rust sort::hybrid)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+from .conftest import random_rows
+
+
+def sorted_halves(rng, b, n, dtype=np.uint32):
+    a = np.sort(random_rows(rng, b, n // 2, dtype), axis=1)
+    c = np.sort(random_rows(rng, b, n // 2, dtype), axis=1)
+    return np.concatenate([a, c], axis=1)
+
+
+class TestMergePlan:
+    def test_log_depth(self):
+        # The whole point: log2(n) steps for basic, not k(k+1)/2.
+        for logn in range(1, 20):
+            assert len(list(model.merge_plan(1 << logn, "basic"))) == logn
+
+    def test_fewer_launches_than_full_sort(self):
+        n = 1 << 16
+        merge = len(list(model.merge_plan(n, "optimized")))
+        sort = len(list(model.plan(n, "optimized")))
+        assert merge < sort / 3
+
+    def test_rejects_bad_n(self):
+        with pytest.raises(ValueError):
+            list(model.merge_plan(100, "basic"))
+
+
+class TestMerge:
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    @pytest.mark.parametrize("b,n", [(1, 2), (1, 64), (3, 512), (1, 4096)])
+    def test_merges_sorted_halves(self, rng, variant, b, n):
+        x = sorted_halves(rng, b, n)
+        got = np.asarray(model.merge_sorted_halves(
+            jnp.asarray(x), variant, block=min(256, n)))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+    def test_descending(self, rng):
+        x = sorted_halves(rng, 2, 256)
+        got = np.asarray(model.merge_sorted_halves(
+            jnp.asarray(x), "optimized", block=64, descending=True))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1)[:, ::-1])
+
+    def test_unequal_content_halves(self, rng):
+        # One half all-small, one all-large (merge-tree worst case for
+        # naive split points; trivial for a bitonic merge).
+        b, n = 2, 512
+        lo = np.sort(random_rows(rng, b, n // 2, np.uint32) % 1000, axis=1)
+        hi = np.sort(random_rows(rng, b, n // 2, np.uint32) % 1000 + 10_000,
+                     axis=1)
+        x = np.concatenate([hi.astype(np.uint32), lo.astype(np.uint32)],
+                           axis=1)
+        got = np.asarray(model.merge_sorted_halves(jnp.asarray(x),
+                                                   "optimized", block=64))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+    def test_padding_with_max_preserved(self, rng):
+        # Hybrid sorter pads the tail chunk with MAX before merging.
+        n = 256
+        x = sorted_halves(rng, 1, n)
+        x[:, n - 32:] = np.uint32(0xFFFFFFFF)  # still sorted halves
+        got = np.asarray(model.merge_sorted_halves(jnp.asarray(x),
+                                                   "optimized", block=64))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+        assert (got[:, -32:] == 0xFFFFFFFF).all()
+
+    def test_merge_of_device_sorted_chunks_roundtrip(self, rng):
+        # Full hybrid pipeline in miniature: sort two chunks, merge them.
+        b, chunk = 1, 128
+        raw = random_rows(rng, b, 2 * chunk, np.uint32)
+        s1 = model.sort(jnp.asarray(raw[:, :chunk]), "optimized", block=64)
+        s2 = model.sort(jnp.asarray(raw[:, chunk:]), "optimized", block=64)
+        x = jnp.concatenate([s1, s2], axis=1)
+        got = np.asarray(model.merge_sorted_halves(x, "optimized", block=64))
+        np.testing.assert_array_equal(got, np.sort(raw, axis=1))

@@ -1,0 +1,134 @@
+"""L2 model correctness: full sorts per variant vs jnp.sort / numpy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import random_rows
+
+
+class TestPlan:
+    def test_basic_launch_count_closed_form(self):
+        # Paper §3.2: k(k+1)/2 rounds = launches for Basic.
+        for logn in range(1, 16):
+            n = 1 << logn
+            launches = list(model.plan(n, "basic"))
+            assert len(launches) == logn * (logn + 1) // 2
+
+    def test_ordering_basic_ge_semi_ge_optimized(self):
+        for n in [1 << 10, 1 << 14, 1 << 18]:
+            counts = {v: len(list(model.plan(n, v))) for v in model.VARIANTS}
+            assert counts["basic"] > counts["semi"] >= counts["optimized"]
+
+    def test_plans_cover_every_step_exactly_once(self):
+        # Mirror of the rust test: the multiset of (k, j) covered must
+        # equal the full network for every variant.
+        n, block = 1 << 12, 64
+        want = []
+        k = 2
+        while k <= n:
+            j = k // 2
+            while j >= 1:
+                want.append((k, j))
+                j //= 2
+            k *= 2
+        for variant in model.VARIANTS:
+            covered = []
+            for l in model.plan(n, variant, block):
+                if isinstance(l, model.GlobalStep):
+                    covered.append((l.phase_len, l.stride))
+                elif isinstance(l, model.GlobalDoubleStep):
+                    covered.append((l.phase_len, l.stride_hi))
+                    covered.append((l.phase_len, l.stride_hi // 2))
+                else:
+                    k = l.phase_lo
+                    while k <= l.phase_hi:
+                        j = min(k // 2, l.stride_max)
+                        while j >= 1:
+                            covered.append((k, j))
+                            j //= 2
+                        k *= 2
+            assert sorted(covered) == sorted(want), variant
+
+    def test_rejects_bad_input(self):
+        with pytest.raises(ValueError):
+            list(model.plan(100, "basic"))
+        with pytest.raises(ValueError):
+            list(model.plan(64, "wat"))
+
+
+class TestSort:
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    @pytest.mark.parametrize("b,n", [(1, 2), (1, 8), (2, 256), (3, 1024)])
+    def test_sorts_uniform_u32(self, rng, variant, b, n):
+        x = random_rows(rng, b, n, np.uint32)
+        got = np.asarray(model.sort(jnp.asarray(x), variant,
+                                    block=min(64, n)))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    def test_descending(self, rng, variant):
+        x = random_rows(rng, 2, 512, np.uint32)
+        got = np.asarray(model.sort(jnp.asarray(x), variant, block=64,
+                                    descending=True))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1)[:, ::-1])
+
+    @pytest.mark.parametrize("dtype", [np.int32, np.float32])
+    def test_other_dtypes(self, rng, dtype):
+        x = random_rows(rng, 2, 256, dtype)
+        got = np.asarray(model.sort(jnp.asarray(x), "optimized", block=64))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+    def test_rows_sorted_independently(self, rng):
+        """Batch independence: sorting (B,N) == sorting each row alone."""
+        x = random_rows(rng, 4, 256, np.uint32)
+        batched = np.asarray(model.sort(jnp.asarray(x), "optimized", block=64))
+        for i in range(4):
+            alone = np.asarray(model.sort(jnp.asarray(x[i:i + 1]),
+                                          "optimized", block=64))
+            np.testing.assert_array_equal(batched[i:i + 1], alone)
+
+    @pytest.mark.parametrize("variant", model.VARIANTS)
+    def test_matches_ref_network_exactly(self, rng, variant):
+        """Stronger than sortedness: identical to the reference network
+        (same comparator set ⇒ identical output for any input)."""
+        x = random_rows(rng, 2, 512, np.uint32)
+        got = np.asarray(model.sort(jnp.asarray(x), variant, block=32))
+        want = np.asarray(ref.ref_sort(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_block_size_invariance(self, rng):
+        x = random_rows(rng, 1, 1024, np.uint32)
+        outs = [
+            np.asarray(model.sort(jnp.asarray(x), "optimized", block=blk))
+            for blk in (4, 32, 256, 1024)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_duplicate_heavy_input(self, rng):
+        x = (rng.integers(0, 4, size=(2, 512)) * 1000).astype(np.uint32)
+        got = np.asarray(model.sort(jnp.asarray(x), "semi", block=64))
+        np.testing.assert_array_equal(got, np.sort(x, axis=1))
+
+    def test_already_sorted_and_reverse(self):
+        x = np.arange(512, dtype=np.uint32)[None, :]
+        got = np.asarray(model.sort(jnp.asarray(x), "optimized", block=64))
+        np.testing.assert_array_equal(got, x)
+        got = np.asarray(model.sort(jnp.asarray(x[:, ::-1]), "optimized",
+                                    block=64))
+        np.testing.assert_array_equal(got, x)
+
+    def test_padding_semantics(self, rng):
+        """MAX-padding then truncation = sorting the prefix (what the rust
+        router relies on)."""
+        x = random_rows(rng, 1, 100, np.uint32)
+        padded = np.full((1, 128), np.uint32(0xFFFFFFFF))
+        padded[:, :100] = x
+        got = np.asarray(model.sort(jnp.asarray(padded), "optimized",
+                                    block=32))
+        np.testing.assert_array_equal(got[:, :100], np.sort(x, axis=1))
+        assert (got[:, 100:] == 0xFFFFFFFF).all()

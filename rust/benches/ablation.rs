@@ -1,0 +1,141 @@
+//! Ablation study (DESIGN.md E7): the two optimizations in isolation and
+//! combination — on the calibrated simulator (the paper's setting) and on
+//! the real measured artifact path (PJRT CPU, interpret-mode Pallas) —
+//! plus the shared-tile block-size sweep.
+//!
+//! "semi" = optimization 1 only; "optimized" = 1 + 2. Optimization 2 alone
+//! (double-steps without the shared-memory stage) is also modelled here by
+//! a custom schedule to complete the 2×2 grid.
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::runtime::{spawn_device_host, Dtype, Key};
+use bitonic_tpu::sim::{calibrate_from_table1, simulate};
+use bitonic_tpu::sort::network::{Network, Variant};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+/// Launch count for "optimization 2 only": every step from global memory,
+/// but strides paired two-at-a-time (no shared-memory stage).
+fn opt2_only_launches(n: usize) -> usize {
+    let mut count = 0;
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 2 {
+            count += 1; // double step (j, j/2)
+            j /= 4;
+        }
+        if j == 1 {
+            count += 1; // leftover single
+        }
+        k *= 2;
+    }
+    count
+}
+
+fn main() {
+    let cal = calibrate_from_table1();
+    let n = 16 << 20;
+
+    // --- 2×2 optimization grid (simulator) -------------------------------
+    println!("== ablation: optimization grid at n=16M (calibrated sim) ==");
+    let basic = simulate(&cal.device, Variant::Basic, n, 4);
+    let semi = simulate(&cal.device, Variant::Semi, n, 4);
+    let opt = simulate(&cal.device, Variant::Optimized, n, 4);
+    // opt2-only: launch count from the paired global schedule; every
+    // launch is one global pass (same cost form as Basic).
+    let o2_launches = opt2_only_launches(n);
+    let o2_ms = {
+        let passes = o2_launches as f64;
+        let pass_bytes = 2.0 * (n * 4) as f64;
+        (o2_launches as f64 * cal.device.t_launch
+            + passes * pass_bytes / cal.device.bw_gmem
+            + basic.t_alu)
+            * 1e3
+    };
+    let mut t = Table::new(vec!["configuration", "launches", "ms", "vs basic"]);
+    for (name, launches, ms) in [
+        ("basic (none)", basic.launches, basic.total_ms()),
+        ("opt1 only (semi)", semi.launches, semi.total_ms()),
+        ("opt2 only (paired global)", o2_launches, o2_ms),
+        ("opt1+opt2 (optimized)", opt.launches, opt.total_ms()),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            launches.to_string(),
+            fmt_ms(ms),
+            format!("{:.2}x", basic.total_ms() / ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("→ opt1 dominates (pass count k(k+1)/2 → ~2k+presort); opt2 compounds on the remaining global steps.\n");
+
+    // --- block-size sweep (simulator) ------------------------------------
+    println!("== shared-tile size sweep at n=16M (sim, optimized schedule) ==");
+    let net = Network::new(n);
+    let mut t = Table::new(vec!["block", "launches", "ms (sim)"]);
+    for log_b in [8u32, 10, 12, 13, 14, 16] {
+        let block = 1usize << log_b;
+        let launches = net.launches(Variant::Optimized, block).len();
+        let mut dev = cal.device;
+        // Model: block beyond 4096 u32 keys exceeds K10's 48 KiB shared
+        // memory — flag it rather than pretend.
+        let fits = block * 4 * 2 <= dev.shmem_bytes;
+        dev.shmem_bytes = dev.shmem_bytes.max(block * 8);
+        let ms = {
+            let r = simulate(&dev, Variant::Optimized, n, 4);
+            // simulate() derives block from the device; recompute with the
+            // explicit block by scaling the launch/gmem terms.
+            let scale = launches as f64 / r.launches as f64;
+            ((r.t_launch + r.t_gmem) * scale + r.t_shmem + r.t_alu) * 1e3
+        };
+        t.row(vec![
+            format!("{}{}", fmt_size(block), if fits { "" } else { " (!>48KiB)" }),
+            launches.to_string(),
+            fmt_ms(ms),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- measured artifact ablation (real executions) --------------------
+    println!("== measured artifact path (PJRT CPU; ordering is the signal) ==");
+    match spawn_device_host("artifacts") {
+        Ok((handle, manifest)) => {
+            let bench = Bench::quick();
+            let mut gen = Generator::new(0xAB1A);
+            let mut t = Table::new(vec!["(B,N)", "basic", "semi", "optimized"]);
+            for meta in manifest.size_classes(Variant::Basic) {
+                let (b, nn) = (meta.batch, meta.n);
+                if b != 8 {
+                    continue;
+                }
+                let mut cells = Vec::new();
+                for v in Variant::ALL {
+                    let Some(m) = manifest.find(v, b, nn, Dtype::U32, false) else {
+                        continue;
+                    };
+                    let key = Key::of(m);
+                    let _ = handle.sort_u32(key, gen.u32s(b * nn, Distribution::Uniform));
+                    let meas = bench.run_with_setup(
+                        v.name(),
+                        || gen.u32s(b * nn, Distribution::Uniform),
+                        |rows| {
+                            let _ = handle.sort_u32(key, rows).unwrap();
+                        },
+                    );
+                    cells.push(fmt_ms(meas.median_ms()));
+                }
+                if cells.len() == 3 {
+                    t.row(vec![
+                        format!("({b},{})", fmt_size(nn)),
+                        cells[0].clone(),
+                        cells[1].clone(),
+                        cells[2].clone(),
+                    ]);
+                }
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("   (skipped: {e:#})"),
+    }
+}

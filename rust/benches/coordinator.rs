@@ -1,0 +1,169 @@
+//! L3 coordinator benchmarks: batching benefit, coordinator overhead over
+//! a raw backend call, and shed behaviour under overload — the numbers the
+//! §Perf pass optimizes (DESIGN.md §7).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::coordinator::{
+    BatchSorter, BatcherConfig, Service, ServiceConfig, SortRequest,
+};
+use bitonic_tpu::sort::bitonic_sort;
+use bitonic_tpu::util::table::{fmt_ms, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+struct Mock {
+    batch: usize,
+    n: usize,
+    /// Simulated per-execution device latency (models PJRT dispatch).
+    exec_cost: Duration,
+}
+
+impl BatchSorter for Mock {
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.n)
+    }
+    fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+        if !self.exec_cost.is_zero() {
+            std::thread::sleep(self.exec_cost);
+        }
+        for r in rows.chunks_mut(self.n) {
+            bitonic_sort(r);
+        }
+        Ok(rows)
+    }
+}
+
+fn main() {
+    let bench = Bench::quick();
+    let mut gen = Generator::new(0xC00D);
+
+    // --- 1. coordinator overhead: service vs direct backend call ---------
+    // Same total work (64 requests of one full row each), batch=1 so the
+    // batcher adds no benefit — the difference IS the coordinator tax.
+    println!("== coordinator overhead (batch=1, n=4096, 64 requests) ==");
+    let n = 4096;
+    let direct_mock = Mock { batch: 1, n, exec_cost: Duration::ZERO };
+    let direct = bench.run_with_setup(
+        "direct",
+        || {
+            (0..64)
+                .map(|_| gen.u32s(n, Distribution::Uniform))
+                .collect::<Vec<_>>()
+        },
+        |inputs| {
+            for keys in inputs {
+                let mut padded = keys;
+                padded.resize(n, u32::MAX);
+                let _ = direct_mock.sort_rows(padded).unwrap();
+            }
+        },
+    );
+    let svc = Service::new(
+        vec![Arc::new(Mock { batch: 1, n, exec_cost: Duration::ZERO }) as Arc<dyn BatchSorter>],
+        ServiceConfig {
+            batcher: BatcherConfig {
+                max_wait: Duration::from_micros(50),
+                max_rows: 1,
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let via_service = bench.run_with_setup(
+        "service",
+        || {
+            (0..64)
+                .map(|_| gen.u32s(n, Distribution::Uniform))
+                .collect::<Vec<_>>()
+        },
+        |inputs| {
+            let rxs: Vec<_> = inputs
+                .into_iter()
+                .enumerate()
+                .map(|(i, keys)| svc.submit(SortRequest::new(i as u64, keys)).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+        },
+    );
+    let overhead =
+        (via_service.median_ms() - direct.median_ms()) / direct.median_ms() * 100.0;
+    println!("  direct : {}", direct.summary());
+    println!("  service: {}", via_service.summary());
+    println!("  overhead: {overhead:+.1}% (target <5% — DESIGN.md §7)\n");
+
+    // --- 2. batching benefit under simulated dispatch cost ---------------
+    // With a fixed per-execution cost (PJRT dispatch ≈ 100µs class),
+    // batching B requests into one execution amortises it.
+    println!("== batching benefit (exec cost 500µs, n=1024, 64 requests) ==");
+    let mut t = Table::new(vec!["device batch B", "wall ms", "throughput req/s"]);
+    for b in [1usize, 2, 4, 8, 16] {
+        let svc = Service::new(
+            vec![Arc::new(Mock {
+                batch: b,
+                n: 1024,
+                exec_cost: Duration::from_micros(500),
+            }) as Arc<dyn BatchSorter>],
+            ServiceConfig {
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    max_rows: b,
+                },
+                ..ServiceConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                svc.submit(SortRequest::new(i, gen.u32s(1024, Distribution::Uniform)))
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed();
+        t.row(vec![
+            b.to_string(),
+            fmt_ms(wall.as_secs_f64() * 1e3),
+            format!("{:.0}", 64.0 / wall.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("→ dynamic batching amortises fixed dispatch cost ~linearly in B.\n");
+
+    // --- 3. overload: shedding keeps latency bounded ----------------------
+    println!("== overload behaviour (capacity 32, offered 500) ==");
+    let svc = Service::new(
+        vec![Arc::new(Mock {
+            batch: 8,
+            n: 1024,
+            exec_cost: Duration::from_micros(200),
+        }) as Arc<dyn BatchSorter>],
+        ServiceConfig {
+            max_in_flight: 32,
+            ..ServiceConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    let mut accepted = Vec::new();
+    let mut shed = 0;
+    for i in 0..500u64 {
+        match svc.submit(SortRequest::new(i, gen.u32s(512, Distribution::Uniform))) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    for rx in &accepted {
+        rx.recv().unwrap();
+    }
+    println!(
+        "  accepted {} shed {shed} in {} — p99 latency {}",
+        accepted.len(),
+        fmt_ms(t0.elapsed().as_secs_f64() * 1e3),
+        fmt_ms(svc.stats().latency.quantile_ns(0.99) as f64 / 1e6),
+    );
+    println!("  (shed>0 and bounded queue ⇒ latency stays flat under overload)");
+}

@@ -1,0 +1,97 @@
+//! CPU substrate shoot-out (DESIGN.md E1/E2/E9): every from-scratch sort
+//! vs the std library across distributions, plus the multicore bitonic
+//! scaling study the paper lists as future work (§6).
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::sort::{
+    bitonic_sort, bitonic_sort_parallel, heapsort, mergesort, oddeven_sort, quicksort,
+    radix_sort_u32,
+};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let bench = Bench::quick();
+    let mut gen = Generator::new(0xC0DE);
+    let n = 1 << 20;
+
+    // --- all sorts on uniform u32 ---------------------------------------
+    println!("== CPU sorts, n = {} uniform u32 ==", fmt_size(n));
+    let mut t = Table::new(vec!["algorithm", "median ms", "vs std"]);
+    let std_ms = bench
+        .run_with_setup("std", || gen.u32s(n, Distribution::Uniform), |mut v| {
+            v.sort_unstable()
+        })
+        .median_ms();
+    let algos: Vec<(&str, Box<dyn FnMut(Vec<u32>)>)> = vec![
+        ("std sort_unstable", Box::new(|mut v: Vec<u32>| v.sort_unstable())),
+        ("quicksort (ours)", Box::new(|mut v: Vec<u32>| quicksort(&mut v))),
+        ("heapsort", Box::new(|mut v: Vec<u32>| heapsort(&mut v))),
+        ("mergesort", Box::new(|mut v: Vec<u32>| mergesort(&mut v))),
+        ("radix (LSD)", Box::new(|mut v: Vec<u32>| radix_sort_u32(&mut v))),
+        ("bitonic (seq)", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v))),
+        ("bitonic (4 thr)", Box::new(|mut v: Vec<u32>| bitonic_sort_parallel(&mut v, 4))),
+    ];
+    for (name, mut f) in algos {
+        let m = bench.run_with_setup(name, || gen.u32s(n, Distribution::Uniform), &mut f);
+        t.row(vec![
+            name.to_string(),
+            fmt_ms(m.median_ms()),
+            format!("{:.2}x", m.median_ms() / std_ms),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- quicksort vs distributions (adversarial robustness) -------------
+    println!("== quicksort robustness across distributions, n = 1M ==");
+    let mut t = Table::new(vec!["distribution", "quick ms", "bitonic ms"]);
+    for d in Distribution::ALL {
+        let q = bench
+            .run_with_setup("q", || gen.u32s(n, d), |mut v| quicksort(&mut v))
+            .median_ms();
+        let b = bench
+            .run_with_setup("b", || gen.u32s(n, d), |mut v| bitonic_sort(&mut v))
+            .median_ms();
+        t.row(vec![d.name().to_string(), fmt_ms(q), fmt_ms(b)]);
+    }
+    println!("{}", t.render());
+    println!("→ bitonic is distribution-oblivious (data-independent network); quicksort varies.\n");
+
+    // --- multicore bitonic scaling (paper §6 future work, E9) ------------
+    println!("== multicore bitonic scaling, n = 4M (paper §6 future work) ==");
+    let n = 4 << 20;
+    let seq = bench
+        .run_with_setup("seq", || gen.u32s(n, Distribution::Uniform), |mut v| {
+            bitonic_sort(&mut v)
+        })
+        .median_ms();
+    let mut t = Table::new(vec!["threads", "median ms", "speedup"]);
+    t.row(vec!["1 (seq)".to_string(), fmt_ms(seq), "1.00x".to_string()]);
+    for threads in [2usize, 4, 8, 16] {
+        let m = bench.run_with_setup(
+            "par",
+            || gen.u32s(n, Distribution::Uniform),
+            |mut v| bitonic_sort_parallel(&mut v, threads),
+        );
+        t.row(vec![
+            threads.to_string(),
+            fmt_ms(m.median_ms()),
+            format!("{:.2}x", seq / m.median_ms()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- odd-even network contrast (E7 flavour) ---------------------------
+    println!("== network baselines, n = 64K (odd-even is O(n²) comparators) ==");
+    let n = 1 << 16;
+    let mut t = Table::new(vec!["network", "median ms"]);
+    for (name, f) in [
+        ("bitonic", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v)) as Box<dyn FnMut(Vec<u32>)>),
+        ("odd-even", Box::new(|mut v: Vec<u32>| oddeven_sort(&mut v))),
+    ] {
+        let mut f = f;
+        let m = bench.run_with_setup(name, || gen.u32s(n, Distribution::Uniform), &mut f);
+        t.row(vec![name.to_string(), fmt_ms(m.median_ms())]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,119 @@
+//! Key-type study (DESIGN.md E8 — the paper's §6 future work: "64-bit
+//! integer, 32-bit float, 64-bit double"): CPU measurements for all four
+//! key types, simulator predictions for the byte-width effect, and the
+//! measured f32/i32 artifacts.
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::runtime::{spawn_device_host, Dtype, Key};
+use bitonic_tpu::sim::{calibrate_from_table1, simulate};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{bitonic_sort, quicksort};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let bench = Bench::quick();
+    let mut gen = Generator::new(0xD7E5);
+    let n = 1 << 20;
+
+    // --- CPU: four key types ---------------------------------------------
+    println!("== CPU sorts by key type, n = {} uniform ==", fmt_size(n));
+    let mut t = Table::new(vec!["key type", "quicksort ms", "bitonic ms", "bitonic/quick"]);
+    let q32 = bench
+        .run_with_setup("q", || gen.u32s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
+        .median_ms();
+    let b32 = bench
+        .run_with_setup("b", || gen.u32s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
+        .median_ms();
+    t.row(vec!["u32".into(), fmt_ms(q32), fmt_ms(b32), format!("{:.1}x", b32 / q32)]);
+    let q64 = bench
+        .run_with_setup("q", || gen.u64s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
+        .median_ms();
+    let b64 = bench
+        .run_with_setup("b", || gen.u64s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
+        .median_ms();
+    t.row(vec!["u64".into(), fmt_ms(q64), fmt_ms(b64), format!("{:.1}x", b64 / q64)]);
+    let qf = bench
+        .run_with_setup("q", || gen.f32s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
+        .median_ms();
+    let bf = bench
+        .run_with_setup("b", || gen.f32s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
+        .median_ms();
+    t.row(vec!["f32".into(), fmt_ms(qf), fmt_ms(bf), format!("{:.1}x", bf / qf)]);
+    let qd = bench
+        .run_with_setup("q", || gen.f64s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
+        .median_ms();
+    let bd = bench
+        .run_with_setup("b", || gen.f64s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
+        .median_ms();
+    t.row(vec!["f64".into(), fmt_ms(qd), fmt_ms(bd), format!("{:.1}x", bd / qd)]);
+    println!("{}", t.render());
+
+    // --- simulator: byte-width effect on the GPU --------------------------
+    println!("== simulated GPU effect of key width (optimized, n = 16M) ==");
+    let cal = calibrate_from_table1();
+    let mut t = Table::new(vec!["key bytes", "launches", "ms (sim)", "vs 4B"]);
+    let base = simulate(&cal.device, Variant::Optimized, 16 << 20, 4).total_ms();
+    for bytes in [4usize, 8] {
+        let r = simulate(&cal.device, Variant::Optimized, 16 << 20, bytes);
+        t.row(vec![
+            bytes.to_string(),
+            r.launches.to_string(),
+            fmt_ms(r.total_ms()),
+            format!("{:.2}x", r.total_ms() / base),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("→ 8-byte keys double bandwidth *and* halve the shared tile (more launches).\n");
+
+    // --- measured artifacts: i32 / f32 ------------------------------------
+    println!("== measured non-u32 artifacts (PJRT CPU) ==");
+    match spawn_device_host("artifacts") {
+        Ok((handle, manifest)) => {
+            for meta in manifest
+                .entries
+                .iter()
+                .filter(|m| m.dtype != Dtype::U32 && !m.descending)
+            {
+                let key = Key::of(meta);
+                let rows_f: Vec<f32>;
+                let rows_i: Vec<i32>;
+                let ms = match meta.dtype {
+                    Dtype::F32 => {
+                        rows_f = gen.f32s(meta.batch * meta.n, Distribution::Uniform);
+                        let _ = handle.sort_f32(key, rows_f.clone()).unwrap();
+                        bench
+                            .run_with_setup(
+                                "f32",
+                                || rows_f.clone(),
+                                |r| {
+                                    let _ = handle.sort_f32(key, r).unwrap();
+                                },
+                            )
+                            .median_ms()
+                    }
+                    Dtype::I32 => {
+                        rows_i = gen
+                            .u32s(meta.batch * meta.n, Distribution::Uniform)
+                            .into_iter()
+                            .map(|x| x as i32)
+                            .collect();
+                        let _ = handle.sort_i32(key, rows_i.clone()).unwrap();
+                        bench
+                            .run_with_setup(
+                                "i32",
+                                || rows_i.clone(),
+                                |r| {
+                                    let _ = handle.sort_i32(key, r).unwrap();
+                                },
+                            )
+                            .median_ms()
+                    }
+                    Dtype::U32 => unreachable!(),
+                };
+                println!("  {:<44} {} ms", meta.name, fmt_ms(ms));
+            }
+        }
+        Err(e) => println!("   (skipped: {e:#})"),
+    }
+}

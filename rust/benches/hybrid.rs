@@ -1,0 +1,98 @@
+//! Out-of-core hybrid sorter benchmark: device-chunk sort + bitonic merge
+//! tree vs the pure-CPU baselines, at sizes beyond the largest artifact
+//! row — the deployment scenario for a fixed-shape sorting accelerator.
+//!
+//! Absolute device times are XLA-CPU interpret-mode emulation; the
+//! interesting outputs are the stage statistics (how much work lands on
+//! the device vs the CPU tail) and the chunk-size ablation.
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::runtime::spawn_device_host;
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{quicksort, HybridSorter};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let Ok((handle, manifest)) = spawn_device_host("artifacts") else {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    };
+    if manifest.merge_classes().is_empty() {
+        println!("SKIP: no merge artifacts (quick mode?)");
+        return;
+    }
+    let bench = Bench::quick();
+    let mut gen = Generator::new(0xB12D);
+
+    // --- hybrid vs CPU at 2x..8x the largest artifact row ----------------
+    println!("== hybrid (device chunks + merge tree) vs CPU quicksort ==");
+    let sorter = HybridSorter::new(handle.clone(), &manifest, Variant::Optimized).unwrap();
+    let chunk = sorter.chunk();
+    let mut t = Table::new(vec![
+        "n", "quicksort ms", "hybrid ms", "dev sorts", "dev merges", "cpu merges",
+    ]);
+    for mult in [2usize, 4, 8] {
+        let n = chunk * mult + 321;
+        let q = bench
+            .run_with_setup("q", || gen.u32s(n, Distribution::Uniform), |mut v| {
+                quicksort(&mut v)
+            })
+            .median_ms();
+        let mut last_stats = None;
+        let h = bench
+            .run_with_setup(
+                "h",
+                || gen.u32s(n, Distribution::Uniform),
+                |mut v| {
+                    last_stats = Some(sorter.sort(&mut v).unwrap());
+                },
+            )
+            .median_ms();
+        let s = last_stats.unwrap();
+        t.row(vec![
+            fmt_size(n),
+            fmt_ms(q),
+            fmt_ms(h),
+            s.device_sorts.to_string(),
+            s.device_merges.to_string(),
+            s.cpu_merges.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- chunk-size ablation ---------------------------------------------
+    println!("== chunk-size ablation (n = 128K + 77) ==");
+    let n = (128 << 10) + 77;
+    let mut t = Table::new(vec![
+        "chunk", "hybrid ms", "dev sorts", "dev merges", "cpu merges",
+    ]);
+    for chunk in [1024usize, 4096, 16384, 65536] {
+        let Ok(sorter) =
+            HybridSorter::with_chunk(handle.clone(), &manifest, Variant::Optimized, chunk)
+        else {
+            continue;
+        };
+        let mut last_stats = None;
+        let h = bench
+            .run_with_setup(
+                "h",
+                || gen.u32s(n, Distribution::Uniform),
+                |mut v| {
+                    last_stats = Some(sorter.sort(&mut v).unwrap());
+                },
+            )
+            .median_ms();
+        let s = last_stats.unwrap();
+        t.row(vec![
+            fmt_size(chunk),
+            fmt_ms(h),
+            s.device_sorts.to_string(),
+            s.device_merges.to_string(),
+            s.cpu_merges.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("→ bigger chunks shift work from the merge tree into the chunk sort; the");
+    println!("  crossover depends on the device's sort-vs-merge throughput ratio.");
+}

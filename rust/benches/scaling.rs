@@ -1,0 +1,105 @@
+//! Scaling series (DESIGN.md E6): Table 1 rendered as the two figures the
+//! paper implies — time vs n per variant, and speedup ratio vs n (the
+//! ratio "hump" peaking near 2^18) — plus the *measured* end-to-end device
+//! path (PJRT CPU, interpret-mode kernels) for the artifact sizes, which
+//! validates the relative variant ordering on real executions.
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::runtime::{spawn_device_host, Key};
+use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::quicksort;
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let cal = calibrate_from_table1();
+
+    // --- figure A: simulated time vs n, per variant ---------------------
+    println!("== figure A: GPU time vs n (calibrated model; paper cols for reference) ==");
+    let mut t = Table::new(vec![
+        "n", "Basic", "Semi", "Optimized", "paper:Basic", "paper:Semi", "paper:Opt",
+    ]);
+    for row in &PAPER_TABLE1 {
+        t.row(vec![
+            fmt_size(row.n),
+            fmt_ms(cal.predict_ms(Variant::Basic, row.n)),
+            fmt_ms(cal.predict_ms(Variant::Semi, row.n)),
+            fmt_ms(cal.predict_ms(Variant::Optimized, row.n)),
+            fmt_ms(row.gpu_basic),
+            fmt_ms(row.gpu_semi),
+            fmt_ms(row.gpu_optimized),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- figure B: speedup ratio vs n -----------------------------------
+    println!("== figure B: speedup ratio (cpu quick / gpu optimized) vs n ==");
+    let bench = Bench::quick();
+    let mut gen = Generator::new(0x5CA1E);
+    let mut t = Table::new(vec!["n", "ratio(ours)", "ratio(paper)"]);
+    for row in PAPER_TABLE1.iter().filter(|r| r.n <= 16 << 20) {
+        let n = row.n;
+        let m = bench.run_with_setup(
+            "quick",
+            || gen.u32s(n, Distribution::Uniform),
+            |mut v| quicksort(&mut v),
+        );
+        let ratio = m.median_ms() / cal.predict_ms(Variant::Optimized, n);
+        t.row(vec![
+            fmt_size(n),
+            format!("{ratio:.1}"),
+            row.ratio.map(|r| format!("{r:.1}")).unwrap_or("—".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- figure C: measured device path (artifacts, PJRT CPU) -----------
+    println!("== figure C: measured artifact execution (PJRT CPU, interpret-mode Pallas) ==");
+    println!("   absolute times are CPU-emulation times, NOT GPU estimates;");
+    println!("   the signal is the *variant ordering* on identical hardware.");
+    match spawn_device_host("artifacts") {
+        Ok((handle, manifest)) => {
+            let mut t =
+                Table::new(vec!["(B,N)", "basic ms", "semi ms", "optimized ms", "opt/basic"]);
+            // All (batch, n) shapes present for every variant.
+            let shapes: Vec<(usize, usize)> = manifest
+                .size_classes(Variant::Basic)
+                .iter()
+                .map(|m| (m.batch, m.n))
+                .collect();
+            for (b, n) in shapes {
+                let mut ms = Vec::new();
+                for v in Variant::ALL {
+                    let Some(meta) = manifest.find(v, b, n, bitonic_tpu::runtime::Dtype::U32, false)
+                    else {
+                        continue;
+                    };
+                    let key = Key::of(meta);
+                    // warm (compile) outside timing
+                    let rows = gen.u32s(b * n, Distribution::Uniform);
+                    let _ = handle.sort_u32(key, rows).unwrap();
+                    let m = bench.run_with_setup(
+                        v.name(),
+                        || gen.u32s(b * n, Distribution::Uniform),
+                        |rows| {
+                            let _ = handle.sort_u32(key, rows).unwrap();
+                        },
+                    );
+                    ms.push(m.median_ms());
+                }
+                if ms.len() == 3 {
+                    t.row(vec![
+                        format!("({b},{})", fmt_size(n)),
+                        fmt_ms(ms[0]),
+                        fmt_ms(ms[1]),
+                        fmt_ms(ms[2]),
+                        format!("{:.2}", ms[2] / ms[0]),
+                    ]);
+                }
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("   (skipped: {e:#} — run `make artifacts`)"),
+    }
+}

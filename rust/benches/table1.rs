@@ -1,0 +1,109 @@
+//! Regenerates the paper's Table 1 (DESIGN.md E1–E4) — the complete
+//! benchmark: measured CPU columns, calibrated-simulator GPU columns, and
+//! the speedup ratio, against the paper's printed values.
+//!
+//! Sizes ≤ 4M are measured with repetition via the harness; larger CPU
+//! sizes run once (they take seconds each and the paper's own numbers are
+//! single-run). Set BENCH_TABLE1_FULL=1 to measure through 256M (needs
+//! ~8 GiB RAM and several minutes).
+
+use std::time::Instant;
+
+use bitonic_tpu::bench::Bench;
+use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{bitonic_sort, quicksort};
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() {
+    let full = std::env::var("BENCH_TABLE1_FULL").is_ok();
+    let cap = if full { 256 << 20 } else { 16 << 20 };
+    let rep_cap = 4 << 20; // repeated measurement below this
+    let cal = calibrate_from_table1();
+    let bench = Bench::quick();
+
+    println!("== Table 1 reproduction (paper: Mu/Cui/Song Table 1) ==");
+    println!(
+        "calibration: t_launch={:.2}µs bw_eff={:.0}GB/s; CPU cap {} (BENCH_TABLE1_FULL=1 for 256M)\n",
+        cal.device.t_launch * 1e6,
+        cal.device.bw_gmem / 1e9,
+        fmt_size(cap)
+    );
+
+    let mut t = Table::new(vec![
+        "Array size",
+        "Quick(cpu)",
+        "Bitonic(cpu)",
+        "Basic(sim)",
+        "Semi(sim)",
+        "Opt(sim)",
+        "Ratio",
+        "paper:Ratio",
+        "Δratio",
+    ]);
+    let mut gen = Generator::new(0x7AB1E1);
+    for row in PAPER_TABLE1.iter().filter(|r| r.n <= cap) {
+        let n = row.n;
+        let quick_ms;
+        let bitonic_ms;
+        if n <= rep_cap {
+            let m = bench.run_with_setup(
+                "quick",
+                || gen.u32s(n, Distribution::Uniform),
+                |mut v| quicksort(&mut v),
+            );
+            quick_ms = m.median_ms();
+            let m = bench.run_with_setup(
+                "bitonic",
+                || gen.u32s(n, Distribution::Uniform),
+                |mut v| bitonic_sort(&mut v),
+            );
+            bitonic_ms = m.median_ms();
+        } else {
+            let data = gen.u32s(n, Distribution::Uniform);
+            let mut q = data.clone();
+            let t0 = Instant::now();
+            quicksort(&mut q);
+            quick_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let mut b = data;
+            let t0 = Instant::now();
+            bitonic_sort(&mut b);
+            bitonic_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+        let opt = cal.predict_ms(Variant::Optimized, n);
+        let ratio = quick_ms / opt;
+        t.row(vec![
+            fmt_size(n),
+            fmt_ms(quick_ms),
+            fmt_ms(bitonic_ms),
+            fmt_ms(cal.predict_ms(Variant::Basic, n)),
+            fmt_ms(cal.predict_ms(Variant::Semi, n)),
+            fmt_ms(opt),
+            format!("{ratio:.1}"),
+            row.ratio.map(|r| format!("{r:.1}")).unwrap_or("—".into()),
+            row.ratio
+                .map(|r| format!("{:+.0}%", (ratio - r) / r * 100.0))
+                .unwrap_or("—".into()),
+        ]);
+        eprintln!("  done {}", fmt_size(n));
+    }
+    println!("{}", t.render());
+
+    // The paper's two headline claims (§Abstract).
+    println!("shape assertions:");
+    let mut ok = true;
+    for row in PAPER_TABLE1.iter().filter(|r| r.n <= cap) {
+        let b = cal.predict_ms(Variant::Basic, row.n);
+        let s = cal.predict_ms(Variant::Semi, row.n);
+        let o = cal.predict_ms(Variant::Optimized, row.n);
+        if !(b > s && s > o) {
+            println!("  ✗ ordering violated at {}", fmt_size(row.n));
+            ok = false;
+        }
+    }
+    println!(
+        "  {} Basic > Semi > Optimized at every size",
+        if ok { "✓" } else { "✗" }
+    );
+}

@@ -1,0 +1,145 @@
+//! Admission control: a counting gate bounding total in-flight requests.
+//!
+//! The service sheds (rejects) new work when the bound is reached instead
+//! of queueing without limit — the response-time-preserving policy for a
+//! latency-sensitive service.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared admission gate. Clone-able handle.
+#[derive(Clone, Debug)]
+pub struct AdmissionGate {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    in_flight: AtomicUsize,
+    capacity: usize,
+    shed_total: AtomicUsize,
+    admitted_total: AtomicUsize,
+}
+
+/// RAII permit; releasing happens on drop.
+#[derive(Debug)]
+pub struct Permit {
+    inner: Arc<Inner>,
+}
+
+impl AdmissionGate {
+    /// Gate admitting at most `capacity` concurrent requests.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Arc::new(Inner {
+                in_flight: AtomicUsize::new(0),
+                capacity,
+                shed_total: AtomicUsize::new(0),
+                admitted_total: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Try to admit one request. `None` ⇒ shed.
+    pub fn try_acquire(&self) -> Option<Permit> {
+        let mut cur = self.inner.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.inner.capacity {
+                self.inner.shed_total.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match self.inner.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.inner.admitted_total.fetch_add(1, Ordering::Relaxed);
+                    return Some(Permit {
+                        inner: Arc::clone(&self.inner),
+                    });
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Currently admitted requests.
+    pub fn in_flight(&self) -> usize {
+        self.inner.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Total requests shed since start.
+    pub fn shed_total(&self) -> usize {
+        self.inner.shed_total.load(Ordering::Relaxed)
+    }
+
+    /// Total requests admitted since start.
+    pub fn admitted_total(&self) -> usize {
+        self.inner.admitted_total.load(Ordering::Relaxed)
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.inner.in_flight.fetch_sub(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_capacity() {
+        let g = AdmissionGate::new(2);
+        let p1 = g.try_acquire().unwrap();
+        let _p2 = g.try_acquire().unwrap();
+        assert!(g.try_acquire().is_none());
+        assert_eq!(g.in_flight(), 2);
+        drop(p1);
+        assert_eq!(g.in_flight(), 1);
+        assert!(g.try_acquire().is_some());
+    }
+
+    #[test]
+    fn counters_track() {
+        let g = AdmissionGate::new(1);
+        let p = g.try_acquire().unwrap();
+        let _ = g.try_acquire();
+        let _ = g.try_acquire();
+        assert_eq!(g.admitted_total(), 1);
+        assert_eq!(g.shed_total(), 2);
+        drop(p);
+        let _ = g.try_acquire().unwrap();
+        assert_eq!(g.admitted_total(), 2);
+    }
+
+    #[test]
+    fn concurrent_never_exceeds_capacity() {
+        let g = AdmissionGate::new(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let g = g.clone();
+                let peak = Arc::clone(&peak);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        if let Some(_p) = g.try_acquire() {
+                            peak.fetch_max(g.in_flight(), Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 8);
+        assert_eq!(g.in_flight(), 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Dynamic batching: accumulate same-class requests into a device batch,
+//! dispatching when the batch fills or the oldest request's deadline
+//! expires — the classic throughput/latency trade of serving systems.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::SortRequest;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum time the oldest request may wait before a partial batch is
+    /// dispatched anyway.
+    pub max_wait: Duration,
+    /// Dispatch as soon as this many rows are pending (usually the device
+    /// batch B).
+    pub max_rows: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(2),
+            max_rows: 8,
+        }
+    }
+}
+
+/// A pending request with its arrival time.
+#[derive(Debug)]
+pub struct Pending {
+    /// The request.
+    pub request: SortRequest,
+    /// When it was admitted.
+    pub arrived: Instant,
+    /// Response channel.
+    pub reply: std::sync::mpsc::Sender<super::request::SortResponse>,
+    /// Admission permit, released when the response is sent (dropped).
+    pub permit: Option<super::backpressure::Permit>,
+}
+
+/// A dispatched batch: up to `max_rows` same-class requests.
+#[derive(Debug, Default)]
+pub struct Batch {
+    /// The requests, dispatch order.
+    pub items: Vec<Pending>,
+}
+
+/// Per-size-class accumulation queue.
+#[derive(Debug)]
+pub struct Batcher {
+    config: BatcherConfig,
+    queue: VecDeque<Pending>,
+}
+
+impl Batcher {
+    /// Empty batcher with the given policy.
+    pub fn new(config: BatcherConfig) -> Self {
+        Self {
+            config,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Enqueue a pending request.
+    pub fn push(&mut self, p: Pending) {
+        self.queue.push_back(p);
+    }
+
+    /// Pending rows.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when no requests wait.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.config.max_rows {
+            return true;
+        }
+        match self.queue.front() {
+            Some(front) => now.duration_since(front.arrived) >= self.config.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the oldest request's deadline (for worker sleep), or
+    /// `None` when empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|front| {
+            let age = now.duration_since(front.arrived);
+            self.config.max_wait.saturating_sub(age)
+        })
+    }
+
+    /// Remove and return up to `max_rows` requests (FIFO).
+    pub fn take_batch(&mut self) -> Batch {
+        let take = self.queue.len().min(self.config.max_rows);
+        Batch {
+            items: self.queue.drain(..take).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn pending(id: u64, arrived: Instant) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            request: SortRequest::new(id, vec![1, 2]),
+            arrived,
+            reply: tx,
+            permit: None,
+        }
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            max_wait: Duration::from_millis(10),
+            max_rows: 4,
+        }
+    }
+
+    #[test]
+    fn fills_then_dispatches() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(pending(i, now));
+            assert!(!b.ready(now), "not full yet at {i}");
+        }
+        b.push(pending(3, now));
+        assert!(b.ready(now), "full batch must be ready");
+        let batch = b.take_batch();
+        assert_eq!(batch.items.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_forces_partial_batch() {
+        let mut b = Batcher::new(cfg());
+        let past = Instant::now() - Duration::from_millis(50);
+        b.push(pending(0, past));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch().items.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push(pending(i, now));
+        }
+        let ids: Vec<u64> = b.take_batch().items.iter().map(|p| p.request.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn take_batch_caps_at_max_rows() {
+        let mut b = Batcher::new(cfg());
+        let now = Instant::now();
+        for i in 0..10 {
+            b.push(pending(i, now));
+        }
+        assert_eq!(b.take_batch().items.len(), 4);
+        assert_eq!(b.len(), 6);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = Batcher::new(cfg());
+        assert!(b.next_deadline(Instant::now()).is_none());
+        let now = Instant::now();
+        b.push(pending(0, now));
+        let d = b.next_deadline(now + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6), "{d:?}");
+    }
+}

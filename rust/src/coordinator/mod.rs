@@ -1,0 +1,35 @@
+//! Layer-3 coordinator: sort-as-a-service.
+//!
+//! The paper's contribution is a *kernel* technique, so L3 is the serving
+//! scaffold that turns the compiled sort artifacts into a deployable
+//! service (the vLLM-router shape adapted to sorting):
+//!
+//! ```text
+//!                    ┌────────────┐   per-class queues   ┌──────────┐
+//!  submit(keys) ───> │   Router   │ ───────────────────> │ Batcher  │
+//!                    │ pad→2^k,   │                      │ deadline/ │
+//!                    │ pick class │                      │ capacity │
+//!                    └────────────┘                      └────┬─────┘
+//!        bounded admission (Backpressure)                    │ (B,N) batch
+//!                                                       ┌────▼─────┐
+//!  response channel <───────────────────────────────────│ Workers  │──> PJRT
+//!                                                       └──────────┘  executor
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! every admitted request is answered exactly once; the answer is the
+//! sorted multiset of its input; a batch never mixes size classes; queue
+//! depth never exceeds the configured bound; shedding happens only when
+//! the bound is hit.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use backpressure::AdmissionGate;
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use request::{SortRequest, SortResponse};
+pub use router::{Router, SizeClass};
+pub use service::{BatchSorter, CpuFallbackSorter, RegistrySorter, Service, ServiceConfig, ServiceStats};

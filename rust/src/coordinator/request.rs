@@ -1,0 +1,60 @@
+//! Request/response types of the sort service.
+
+/// A client sort request. Keys are u32 (the paper's workload); arbitrary
+/// length — the router pads to the artifact's power-of-two row size.
+#[derive(Clone, Debug)]
+pub struct SortRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// The keys to sort.
+    pub keys: Vec<u32>,
+    /// Sort direction.
+    pub descending: bool,
+}
+
+impl SortRequest {
+    /// Ascending request.
+    pub fn new(id: u64, keys: Vec<u32>) -> Self {
+        Self {
+            id,
+            keys,
+            descending: false,
+        }
+    }
+}
+
+/// Service response.
+#[derive(Clone, Debug)]
+pub struct SortResponse {
+    /// Echo of the request id.
+    pub id: u64,
+    /// The sorted keys (same length as the request).
+    pub keys: Vec<u32>,
+    /// Which execution path served it.
+    pub path: ExecPath,
+    /// Queue wait + execution wall time.
+    pub latency: std::time::Duration,
+    /// Rows in the device batch this request shared (1 for CPU path).
+    pub batch_occupancy: usize,
+}
+
+/// Which backend served a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPath {
+    /// PJRT artifact (the accelerator path).
+    Device,
+    /// CPU fallback (no artifact fits, or fallback forced).
+    Cpu,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_constructor_defaults_ascending() {
+        let r = SortRequest::new(7, vec![3, 1]);
+        assert_eq!(r.id, 7);
+        assert!(!r.descending);
+    }
+}

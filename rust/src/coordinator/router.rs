@@ -1,0 +1,136 @@
+//! Size-class routing: map a request of arbitrary length onto the
+//! power-of-two row size of a compiled artifact.
+//!
+//! Padding uses `u32::MAX` for ascending (pads sink to the tail) and `0`
+//! for descending — exactly mirroring what `bitonic_sort_padded` does on
+//! the CPU path, so both paths agree bit-for-bit after truncation.
+
+/// One available (row-size, batch-rows) execution shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SizeClass {
+    /// Row length N (power of two).
+    pub n: usize,
+    /// Device batch rows B.
+    pub batch: usize,
+}
+
+/// Routes requests to size classes.
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// Available classes, ascending by n. For one n, the largest batch is
+    /// kept (the batcher decides how full a batch gets dispatched).
+    classes: Vec<SizeClass>,
+}
+
+impl Router {
+    /// Build from the artifact menu. Duplicate `n`s collapse to the
+    /// largest batch.
+    pub fn new(mut shapes: Vec<SizeClass>) -> Self {
+        shapes.sort_by_key(|c| (c.n, c.batch));
+        let mut classes: Vec<SizeClass> = Vec::new();
+        for s in shapes {
+            assert!(s.n.is_power_of_two() && s.batch >= 1, "bad class {s:?}");
+            match classes.last_mut() {
+                Some(last) if last.n == s.n => last.batch = s.batch,
+                _ => classes.push(s),
+            }
+        }
+        Self { classes }
+    }
+
+    /// All classes, ascending by `n`.
+    pub fn classes(&self) -> &[SizeClass] {
+        &self.classes
+    }
+
+    /// Index of the smallest class whose row fits `len` keys, or `None`
+    /// if the request is larger than every class (CPU fallback).
+    pub fn route(&self, len: usize) -> Option<usize> {
+        if len == 0 {
+            return None; // nothing to sort; answered inline
+        }
+        self.classes.iter().position(|c| c.n >= len)
+    }
+
+    /// Pad `keys` to the class row length. Ascending pads with `MAX`
+    /// (sinks to tail), descending with `0`.
+    pub fn pad_row(&self, class: usize, keys: &[u32], descending: bool, out: &mut Vec<u32>) {
+        let n = self.classes[class].n;
+        debug_assert!(keys.len() <= n);
+        out.clear();
+        out.reserve(n);
+        out.extend_from_slice(keys);
+        out.resize(n, if descending { 0 } else { u32::MAX });
+    }
+
+    /// Internal fragmentation of routing `len` keys: padded/real ratio.
+    pub fn overhead(&self, class: usize, len: usize) -> f64 {
+        self.classes[class].n as f64 / len.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![
+            SizeClass { n: 1024, batch: 8 },
+            SizeClass { n: 4096, batch: 8 },
+            SizeClass { n: 16384, batch: 4 },
+        ])
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_class() {
+        let r = router();
+        assert_eq!(r.route(1), Some(0));
+        assert_eq!(r.route(1024), Some(0));
+        assert_eq!(r.route(1025), Some(1));
+        assert_eq!(r.route(4096), Some(1));
+        assert_eq!(r.route(16384), Some(2));
+        assert_eq!(r.route(16385), None);
+        assert_eq!(r.route(0), None);
+    }
+
+    #[test]
+    fn duplicate_n_keeps_largest_batch() {
+        let r = Router::new(vec![
+            SizeClass { n: 1024, batch: 1 },
+            SizeClass { n: 1024, batch: 8 },
+        ]);
+        assert_eq!(r.classes().len(), 1);
+        assert_eq!(r.classes()[0].batch, 8);
+    }
+
+    #[test]
+    fn padding_ascending_sinks() {
+        let r = router();
+        let mut row = Vec::new();
+        r.pad_row(0, &[5, 3], false, &mut row);
+        assert_eq!(row.len(), 1024);
+        assert_eq!(&row[..2], &[5, 3]);
+        assert!(row[2..].iter().all(|&x| x == u32::MAX));
+    }
+
+    #[test]
+    fn padding_descending_uses_zero() {
+        let r = router();
+        let mut row = Vec::new();
+        r.pad_row(0, &[5, 3], true, &mut row);
+        assert!(row[2..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn overhead_computation() {
+        let r = router();
+        assert_eq!(r.overhead(0, 1024), 1.0);
+        assert_eq!(r.overhead(0, 512), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2_class() {
+        Router::new(vec![SizeClass { n: 1000, batch: 4 }]);
+    }
+}

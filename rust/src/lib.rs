@@ -1,0 +1,44 @@
+//! # bitonic-tpu
+//!
+//! A three-layer (rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"The implementation and optimization of Bitonic sort algorithm based
+//! on CUDA"* (Qi Mu, Liqing Cui, Yufei Song; CS.DC 2015).
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! depends on (see `DESIGN.md` for the full inventory):
+//!
+//! * [`sort`] — from-scratch CPU sorting substrates: the paper's two CPU
+//!   baselines (quick sort, sequential bitonic sort), the multicore
+//!   bitonic sort the paper lists as future work, auxiliary baselines
+//!   (radix / heap / merge / odd-even), and the bitonic *network schedule*
+//!   generator shared with the simulator and (conceptually) with the
+//!   Pallas kernels.
+//! * [`sim`] — a cost-model simulator of the paper's Kepler K10 GPU:
+//!   launch counts, global-memory passes and shared-memory traffic are
+//!   derived from the exact per-variant step schedule; used to regenerate
+//!   Table 1's GPU columns in *shape* (we have no CUDA hardware).
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered by `python/compile/aot.py`, Pallas kernels in interpret
+//!   mode), compiles them once on the CPU PJRT client, and executes them
+//!   on the request path. Python never runs at request time.
+//! * [`coordinator`] — the L3 sort-as-a-service layer: request router
+//!   with pad-to-power-of-two size classes, deadline/capacity dynamic
+//!   batcher that packs requests into the artifacts' `(B, N)` row-sorted
+//!   executions, bounded queues with shedding, and a worker pool.
+//! * [`workload`] — PRNGs and input distributions for experiments.
+//! * [`bench`] — the measurement harness used by `rust/benches/*`
+//!   (criterion is unavailable offline).
+//! * [`util`] — CLI parsing, thread pool, metrics, property-testing and
+//!   table formatting substrates (their crates.io equivalents are
+//!   unavailable offline).
+
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod sim;
+pub mod sort;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T, E = anyhow::Error> = std::result::Result<T, E>;

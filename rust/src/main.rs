@@ -1,0 +1,317 @@
+//! `bitonic-tpu` CLI: the leader entrypoint.
+//!
+//! Subcommands map onto DESIGN.md's experiments:
+//!
+//! * `sort`      — sort one generated workload through a chosen path
+//! * `serve`     — run the sort service on a synthetic request stream
+//! * `table1`    — regenerate the paper's Table 1 (also in benches)
+//! * `simulate`  — print calibrated GPU-model predictions
+//! * `network`   — print the bitonic network (paper Fig. 2)
+//! * `analyze`   — launch/pass counts per variant (structural perf model)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
+use bitonic_tpu::runtime::{spawn_device_host, Key};
+use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
+use bitonic_tpu::sort::network::{Network, Variant};
+use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel, quicksort};
+use bitonic_tpu::util::cli::Parser;
+use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn main() -> anyhow::Result<()> {
+    let parser = Parser::new("bitonic-tpu", "bitonic sort on the rust+JAX+Pallas stack")
+        .command("sort", "sort one generated workload")
+        .command("serve", "run the sort service on a synthetic stream")
+        .command("table1", "regenerate the paper's Table 1")
+        .command("simulate", "GPU cost-model predictions")
+        .command("network", "print the bitonic network (Fig. 2)")
+        .command("analyze", "launch/pass counts per variant")
+        .command("gen-data", "write a workload dataset file (.btsd)")
+        .opt("n", "array size (elements)", Some("65536"))
+        .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
+        .opt("variant", "device variant: basic|semi|optimized", Some("optimized"))
+        .opt("dist", "workload distribution", Some("uniform"))
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("requests", "serve: number of requests", Some("200"))
+        .opt("threads", "bitonic-par threads", Some("8"))
+        .opt("seed", "workload seed", Some("42"))
+        .flag("verbose", "more output");
+    let args = parser.parse_env()?;
+
+    match args.command.as_deref() {
+        Some("sort") => cmd_sort(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("simulate") => cmd_simulate(),
+        Some("network") => cmd_network(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        _ => {
+            println!("{}", parser.usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let n: usize = args.parsed_or("n", 65536)?;
+    let seed: u64 = args.parsed_or("seed", 42)?;
+    let dist = Distribution::parse(&args.get_or("dist", "uniform"))
+        .ok_or_else(|| anyhow::anyhow!("unknown distribution"))?;
+    let algo = args.get_or("algo", "device");
+    let mut keys = Generator::new(seed).u32s(n, dist);
+    let t0 = Instant::now();
+    match algo.as_str() {
+        "quick" => quicksort(&mut keys),
+        "bitonic" => bitonic_sort_padded(&mut keys),
+        "bitonic-par" => {
+            let threads: usize = args.parsed_or("threads", 8)?;
+            let padded = n.next_power_of_two();
+            keys.resize(padded, u32::MAX);
+            bitonic_sort_parallel(&mut keys, threads);
+            keys.truncate(n);
+        }
+        "hybrid" => {
+            let variant = Variant::parse(&args.get_or("variant", "optimized"))
+                .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
+            let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+            let sorter =
+                bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?;
+            let stats = sorter.sort(&mut keys)?;
+            eprintln!(
+                "hybrid: chunk={} device_sorts={} device_merges={} cpu_merges={}",
+                stats.chunk, stats.device_sorts, stats.device_merges, stats.cpu_merges
+            );
+        }
+        "device" => {
+            let variant = Variant::parse(&args.get_or("variant", "optimized"))
+                .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
+            let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+            let padded = n.next_power_of_two();
+            let meta = manifest
+                .size_classes(variant)
+                .into_iter()
+                .find(|m| m.n >= padded)
+                .ok_or_else(|| anyhow::anyhow!("no artifact fits n={n}"))?
+                .clone();
+            let mut rows = keys.clone();
+            rows.resize(meta.batch * meta.n, u32::MAX);
+            let sorted = handle.sort_u32(Key::of(&meta), rows)?;
+            keys = sorted[..n].to_vec();
+        }
+        other => anyhow::bail!("unknown algo {other}"),
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        bitonic_tpu::sort::is_sorted(&keys),
+        "output not sorted — bug"
+    );
+    println!("sorted {} keys ({}) via {algo} in {} ms", n, dist.name(), fmt_ms(ms));
+    Ok(())
+}
+
+fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let requests: usize = args.parsed_or("requests", 200)?;
+    let seed: u64 = args.parsed_or("seed", 42)?;
+    let variant = Variant::parse(&args.get_or("variant", "optimized"))
+        .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
+    let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+    println!(
+        "warming {} artifacts…",
+        manifest.size_classes(variant).len()
+    );
+    handle.warm_up(variant)?;
+    let sorters: Vec<Arc<dyn bitonic_tpu::coordinator::BatchSorter>> = manifest
+        .size_classes(variant)
+        .into_iter()
+        .map(|m| {
+            Arc::new(RegistrySorter::new(handle.clone(), m))
+                as Arc<dyn bitonic_tpu::coordinator::BatchSorter>
+        })
+        .collect();
+    let svc = Service::new(sorters, ServiceConfig::default());
+
+    let mut gen = Generator::new(seed);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let len = 1 + gen.u32s(1, Distribution::Uniform)[0] as usize % 4096;
+            let keys = gen.u32s(len, Distribution::Uniform);
+            svc.submit(SortRequest::new(i as u64, keys)).ok()
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs.into_iter().flatten() {
+        let resp = rx.recv()?;
+        anyhow::ensure!(
+            bitonic_tpu::sort::is_sorted(&resp.keys),
+            "unsorted response"
+        );
+        ok += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = svc.stats();
+    println!(
+        "served {ok}/{requests} in {:.2}s ({:.0} req/s) — latency {} — device batches {} (occupancy {:.2}) shed {} cpu-fallback {}",
+        wall,
+        ok as f64 / wall,
+        st.latency.summary(),
+        st.device_batches.get(),
+        st.device_rows.get() as f64 / st.device_batches.get().max(1) as f64,
+        st.shed.get(),
+        st.cpu_fallbacks.get(),
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let verbose = args.flag("verbose");
+    let cal = calibrate_from_table1();
+    let mut table = Table::new(vec![
+        "Array size",
+        "QuickSort(cpu)",
+        "BitonicSort(cpu)",
+        "Basic(sim)",
+        "Semi(sim)",
+        "Optimized(sim)",
+        "Ratio",
+        "paper:Basic",
+        "paper:Opt",
+        "paper:Ratio",
+    ]);
+    let mut gen = Generator::new(7);
+    for row in &PAPER_TABLE1 {
+        // CPU columns measured for real up to 16M to keep runtime sane;
+        // larger sizes are skipped here (benches/table1.rs measures all).
+        let measure_cap = 16 << 20;
+        let (quick_ms, bitonic_ms) = if row.n <= measure_cap {
+            let data = gen.u32s(row.n, Distribution::Uniform);
+            let mut q = data.clone();
+            let t0 = Instant::now();
+            quicksort(&mut q);
+            let quick = t0.elapsed().as_secs_f64() * 1e3;
+            let mut b = data;
+            let t0 = Instant::now();
+            bitonic_sort_padded(&mut b);
+            (quick, t0.elapsed().as_secs_f64() * 1e3)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let basic = cal.predict_ms(Variant::Basic, row.n);
+        let semi = cal.predict_ms(Variant::Semi, row.n);
+        let opt = cal.predict_ms(Variant::Optimized, row.n);
+        table.row(vec![
+            fmt_size(row.n),
+            if quick_ms.is_nan() { "—".into() } else { fmt_ms(quick_ms) },
+            if bitonic_ms.is_nan() { "—".into() } else { fmt_ms(bitonic_ms) },
+            fmt_ms(basic),
+            fmt_ms(semi),
+            fmt_ms(opt),
+            if quick_ms.is_nan() { "—".into() } else { format!("{:.1}", quick_ms / opt) },
+            fmt_ms(row.gpu_basic),
+            fmt_ms(row.gpu_optimized),
+            row.ratio.map(|r| format!("{r:.1}")).unwrap_or("—".into()),
+        ]);
+        if verbose {
+            eprintln!("row {} done", fmt_size(row.n));
+        }
+    }
+    println!("{}", table.render());
+    println!("(sim columns: calibrated K10 cost model — DESIGN.md §4; CPU columns measured here)");
+    Ok(())
+}
+
+fn cmd_simulate() -> anyhow::Result<()> {
+    let cal = calibrate_from_table1();
+    println!(
+        "calibrated: t_launch={:.2}µs bw_eff={:.0} GB/s (fit on Basic @256K,16M)",
+        cal.device.t_launch * 1e6,
+        cal.device.bw_gmem / 1e9
+    );
+    let mut t = Table::new(vec![
+        "n", "Basic", "Semi", "Optimized", "paper:Basic", "paper:Semi", "paper:Opt",
+    ]);
+    for row in &PAPER_TABLE1 {
+        t.row(vec![
+            fmt_size(row.n),
+            fmt_ms(cal.predict_ms(Variant::Basic, row.n)),
+            fmt_ms(cal.predict_ms(Variant::Semi, row.n)),
+            fmt_ms(cal.predict_ms(Variant::Optimized, row.n)),
+            fmt_ms(row.gpu_basic),
+            fmt_ms(row.gpu_semi),
+            fmt_ms(row.gpu_optimized),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let n: usize = args.parsed_or("n", 8)?;
+    let net = Network::new(n);
+    println!(
+        "bitonic network, n={n}: {} phases, {} steps, {} compare-exchanges",
+        net.log2n(),
+        net.step_count(),
+        net.compare_exchange_count()
+    );
+    for (p, phase) in net.phases().enumerate() {
+        for step in phase.steps() {
+            let pairs = net.step_pairs(step);
+            let rendering: Vec<String> = pairs
+                .iter()
+                .map(|(a, b, up)| format!("{a}{}{b}", if *up { "↑" } else { "↓" }))
+                .collect();
+            println!(
+                "phase {} (k={:>3}) stride {:>3}: {}",
+                p + 1,
+                step.phase_len,
+                step.stride,
+                rendering.join(" ")
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let n: usize = args.parsed_or("n", 65536)?;
+    let seed: u64 = args.parsed_or("seed", 42)?;
+    let dist = Distribution::parse(&args.get_or("dist", "uniform"))
+        .ok_or_else(|| anyhow::anyhow!("unknown distribution"))?;
+    let path = args
+        .positionals()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| format!("workload_{}_{}.btsd", dist.name(), n));
+    let keys = Generator::new(seed).u32s(n, dist);
+    bitonic_tpu::workload::datasets::save_u32(&path, &keys)?;
+    println!("wrote {n} {} u32 keys to {path}", dist.name());
+    Ok(())
+}
+
+fn cmd_analyze(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+    let n: usize = args.parsed_or("n", 65536)?;
+    let net = Network::new(n.next_power_of_two());
+    let block = 4096;
+    let mut t = Table::new(vec!["variant", "launches", "hbm passes", "vs basic"]);
+    let basic_launches = net.launches(Variant::Basic, block).len() as f64;
+    for v in Variant::ALL {
+        let launches = net.launches(v, block);
+        t.row(vec![
+            v.name().to_string(),
+            launches.len().to_string(),
+            launches
+                .iter()
+                .map(|l| l.global_passes())
+                .sum::<usize>()
+                .to_string(),
+            format!("{:.2}x", basic_launches / launches.len() as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

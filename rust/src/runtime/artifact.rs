@@ -1,0 +1,300 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.tsv` is written by `python/compile/aot.py`; columns:
+//! `name variant batch n dtype descending block grid_cells file`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::sort::network::Variant;
+
+/// Key dtype of an artifact (matches the jnp dtype string).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 32-bit unsigned (the paper's workload).
+    U32,
+    /// 32-bit signed.
+    I32,
+    /// 32-bit float (paper §6 future work).
+    F32,
+}
+
+impl Dtype {
+    /// Parse the jnp dtype name used in the manifest.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "uint32" => Dtype::U32,
+            "int32" => Dtype::I32,
+            "float32" => Dtype::F32,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+
+    /// The manifest/jnp name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U32 => "uint32",
+            Dtype::I32 => "int32",
+            Dtype::F32 => "float32",
+        }
+    }
+
+    /// Bytes per key.
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// What computation an artifact performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Full bitonic sort of each row.
+    Sort,
+    /// Bitonic merge of rows whose two halves are each sorted (paper §3's
+    /// primitive; log-depth — used by `sort::hybrid`).
+    Merge,
+}
+
+impl ArtifactKind {
+    /// Parse the manifest name.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "sort" => ArtifactKind::Sort,
+            "merge" => ArtifactKind::Merge,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Metadata for one compiled-sort artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Unique artifact name (also the filename stem).
+    pub name: String,
+    /// Sort or merge.
+    pub kind: ArtifactKind,
+    /// Which launch-schedule variant the artifact implements.
+    pub variant: Variant,
+    /// Batch dimension B of the (B, N) input.
+    pub batch: usize,
+    /// Row length N (power of two).
+    pub n: usize,
+    /// Key dtype.
+    pub dtype: Dtype,
+    /// True if the artifact sorts descending.
+    pub descending: bool,
+    /// VMEM tile width the fused stages used.
+    pub block: usize,
+    /// Interpret-mode grid split the kernels used.
+    pub grid_cells: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+}
+
+/// Parsed manifest: all artifacts plus the directory they live in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory containing manifest.tsv and the .hlo.txt files.
+    pub dir: PathBuf,
+    /// All artifact entries, manifest order.
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: PathBuf, text: &str) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let header: Vec<&str> = lines
+            .next()
+            .context("empty manifest")?
+            .split('\t')
+            .collect();
+        let idx = |col: &str| -> anyhow::Result<usize> {
+            header
+                .iter()
+                .position(|h| *h == col)
+                .with_context(|| format!("manifest missing column {col:?}"))
+        };
+        let (c_name, c_kind, c_variant, c_batch, c_n, c_dtype, c_desc, c_block, c_cells, c_file) = (
+            idx("name")?,
+            idx("kind")?,
+            idx("variant")?,
+            idx("batch")?,
+            idx("n")?,
+            idx("dtype")?,
+            idx("descending")?,
+            idx("block")?,
+            idx("grid_cells")?,
+            idx("file")?,
+        );
+        let mut entries = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            let get = |i: usize| -> anyhow::Result<&str> {
+                f.get(i)
+                    .copied()
+                    .with_context(|| format!("manifest line {}: missing field {i}", lineno + 2))
+            };
+            let variant = Variant::parse(get(c_variant)?)
+                .with_context(|| format!("bad variant on line {}", lineno + 2))?;
+            entries.push(ArtifactMeta {
+                name: get(c_name)?.to_string(),
+                kind: ArtifactKind::parse(get(c_kind)?)?,
+                variant,
+                batch: get(c_batch)?.parse()?,
+                n: get(c_n)?.parse()?,
+                dtype: Dtype::parse(get(c_dtype)?)?,
+                descending: get(c_desc)? == "1",
+                block: get(c_block)?.parse()?,
+                grid_cells: get(c_cells)?.parse()?,
+                file: PathBuf::from(get(c_file)?),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Find the sort artifact exactly matching the query.
+    pub fn find(
+        &self,
+        variant: Variant,
+        batch: usize,
+        n: usize,
+        dtype: Dtype,
+        descending: bool,
+    ) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|a| {
+            a.kind == ArtifactKind::Sort
+                && a.variant == variant
+                && a.batch == batch
+                && a.n == n
+                && a.dtype == dtype
+                && a.descending == descending
+        })
+    }
+
+    /// All ascending-u32 *sort* artifacts of one variant (the service's
+    /// menu), sorted by (n, batch).
+    pub fn size_classes(&self, variant: Variant) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .entries
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Sort
+                    && a.variant == variant
+                    && a.dtype == Dtype::U32
+                    && !a.descending
+            })
+            .collect();
+        v.sort_by_key(|a| (a.n, a.batch));
+        v
+    }
+
+    /// All ascending-u32 *merge* artifacts, sorted by (n, batch) — the
+    /// hybrid sorter's merge-tree menu.
+    pub fn merge_classes(&self) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .entries
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Merge && a.dtype == Dtype::U32 && !a.descending
+            })
+            .collect();
+        v.sort_by_key(|a| (a.n, a.batch));
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tkind\tvariant\tbatch\tn\tdtype\tdescending\tblock\tgrid_cells\tfile\n\
+        sort_basic_b1_n1024_uint32_asc\tsort\tbasic\t1\t1024\tuint32\t0\t256\t16\ta.hlo.txt\n\
+        sort_optimized_b8_n4096_uint32_asc\tsort\toptimized\t8\t4096\tuint32\t0\t256\t16\tb.hlo.txt\n\
+        sort_optimized_b8_n4096_float32_asc\tsort\toptimized\t8\t4096\tfloat32\t0\t256\t16\tc.hlo.txt\n\
+        sort_optimized_b8_n4096_uint32_desc\tsort\toptimized\t8\t4096\tuint32\t1\t256\t16\td.hlo.txt\n\
+        merge_optimized_b1_n8192_uint32_asc\tmerge\toptimized\t1\t8192\tuint32\t0\t4096\t4\te.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(PathBuf::from("/x"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 5);
+        assert_eq!(m.entries[0].variant, Variant::Basic);
+        assert_eq!(m.entries[0].kind, ArtifactKind::Sort);
+        assert_eq!(m.entries[0].n, 1024);
+        assert!(!m.entries[0].descending);
+        assert!(m.entries[3].descending);
+        assert_eq!(m.entries[4].kind, ArtifactKind::Merge);
+        assert_eq!(m.path_of(&m.entries[1]), PathBuf::from("/x/b.hlo.txt"));
+    }
+
+    #[test]
+    fn merge_classes_filtered() {
+        let m = Manifest::parse(PathBuf::from("/x"), SAMPLE).unwrap();
+        let merges = m.merge_classes();
+        assert_eq!(merges.len(), 1);
+        assert_eq!(merges[0].n, 8192);
+        // find() never returns merges.
+        assert!(m
+            .find(Variant::Optimized, 1, 8192, Dtype::U32, false)
+            .is_none());
+    }
+
+    #[test]
+    fn find_is_exact() {
+        let m = Manifest::parse(PathBuf::from("/x"), SAMPLE).unwrap();
+        assert!(m
+            .find(Variant::Optimized, 8, 4096, Dtype::U32, false)
+            .is_some());
+        assert!(m
+            .find(Variant::Optimized, 8, 4096, Dtype::U32, true)
+            .is_some());
+        assert!(m.find(Variant::Semi, 8, 4096, Dtype::U32, false).is_none());
+        assert!(m.find(Variant::Optimized, 4, 4096, Dtype::U32, false).is_none());
+    }
+
+    #[test]
+    fn size_classes_filtered_and_sorted() {
+        let m = Manifest::parse(PathBuf::from("/x"), SAMPLE).unwrap();
+        let classes = m.size_classes(Variant::Optimized);
+        assert_eq!(classes.len(), 1); // f32 and desc excluded
+        assert_eq!(classes[0].n, 4096);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse(PathBuf::from("/x"), "").is_err());
+        assert!(Manifest::parse(PathBuf::from("/x"), "bogus\nrow").is_err());
+        let bad_variant = "name\tvariant\tbatch\tn\tdtype\tdescending\tblock\tgrid_cells\tfile\nx\twat\t1\t2\tuint32\t0\t2\t1\tf\n";
+        assert!(Manifest::parse(PathBuf::from("/x"), bad_variant).is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [Dtype::U32, Dtype::I32, Dtype::F32] {
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(Dtype::parse("float64").is_err());
+    }
+}

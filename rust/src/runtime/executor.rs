@@ -1,0 +1,156 @@
+//! A compiled sort executable plus typed marshalling.
+
+use anyhow::{ensure, Context};
+
+use super::artifact::{ArtifactMeta, Dtype};
+
+/// One compiled (PJRT-loaded) sort artifact, ready to execute.
+pub struct SortExecutor {
+    /// The artifact this executor was compiled from.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl SortExecutor {
+    /// Compile `hlo_text_path` on `client`. Expensive (XLA compilation);
+    /// the [`super::Registry`] caches the result per artifact.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        meta: ArtifactMeta,
+        hlo_text_path: &std::path::Path,
+    ) -> anyhow::Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_text_path
+                .to_str()
+                .context("artifact path is not valid UTF-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {hlo_text_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", meta.name))?;
+        Ok(Self { meta, exe })
+    }
+
+    /// Sort a full `(batch, n)` buffer of u32 keys, row-major. Returns the
+    /// sorted rows in the same layout. This is the hot path: one
+    /// host→device copy, one execution, one device→host copy.
+    pub fn sort_u32(&self, rows: &[u32]) -> anyhow::Result<Vec<u32>> {
+        ensure!(
+            self.meta.dtype == Dtype::U32,
+            "artifact {} holds {:?} keys",
+            self.meta.name,
+            self.meta.dtype
+        );
+        self.execute_raw(bytes_of(rows))
+            .map(|bytes| from_bytes::<u32>(&bytes))
+    }
+
+    /// Sort `(batch, n)` i32 keys.
+    pub fn sort_i32(&self, rows: &[i32]) -> anyhow::Result<Vec<i32>> {
+        ensure!(self.meta.dtype == Dtype::I32, "dtype mismatch");
+        self.execute_raw(bytes_of(rows))
+            .map(|bytes| from_bytes::<i32>(&bytes))
+    }
+
+    /// Sort `(batch, n)` f32 keys (finite values only — NaN ordering is
+    /// not defined for the min/max network; see DESIGN.md §6).
+    pub fn sort_f32(&self, rows: &[f32]) -> anyhow::Result<Vec<f32>> {
+        ensure!(self.meta.dtype == Dtype::F32, "dtype mismatch");
+        self.execute_raw(bytes_of(rows))
+            .map(|bytes| from_bytes::<f32>(&bytes))
+    }
+
+    fn execute_raw(&self, data: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let (b, n) = (self.meta.batch, self.meta.n);
+        ensure!(
+            data.len() == b * n * self.meta.dtype.size(),
+            "artifact {} wants {}x{} ({} bytes), got {} bytes",
+            self.meta.name,
+            b,
+            n,
+            b * n * self.meta.dtype.size(),
+            data.len()
+        );
+        let ty = match self.meta.dtype {
+            Dtype::U32 => xla::ElementType::U32,
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::F32 => xla::ElementType::F32,
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(ty, &[b, n], data)
+            .map_err(|e| anyhow::anyhow!("literal creation: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let vec_len = b * n;
+        match self.meta.dtype {
+            Dtype::U32 => {
+                let v = out
+                    .to_vec::<u32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                ensure!(v.len() == vec_len, "result length {} != {vec_len}", v.len());
+                Ok(bytes_of(&v).to_vec())
+            }
+            Dtype::I32 => {
+                let v = out
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                ensure!(v.len() == vec_len, "result length {} != {vec_len}", v.len());
+                Ok(bytes_of(&v).to_vec())
+            }
+            Dtype::F32 => {
+                let v = out
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                ensure!(v.len() == vec_len, "result length {} != {vec_len}", v.len());
+                Ok(bytes_of(&v).to_vec())
+            }
+        }
+    }
+}
+
+/// Reinterpret a plain-data slice as bytes.
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) }
+}
+
+/// Reinterpret bytes as a plain-data vector (copies).
+fn from_bytes<T: Copy>(bytes: &[u8]) -> Vec<T> {
+    let n = bytes.len() / std::mem::size_of::<T>();
+    let mut out = Vec::<T>::with_capacity(n);
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr().cast::<u8>(), bytes.len());
+        out.set_len(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip_u32() {
+        let xs = [0xDEAD_BEEFu32, 1, u32::MAX];
+        let b = bytes_of(&xs);
+        assert_eq!(b.len(), 12);
+        let back: Vec<u32> = from_bytes(b);
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn byte_roundtrip_f32() {
+        let xs = [1.5f32, -0.0, f32::INFINITY];
+        let back: Vec<f32> = from_bytes(bytes_of(&xs));
+        assert_eq!(back[0], 1.5);
+        assert!(back[1].is_sign_negative());
+        assert_eq!(back[2], f32::INFINITY);
+    }
+}

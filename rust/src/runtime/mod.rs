@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!
+//! ```text
+//! artifacts/manifest.tsv ──> Registry (metadata)
+//! artifacts/<name>.hlo.txt ─ HloModuleProto::from_text_file
+//!                          ─ XlaComputation::from_proto
+//!                          ─ PjRtClient::cpu().compile()   (once, cached)
+//!                          ─ executable.execute(&[literal]) (hot path)
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and the aot.py docstring).
+//!
+//! Python never runs here — the artifacts directory is the entire
+//! build-time/run-time interface.
+
+pub mod artifact;
+pub mod executor;
+pub mod host;
+pub mod registry;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
+pub use executor::SortExecutor;
+pub use host::{spawn as spawn_device_host, DeviceHandle};
+pub use registry::{Key, Registry};

@@ -1,0 +1,148 @@
+//! Artifact registry: one PJRT client + lazily compiled executables.
+//!
+//! XLA compilation of one sort artifact takes seconds, so executables are
+//! compiled on first use and cached for the life of the process. The
+//! registry is `Sync`: the service's worker threads share it behind an
+//! `Arc`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
+use super::executor::SortExecutor;
+use crate::sort::network::Variant;
+
+/// Cache key for a compiled executable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Key {
+    /// Sort or merge artifact.
+    pub kind: ArtifactKind,
+    /// Schedule variant.
+    pub variant: Variant,
+    /// Batch rows.
+    pub batch: usize,
+    /// Row length.
+    pub n: usize,
+    /// Key dtype.
+    pub dtype: Dtype,
+    /// Sort direction.
+    pub descending: bool,
+}
+
+impl Key {
+    /// Key for an artifact's metadata.
+    pub fn of(meta: &ArtifactMeta) -> Self {
+        Self {
+            kind: meta.kind,
+            variant: meta.variant,
+            batch: meta.batch,
+            n: meta.n,
+            dtype: meta.dtype,
+            descending: meta.descending,
+        }
+    }
+}
+
+/// The registry. Cheap to clone (`Arc` inside).
+pub struct Registry {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<Key, Arc<SortExecutor>>>,
+}
+
+impl Registry {
+    /// Open the artifacts directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest the registry serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling on first use) the executable for `key`.
+    pub fn get(&self, key: Key) -> anyhow::Result<Arc<SortExecutor>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        // Compile outside the lock: first-touch latency must not serialise
+        // unrelated size classes. A racing double-compile is benign.
+        let meta = self
+            .manifest
+            .entries
+            .iter()
+            .find(|a| Key::of(a) == key)
+            .with_context(|| format!("no artifact for {key:?} — re-run `make artifacts`"))?
+            .clone();
+        let path = self.manifest.path_of(&meta);
+        let exe = Arc::new(SortExecutor::compile(&self.client, meta, &path)?);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(Arc::clone(cache.entry(key).or_insert(exe)))
+    }
+
+    /// Eagerly compile every artifact of `variant` (service warm-up).
+    pub fn warm_up(&self, variant: Variant) -> anyhow::Result<usize> {
+        let keys: Vec<Key> = self
+            .manifest
+            .size_classes(variant)
+            .into_iter()
+            .map(Key::of)
+            .collect();
+        for &k in &keys {
+            self.get(k)?;
+        }
+        Ok(keys.len())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Compilation-dependent tests live in rust/tests/ (they need real
+    // artifacts); here we only cover the pure parts.
+
+    #[test]
+    fn key_of_meta_roundtrip() {
+        let meta = ArtifactMeta {
+            name: "x".into(),
+            kind: ArtifactKind::Sort,
+            variant: Variant::Semi,
+            batch: 8,
+            n: 1024,
+            dtype: Dtype::U32,
+            descending: false,
+            block: 256,
+            grid_cells: 16,
+            file: "x.hlo.txt".into(),
+        };
+        let k = Key::of(&meta);
+        assert_eq!(k.variant, Variant::Semi);
+        assert_eq!(k.batch, 8);
+        assert_eq!(k.n, 1024);
+        assert!(!k.descending);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let err = match Registry::open("/nonexistent-artifacts-dir") {
+            Err(e) => e,
+            Ok(_) => panic!("open of missing dir must fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

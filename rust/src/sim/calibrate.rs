@@ -1,0 +1,201 @@
+//! Calibration of the cost model against the paper's Table 1.
+//!
+//! Exactly two constants are fit — kernel-launch overhead `t_launch` and
+//! effective global-memory bandwidth `bw_gmem` — using two anchor cells of
+//! the *Basic* column (256K and 16M). Everything else (the other ten Basic
+//! cells, and the entire Semi and Optimized columns) is then a genuine
+//! prediction of the model; EXPERIMENTS.md reports predicted-vs-paper for
+//! all of them.
+//!
+//! Note (recorded in EXPERIMENTS.md): the bandwidth the paper's numbers
+//! imply (~500 GB/s for 300 full passes over 64 MiB in 80 ms) exceeds a
+//! single GK104's 160 GB/s datasheet peak — the authors likely used both
+//! K10 dies and/or measured without transfer setup. Calibration absorbs
+//! this into `bw_gmem`; the *shape* conclusions are unaffected because all
+//! three variants share the constant.
+
+use super::analytic::simulate;
+use super::device::Device;
+use crate::sort::network::Variant;
+
+/// One row of the paper's Table 1 (times in milliseconds; `None` = the
+/// paper prints "—").
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    /// Array size label (elements).
+    pub n: usize,
+    /// CPU quick sort ms.
+    pub cpu_quick: Option<f64>,
+    /// CPU bitonic sort ms.
+    pub cpu_bitonic: f64,
+    /// GPU basic ms.
+    pub gpu_basic: f64,
+    /// GPU semi (optimization 1) ms.
+    pub gpu_semi: f64,
+    /// GPU optimized (optimizations 1+2) ms.
+    pub gpu_optimized: f64,
+    /// Speedup ratio the paper reports (quick / optimized).
+    pub ratio: Option<f64>,
+}
+
+/// The paper's Table 1, transcribed. The "521K" row is the paper's typo
+/// for 512K.
+pub const PAPER_TABLE1: [PaperRow; 12] = [
+    PaperRow { n: 128 << 10, cpu_quick: None,           cpu_bitonic: 30.0,     gpu_basic: 0.76,    gpu_semi: 0.46,    gpu_optimized: 0.36,    ratio: None },
+    PaperRow { n: 256 << 10, cpu_quick: Some(20.0),     cpu_bitonic: 60.0,     gpu_basic: 1.21,    gpu_semi: 0.87,    gpu_optimized: 0.66,    ratio: Some(30.2) },
+    PaperRow { n: 512 << 10, cpu_quick: Some(30.0),     cpu_bitonic: 110.0,    gpu_basic: 2.22,    gpu_semi: 1.78,    gpu_optimized: 1.31,    ratio: Some(22.7) },
+    PaperRow { n: 1 << 20,   cpu_quick: Some(80.0),     cpu_bitonic: 250.0,    gpu_basic: 4.58,    gpu_semi: 3.89,    gpu_optimized: 2.80,    ratio: Some(28.5) },
+    PaperRow { n: 2 << 20,   cpu_quick: Some(150.0),    cpu_bitonic: 550.0,    gpu_basic: 8.90,    gpu_semi: 7.95,    gpu_optimized: 5.87,    ratio: Some(25.5) },
+    PaperRow { n: 4 << 20,   cpu_quick: Some(280.0),    cpu_bitonic: 1230.0,   gpu_basic: 18.14,   gpu_semi: 16.59,   gpu_optimized: 12.30,   ratio: Some(22.7) },
+    PaperRow { n: 8 << 20,   cpu_quick: Some(590.0),    cpu_bitonic: 2670.0,   gpu_basic: 38.13,   gpu_semi: 35.29,   gpu_optimized: 26.36,   ratio: Some(22.3) },
+    PaperRow { n: 16 << 20,  cpu_quick: Some(1230.0),   cpu_bitonic: 5880.0,   gpu_basic: 80.09,   gpu_semi: 75.52,   gpu_optimized: 56.27,   ratio: Some(21.8) },
+    PaperRow { n: 32 << 20,  cpu_quick: Some(2570.0),   cpu_bitonic: 12900.0,  gpu_basic: 173.77,  gpu_semi: 162.56,  gpu_optimized: 120.93,  ratio: Some(21.3) },
+    PaperRow { n: 64 << 20,  cpu_quick: Some(5360.0),   cpu_bitonic: 27780.0,  gpu_basic: 373.52,  gpu_semi: 350.87,  gpu_optimized: 258.61,  ratio: Some(20.7) },
+    PaperRow { n: 128 << 20, cpu_quick: Some(11180.0),  cpu_bitonic: 59860.0,  gpu_basic: 803.16,  gpu_semi: 756.94,  gpu_optimized: 553.49,  ratio: Some(20.1) },
+    PaperRow { n: 256 << 20, cpu_quick: Some(23260.0),  cpu_bitonic: 128660.0, gpu_basic: 1727.23, gpu_semi: 1631.92, gpu_optimized: 1185.02, ratio: Some(19.6) },
+];
+
+/// Fitted constants plus the device they apply to.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// The calibrated device.
+    pub device: Device,
+    /// Anchor sizes used for the fit.
+    pub anchors: [usize; 2],
+}
+
+/// Fit `t_launch` and `bw_gmem` so the Basic column matches the paper at
+/// the two anchor sizes (256K and 16M), holding the nominal ALU and
+/// shared-memory terms fixed.
+pub fn calibrate_from_table1() -> Calibration {
+    let nominal = Device::k10_gk104();
+    let anchors = [256 << 10, 16 << 20];
+    let cells: Vec<(usize, f64)> = anchors
+        .iter()
+        .map(|&n| {
+            let row = PAPER_TABLE1.iter().find(|r| r.n == n).unwrap();
+            (n, row.gpu_basic / 1e3) // seconds
+        })
+        .collect();
+
+    // For Basic: T = L·a + L·8n·b + fixed(alu), with a = t_launch,
+    // b = 1/bw. Two cells → 2×2 linear system.
+    let term = |n: usize| -> (f64, f64, f64) {
+        let r = simulate(&nominal, Variant::Basic, n, 4);
+        let launches = r.launches as f64;
+        (launches, launches * 8.0 * n as f64, r.t_alu)
+    };
+    let (l1, g1, f1) = term(cells[0].0);
+    let (l2, g2, f2) = term(cells[1].0);
+    let (y1, y2) = (cells[0].1 - f1, cells[1].1 - f2);
+    let det = l1 * g2 - l2 * g1;
+    let (mut a, mut b) = if det.abs() > 1e-30 {
+        ((y1 * g2 - y2 * g1) / det, (l1 * y2 - l2 * y1) / det)
+    } else {
+        (nominal.t_launch, 1.0 / nominal.bw_gmem)
+    };
+    // Physically implausible fits (e.g. negative launch overhead because
+    // the ALU estimate overshoots) degrade gracefully: clamp and refit the
+    // single remaining unknown on the large anchor.
+    if a <= 0.0 || !a.is_finite() {
+        a = 1.0e-6;
+        b = (y2 - l2 * a) / g2;
+    }
+    if b <= 0.0 || !b.is_finite() {
+        b = 1.0 / nominal.bw_gmem;
+    }
+
+    let device = Device {
+        t_launch: a,
+        bw_gmem: 1.0 / b,
+        ..nominal
+    };
+    Calibration { device, anchors }
+}
+
+impl Calibration {
+    /// Predicted milliseconds for (variant, n) under the calibrated model.
+    pub fn predict_ms(&self, variant: Variant, n: usize) -> f64 {
+        simulate(&self.device, variant, n, 4).total_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_reproduced_exactly() {
+        let cal = calibrate_from_table1();
+        for &n in &cal.anchors {
+            let paper = PAPER_TABLE1.iter().find(|r| r.n == n).unwrap().gpu_basic;
+            let pred = cal.predict_ms(Variant::Basic, n);
+            assert!(
+                (pred - paper).abs() / paper < 0.02,
+                "anchor n={n}: pred {pred} vs paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_anchor_basic_cells_within_2x() {
+        // The model is two-parameter; the other ten Basic cells are
+        // predictions and must land in the right ballpark (shape).
+        let cal = calibrate_from_table1();
+        for row in &PAPER_TABLE1 {
+            let pred = cal.predict_ms(Variant::Basic, row.n);
+            let ratio = pred / row.gpu_basic;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "n={}: pred {pred:.2} vs paper {:.2} (×{ratio:.2})",
+                row.n,
+                row.gpu_basic
+            );
+        }
+    }
+
+    #[test]
+    fn predicted_variant_ordering_everywhere() {
+        let cal = calibrate_from_table1();
+        for row in &PAPER_TABLE1 {
+            let b = cal.predict_ms(Variant::Basic, row.n);
+            let s = cal.predict_ms(Variant::Semi, row.n);
+            let o = cal.predict_ms(Variant::Optimized, row.n);
+            assert!(b > s && s > o, "n={}: {b:.2} {s:.2} {o:.2}", row.n);
+        }
+    }
+
+    #[test]
+    fn optimized_speedup_factor_in_paper_band() {
+        // Paper: Optimized/Basic ∈ [0.60, 0.75] across sizes ≥ 1M.
+        let cal = calibrate_from_table1();
+        for row in PAPER_TABLE1.iter().filter(|r| r.n >= 1 << 20) {
+            let frac = cal.predict_ms(Variant::Optimized, row.n)
+                / cal.predict_ms(Variant::Basic, row.n);
+            assert!(
+                (0.4..0.9).contains(&frac),
+                "n={}: optimized/basic {frac:.2}",
+                row.n
+            );
+        }
+    }
+
+    #[test]
+    fn table_constants_transcribed() {
+        assert_eq!(PAPER_TABLE1.len(), 12);
+        assert_eq!(PAPER_TABLE1[0].n, 128 << 10);
+        assert_eq!(PAPER_TABLE1[11].n, 256 << 20);
+        assert_eq!(PAPER_TABLE1[11].gpu_optimized, 1185.02);
+        // Ratio column consistency: quick / optimized ≈ printed ratio.
+        for row in &PAPER_TABLE1 {
+            if let (Some(q), Some(r)) = (row.cpu_quick, row.ratio) {
+                let computed = q / row.gpu_optimized;
+                assert!(
+                    (computed - r).abs() / r < 0.02,
+                    "n={}: {computed:.1} vs printed {r}",
+                    row.n
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Device parameter sets for the cost model.
+
+/// GPU device parameters. Defaults model one GK104 die of the paper's
+/// Kepler K10 (the paper uses a single-GPU implementation; K10 carries two
+/// GK104s but bitonic sort as described runs on one).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Kernel-launch (host-synchronisation) overhead, seconds.
+    pub t_launch: f64,
+    /// Effective global-memory bandwidth for streaming access, bytes/s.
+    /// (K10 peak per GK104 is 160 GB/s; effective streaming ≈ 75–85%.)
+    pub bw_gmem: f64,
+    /// Aggregate shared-memory bandwidth, bytes/s (per-SMX 32 banks × 4 B
+    /// × core clock × 8 SMX ≈ 1 TB/s class).
+    pub bw_shmem: f64,
+    /// Compare-exchange throughput, operations/s (bound by integer
+    /// min/max + select on 1536 cores/SMX-issue; ~1e11/s class).
+    pub cx_throughput: f64,
+    /// Shared memory per block, bytes (48 KiB on Kepler).
+    pub shmem_bytes: usize,
+    /// Threads per block the paper-style kernels use.
+    pub threads_per_block: usize,
+    /// Warp size (32 on all CUDA GPUs the paper considers).
+    pub warp: usize,
+}
+
+impl Device {
+    /// One GK104 of the paper's K10 — *pre-calibration* nominal values;
+    /// `calibrate::calibrate_from_table1` refines `t_launch`/`bw_gmem`.
+    pub fn k10_gk104() -> Self {
+        Self {
+            name: "K10 (GK104)",
+            t_launch: 5.0e-6,
+            bw_gmem: 0.80 * 160.0e9,
+            bw_shmem: 1.0e12,
+            cx_throughput: 1.2e11,
+            shmem_bytes: 48 << 10,
+            threads_per_block: 512,
+            warp: 32,
+        }
+    }
+
+    /// Keys per shared-memory tile for `key_bytes`-sized keys: the paper's
+    /// optimization 1 copies a subsequence into shared memory; with
+    /// double-buffering headroom the usable tile is half the 48 KiB.
+    pub fn block_keys(&self, key_bytes: usize) -> usize {
+        let usable = self.shmem_bytes / 2;
+        (usable / key_bytes).next_power_of_two() >> 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k10_defaults_sane() {
+        let d = Device::k10_gk104();
+        assert!(d.t_launch > 0.0 && d.t_launch < 1e-3);
+        assert!(d.bw_gmem > 1e10 && d.bw_gmem < 1e12);
+        assert_eq!(d.warp, 32);
+    }
+
+    #[test]
+    fn block_keys_power_of_two_and_fits() {
+        let d = Device::k10_gk104();
+        let keys = d.block_keys(4);
+        assert!(keys.is_power_of_two());
+        assert!(keys * 4 <= d.shmem_bytes);
+        // 48 KiB / 2 / 4 B = 6144 → 4096 keys.
+        assert_eq!(keys, 4096);
+    }
+}

@@ -1,0 +1,217 @@
+//! Transaction-level trace mode: walk the real compare-exchange index
+//! stream of a step and count 128-byte coalesced global-memory
+//! transactions and shared-memory bank conflicts, per the CUDA coalescing
+//! rules the paper's §2.2 describes (half-warp segment coalescing).
+//!
+//! This is the evidence behind the paper's (implicit) claim that the
+//! optimizations work by reducing *pass counts*, not by improving
+//! per-access coalescing: bitonic's partner accesses are already perfectly
+//! coalesced for strides ≥ warp size, and for small strides the accesses
+//! still fall in few segments. The ablation bench (E7) prints these
+//! counts.
+
+use super::device::Device;
+use crate::sort::network::Step;
+
+/// Tiny set of segment ids touched by one warp (≤ 64 entries, so a linear
+/// scan beats hashing).
+#[derive(Default)]
+struct SegSet(Vec<usize>);
+
+impl SegSet {
+    fn insert(&mut self, seg: usize) {
+        if !self.0.contains(&seg) {
+            self.0.push(seg);
+        }
+    }
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// Transaction counts for one kernel launch over `n` keys.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    /// 128-byte global-memory transactions issued (loads + stores).
+    pub gmem_transactions: usize,
+    /// Perfectly coalesced half-warp accesses.
+    pub coalesced: usize,
+    /// Divergent (multi-segment) half-warp accesses.
+    pub divergent: usize,
+    /// Shared-memory bank conflicts (extra cycles).
+    pub bank_conflicts: usize,
+}
+
+/// Count global-memory transactions for one *global* compare-exchange
+/// step: every thread `t` of every (half-)warp loads `a[t]` and
+/// `a[t ^ stride]` and stores both back.
+///
+/// Transaction rule (cc 2.0 simplification of the paper's §2.2): a warp's
+/// 32 4-byte accesses are serviced by one 128-byte transaction per
+/// distinct 128-byte segment touched.
+pub fn trace_global_step(device: &Device, n: usize, step: Step, key_bytes: usize) -> TraceCounts {
+    let warp = device.warp;
+    let seg_keys = 128 / key_bytes; // keys per 128-byte segment
+    let mut counts = TraceCounts::default();
+
+    // Threads are assigned one per *pair*: thread t handles pair
+    // (i, i ^ j) where i is the t-th index with bit j clear.
+    // We walk warps analytically: within a warp, the 32 consecutive pair
+    // indices map to base addresses; count distinct segments.
+    let pairs = n / 2;
+    let stride = step.stride;
+    let mut warp_start = 0usize;
+    while warp_start < pairs {
+        let lanes = warp.min(pairs - warp_start);
+        // Low-side and high-side addresses of this warp's lanes.
+        let mut segs_lo = SegSet::default();
+        let mut segs_hi = SegSet::default();
+        for lane in 0..lanes {
+            let t = warp_start + lane;
+            // The t-th index with bit `stride` clear: insert a 0 at bit
+            // position log2(stride).
+            let low_bits = t & (stride - 1);
+            let high_bits = (t & !(stride - 1)) << 1;
+            let i = high_bits | low_bits;
+            let partner = i | stride;
+            segs_lo.insert(i / seg_keys);
+            segs_hi.insert(partner / seg_keys);
+        }
+        // Loads and stores each: 2 accesses per side.
+        let tx = 2 * (segs_lo.len() + segs_hi.len());
+        counts.gmem_transactions += tx;
+        let ideal = 2 * 2 * lanes.div_ceil(seg_keys).max(1);
+        if tx <= ideal {
+            counts.coalesced += 1;
+        } else {
+            counts.divergent += 1;
+        }
+        warp_start += lanes;
+    }
+    counts
+}
+
+/// Count shared-memory bank conflicts for one in-block step: Kepler has 32
+/// banks, 4-byte wide; thread `t` of a warp accesses `a[i]`/`a[i^j]` in
+/// the tile. Conflict degree = max threads hitting the same bank with
+/// different addresses.
+pub fn trace_shared_step(device: &Device, block: usize, step: Step, key_bytes: usize) -> TraceCounts {
+    let warp = device.warp;
+    let banks = 32;
+    let words_per_key = key_bytes / 4;
+    let mut counts = TraceCounts::default();
+    let pairs = block / 2;
+    let stride = step.stride;
+    let mut warp_start = 0usize;
+    while warp_start < pairs {
+        let lanes = warp.min(pairs - warp_start);
+        // Bank histogram of the low-side accesses (high side is the same
+        // pattern shifted by `stride` keys → identical conflict degree).
+        let mut bank_addr: Vec<Option<usize>> = vec![None; banks];
+        let mut conflicts = 0usize;
+        for lane in 0..lanes {
+            let t = warp_start + lane;
+            let low_bits = t & (stride - 1);
+            let high_bits = (t & !(stride - 1)) << 1;
+            let i = high_bits | low_bits;
+            let word = i * words_per_key;
+            let bank = word % banks;
+            match bank_addr[bank] {
+                None => bank_addr[bank] = Some(word),
+                Some(w) if w == word => {} // broadcast, no conflict
+                Some(_) => conflicts += 1,
+            }
+        }
+        counts.bank_conflicts += conflicts * 2; // both sides
+        warp_start += lanes;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::network::Network;
+
+    fn dev() -> Device {
+        Device::k10_gk104()
+    }
+
+    #[test]
+    fn large_strides_perfectly_coalesced() {
+        // stride >= 32 keys: lane addresses are consecutive on both sides.
+        let n = 1 << 16;
+        for stride in [32usize, 256, 1 << 12] {
+            let c = trace_global_step(&dev(), n, Step { phase_len: 2 * stride, stride }, 4);
+            assert_eq!(c.divergent, 0, "stride {stride} diverged");
+            assert!(c.coalesced > 0);
+        }
+    }
+
+    #[test]
+    fn transaction_count_lower_bound() {
+        // At minimum, every key must be loaded and stored once:
+        // 2 * n / seg_keys transactions.
+        let n = 1 << 14;
+        let net = Network::new(n);
+        for step in net.steps() {
+            let c = trace_global_step(&dev(), n, step, 4);
+            assert!(
+                c.gmem_transactions >= 2 * n / 32,
+                "step {step:?}: {} transactions",
+                c.gmem_transactions
+            );
+        }
+    }
+
+    #[test]
+    fn small_strides_cost_no_extra_segments() {
+        // stride < 32: low and high lanes interleave inside the same
+        // segments, so total segments ≈ the ideal streaming count — the
+        // quantitative version of "coalescing is not the bottleneck".
+        let n = 1 << 14;
+        let ideal = 2 * 2 * (n / 2) / 32; // loads+stores, both sides
+        for stride in [1usize, 2, 8, 16] {
+            let c = trace_global_step(&dev(), n, Step { phase_len: 2 * stride, stride }, 4);
+            assert!(
+                c.gmem_transactions <= 2 * ideal,
+                "stride {stride}: {} vs ideal {ideal}",
+                c.gmem_transactions
+            );
+        }
+    }
+
+    #[test]
+    fn shared_step_u32_conflict_free_at_warp_strides() {
+        // 4-byte keys at strides >= warp size: the 32 low-side addresses
+        // of a warp are consecutive words → 32 distinct banks.
+        let d = dev();
+        for stride in [32usize, 64, 512, 2048] {
+            let c = trace_shared_step(&d, 4096, Step { phase_len: 2 * stride, stride }, 4);
+            assert_eq!(c.bank_conflicts, 0, "stride {stride}");
+        }
+    }
+
+    #[test]
+    fn shared_step_u32_small_strides_conflict() {
+        // Strides < 32 interleave the low-side addresses with gaps, so a
+        // warp's accesses revisit banks (2-way for stride 16, 2-way for
+        // stride 1 where lanes hit words 2t) — the known shared-memory
+        // bitonic penalty the literature pads around.
+        let d = dev();
+        for stride in [1usize, 2, 8, 16] {
+            let c = trace_shared_step(&d, 4096, Step { phase_len: 2 * stride, stride }, 4);
+            assert!(c.bank_conflicts > 0, "stride {stride} unexpectedly clean");
+        }
+    }
+
+    #[test]
+    fn shared_step_u64_has_two_way_conflicts() {
+        // 8-byte keys stride the banks 2× faster → 2-way conflicts appear
+        // (the known penalty for 64-bit keys the paper's §6 future work
+        // would hit).
+        let d = dev();
+        let c = trace_shared_step(&d, 4096, Step { phase_len: 32, stride: 16 }, 8);
+        assert!(c.bank_conflicts > 0);
+    }
+}

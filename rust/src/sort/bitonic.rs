@@ -1,0 +1,183 @@
+//! Sequential CPU bitonic sort — the paper's second CPU baseline
+//! (Table 1, "BitonicSort" column, the one that is ~5× slower than
+//! quicksort because of its `O(n log² n)` complexity).
+//!
+//! The implementation iterates the exact [`Network`] schedule, so the CPU
+//! baseline, the simulator, and the Pallas kernels all execute the same
+//! abstract network.
+
+use super::network::Network;
+use super::SortKey;
+
+/// Sort `xs` ascending in place. `xs.len()` must be a power of two (or 0/1);
+/// use [`bitonic_sort_padded`] for arbitrary lengths.
+pub fn bitonic_sort<T: SortKey>(xs: &mut [T]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    assert!(
+        n.is_power_of_two(),
+        "bitonic_sort requires a power-of-two length, got {n}; use bitonic_sort_padded"
+    );
+    for step in Network::new(n).steps() {
+        compare_exchange_step(xs, step.phase_len, step.stride);
+    }
+}
+
+/// One full compare-exchange step with stride `j`, direction from bit `k`.
+///
+/// This loop is the CPU analog of the paper §3.3 kernel: for each `i`,
+/// partner `ixj = i ^ j`; ascending iff `i & k == 0`.
+#[inline]
+pub fn compare_exchange_step<T: SortKey>(xs: &mut [T], k: usize, j: usize) {
+    let n = xs.len();
+    let mut i = 0;
+    // Iterate i over the "lower partner" indices only: groups of j
+    // consecutive lows alternate with j highs, so skip j after every j.
+    while i < n {
+        let ascending = i & k == 0;
+        // Whole run [i, i+j) shares the same direction when 2j <= k
+        // (always true within a phase), so hoist the branch.
+        for a in i..i + j {
+            let b = a ^ j;
+            let (lo, hi) = (xs[a], xs[b]);
+            let swap = if ascending {
+                hi.total_lt(&lo)
+            } else {
+                lo.total_lt(&hi)
+            };
+            if swap {
+                xs.swap(a, b);
+            }
+        }
+        i += 2 * j;
+    }
+}
+
+/// Sort any-length input by padding to the next power of two with
+/// `T::MAX_KEY`, sorting, and truncating. This is exactly what the L3
+/// coordinator's size-class router does before dispatching to the GPU
+/// artifacts, so the CPU path and the accelerator path agree bit-for-bit.
+pub fn bitonic_sort_padded<T: SortKey>(xs: &mut Vec<T>) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let padded = n.next_power_of_two();
+    xs.resize(padded, T::MAX_KEY);
+    bitonic_sort(xs);
+    xs.truncate(n);
+}
+
+/// Sort descending (paper Fig. 2 alternates directions internally; a
+/// descending final order is the mirrored network).
+pub fn bitonic_sort_desc<T: SortKey>(xs: &mut [T]) {
+    bitonic_sort(xs);
+    xs.reverse();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::verify::{is_sorted, is_sorted_desc, same_multiset};
+    use crate::workload::{Distribution, Generator};
+
+    #[test]
+    fn sorts_all_pow2_sizes() {
+        let mut gen = Generator::new(0xB17);
+        for logn in 1..=14 {
+            let orig = gen.u32s(1 << logn, Distribution::Uniform);
+            let mut v = orig.clone();
+            bitonic_sort(&mut v);
+            assert!(is_sorted(&v), "n=2^{logn}");
+            assert!(same_multiset(&orig, &v));
+        }
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        let mut gen = Generator::new(0x50F7);
+        for d in Distribution::ALL {
+            let orig = gen.u32s(1 << 10, d);
+            let mut v = orig.clone();
+            bitonic_sort(&mut v);
+            assert!(is_sorted(&v), "{}", d.name());
+            assert!(same_multiset(&orig, &v));
+        }
+    }
+
+    #[test]
+    fn exhaustive_tiny_permutations() {
+        // All permutations of 8 distinct keys (the paper's Fig. 2 size) —
+        // the 0-1 principle plus this gives very high confidence.
+        let mut perm = [0u32, 1, 2, 3, 4, 5, 6, 7];
+        let mut count = 0;
+        permute(&mut perm, 0, &mut |p| {
+            let mut v = p.to_vec();
+            bitonic_sort(&mut v);
+            assert_eq!(v, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+            count += 1;
+        });
+        assert_eq!(count, 40320);
+
+        fn permute(xs: &mut [u32], k: usize, f: &mut impl FnMut(&[u32])) {
+            if k == xs.len() {
+                f(xs);
+                return;
+            }
+            for i in k..xs.len() {
+                xs.swap(k, i);
+                permute(xs, k + 1, f);
+                xs.swap(k, i);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_one_principle_n16() {
+        // Knuth's 0-1 principle: a comparison network sorts all inputs iff
+        // it sorts all 0-1 inputs. Exhaust all 2^16 binary inputs at n=16.
+        for bits in 0u32..(1 << 16) {
+            let mut v: Vec<u32> = (0..16).map(|i| (bits >> i) & 1).collect();
+            bitonic_sort(&mut v);
+            assert!(is_sorted(&v), "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn padded_handles_arbitrary_lengths() {
+        let mut gen = Generator::new(2);
+        for n in [0usize, 1, 3, 5, 100, 1000, 1023, 1025] {
+            let orig = gen.u32s(n, Distribution::Uniform);
+            let mut v = orig.clone();
+            bitonic_sort_padded(&mut v);
+            assert_eq!(v.len(), n);
+            assert!(is_sorted(&v), "n={n}");
+            assert!(same_multiset(&orig, &v));
+        }
+    }
+
+    #[test]
+    fn descending_order() {
+        let mut gen = Generator::new(3);
+        let mut v = gen.u32s(256, Distribution::Uniform);
+        bitonic_sort_desc(&mut v);
+        assert!(is_sorted_desc(&v));
+    }
+
+    #[test]
+    fn floats_sort_with_total_order() {
+        let mut v = vec![0.5f32, -2.0, f32::NAN, 1.5, -0.0, 0.0, f32::INFINITY, -3.25];
+        bitonic_sort(&mut v);
+        assert_eq!(v[0], -3.25);
+        assert!(v[7].is_nan());
+        assert!(is_sorted(&v[..7]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        bitonic_sort(&mut [3u32, 1, 2]);
+    }
+}

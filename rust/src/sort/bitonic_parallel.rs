@@ -1,0 +1,210 @@
+//! Multicore CPU bitonic sort — the paper's §6 future-work item
+//! ("further explore and compare the performance of a multicore … bitonic
+//! sort implementation"), DESIGN.md experiment E9.
+//!
+//! Parallelisation mirrors the GPU structure: within one compare-exchange
+//! step every pair is independent, so the index space is split across
+//! threads; steps are separated by a barrier (the CPU analog of the
+//! paper's host synchronization). Like the GPU "semi" optimisation, small
+//! strides are handled by giving each thread a contiguous chunk and
+//! running the whole tail of the phase locally without any barrier —
+//! the shared-memory optimisation translated to cache locality.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+use super::network::Network;
+use super::SortKey;
+
+/// Sort `xs` ascending in place using `threads` OS threads.
+/// `xs.len()` must be a power of two.
+pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    assert!(n.is_power_of_two(), "bitonic_sort_parallel requires n = 2^k, got {n}");
+    let threads = threads.clamp(1, n / 2);
+    if threads == 1 || n < 4096 {
+        // Thread overhead dominates below this; fall back to sequential.
+        super::bitonic::bitonic_sort(xs);
+        return;
+    }
+
+    // Each thread owns a contiguous chunk of size n/threads (power of two
+    // by construction when threads is a power of two; round down to one).
+    let threads = threads.next_power_of_two() >> usize::from(!threads.is_power_of_two());
+    let chunk = n / threads;
+
+    let barrier = Arc::new(Barrier::new(threads));
+    let ptr = SharedSlice(xs.as_mut_ptr(), n);
+
+    // The schedule every thread walks in lockstep.
+    let net = Network::new(n);
+    let steps: Vec<(usize, usize)> = net.steps().map(|s| (s.phase_len, s.stride)).collect();
+    let panics = Arc::new(AtomicUsize::new(0));
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = Arc::clone(&barrier);
+            let steps = &steps;
+            let panics = Arc::clone(&panics);
+            let ptr = ptr;
+            scope.spawn(move || {
+                let guard = PanicCounter(&panics);
+                // SAFETY: each thread writes only indices whose pair (a, a^j)
+                // both fall in [t*chunk, (t+1)*chunk) when j < chunk, or
+                // disjoint index sets split by pair-group when j >= chunk;
+                // barriers separate steps.
+                let xs: &mut [T] = unsafe { ptr.slice() };
+                let lo = t * chunk;
+                let hi = lo + chunk;
+                let mut i = 0;
+                while i < steps.len() {
+                    let (k, j) = steps[i];
+                    if j < chunk {
+                        // Local tail: all remaining steps of this phase
+                        // touch only in-chunk pairs; no barriers needed.
+                        let mut jj = j;
+                        while jj >= 1 {
+                            step_range(xs, k, jj, lo, hi);
+                            i += 1;
+                            jj /= 2;
+                        }
+                        barrier.wait();
+                    } else {
+                        // Global step: split by pair-group. Thread t takes
+                        // lows in [t*chunk, (t+1)*chunk) — every low index
+                        // a has partner a^j outside every chunk, but lows
+                        // are disjoint across threads, and each (a, a^j)
+                        // pair is written by exactly the thread owning the
+                        // *low* index a (a < a^j since a & j == 0).
+                        step_lows_in(xs, k, j, lo, hi);
+                        i += 1;
+                        barrier.wait();
+                    }
+                }
+                drop(guard);
+            });
+        }
+    });
+    assert_eq!(panics.load(Ordering::SeqCst), 0, "worker thread panicked");
+}
+
+/// Compare-exchange pairs whose *both* indices lie in [lo, hi) — valid
+/// when `stride < hi - lo` and `lo` is stride-group aligned.
+fn step_range<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usize) {
+    let mut i = lo;
+    while i < hi {
+        let ascending = i & k == 0;
+        for a in i..i + j {
+            cx(xs, a, a ^ j, ascending);
+        }
+        i += 2 * j;
+    }
+}
+
+/// Compare-exchange pairs whose *low* index lies in [lo, hi) for a stride
+/// `j >= hi - lo` (the partner is out of range; ownership is by low index).
+fn step_lows_in<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usize) {
+    for a in lo..hi {
+        if a & j == 0 {
+            cx(xs, a, a ^ j, a & k == 0);
+        }
+    }
+}
+
+#[inline]
+fn cx<T: SortKey>(xs: &mut [T], a: usize, b: usize, ascending: bool) {
+    let (va, vb) = (xs[a], xs[b]);
+    let swap = if ascending {
+        vb.total_lt(&va)
+    } else {
+        va.total_lt(&vb)
+    };
+    if swap {
+        xs.swap(a, b);
+    }
+}
+
+/// Raw shared-slice smuggler for scoped threads. The disjoint-write
+/// argument is documented at the use site.
+#[derive(Clone, Copy)]
+struct SharedSlice<T>(*mut T, usize);
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+impl<T> SharedSlice<T> {
+    unsafe fn slice<'a>(&self) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0, self.1)
+    }
+}
+
+/// Counts panics that unwind out of a worker body.
+struct PanicCounter<'a>(&'a AtomicUsize);
+impl Drop for PanicCounter<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::verify::{is_sorted, same_multiset};
+    use crate::workload::{Distribution, Generator};
+
+    #[test]
+    fn matches_sequential_across_sizes_and_threads() {
+        let mut gen = Generator::new(0xFA57);
+        for logn in [12usize, 13, 15] {
+            for threads in [1usize, 2, 4, 8] {
+                let orig = gen.u32s(1 << logn, Distribution::Uniform);
+                let mut par = orig.clone();
+                bitonic_sort_parallel(&mut par, threads);
+                assert!(is_sorted(&par), "n=2^{logn} t={threads}");
+                assert!(same_multiset(&orig, &par));
+            }
+        }
+    }
+
+    #[test]
+    fn all_distributions() {
+        let mut gen = Generator::new(0xAB);
+        for d in Distribution::ALL {
+            let orig = gen.u32s(1 << 13, d);
+            let mut v = orig.clone();
+            bitonic_sort_parallel(&mut v, 4);
+            assert!(is_sorted(&v), "{}", d.name());
+            assert!(same_multiset(&orig, &v));
+        }
+    }
+
+    #[test]
+    fn small_input_falls_back() {
+        let mut v = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+        bitonic_sort_parallel(&mut v, 8);
+        assert_eq!(v, vec![1, 1, 2, 3, 4, 5, 6, 9]);
+    }
+
+    #[test]
+    fn non_power_of_two_thread_count() {
+        let mut gen = Generator::new(0x77);
+        let orig = gen.u32s(1 << 13, Distribution::Uniform);
+        let mut v = orig.clone();
+        bitonic_sort_parallel(&mut v, 3); // rounds to a power of two
+        assert!(is_sorted(&v));
+        assert!(same_multiset(&orig, &v));
+    }
+
+    #[test]
+    fn u64_keys() {
+        let mut gen = Generator::new(0x99);
+        let orig = gen.u64s(1 << 13, Distribution::Uniform);
+        let mut v = orig.clone();
+        bitonic_sort_parallel(&mut v, 4);
+        assert!(is_sorted(&v));
+        assert!(same_multiset(&orig, &v));
+    }
+}

@@ -1,0 +1,86 @@
+//! Heap sort — named in the paper's introduction; used here both as a
+//! standalone baseline and as the introsort fallback of [`crate::sort::quicksort`].
+
+use super::SortKey;
+
+/// Sort `xs` ascending in place via a binary max-heap. `O(n log n)`
+/// worst-case, in-place, not stable.
+pub fn heapsort<T: SortKey>(xs: &mut [T]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    // Build the heap (Floyd): sift down from the last parent.
+    for i in (0..n / 2).rev() {
+        sift_down(xs, i, n);
+    }
+    // Pop the maximum to the end, shrink, restore.
+    for end in (1..n).rev() {
+        xs.swap(0, end);
+        sift_down(xs, 0, end);
+    }
+}
+
+/// Restore the max-heap property for the subtree rooted at `root` within
+/// `xs[..len]`.
+fn sift_down<T: SortKey>(xs: &mut [T], mut root: usize, len: usize) {
+    loop {
+        let left = 2 * root + 1;
+        if left >= len {
+            return;
+        }
+        let right = left + 1;
+        let mut largest = root;
+        if xs[largest].total_lt(&xs[left]) {
+            largest = left;
+        }
+        if right < len && xs[largest].total_lt(&xs[right]) {
+            largest = right;
+        }
+        if largest == root {
+            return;
+        }
+        xs.swap(root, largest);
+        root = largest;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::verify::{is_sorted, same_multiset};
+    use crate::workload::{Distribution, Generator};
+
+    #[test]
+    fn sorts_all_distributions() {
+        let mut gen = Generator::new(0xBEEF);
+        for d in Distribution::ALL {
+            for n in [0, 1, 2, 5, 63, 64, 65, 4096] {
+                let orig = gen.u32s(n, d);
+                let mut v = orig.clone();
+                heapsort(&mut v);
+                assert!(is_sorted(&v), "{} n={n}", d.name());
+                assert!(same_multiset(&orig, &v));
+            }
+        }
+    }
+
+    #[test]
+    fn matches_std_sort() {
+        let mut gen = Generator::new(1);
+        let orig = gen.u32s(5000, Distribution::Uniform);
+        let mut ours = orig.clone();
+        let mut std = orig;
+        heapsort(&mut ours);
+        std.sort_unstable();
+        assert_eq!(ours, std);
+    }
+
+    #[test]
+    fn floats_total_order() {
+        let mut v = vec![2.0f64, f64::NAN, -1.0, 0.5];
+        heapsort(&mut v);
+        assert_eq!(&v[..3], &[-1.0, 0.5, 2.0]);
+        assert!(v[3].is_nan());
+    }
+}

@@ -1,0 +1,231 @@
+//! Out-of-core hybrid sort: how a fixed-shape sorting accelerator is
+//! actually deployed.
+//!
+//! The compiled artifacts sort fixed `(B, N)` shapes, so inputs larger
+//! than the biggest artifact row are handled in three stages:
+//!
+//! 1. **Chunk sort** — split the input into `N`-key chunks (the largest
+//!    sort artifact row), pad the tail with `MAX`, and sort chunks on the
+//!    device, packing up to `B` chunks per execution (the artifact's
+//!    batch dimension gives chunk-level parallelism for free).
+//! 2. **Device merge tree** — merge sorted runs pairwise with the
+//!    standalone bitonic-*merge* artifacts (`kind=merge`): a merge of two
+//!    `m`-key runs costs `log2(2m)` compare-exchange steps instead of the
+//!    `k(k+1)/2` a full re-sort would — the paper §3's own primitive used
+//!    at the next level up.
+//! 3. **CPU merge tail** — once runs outgrow the largest merge artifact,
+//!    finish with a classic two-way merge on the CPU (bandwidth-bound
+//!    streaming; the device has no artifact that large by construction).
+//!
+//! The result is exact (`quicksort` oracle in tests) for any input
+//! length, not just powers of two.
+
+use anyhow::Context;
+
+use crate::runtime::registry::Key;
+use crate::runtime::{ArtifactMeta, DeviceHandle, Manifest};
+use crate::sort::network::Variant;
+
+/// Statistics of one hybrid sort (for benches and the example driver).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HybridStats {
+    /// Device sort executions (each sorts up to B chunks).
+    pub device_sorts: usize,
+    /// Device merge executions.
+    pub device_merges: usize,
+    /// CPU two-way merges.
+    pub cpu_merges: usize,
+    /// Chunk size used.
+    pub chunk: usize,
+}
+
+/// Hybrid device/CPU sorter over the artifact menu.
+pub struct HybridSorter {
+    handle: DeviceHandle,
+    /// Largest (batch, n) ascending-u32 sort artifact.
+    sort_meta: ArtifactMeta,
+    /// Merge artifacts by input row length, ascending.
+    merges: Vec<ArtifactMeta>,
+}
+
+impl HybridSorter {
+    /// Build from a device handle + manifest snapshot (see
+    /// `runtime::spawn_device_host`). Uses `variant` sort artifacts.
+    pub fn new(
+        handle: DeviceHandle,
+        manifest: &Manifest,
+        variant: Variant,
+    ) -> anyhow::Result<Self> {
+        let chunk = manifest
+            .size_classes(variant)
+            .into_iter()
+            .map(|m| m.n)
+            .max()
+            .context("no sort artifacts in manifest")?;
+        Self::with_chunk(handle, manifest, variant, chunk)
+    }
+
+    /// [`HybridSorter::new`] with an explicit chunk size (must match a
+    /// sort artifact's row length). Smaller chunks push more levels of the
+    /// merge tree onto the device — used by the ablation tests/benches.
+    pub fn with_chunk(
+        handle: DeviceHandle,
+        manifest: &Manifest,
+        variant: Variant,
+        chunk: usize,
+    ) -> anyhow::Result<Self> {
+        let sort_meta = manifest
+            .size_classes(variant)
+            .into_iter()
+            .filter(|m| m.n == chunk)
+            .max_by_key(|m| m.batch)
+            .with_context(|| format!("no sort artifact with rows of {chunk}"))?
+            .clone();
+        let merges: Vec<ArtifactMeta> =
+            manifest.merge_classes().into_iter().cloned().collect();
+        Ok(Self {
+            handle,
+            sort_meta,
+            merges,
+        })
+    }
+
+    /// Chunk size (keys per device-sorted run).
+    pub fn chunk(&self) -> usize {
+        self.sort_meta.n
+    }
+
+    /// Sort `keys` ascending, any length. Returns execution statistics.
+    pub fn sort(&self, keys: &mut Vec<u32>) -> anyhow::Result<HybridStats> {
+        let real_len = keys.len();
+        let mut stats = HybridStats {
+            chunk: self.chunk(),
+            ..Default::default()
+        };
+        if real_len <= 1 {
+            return Ok(stats);
+        }
+        let chunk = self.chunk();
+
+        // ---- stage 1: device-sort chunks, B at a time ------------------
+        let padded_len = real_len.div_ceil(chunk) * chunk;
+        keys.resize(padded_len, u32::MAX);
+        let (b, n) = (self.sort_meta.batch, self.sort_meta.n);
+        let sort_key = Key::of(&self.sort_meta);
+        let mut sorted = Vec::with_capacity(padded_len);
+        for group in keys.chunks(b * n) {
+            let mut buf = group.to_vec();
+            buf.resize(b * n, u32::MAX);
+            let out = self.handle.sort_u32(sort_key, buf)?;
+            stats.device_sorts += 1;
+            sorted.extend_from_slice(&out[..group.len()]);
+        }
+        debug_assert_eq!(sorted.len(), padded_len);
+
+        // ---- stage 2: device merge tree ---------------------------------
+        // Runs of length `run` merge pairwise into 2*run while a merge
+        // artifact with rows of 2*run exists. A final *partial* pair (full
+        // run + shorter tail) is merged by MAX-padding the tail half — the
+        // merged prefix of the original length has the right multiset even
+        // when real keys equal MAX (pads are indistinguishable by value).
+        let mut run = chunk;
+        while run < padded_len {
+            let Some(meta) = self.merges.iter().find(|m| m.n == 2 * run) else {
+                break;
+            };
+            let key = Key::of(meta);
+            let (mb, mn) = (meta.batch, meta.n);
+            debug_assert_eq!(mn, 2 * run);
+            let mut next = Vec::with_capacity(padded_len);
+            let mut i = 0;
+            while i < padded_len {
+                let full_pairs = ((padded_len - i) / (2 * run)).min(mb);
+                if full_pairs >= 1 {
+                    // Pack up to `mb` full pairs into one execution.
+                    let take = full_pairs * 2 * run;
+                    let mut buf = sorted[i..i + take].to_vec();
+                    buf.resize(mb * mn, u32::MAX);
+                    let out = self.handle.sort_u32(key, buf)?;
+                    stats.device_merges += 1;
+                    next.extend_from_slice(&out[..take]);
+                    i += take;
+                } else {
+                    let remaining = padded_len - i;
+                    if remaining > run {
+                        // Partial pair: full run + shorter sorted tail.
+                        let mut buf = sorted[i..].to_vec();
+                        buf.resize(mb * mn, u32::MAX);
+                        let out = self.handle.sort_u32(key, buf)?;
+                        stats.device_merges += 1;
+                        next.extend_from_slice(&out[..remaining]);
+                    } else {
+                        // Lone run: passes through to the next level.
+                        next.extend_from_slice(&sorted[i..]);
+                    }
+                    i = padded_len;
+                }
+            }
+            sorted = next;
+            run *= 2;
+        }
+
+        // ---- stage 3: CPU merge tail ------------------------------------
+        while run < padded_len {
+            let mut next = Vec::with_capacity(padded_len);
+            let mut i = 0;
+            while i < padded_len {
+                let mid = (i + run).min(padded_len);
+                let end = (i + 2 * run).min(padded_len);
+                if mid < end {
+                    merge_two(&sorted[i..mid], &sorted[mid..end], &mut next);
+                    stats.cpu_merges += 1;
+                } else {
+                    next.extend_from_slice(&sorted[i..end]);
+                }
+                i = end;
+            }
+            sorted = next;
+            run *= 2;
+        }
+
+        sorted.truncate(real_len);
+        *keys = sorted;
+        Ok(stats)
+    }
+}
+
+/// Streaming two-way merge of sorted `a` and `b` onto the end of `out`.
+fn merge_two(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_two_basics() {
+        let mut out = Vec::new();
+        merge_two(&[1, 3, 5], &[2, 4, 6], &mut out);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6]);
+        out.clear();
+        merge_two(&[], &[1], &mut out);
+        assert_eq!(out, vec![1]);
+        out.clear();
+        merge_two(&[2, 2], &[2], &mut out);
+        assert_eq!(out, vec![2, 2, 2]);
+    }
+
+    // Device-dependent tests live in rust/tests/hybrid_integration.rs.
+}

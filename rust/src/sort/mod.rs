@@ -1,0 +1,125 @@
+//! CPU sorting substrates, implemented from scratch.
+//!
+//! The paper's evaluation (Table 1) has two CPU columns — quick sort and
+//! sequential bitonic sort — both implemented here. The paper's §6 lists
+//! "multicore bitonic" as future work; [`bitonic_parallel`] implements it.
+//! The introduction name-checks the classical sorts; [`heapsort`],
+//! [`mergesort`], [`radix`] and [`oddeven`] provide them as additional
+//! baselines for the extended benchmarks (DESIGN.md E6–E9).
+//!
+//! [`network`] generates the bitonic network *schedule* (phases, steps,
+//! compare-exchange pairs). It is the single source of truth shared by the
+//! CPU bitonic sorts, the GPU simulator's cost model, and (structurally —
+//! the Python side mirrors the same enumeration) the Pallas kernels.
+
+pub mod bitonic;
+pub mod bitonic_parallel;
+pub mod heapsort;
+pub mod hybrid;
+pub mod mergesort;
+pub mod network;
+pub mod oddeven;
+pub mod quicksort;
+pub mod radix;
+pub mod verify;
+
+pub use bitonic::{bitonic_sort, bitonic_sort_desc, bitonic_sort_padded};
+pub use bitonic_parallel::bitonic_sort_parallel;
+pub use heapsort::heapsort;
+pub use hybrid::{HybridSorter, HybridStats};
+pub use mergesort::mergesort;
+pub use network::{Network, Phase, Step, Variant};
+pub use oddeven::oddeven_sort;
+pub use quicksort::quicksort;
+pub use radix::radix_sort_u32;
+pub use verify::{is_sorted, is_sorted_desc, same_multiset};
+
+/// Keys sortable by every substrate in this module.
+///
+/// `Ord` would exclude floats; instead we require a total order via
+/// [`SortKey::total_lt`]. For floats this is the IEEE-754 `totalOrder`
+/// predicate restricted to finite values plus ±inf/NaN ordering consistent
+/// with `f32::total_cmp`, matching what the JAX layer produces for float
+/// keys.
+pub trait SortKey: Copy + Send + Sync + 'static {
+    /// Strict total-order less-than.
+    fn total_lt(&self, other: &Self) -> bool;
+    /// Maximum value (used for padding partial blocks to powers of two).
+    const MAX_KEY: Self;
+    /// Minimum value (used for descending padding).
+    const MIN_KEY: Self;
+    /// Total-order minimum of two keys.
+    #[inline]
+    fn key_min(a: Self, b: Self) -> Self {
+        if b.total_lt(&a) {
+            b
+        } else {
+            a
+        }
+    }
+    /// Total-order maximum of two keys.
+    #[inline]
+    fn key_max(a: Self, b: Self) -> Self {
+        if b.total_lt(&a) {
+            a
+        } else {
+            b
+        }
+    }
+}
+
+macro_rules! int_key {
+    ($($t:ty),*) => {$(
+        impl SortKey for $t {
+            #[inline]
+            fn total_lt(&self, other: &Self) -> bool { self < other }
+            const MAX_KEY: Self = <$t>::MAX;
+            const MIN_KEY: Self = <$t>::MIN;
+        }
+    )*};
+}
+int_key!(u8, u16, u32, u64, i8, i16, i32, i64, usize);
+
+impl SortKey for f32 {
+    #[inline]
+    fn total_lt(&self, other: &Self) -> bool {
+        self.total_cmp(other) == std::cmp::Ordering::Less
+    }
+    const MAX_KEY: Self = f32::INFINITY;
+    const MIN_KEY: Self = f32::NEG_INFINITY;
+}
+
+impl SortKey for f64 {
+    #[inline]
+    fn total_lt(&self, other: &Self) -> bool {
+        self.total_cmp(other) == std::cmp::Ordering::Less
+    }
+    const MAX_KEY: Self = f64::INFINITY;
+    const MIN_KEY: Self = f64::NEG_INFINITY;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_min_max_ints() {
+        assert_eq!(u32::key_min(3, 5), 3);
+        assert_eq!(u32::key_max(3, 5), 5);
+        assert_eq!(i32::key_min(-3, 5), -3);
+    }
+
+    #[test]
+    fn float_total_order_handles_nan() {
+        assert!(1.0f32.total_lt(&f32::NAN));
+        assert!(f32::NEG_INFINITY.total_lt(&-1.0f32));
+        assert!(!f32::NAN.total_lt(&f32::NAN));
+    }
+
+    #[test]
+    fn max_key_is_maximal() {
+        assert!(!u32::MAX_KEY.total_lt(&u32::MAX));
+        assert!(0u32.total_lt(&u32::MAX_KEY));
+        assert!(1.0e30f32.total_lt(&f32::MAX_KEY));
+    }
+}

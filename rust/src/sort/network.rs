@@ -1,0 +1,449 @@
+//! Bitonic sorting-network schedule generation.
+//!
+//! This module is the single source of truth for *which* compare-exchange
+//! steps each implementation variant executes, and in what grouping. The
+//! CPU bitonic sorts iterate it directly; the GPU simulator derives launch
+//! counts, global-memory passes and shared-memory traffic from it
+//! (DESIGN.md §4); the unit tests check it against the paper's closed
+//! forms (§3.2: `k(k+1)/2` rounds, `n·k(k+1)/4` compare-exchanges for
+//! `n = 2^k`); and `examples/network_viz.rs` renders the paper's Figure 2
+//! from it.
+//!
+//! Terminology follows the paper: sorting `n = 2^k` keys takes `k`
+//! *phases*; phase `p` (1-based) sorts bitonic subsequences of length
+//! `2^p` and consists of `p` *steps* with compare-exchange strides
+//! `2^(p-1), 2^(p-2), …, 1`.
+
+/// One compare-exchange step: all pairs `(i, i ^ stride)` with direction
+/// decided by bit `phase_len` of `i` (ascending iff `i & phase_len == 0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Step {
+    /// Phase length `k = 2^p` this step belongs to.
+    pub phase_len: usize,
+    /// Compare-exchange stride `j` (power of two, `j < phase_len`).
+    pub stride: usize,
+}
+
+/// One phase: `log2(phase_len)` steps with descending strides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phase {
+    /// Sorted-subsequence length after this phase (`2^p`).
+    pub len: usize,
+}
+
+impl Phase {
+    /// Steps of this phase, stride high → low.
+    pub fn steps(self) -> impl Iterator<Item = Step> {
+        let k = self.len;
+        std::iter::successors(Some(k / 2), |&j| (j > 1).then_some(j / 2)).map(move |stride| Step {
+            phase_len: k,
+            stride,
+        })
+    }
+}
+
+/// How steps are *grouped into kernel launches / passes* — the three GPU
+/// implementations the paper evaluates, plus the CPU reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// §3.3: one kernel launch per step; every step is a full
+    /// global-memory pass. `k(k+1)/2` launches.
+    Basic,
+    /// §4.1 (optimization 1, "Semi"): once `stride < block`, the rest of
+    /// the phase runs inside shared memory/VMEM in one launch.
+    Semi,
+    /// §4.2 (optimizations 1+2, "Optimized"): additionally, global steps
+    /// are fused two-at-a-time (each thread keeps 4 elements in
+    /// registers), halving global passes; the in-block stage pairs steps
+    /// the same way.
+    Optimized,
+}
+
+impl Variant {
+    /// Stable name used in CLI flags, artifact filenames and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Basic => "basic",
+            Variant::Semi => "semi",
+            Variant::Optimized => "optimized",
+        }
+    }
+
+    /// Parse a CLI/artifact name.
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "basic" => Some(Variant::Basic),
+            "semi" => Some(Variant::Semi),
+            "optimized" | "opt" => Some(Variant::Optimized),
+            _ => None,
+        }
+    }
+
+    /// All variants in paper order.
+    pub const ALL: [Variant; 3] = [Variant::Basic, Variant::Semi, Variant::Optimized];
+}
+
+/// One *launch* (CUDA kernel launch / Pallas `pallas_call`): a group of
+/// consecutive steps executed in a single pass over memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Launch {
+    /// A single global-memory compare-exchange step.
+    GlobalStep(Step),
+    /// Two consecutive global steps (strides `hi`, `hi/2`) fused via
+    /// registers (optimization 2). One read-modify-write pass.
+    GlobalDoubleStep {
+        /// Phase length `k`.
+        phase_len: usize,
+        /// The larger of the two fused strides.
+        stride_hi: usize,
+    },
+    /// All steps of phases `phase_lo..=phase_hi` whose strides fit in one
+    /// block, executed out of shared memory/VMEM (optimization 1). For the
+    /// presort this covers *every* early phase (`phase_lo = 2`); for later
+    /// phases it is the `stride < block` tail of a single phase.
+    BlockFused {
+        /// First phase length covered (inclusive, power of two).
+        phase_lo: usize,
+        /// Last phase length covered (inclusive).
+        phase_hi: usize,
+        /// Maximum stride executed inside the block (`block/2`).
+        stride_max: usize,
+        /// Whether the fused kernel pairs steps via registers (opt 2).
+        register_paired: bool,
+    },
+}
+
+impl Launch {
+    /// Number of compare-exchange *steps* of the network this launch
+    /// covers.
+    pub fn step_count(&self) -> usize {
+        match *self {
+            Launch::GlobalStep(_) => 1,
+            Launch::GlobalDoubleStep { .. } => 2,
+            Launch::BlockFused {
+                phase_lo,
+                phase_hi,
+                stride_max,
+                ..
+            } => {
+                // For each covered phase k, the steps with stride <= stride_max.
+                let mut count = 0;
+                let mut k = phase_lo;
+                while k <= phase_hi {
+                    let first = (k / 2).min(stride_max);
+                    count += first.trailing_zeros() as usize + 1;
+                    k *= 2;
+                }
+                count
+            }
+        }
+    }
+
+    /// Number of element-passes over *global* memory (HBM) this launch
+    /// costs: every launch reads and writes the array exactly once,
+    /// regardless of how many steps it fuses — that is the whole point of
+    /// the optimizations.
+    pub fn global_passes(&self) -> usize {
+        1
+    }
+}
+
+/// The full bitonic network for `n = 2^k` keys.
+#[derive(Clone, Copy, Debug)]
+pub struct Network {
+    /// Number of keys (power of two).
+    pub n: usize,
+}
+
+impl Network {
+    /// Build a network for `n` keys. Panics unless `n` is a power of two
+    /// and `n >= 2`.
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2, "bitonic network needs n = 2^k >= 2, got {n}");
+        Self { n }
+    }
+
+    /// `k = log2 n`.
+    pub fn log2n(self) -> u32 {
+        self.n.trailing_zeros()
+    }
+
+    /// Phases in execution order (subsequence length 2, 4, …, n).
+    pub fn phases(self) -> impl Iterator<Item = Phase> {
+        let n = self.n;
+        std::iter::successors(Some(2usize), move |&k| (k < n).then_some(k * 2))
+            .map(|len| Phase { len })
+    }
+
+    /// All steps in execution order.
+    pub fn steps(self) -> impl Iterator<Item = Step> {
+        self.phases().flat_map(Phase::steps)
+    }
+
+    /// Total number of steps — the paper's `k(k+1)/2` "rounds".
+    pub fn step_count(self) -> usize {
+        let k = self.log2n() as usize;
+        k * (k + 1) / 2
+    }
+
+    /// Total compare-exchange operations — the paper's `n·k(k+1)/4`.
+    pub fn compare_exchange_count(self) -> usize {
+        self.n / 2 * self.step_count()
+    }
+
+    /// The launch schedule a given implementation variant executes, with
+    /// block capacity `block` keys (shared-memory/VMEM tile size).
+    ///
+    /// This is the exact sequence of `pallas_call`s the Python layer emits
+    /// (see `python/compile/model.py::plan`, which mirrors this function)
+    /// and the sequence of kernel launches the simulator charges for.
+    pub fn launches(self, variant: Variant, block: usize) -> Vec<Launch> {
+        assert!(block.is_power_of_two(), "block must be a power of two");
+        let n = self.n;
+        let block = block.min(n);
+        let mut out = Vec::new();
+        match variant {
+            Variant::Basic => {
+                for s in self.steps() {
+                    out.push(Launch::GlobalStep(s));
+                }
+            }
+            Variant::Semi | Variant::Optimized => {
+                let paired = variant == Variant::Optimized;
+                // Presort: every phase up to `block` runs inside the block.
+                out.push(Launch::BlockFused {
+                    phase_lo: 2,
+                    phase_hi: block,
+                    stride_max: block / 2,
+                    register_paired: paired,
+                });
+                // Later phases: global steps until the stride fits in a
+                // block, then one fused in-block launch for the tail.
+                let mut k = 2 * block;
+                while k <= n {
+                    let mut j = k / 2;
+                    if paired {
+                        // Fuse global steps two-at-a-time while both
+                        // strides stay >= block.
+                        while j >= 2 * block {
+                            out.push(Launch::GlobalDoubleStep {
+                                phase_len: k,
+                                stride_hi: j,
+                            });
+                            j /= 4;
+                        }
+                    }
+                    while j >= block {
+                        out.push(Launch::GlobalStep(Step {
+                            phase_len: k,
+                            stride: j,
+                        }));
+                        j /= 2;
+                    }
+                    out.push(Launch::BlockFused {
+                        phase_lo: k,
+                        phase_hi: k,
+                        stride_max: block / 2,
+                        register_paired: paired,
+                    });
+                    k *= 2;
+                }
+            }
+        }
+        out
+    }
+
+    /// Compare-exchange pairs `(i, i^stride, ascending)` of one step, in
+    /// index order — used by the network visualiser (paper Fig. 2) and by
+    /// exhaustive small-n tests.
+    pub fn step_pairs(self, step: Step) -> Vec<(usize, usize, bool)> {
+        let mut pairs = Vec::with_capacity(self.n / 2);
+        for i in 0..self.n {
+            let partner = i ^ step.stride;
+            if partner > i {
+                let ascending = i & step.phase_len == 0;
+                pairs.push((i, partner, ascending));
+            }
+        }
+        pairs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_closed_form_round_count() {
+        // §3.2: sum_{i=1..log n} i = log n (log n + 1) / 2 rounds.
+        for k in 1..=20 {
+            let net = Network::new(1 << k);
+            assert_eq!(net.steps().count(), k * (k + 1) / 2);
+            assert_eq!(net.step_count(), k * (k + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn paper_closed_form_compare_exchanges() {
+        // §3.2: n·logn·(logn+1)/4 compare-exchange operations.
+        for k in 1..=12 {
+            let n = 1usize << k;
+            let net = Network::new(n);
+            let by_pairs: usize = net.steps().map(|s| net.step_pairs(s).len()).sum();
+            assert_eq!(by_pairs, n * k * (k + 1) / 4);
+            assert_eq!(net.compare_exchange_count(), by_pairs);
+        }
+    }
+
+    #[test]
+    fn figure2_network_n8() {
+        // The paper's Figure 2: n=8 → 3 phases, phase p has p steps,
+        // every step has n/2 = 4 compare/exchange operations.
+        let net = Network::new(8);
+        let phases: Vec<_> = net.phases().collect();
+        assert_eq!(phases.len(), 3);
+        for (idx, ph) in phases.iter().enumerate() {
+            assert_eq!(ph.len, 2 << idx);
+            assert_eq!(ph.steps().count(), idx + 1);
+            for s in ph.steps() {
+                assert_eq!(net.step_pairs(s).len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn strides_descend_within_phase() {
+        let net = Network::new(64);
+        for ph in net.phases() {
+            let strides: Vec<_> = ph.steps().map(|s| s.stride).collect();
+            for w in strides.windows(2) {
+                assert_eq!(w[0], w[1] * 2);
+            }
+            assert_eq!(*strides.first().unwrap(), ph.len / 2);
+            assert_eq!(*strides.last().unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn basic_launch_count_is_step_count() {
+        for k in 1..=16 {
+            let net = Network::new(1 << k);
+            assert_eq!(net.launches(Variant::Basic, 1 << 10).len(), net.step_count());
+        }
+    }
+
+    #[test]
+    fn semi_launch_count_closed_form() {
+        // Presort (1) + per phase k = 2B..n: log2(k/B) global steps + 1 fused.
+        let n = 1 << 16;
+        let b = 1 << 8;
+        let net = Network::new(n);
+        let launches = net.launches(Variant::Semi, b);
+        let kb = (n / b).trailing_zeros() as usize; // number of post-presort phases
+        let expected = 1 + (1..=kb).map(|i| i + 1).sum::<usize>();
+        assert_eq!(launches.len(), expected);
+        assert!(launches.len() < net.launches(Variant::Basic, b).len());
+    }
+
+    #[test]
+    fn optimized_fewer_launches_than_semi() {
+        for (n, b) in [(1 << 12, 1 << 6), (1 << 18, 1 << 8), (1 << 20, 1 << 10)] {
+            let net = Network::new(n);
+            let semi = net.launches(Variant::Semi, b).len();
+            let opt = net.launches(Variant::Optimized, b).len();
+            let basic = net.launches(Variant::Basic, b).len();
+            assert!(opt < semi, "opt {opt} !< semi {semi} at n={n}");
+            assert!(semi < basic, "semi {semi} !< basic {basic} at n={n}");
+        }
+    }
+
+    #[test]
+    fn launch_schedules_cover_every_step_exactly_once() {
+        // Whatever the grouping, the multiset of (phase_len, stride)
+        // covered must equal the full network.
+        for variant in Variant::ALL {
+            for (n, b) in [(1 << 8, 1 << 4), (1 << 12, 1 << 6), (1 << 14, 1 << 8)] {
+                let net = Network::new(n);
+                let mut covered: Vec<(usize, usize)> = Vec::new();
+                for l in net.launches(variant, b) {
+                    match l {
+                        Launch::GlobalStep(s) => covered.push((s.phase_len, s.stride)),
+                        Launch::GlobalDoubleStep {
+                            phase_len,
+                            stride_hi,
+                        } => {
+                            covered.push((phase_len, stride_hi));
+                            covered.push((phase_len, stride_hi / 2));
+                        }
+                        Launch::BlockFused {
+                            phase_lo,
+                            phase_hi,
+                            stride_max,
+                            ..
+                        } => {
+                            let mut k = phase_lo;
+                            while k <= phase_hi {
+                                let mut j = (k / 2).min(stride_max);
+                                while j >= 1 {
+                                    covered.push((k, j));
+                                    j /= 2;
+                                }
+                                k *= 2;
+                            }
+                        }
+                    }
+                }
+                covered.sort_unstable();
+                let mut want: Vec<(usize, usize)> =
+                    net.steps().map(|s| (s.phase_len, s.stride)).collect();
+                want.sort_unstable();
+                assert_eq!(covered, want, "{variant:?} n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn launch_step_count_matches_enumeration() {
+        for variant in Variant::ALL {
+            let net = Network::new(1 << 14);
+            let total: usize = net
+                .launches(variant, 1 << 7)
+                .iter()
+                .map(Launch::step_count)
+                .sum();
+            assert_eq!(total, net.step_count(), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn step_pairs_partition_indices() {
+        let net = Network::new(32);
+        for s in net.steps() {
+            let pairs = net.step_pairs(s);
+            assert_eq!(pairs.len(), 16);
+            let mut seen = vec![false; 32];
+            for (a, b, _) in pairs {
+                assert_eq!(a ^ b, s.stride);
+                assert!(!seen[a] && !seen[b]);
+                seen[a] = true;
+                seen[b] = true;
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn small_block_degenerates_gracefully() {
+        // block >= n: semi/optimized collapse to a single fused launch.
+        let net = Network::new(64);
+        let launches = net.launches(Variant::Semi, 1 << 10);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].step_count(), net.step_count());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        Network::new(48);
+    }
+}

@@ -1,0 +1,93 @@
+//! Odd-even transposition sort — named in the paper's introduction; the
+//! simplest sorting *network* (O(n²) comparators, depth n). Included as a
+//! baseline network to contrast with bitonic's O(n log² n) comparators /
+//! O(log² n) depth in the network-ablation benchmarks.
+
+use super::SortKey;
+
+/// Sort `xs` ascending in place via n rounds of alternating odd/even
+/// adjacent compare-exchanges.
+pub fn oddeven_sort<T: SortKey>(xs: &mut [T]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    for round in 0..n {
+        let start = round % 2;
+        let mut swapped = false;
+        let mut i = start;
+        while i + 1 < n {
+            if xs[i + 1].total_lt(&xs[i]) {
+                xs.swap(i, i + 1);
+                swapped = true;
+            }
+            i += 2;
+        }
+        // Early exit: two consecutive clean rounds ⇒ sorted. One clean
+        // round is insufficient in general, so track parity.
+        if !swapped && round > 0 {
+            // Check the other parity once; if also clean we are done.
+            let other = (start + 1) % 2;
+            let mut clean = true;
+            let mut i = other;
+            while i + 1 < n {
+                if xs[i + 1].total_lt(&xs[i]) {
+                    clean = false;
+                    break;
+                }
+                i += 2;
+            }
+            if clean {
+                return;
+            }
+        }
+    }
+}
+
+/// Comparator count of the full odd-even network on `n` keys (for the
+/// network comparison bench): `n` rounds × ~n/2 comparators.
+pub fn comparator_count(n: usize) -> usize {
+    if n < 2 {
+        return 0;
+    }
+    // Even rounds have floor(n/2) comparators, odd rounds floor((n-1)/2).
+    let even_rounds = n.div_ceil(2);
+    let odd_rounds = n / 2;
+    even_rounds * (n / 2) + odd_rounds * ((n - 1) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::verify::{is_sorted, same_multiset};
+    use crate::workload::{Distribution, Generator};
+
+    #[test]
+    fn sorts_all_distributions() {
+        let mut gen = Generator::new(0x0DD);
+        for d in Distribution::ALL {
+            for n in [0, 1, 2, 3, 64, 255, 1024] {
+                let orig = gen.u32s(n, d);
+                let mut v = orig.clone();
+                oddeven_sort(&mut v);
+                assert!(is_sorted(&v), "{} n={n}", d.name());
+                assert!(same_multiset(&orig, &v));
+            }
+        }
+    }
+
+    #[test]
+    fn early_exit_on_sorted() {
+        let mut v: Vec<u32> = (0..10_000).collect();
+        oddeven_sort(&mut v); // must be fast (early exit), not O(n^2) work
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn comparator_count_small() {
+        assert_eq!(comparator_count(0), 0);
+        assert_eq!(comparator_count(1), 0);
+        // n=4: rounds 0,2 (even start): 2 comparators each; rounds 1,3: 1 each.
+        assert_eq!(comparator_count(4), 2 * 2 + 2 * 1);
+    }
+}

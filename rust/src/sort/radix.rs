@@ -1,0 +1,141 @@
+//! LSD radix sort — named in the paper's introduction ("Radix sorting");
+//! the non-comparison baseline that bounds what any comparison sort can
+//! achieve on 32-bit integer keys.
+
+/// Sort `xs` ascending in place (8-bit digits, 4 passes, `O(n)` scratch).
+pub fn radix_sort_u32(xs: &mut Vec<u32>) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let mut scratch = vec![0u32; n];
+    let mut src_is_xs = true;
+    for pass in 0..4 {
+        let shift = pass * 8;
+        let (src, dst): (&[u32], &mut [u32]) = if src_is_xs {
+            (&xs[..], &mut scratch[..])
+        } else {
+            (&scratch[..], &mut xs[..])
+        };
+        // Counting pass.
+        let mut counts = [0usize; 256];
+        for &x in src {
+            counts[((x >> shift) & 0xff) as usize] += 1;
+        }
+        // Skip the scatter entirely if all keys share this digit.
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        // Exclusive prefix sum → bucket offsets.
+        let mut offsets = [0usize; 256];
+        let mut acc = 0;
+        for d in 0..256 {
+            offsets[d] = acc;
+            acc += counts[d];
+        }
+        // Stable scatter.
+        for &x in src {
+            let d = ((x >> shift) & 0xff) as usize;
+            dst[offsets[d]] = x;
+            offsets[d] += 1;
+        }
+        src_is_xs = !src_is_xs;
+    }
+    if !src_is_xs {
+        xs.copy_from_slice(&scratch);
+    }
+}
+
+/// Sort `xs` of `u64` keys ascending in place (8 passes).
+pub fn radix_sort_u64(xs: &mut Vec<u64>) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    let mut scratch = vec![0u64; n];
+    let mut src_is_xs = true;
+    for pass in 0..8 {
+        let shift = pass * 8;
+        let (src, dst): (&[u64], &mut [u64]) = if src_is_xs {
+            (&xs[..], &mut scratch[..])
+        } else {
+            (&scratch[..], &mut xs[..])
+        };
+        let mut counts = [0usize; 256];
+        for &x in src {
+            counts[((x >> shift) & 0xff) as usize] += 1;
+        }
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        let mut offsets = [0usize; 256];
+        let mut acc = 0;
+        for d in 0..256 {
+            offsets[d] = acc;
+            acc += counts[d];
+        }
+        for &x in src {
+            let d = ((x >> shift) & 0xff) as usize;
+            dst[offsets[d]] = x;
+            offsets[d] += 1;
+        }
+        src_is_xs = !src_is_xs;
+    }
+    if !src_is_xs {
+        xs.copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::verify::{is_sorted, same_multiset};
+    use crate::workload::{Distribution, Generator};
+
+    #[test]
+    fn sorts_all_distributions() {
+        let mut gen = Generator::new(0x4AD1);
+        for d in Distribution::ALL {
+            for n in [0, 1, 2, 255, 256, 257, 10_000] {
+                let orig = gen.u32s(n, d);
+                let mut v = orig.clone();
+                radix_sort_u32(&mut v);
+                assert!(is_sorted(&v), "{} n={n}", d.name());
+                assert!(same_multiset(&orig, &v));
+            }
+        }
+    }
+
+    #[test]
+    fn matches_std_sort() {
+        let mut gen = Generator::new(12);
+        let orig = gen.u32s(50_000, Distribution::Uniform);
+        let mut ours = orig.clone();
+        let mut std = orig;
+        radix_sort_u32(&mut ours);
+        std.sort_unstable();
+        assert_eq!(ours, std);
+    }
+
+    #[test]
+    fn digit_skip_path_constant_digits() {
+        // Keys identical in three of four digit positions exercise the
+        // counts[d]==n skip.
+        let mut v: Vec<u32> = (0..1000u32).map(|i| 0xAABB_CC00 | (i % 256)).collect();
+        let orig = v.clone();
+        radix_sort_u32(&mut v);
+        assert!(is_sorted(&v));
+        assert!(same_multiset(&orig, &v));
+    }
+
+    #[test]
+    fn u64_matches_std() {
+        let mut gen = Generator::new(13);
+        let orig = gen.u64s(20_000, Distribution::Uniform);
+        let mut ours = orig.clone();
+        let mut std = orig;
+        radix_sort_u64(&mut ours);
+        std.sort_unstable();
+        assert_eq!(ours, std);
+    }
+}

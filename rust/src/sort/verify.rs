@@ -1,0 +1,86 @@
+//! Output validation shared by tests, benches and the service.
+
+use super::SortKey;
+
+/// Is `xs` ascending under the total order?
+pub fn is_sorted<T: SortKey>(xs: &[T]) -> bool {
+    xs.windows(2).all(|w| !w[1].total_lt(&w[0]))
+}
+
+/// Is `xs` descending under the total order?
+pub fn is_sorted_desc<T: SortKey>(xs: &[T]) -> bool {
+    xs.windows(2).all(|w| !w[0].total_lt(&w[1]))
+}
+
+/// Do `a` and `b` contain the same multiset of keys? Implemented via a
+/// content hash that is order-independent but multiplicity-sensitive, so
+/// it works for float bit patterns too and stays O(n) with no allocation
+/// proportional to the key domain.
+pub fn same_multiset<T: SortKey + PartialEq + std::fmt::Debug>(a: &[T], b: &[T]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    fn hash_of<T>(x: &T) -> u64 {
+        // FNV over the value's bytes; keys are Copy + 'static plain data.
+        let bytes = unsafe {
+            std::slice::from_raw_parts((x as *const T).cast::<u8>(), std::mem::size_of::<T>())
+        };
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &byte in bytes {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        // Post-mix so that summing hashes detects multiplicity changes.
+        let mut z = h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+    let sum = |xs: &[T]| -> (u64, u64) {
+        let mut add = 0u64;
+        let mut xor_rot = 0u64;
+        for (i, x) in xs.iter().enumerate() {
+            let h = hash_of(x);
+            add = add.wrapping_add(h);
+            let _ = i;
+            xor_rot ^= h.rotate_left((h % 63) as u32);
+        }
+        (add, xor_rot)
+    };
+    sum(a) == sum(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_sorted_basic() {
+        assert!(is_sorted(&[1u32, 2, 2, 3]));
+        assert!(!is_sorted(&[2u32, 1]));
+        assert!(is_sorted::<u32>(&[]));
+        assert!(is_sorted(&[5u32]));
+    }
+
+    #[test]
+    fn is_sorted_desc_basic() {
+        assert!(is_sorted_desc(&[3u32, 2, 2, 1]));
+        assert!(!is_sorted_desc(&[1u32, 2]));
+    }
+
+    #[test]
+    fn multiset_detects_substitution() {
+        assert!(same_multiset(&[1u32, 2, 3], &[3, 1, 2]));
+        assert!(!same_multiset(&[1u32, 2, 3], &[1, 2, 4]));
+        assert!(!same_multiset(&[1u32, 2], &[1, 2, 2]));
+        // Multiplicity change with same element set.
+        assert!(!same_multiset(&[1u32, 1, 2], &[1, 2, 2]));
+    }
+
+    #[test]
+    fn multiset_floats_bitwise() {
+        assert!(same_multiset(&[0.0f32, 1.0], &[1.0, 0.0]));
+        // -0.0 and 0.0 differ bitwise — by design (matches total order).
+        assert!(!same_multiset(&[0.0f32], &[-0.0f32]));
+    }
+}

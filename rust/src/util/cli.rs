@@ -1,0 +1,306 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text —
+//! enough for the `bitonic-tpu` binary and the bench/example drivers.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option (for usage text and validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// `true` if the option is a boolean flag (no value).
+    pub is_flag: bool,
+    /// Default value rendered in help (None = required or flag).
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand, if the grammar has one.
+    pub command: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// String option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option value (parse error is reported with the key name).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// Was the boolean flag given?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional arguments in order.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+/// Command-line grammar: optional subcommand list plus option specs.
+#[derive(Clone, Debug, Default)]
+pub struct Parser {
+    /// Binary name for usage text.
+    pub program: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Known subcommands (empty = no subcommand level).
+    pub commands: Vec<(&'static str, &'static str)>,
+    /// Known options.
+    pub opts: Vec<OptSpec>,
+}
+
+impl Parser {
+    /// New grammar.
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Add a subcommand.
+    pub fn command(mut self, name: &'static str, help: &'static str) -> Self {
+        self.commands.push((name, help));
+        self
+    }
+
+    /// Add a `--key value` option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default,
+        });
+        self
+    }
+
+    /// Add a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        if !self.commands.is_empty() {
+            s.push_str(" <COMMAND>");
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.commands.is_empty() {
+            s.push_str("\nCOMMANDS:\n");
+            for (name, help) in &self.commands {
+                s.push_str(&format!("  {name:<14} {help}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let left = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let dflt = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {left:<20} {}{dflt}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argument vector (without argv[0]).
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+
+        if !self.commands.is_empty() {
+            match it.peek() {
+                Some(first) if !first.starts_with('-') => {
+                    let name = it.next().unwrap();
+                    if !self.commands.iter().any(|(c, _)| c == name) {
+                        anyhow::bail!("unknown command {name:?}\n\n{}", self.usage());
+                    }
+                    args.command = Some(name.clone());
+                }
+                _ => {}
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("option --{key} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+
+        // Apply defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse_env(&self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> Parser {
+        Parser::new("prog", "test program")
+            .command("run", "run it")
+            .command("bench", "bench it")
+            .opt("size", "array size", Some("1024"))
+            .opt("name", "a name", None)
+            .flag("verbose", "more output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = grammar().parse(&sv(&["run", "--size", "64", "--verbose"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("size"), Some("64"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = grammar().parse(&sv(&["--size=128"])).unwrap();
+        assert_eq!(a.get("size"), Some("128"));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = grammar().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("size"), Some("1024"));
+        assert_eq!(a.get("name"), None);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = grammar().parse(&sv(&["--size", "4096"])).unwrap();
+        assert_eq!(a.parsed_or::<usize>("size", 0).unwrap(), 4096);
+        let a = grammar().parse(&sv(&["--size", "nope"])).unwrap();
+        assert!(a.get_parsed::<usize>("size").is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(grammar().parse(&sv(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(grammar().parse(&sv(&["fly"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = grammar().parse(&sv(&["run", "a.txt", "b.txt"])).unwrap();
+        assert_eq!(a.positionals(), &["a.txt".to_string(), "b.txt".to_string()]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(grammar().parse(&sv(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(grammar().parse(&sv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = grammar().usage();
+        for needle in ["run", "bench", "--size", "--verbose", "default: 1024"] {
+            assert!(u.contains(needle), "usage missing {needle}: {u}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Lightweight metrics: monotonic timers, counters, and streaming
+//! histograms with percentile queries (the offline stand-in for the
+//! `metrics`/`hdrhistogram` crates).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start now.
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    /// Elapsed since start.
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64 (the unit Table 1 uses).
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Thread-safe monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Zeroed counter.
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: ~4% relative resolution over
+/// nanoseconds → hours, constant memory, lock-free recording.
+///
+/// Buckets: 64 octaves × 16 sub-buckets (linear within an octave).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const SUB: usize = 16;
+const SUB_BITS: u32 = 4;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..64 * SUB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn index(ns: u64) -> usize {
+        if ns < SUB as u64 {
+            return ns as usize;
+        }
+        let octave = 63 - ns.leading_zeros() as usize;
+        let shift = octave as u32 - SUB_BITS;
+        let sub = ((ns >> shift) & (SUB as u64 - 1)) as usize;
+        ((octave - SUB_BITS as usize + 1) << SUB_BITS) | sub
+    }
+
+    /// Lower bound of bucket `idx` in nanoseconds.
+    fn lower_bound(idx: usize) -> u64 {
+        let octave = idx >> SUB_BITS;
+        let sub = (idx & (SUB - 1)) as u64;
+        if octave == 0 {
+            return sub;
+        }
+        let shift = octave as u32 - 1;
+        (SUB as u64 + sub) << shift
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.record_ns(ns);
+    }
+
+    /// Record a raw nanosecond value.
+    pub fn record_ns(&self, ns: u64) {
+        let idx = Self::index(ns).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in nanoseconds (0 if empty).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Maximum recorded value in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in nanoseconds.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::lower_bound(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Render a one-line summary (count / mean / p50 / p99 / max, ms).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ns() / 1e6,
+            self.quantile_ns(0.5) as f64 / 1e6,
+            self.quantile_ns(0.99) as f64 / 1e6,
+            self.max_ns() as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_index_monotone() {
+        let mut last = 0;
+        for ns in [0u64, 1, 15, 16, 17, 100, 1_000, 10_000, 1 << 20, 1 << 40] {
+            let idx = Histogram::index(ns);
+            assert!(idx >= last, "index not monotone at {ns}");
+            last = idx;
+        }
+    }
+
+    #[test]
+    fn histogram_bounds_bracket_value() {
+        for ns in [1u64, 7, 16, 100, 999, 123_456, 1 << 30] {
+            let idx = Histogram::index(ns);
+            let lo = Histogram::lower_bound(idx);
+            let hi = Histogram::lower_bound(idx + 1);
+            assert!(lo <= ns && ns < hi, "{ns}: [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn quantiles_roughly_correct() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1000); // 1µs … 10ms uniformly
+        }
+        let p50 = h.quantile_ns(0.5) as f64;
+        let p99 = h.quantile_ns(0.99) as f64;
+        assert!((4.0e6..6.5e6).contains(&p50), "p50={p50}");
+        assert!((9.0e6..10.5e6).contains(&p99), "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+        assert!(h.max_ns() >= 9_990_000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert!(h.summary().contains("n=0"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.record_ns(1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 8000);
+    }
+}

@@ -1,0 +1,217 @@
+//! Binary dataset files: persist generated workloads so benchmark runs
+//! are replayable byte-for-byte across processes (and so the CLI can
+//! pre-generate the paper's 128K–256M inputs once instead of per run).
+//!
+//! Format (little-endian): 16-byte header `BTSD` + u32 version + u32
+//! dtype-tag + u64 element count, then the raw key bytes. A trailing
+//! FNV-1a checksum of the payload guards against truncation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+const MAGIC: &[u8; 4] = b"BTSD";
+const VERSION: u32 = 1;
+
+/// Element type tags in the header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataTag {
+    /// 32-bit unsigned keys (the paper's workload).
+    U32 = 1,
+    /// 64-bit unsigned keys.
+    U64 = 2,
+    /// 32-bit floats.
+    F32 = 3,
+}
+
+impl DataTag {
+    fn from_u32(v: u32) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => DataTag::U32,
+            2 => DataTag::U64,
+            3 => DataTag::F32,
+            other => bail!("unknown dtype tag {other}"),
+        })
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Write `keys` to `path` in the dataset format.
+pub fn save_u32(path: impl AsRef<Path>, keys: &[u32]) -> anyhow::Result<()> {
+    save_raw(path, DataTag::U32, keys.len(), bytes_of(keys))
+}
+
+/// Write u64 keys.
+pub fn save_u64(path: impl AsRef<Path>, keys: &[u64]) -> anyhow::Result<()> {
+    save_raw(path, DataTag::U64, keys.len(), bytes_of(keys))
+}
+
+/// Write f32 keys.
+pub fn save_f32(path: impl AsRef<Path>, keys: &[f32]) -> anyhow::Result<()> {
+    save_raw(path, DataTag::F32, keys.len(), bytes_of(keys))
+}
+
+fn save_raw(path: impl AsRef<Path>, tag: DataTag, count: usize, payload: &[u8]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tag as u32).to_le_bytes())?;
+    f.write_all(&(count as u64).to_le_bytes())?;
+    f.write_all(payload)?;
+    f.write_all(&fnv1a(payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Read a u32 dataset back.
+pub fn load_u32(path: impl AsRef<Path>) -> anyhow::Result<Vec<u32>> {
+    let (tag, payload) = load_raw(path)?;
+    if tag != DataTag::U32 {
+        bail!("dataset holds {tag:?}, not u32");
+    }
+    Ok(from_bytes(&payload))
+}
+
+/// Read a u64 dataset back.
+pub fn load_u64(path: impl AsRef<Path>) -> anyhow::Result<Vec<u64>> {
+    let (tag, payload) = load_raw(path)?;
+    if tag != DataTag::U64 {
+        bail!("dataset holds {tag:?}, not u64");
+    }
+    Ok(from_bytes(&payload))
+}
+
+/// Read an f32 dataset back.
+pub fn load_f32(path: impl AsRef<Path>) -> anyhow::Result<Vec<f32>> {
+    let (tag, payload) = load_raw(path)?;
+    if tag != DataTag::F32 {
+        bail!("dataset holds {tag:?}, not f32");
+    }
+    Ok(from_bytes(&payload))
+}
+
+fn load_raw(path: impl AsRef<Path>) -> anyhow::Result<(DataTag, Vec<u8>)> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut header = [0u8; 20];
+    f.read_exact(&mut header).context("dataset header truncated")?;
+    if &header[0..4] != MAGIC {
+        bail!("not a BTSD dataset");
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported dataset version {version}");
+    }
+    let tag = DataTag::from_u32(u32::from_le_bytes(header[8..12].try_into().unwrap()))?;
+    let count = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+    let elem = match tag {
+        DataTag::U32 | DataTag::F32 => 4,
+        DataTag::U64 => 8,
+    };
+    let mut payload = vec![0u8; count * elem];
+    f.read_exact(&mut payload).context("dataset payload truncated")?;
+    let mut check = [0u8; 8];
+    f.read_exact(&mut check).context("dataset checksum missing")?;
+    if u64::from_le_bytes(check) != fnv1a(&payload) {
+        bail!("dataset checksum mismatch (corrupt or truncated)");
+    }
+    Ok((tag, payload))
+}
+
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) }
+}
+
+fn from_bytes<T: Copy>(bytes: &[u8]) -> Vec<T> {
+    let n = bytes.len() / std::mem::size_of::<T>();
+    let mut out = Vec::<T>::with_capacity(n);
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr().cast::<u8>(), bytes.len());
+        out.set_len(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Distribution, Generator};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bitonic-tpu-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let keys = Generator::new(1).u32s(10_000, Distribution::Uniform);
+        let path = tmp("u32.btsd");
+        save_u32(&path, &keys).unwrap();
+        assert_eq!(load_u32(&path).unwrap(), keys);
+    }
+
+    #[test]
+    fn u64_and_f32_roundtrip() {
+        let mut gen = Generator::new(2);
+        let k64 = gen.u64s(1000, Distribution::Uniform);
+        let p = tmp("u64.btsd");
+        save_u64(&p, &k64).unwrap();
+        assert_eq!(load_u64(&p).unwrap(), k64);
+
+        let kf = gen.f32s(1000, Distribution::Uniform);
+        let p = tmp("f32.btsd");
+        save_f32(&p, &kf).unwrap();
+        assert_eq!(load_f32(&p).unwrap(), kf);
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let path = tmp("typed.btsd");
+        save_u32(&path, &[1, 2, 3]).unwrap();
+        assert!(load_u64(&path).is_err());
+        assert!(load_f32(&path).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let path = tmp("trunc.btsd");
+        save_u32(&path, &(0..1000).collect::<Vec<u32>>()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+        assert!(load_u32(&path).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("corrupt.btsd");
+        save_u32(&path, &(0..1000).collect::<Vec<u32>>()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[100] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_u32(&path).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garbage.btsd");
+        std::fs::write(&path, b"not a dataset at all").unwrap();
+        assert!(load_u32(&path).is_err());
+    }
+
+    #[test]
+    fn empty_dataset_ok() {
+        let path = tmp("empty.btsd");
+        save_u32(&path, &[]).unwrap();
+        assert_eq!(load_u32(&path).unwrap(), Vec::<u32>::new());
+    }
+}

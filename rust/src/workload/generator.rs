@@ -1,0 +1,253 @@
+//! Input distributions for sorting experiments.
+
+use super::rng::SplitMix64;
+
+/// Key distributions used by the experiments.
+///
+/// `Uniform` is the paper's workload ("a series of 32-bit random
+/// integer"); the others cover the standard adversarial / easy cases used
+/// to characterise comparison sorts (quicksort in particular degrades on
+/// `Sorted`/`Reverse` without median-of-three, and on `DupHeavy` without
+/// three-way partitioning — both of which our implementation handles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// i.i.d. uniform over the full key domain (the paper's workload).
+    Uniform,
+    /// Already sorted ascending.
+    Sorted,
+    /// Sorted descending.
+    Reverse,
+    /// Sorted, then `swap_fraction`≈5% of random adjacent-ish swaps.
+    NearlySorted,
+    /// Only `distinct`≈16 distinct values.
+    DupHeavy,
+    /// Sum of two uniforms (triangular; a cheap Gaussian-ish shape that
+    /// stays integer-valued and full-range).
+    Gaussianish,
+    /// All keys equal.
+    Constant,
+    /// Organ-pipe: ascending then descending (bitonic by construction —
+    /// exercises the "already bitonic" fast path of the network).
+    OrganPipe,
+}
+
+impl Distribution {
+    /// All distributions, for sweep-style tests/benches.
+    pub const ALL: [Distribution; 8] = [
+        Distribution::Uniform,
+        Distribution::Sorted,
+        Distribution::Reverse,
+        Distribution::NearlySorted,
+        Distribution::DupHeavy,
+        Distribution::Gaussianish,
+        Distribution::Constant,
+        Distribution::OrganPipe,
+    ];
+
+    /// Stable name used in CLI flags and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Sorted => "sorted",
+            Distribution::Reverse => "reverse",
+            Distribution::NearlySorted => "nearly-sorted",
+            Distribution::DupHeavy => "dup-heavy",
+            Distribution::Gaussianish => "gaussianish",
+            Distribution::Constant => "constant",
+            Distribution::OrganPipe => "organ-pipe",
+        }
+    }
+
+    /// Parse a CLI name back into a distribution.
+    pub fn parse(s: &str) -> Option<Distribution> {
+        Distribution::ALL.iter().copied().find(|d| d.name() == s)
+    }
+}
+
+/// Deterministic, seedable workload generator.
+#[derive(Clone, Debug)]
+pub struct Generator {
+    rng: SplitMix64,
+}
+
+impl Generator {
+    /// Create a generator with the given seed.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// `n` 32-bit unsigned keys with the given distribution.
+    pub fn u32s(&mut self, n: usize, dist: Distribution) -> Vec<u32> {
+        match dist {
+            Distribution::Uniform => (0..n).map(|_| self.rng.next_u32()).collect(),
+            Distribution::Sorted => {
+                let mut v = self.u32s(n, Distribution::Uniform);
+                v.sort_unstable();
+                v
+            }
+            Distribution::Reverse => {
+                let mut v = self.u32s(n, Distribution::Sorted);
+                v.reverse();
+                v
+            }
+            Distribution::NearlySorted => {
+                let mut v = self.u32s(n, Distribution::Sorted);
+                let swaps = (n / 20).max(1);
+                for _ in 0..swaps {
+                    if n < 2 {
+                        break;
+                    }
+                    let i = self.rng.next_below(n as u64) as usize;
+                    let j = self.rng.next_below(n as u64) as usize;
+                    v.swap(i, j);
+                }
+                v
+            }
+            Distribution::DupHeavy => {
+                let palette: Vec<u32> = (0..16).map(|_| self.rng.next_u32()).collect();
+                (0..n)
+                    .map(|_| palette[self.rng.next_below(16) as usize])
+                    .collect()
+            }
+            Distribution::Gaussianish => (0..n)
+                .map(|_| {
+                    let a = self.rng.next_u32() >> 1;
+                    let b = self.rng.next_u32() >> 1;
+                    a + b
+                })
+                .collect(),
+            Distribution::Constant => vec![self.rng.next_u32(); n],
+            Distribution::OrganPipe => {
+                let mut v = self.u32s(n, Distribution::Sorted);
+                let half = n / 2;
+                v[half..].reverse();
+                v
+            }
+        }
+    }
+
+    /// `n` 64-bit unsigned keys (future-work E8: 64-bit integers).
+    pub fn u64s(&mut self, n: usize, dist: Distribution) -> Vec<u64> {
+        match dist {
+            Distribution::Uniform => (0..n).map(|_| self.rng.next_u64()).collect(),
+            _ => {
+                // Widen the 32-bit shape into 64-bit keys, preserving order
+                // structure: high word carries the distribution, low word
+                // is uniform noise.
+                self.u32s(n, dist)
+                    .into_iter()
+                    .map(|hi| ((hi as u64) << 32) | self.rng.next_u32() as u64)
+                    .collect()
+            }
+        }
+    }
+
+    /// `n` finite 32-bit floats (future-work E8: 32-bit float keys).
+    pub fn f32s(&mut self, n: usize, dist: Distribution) -> Vec<f32> {
+        match dist {
+            Distribution::Uniform => (0..n).map(|_| self.rng.next_f32() * 2e9 - 1e9).collect(),
+            _ => self
+                .u32s(n, dist)
+                .into_iter()
+                // Map keys monotonically into floats so the order shape of
+                // the distribution is preserved exactly.
+                .map(|k| (k as f64 / u32::MAX as f64 * 2e9 - 1e9) as f32)
+                .collect(),
+        }
+    }
+
+    /// `n` finite 64-bit doubles (future-work E8).
+    pub fn f64s(&mut self, n: usize, dist: Distribution) -> Vec<f64> {
+        match dist {
+            Distribution::Uniform => (0..n).map(|_| self.rng.next_f64() * 2e12 - 1e12).collect(),
+            _ => self
+                .u32s(n, dist)
+                .into_iter()
+                .map(|k| k as f64 / u32::MAX as f64 * 2e12 - 1e12)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Generator::new(1).u32s(256, Distribution::Uniform);
+        let b = Generator::new(1).u32s(256, Distribution::Uniform);
+        assert_eq!(a, b);
+        let c = Generator::new(2).u32s(256, Distribution::Uniform);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sorted_is_sorted() {
+        let v = Generator::new(3).u32s(512, Distribution::Sorted);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn reverse_is_reverse_sorted() {
+        let v = Generator::new(3).u32s(512, Distribution::Reverse);
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn dup_heavy_has_few_distinct() {
+        let mut v = Generator::new(4).u32s(4096, Distribution::DupHeavy);
+        v.sort_unstable();
+        v.dedup();
+        assert!(v.len() <= 16, "found {} distinct values", v.len());
+    }
+
+    #[test]
+    fn constant_all_equal() {
+        let v = Generator::new(5).u32s(128, Distribution::Constant);
+        assert!(v.iter().all(|&x| x == v[0]));
+    }
+
+    #[test]
+    fn organ_pipe_is_bitonic() {
+        let v = Generator::new(6).u32s(256, Distribution::OrganPipe);
+        let half = v.len() / 2;
+        assert!(v[..half].windows(2).all(|w| w[0] <= w[1]));
+        assert!(v[half..].windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn nearly_sorted_mostly_sorted() {
+        let v = Generator::new(7).u32s(4096, Distribution::NearlySorted);
+        let inversions = v.windows(2).filter(|w| w[0] > w[1]).count();
+        assert!(inversions < v.len() / 4, "too many inversions: {inversions}");
+    }
+
+    #[test]
+    fn all_distributions_produce_exact_length() {
+        let mut g = Generator::new(8);
+        for d in Distribution::ALL {
+            assert_eq!(g.u32s(100, d).len(), 100, "{}", d.name());
+            assert_eq!(g.u64s(100, d).len(), 100, "{}", d.name());
+            assert_eq!(g.f32s(100, d).len(), 100, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn f32s_finite() {
+        let mut g = Generator::new(9);
+        for d in Distribution::ALL {
+            assert!(g.f32s(256, d).iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn distribution_name_roundtrip() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::parse(d.name()), Some(d));
+        }
+        assert_eq!(Distribution::parse("nope"), None);
+    }
+}

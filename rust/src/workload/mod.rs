@@ -1,0 +1,14 @@
+//! Workload generation: PRNGs and input distributions.
+//!
+//! The paper's evaluation uses "32-bit random integer" arrays from 128K to
+//! 256M elements. Real workloads are rarely uniform, so the generator also
+//! provides the distributions used by the wider sorting literature
+//! (sorted, reverse-sorted, nearly-sorted, duplicate-heavy, Gaussian,
+//! zero-entropy) for the extended experiments (DESIGN.md E6–E9).
+
+pub mod datasets;
+pub mod generator;
+pub mod rng;
+
+pub use generator::{Distribution, Generator};
+pub use rng::{Pcg32, SplitMix64};

@@ -1,0 +1,312 @@
+//! Property-based tests of the coordinator invariants (DESIGN.md §6.5),
+//! using the in-repo `util::prop` framework with CPU-mock backends so the
+//! properties run without artifacts.
+
+use std::sync::Arc;
+
+use bitonic_tpu::coordinator::{
+    BatchSorter, Service, ServiceConfig, SortRequest,
+};
+use bitonic_tpu::sort::bitonic_sort;
+use bitonic_tpu::util::prop::{check_with, Config, Strategy};
+use bitonic_tpu::workload::rng::Pcg32;
+
+/// CPU mock backend.
+struct Mock {
+    batch: usize,
+    n: usize,
+}
+
+impl BatchSorter for Mock {
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.n)
+    }
+    fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+        for r in rows.chunks_mut(self.n) {
+            bitonic_sort(r);
+        }
+        Ok(rows)
+    }
+}
+
+fn service(classes: &[(usize, usize)]) -> Arc<Service> {
+    Service::new(
+        classes
+            .iter()
+            .map(|&(batch, n)| Arc::new(Mock { batch, n }) as Arc<dyn BatchSorter>)
+            .collect(),
+        ServiceConfig::default(),
+    )
+}
+
+/// A randomized request workload: lengths, values, directions.
+#[derive(Clone, Debug)]
+struct Workload {
+    requests: Vec<(Vec<u32>, bool)>,
+}
+
+struct WorkloadStrategy {
+    max_requests: usize,
+    max_len: usize,
+}
+
+impl Strategy for WorkloadStrategy {
+    type Value = Workload;
+    fn sample(&self, rng: &mut Pcg32) -> Workload {
+        let count = 1 + rng.next_below(self.max_requests as u32) as usize;
+        let requests = (0..count)
+            .map(|_| {
+                let len = rng.next_below(self.max_len as u32 + 1) as usize;
+                let keys = (0..len).map(|_| rng.next_u32()).collect();
+                let descending = rng.next_below(4) == 0;
+                (keys, descending)
+            })
+            .collect();
+        Workload { requests }
+    }
+    fn shrink(&self, v: &Workload) -> Vec<Workload> {
+        let mut out = Vec::new();
+        if v.requests.len() > 1 {
+            out.push(Workload {
+                requests: v.requests[..v.requests.len() / 2].to_vec(),
+            });
+            out.push(Workload {
+                requests: v.requests[v.requests.len() / 2..].to_vec(),
+            });
+        }
+        // Shrink the longest request.
+        if let Some(idx) = v
+            .requests
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, (k, _))| k.len())
+            .map(|(i, _)| i)
+        {
+            if !v.requests[idx].0.is_empty() {
+                let mut w = v.clone();
+                let half = w.requests[idx].0.len() / 2;
+                w.requests[idx].0.truncate(half);
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn every_request_answered_exactly_once_and_sorted() {
+    let strategy = WorkloadStrategy {
+        max_requests: 40,
+        max_len: 700,
+    };
+    check_with(
+        Config {
+            cases: 24,
+            ..Config::default()
+        },
+        &strategy,
+        |w| {
+            let svc = service(&[(4, 64), (8, 256)]);
+            let rxs: Vec<_> = w
+                .requests
+                .iter()
+                .enumerate()
+                .map(|(i, (keys, desc))| {
+                    svc.submit(SortRequest {
+                        id: i as u64,
+                        keys: keys.clone(),
+                        descending: *desc,
+                    })
+                })
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let rx = rx.map_err(|_| format!("request {i} shed unexpectedly"))?;
+                let resp = rx
+                    .recv()
+                    .map_err(|_| format!("request {i} never answered"))?;
+                if resp.id != i as u64 {
+                    return Err(format!("id mismatch: got {} want {i}", resp.id));
+                }
+                let (keys, desc) = &w.requests[i];
+                if resp.keys.len() != keys.len() {
+                    return Err(format!(
+                        "request {i}: length {} != {}",
+                        resp.keys.len(),
+                        keys.len()
+                    ));
+                }
+                let mut want = keys.clone();
+                want.sort_unstable();
+                if *desc {
+                    want.reverse();
+                }
+                if resp.keys != want {
+                    return Err(format!("request {i}: wrong output"));
+                }
+                // Exactly once: a second recv must fail (sender dropped).
+                if rx.recv().is_ok() {
+                    return Err(format!("request {i} answered twice"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn admission_gate_never_exceeded_and_sheds_only_when_full() {
+    struct CapacityStrategy;
+    impl Strategy for CapacityStrategy {
+        type Value = (usize, usize);
+        fn sample(&self, rng: &mut Pcg32) -> (usize, usize) {
+            (
+                1 + rng.next_below(8) as usize,   // capacity
+                1 + rng.next_below(64) as usize,  // burst size
+            )
+        }
+    }
+    check_with(
+        Config {
+            cases: 32,
+            ..Config::default()
+        },
+        &CapacityStrategy,
+        |&(capacity, burst)| {
+            let svc = Service::new(
+                vec![Arc::new(Mock { batch: 4, n: 64 }) as Arc<dyn BatchSorter>],
+                ServiceConfig {
+                    max_in_flight: capacity,
+                    ..ServiceConfig::default()
+                },
+            );
+            let mut receivers = Vec::new();
+            let mut shed = 0usize;
+            for i in 0..burst {
+                match svc.submit(SortRequest::new(i as u64, vec![2, 1])) {
+                    Ok(rx) => receivers.push(rx),
+                    Err(_) => shed += 1,
+                }
+            }
+            // Shedding may only happen once in-flight hit capacity.
+            if shed > 0 && receivers.len() < capacity.min(burst) {
+                return Err(format!(
+                    "shed {shed} while only {} in flight (cap {capacity})",
+                    receivers.len()
+                ));
+            }
+            for rx in receivers {
+                rx.recv().map_err(|_| "dropped response".to_string())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batches_never_mix_size_classes() {
+    // Indirect but strong check: with two classes whose mocks tag outputs,
+    // a mixed batch would corrupt row lengths and fail the sort check.
+    struct TaggingMock {
+        batch: usize,
+        n: usize,
+    }
+    impl BatchSorter for TaggingMock {
+        fn shape(&self) -> (usize, usize) {
+            (self.batch, self.n)
+        }
+        fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+            anyhow::ensure!(
+                rows.len() == self.batch * self.n,
+                "batch shape violated: {} != {}x{}",
+                rows.len(),
+                self.batch,
+                self.n
+            );
+            for r in rows.chunks_mut(self.n) {
+                bitonic_sort(r);
+            }
+            Ok(rows)
+        }
+    }
+    let svc = Service::new(
+        vec![
+            Arc::new(TaggingMock { batch: 2, n: 32 }) as Arc<dyn BatchSorter>,
+            Arc::new(TaggingMock { batch: 8, n: 512 }) as Arc<dyn BatchSorter>,
+        ],
+        ServiceConfig::default(),
+    );
+    let strategy = WorkloadStrategy {
+        max_requests: 60,
+        max_len: 512,
+    };
+    check_with(
+        Config {
+            cases: 16,
+            ..Config::default()
+        },
+        &strategy,
+        |w| {
+            let rxs: Vec<_> = w
+                .requests
+                .iter()
+                .enumerate()
+                .map(|(i, (keys, _))| svc.submit(SortRequest::new(i as u64, keys.clone())))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let rx = rx.map_err(|_| "shed".to_string())?;
+                let resp = rx.recv().map_err(|_| format!("request {i} dropped"))?;
+                if !resp.keys.windows(2).all(|p| p[0] <= p[1]) {
+                    return Err(format!("request {i} unsorted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn responses_preserve_multisets_under_concurrency() {
+    let svc = service(&[(8, 128)]);
+    let strategy = WorkloadStrategy {
+        max_requests: 32,
+        max_len: 128,
+    };
+    check_with(
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        &strategy,
+        |w| {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (i, (keys, desc)) in w.requests.iter().enumerate() {
+                    let svc = &svc;
+                    handles.push(scope.spawn(move || {
+                        let resp = svc
+                            .sort_blocking(SortRequest {
+                                id: i as u64,
+                                keys: keys.clone(),
+                                descending: *desc,
+                            })
+                            .map_err(|_| "shed".to_string())?;
+                        let mut want = keys.clone();
+                        want.sort_unstable();
+                        if *desc {
+                            want.reverse();
+                        }
+                        if resp.keys == want {
+                            Ok(())
+                        } else {
+                            Err(format!("request {i} corrupted"))
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().map_err(|_| "panicked".to_string())??;
+                }
+                Ok(())
+            })
+        },
+    );
+}

@@ -1,0 +1,152 @@
+//! Integration tests of the out-of-core hybrid sorter over the real
+//! artifacts (skipped with a message when `make artifacts` hasn't run).
+
+use bitonic_tpu::runtime::spawn_device_host;
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{is_sorted, quicksort, same_multiset, HybridSorter};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ARTIFACTS_DIR")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn hybrid_sorts_beyond_largest_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    if manifest.merge_classes().is_empty() {
+        eprintln!("SKIP: no merge artifacts (quick mode?)");
+        return;
+    }
+    let sorter = HybridSorter::new(handle, &manifest, Variant::Optimized).unwrap();
+    let chunk = sorter.chunk();
+    let mut gen = Generator::new(0x4B1D);
+    // 3.5 chunks: exercises full pairs, a partial pair, and (depending on
+    // the merge menu) the CPU tail.
+    let n = chunk * 3 + chunk / 2;
+    let orig = gen.u32s(n, Distribution::Uniform);
+    let mut v = orig.clone();
+    let stats = sorter.sort(&mut v).unwrap();
+    assert_eq!(v.len(), n);
+    assert!(is_sorted(&v));
+    assert!(same_multiset(&orig, &v));
+    assert!(stats.device_sorts >= 1, "{stats:?}");
+    assert!(
+        stats.device_merges + stats.cpu_merges >= 1,
+        "no merging happened: {stats:?}"
+    );
+}
+
+#[test]
+fn hybrid_matches_quicksort_various_lengths() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    if manifest.merge_classes().is_empty() {
+        eprintln!("SKIP: no merge artifacts");
+        return;
+    }
+    let sorter = HybridSorter::new(handle, &manifest, Variant::Optimized).unwrap();
+    let chunk = sorter.chunk();
+    let mut gen = Generator::new(0x4B2D);
+    for n in [
+        0,
+        1,
+        17,
+        chunk - 1,
+        chunk,
+        chunk + 1,
+        2 * chunk,
+        2 * chunk + 3,
+        4 * chunk,
+    ] {
+        let orig = gen.u32s(n, Distribution::DupHeavy);
+        let mut ours = orig.clone();
+        sorter.sort(&mut ours).unwrap();
+        let mut want = orig;
+        quicksort(&mut want);
+        assert_eq!(ours, want, "n={n}");
+    }
+}
+
+#[test]
+fn hybrid_handles_max_keys() {
+    // Real u32::MAX keys must survive MAX-padding (multiset equality by
+    // value — see hybrid.rs stage-2 comment).
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    if manifest.merge_classes().is_empty() {
+        eprintln!("SKIP: no merge artifacts");
+        return;
+    }
+    let sorter = HybridSorter::new(handle, &manifest, Variant::Optimized).unwrap();
+    let chunk = sorter.chunk();
+    let mut gen = Generator::new(9);
+    let n = 2 * chunk + chunk / 3;
+    let mut orig = gen.u32s(n, Distribution::Uniform);
+    // Salt with MAX keys.
+    for i in (0..n).step_by(97) {
+        orig[i] = u32::MAX;
+    }
+    let mut ours = orig.clone();
+    sorter.sort(&mut ours).unwrap();
+    let mut want = orig;
+    quicksort(&mut want);
+    assert_eq!(ours, want);
+    assert_eq!(
+        ours.iter().filter(|&&x| x == u32::MAX).count(),
+        n.div_ceil(97),
+        "MAX keys lost or duplicated"
+    );
+}
+
+#[test]
+fn hybrid_small_chunk_runs_deep_device_merge_tree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    if manifest.merge_classes().is_empty() {
+        eprintln!("SKIP: no merge artifacts");
+        return;
+    }
+    // chunk = 1024 with merge artifacts at 2^11 and 2^13 ⇒ two device
+    // merge levels, then CPU tail.
+    let sorter =
+        HybridSorter::with_chunk(handle, &manifest, Variant::Optimized, 1024).unwrap();
+    let mut gen = Generator::new(0xDEEB);
+    let n = 1024 * 9 + 123; // 9.x chunks → full pairs + partial + lone
+    let orig = gen.u32s(n, Distribution::Uniform);
+    let mut v = orig.clone();
+    let stats = sorter.sort(&mut v).unwrap();
+    assert!(is_sorted(&v));
+    assert!(same_multiset(&orig, &v));
+    assert!(
+        stats.device_merges >= 2,
+        "expected a multi-level device merge tree: {stats:?}"
+    );
+}
+
+#[test]
+fn hybrid_all_distributions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    if manifest.merge_classes().is_empty() {
+        eprintln!("SKIP: no merge artifacts");
+        return;
+    }
+    let sorter = HybridSorter::new(handle, &manifest, Variant::Optimized).unwrap();
+    let chunk = sorter.chunk();
+    let mut gen = Generator::new(0xD157);
+    for dist in Distribution::ALL {
+        let orig = gen.u32s(2 * chunk + 5, dist);
+        let mut v = orig.clone();
+        sorter.sort(&mut v).unwrap();
+        assert!(is_sorted(&v), "{}", dist.name());
+        assert!(same_multiset(&orig, &v), "{}", dist.name());
+    }
+}

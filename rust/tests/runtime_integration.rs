@@ -1,0 +1,201 @@
+//! Integration tests over the real artifacts: the PJRT path must agree
+//! bit-for-bit with the CPU substrates.
+//!
+//! These tests require `make artifacts` to have been run; they are skipped
+//! (with a loud message) when the artifacts directory is absent so `cargo
+//! test` stays usable in a fresh checkout.
+
+use bitonic_tpu::runtime::{spawn_device_host, Dtype, Key};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{is_sorted, quicksort, same_multiset};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn device_sort_matches_cpu_quicksort_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let mut gen = Generator::new(0xE2E);
+    for variant in Variant::ALL {
+        // Smallest ascending u32 artifact of this variant.
+        let metas = manifest.size_classes(variant);
+        let meta = metas.first().expect("artifact menu empty");
+        let (b, n) = (meta.batch, meta.n);
+        let rows = gen.u32s(b * n, Distribution::Uniform);
+        let sorted = handle.sort_u32(Key::of(meta), rows.clone()).unwrap();
+        for r in 0..b {
+            let mut want = rows[r * n..(r + 1) * n].to_vec();
+            quicksort(&mut want);
+            assert_eq!(
+                &sorted[r * n..(r + 1) * n],
+                &want[..],
+                "{variant:?} row {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_variants_agree_with_each_other() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let mut gen = Generator::new(0xA9);
+    // Pick one (batch, n) present for all three variants.
+    let basic = manifest.size_classes(Variant::Basic);
+    let meta = basic.first().unwrap();
+    let rows = gen.u32s(meta.batch * meta.n, Distribution::DupHeavy);
+    let mut outputs = Vec::new();
+    for variant in Variant::ALL {
+        let m = manifest
+            .find(variant, meta.batch, meta.n, Dtype::U32, false)
+            .expect("artifact matrix incomplete");
+        outputs.push(handle.sort_u32(Key::of(m), rows.clone()).unwrap());
+    }
+    assert_eq!(outputs[0], outputs[1], "basic vs semi");
+    assert_eq!(outputs[1], outputs[2], "semi vs optimized");
+}
+
+#[test]
+fn every_distribution_sorts_on_device() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let metas = manifest.size_classes(Variant::Optimized);
+    let meta = metas.first().unwrap();
+    let mut gen = Generator::new(3);
+    for dist in Distribution::ALL {
+        let rows = gen.u32s(meta.batch * meta.n, dist);
+        let sorted = handle.sort_u32(Key::of(meta), rows.clone()).unwrap();
+        for r in 0..meta.batch {
+            let chunk = &sorted[r * meta.n..(r + 1) * meta.n];
+            assert!(is_sorted(chunk), "{} row {r}", dist.name());
+            assert!(
+                same_multiset(&rows[r * meta.n..(r + 1) * meta.n], chunk),
+                "{} row {r} lost keys",
+                dist.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn descending_artifact_works() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let Some(meta) = manifest
+        .entries
+        .iter()
+        .find(|m| m.descending && m.dtype == Dtype::U32)
+    else {
+        eprintln!("SKIP: no descending artifact (quick mode?)");
+        return;
+    };
+    let mut gen = Generator::new(4);
+    let rows = gen.u32s(meta.batch * meta.n, Distribution::Uniform);
+    let sorted = handle.sort_u32(Key::of(meta), rows).unwrap();
+    for r in 0..meta.batch {
+        let chunk = &sorted[r * meta.n..(r + 1) * meta.n];
+        assert!(bitonic_tpu::sort::is_sorted_desc(chunk), "row {r}");
+    }
+}
+
+#[test]
+fn f32_and_i32_artifacts_work() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let mut gen = Generator::new(5);
+
+    if let Some(meta) = manifest
+        .entries
+        .iter()
+        .find(|m| m.dtype == Dtype::F32 && !m.descending)
+    {
+        let rows = gen.f32s(meta.batch * meta.n, Distribution::Uniform);
+        let sorted = handle.sort_f32(Key::of(meta), rows.clone()).unwrap();
+        for r in 0..meta.batch {
+            let mut want = rows[r * meta.n..(r + 1) * meta.n].to_vec();
+            want.sort_by(f32::total_cmp);
+            assert_eq!(&sorted[r * meta.n..(r + 1) * meta.n], &want[..], "f32 row {r}");
+        }
+    } else {
+        eprintln!("SKIP: no f32 artifact");
+    }
+
+    if let Some(meta) = manifest
+        .entries
+        .iter()
+        .find(|m| m.dtype == Dtype::I32 && !m.descending)
+    {
+        let rows: Vec<i32> = gen
+            .u32s(meta.batch * meta.n, Distribution::Uniform)
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        let sorted = handle.sort_i32(Key::of(meta), rows.clone()).unwrap();
+        for r in 0..meta.batch {
+            let mut want = rows[r * meta.n..(r + 1) * meta.n].to_vec();
+            want.sort_unstable();
+            assert_eq!(&sorted[r * meta.n..(r + 1) * meta.n], &want[..], "i32 row {r}");
+        }
+    } else {
+        eprintln!("SKIP: no i32 artifact");
+    }
+}
+
+#[test]
+fn wrong_buffer_size_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let metas = manifest.size_classes(Variant::Optimized);
+    let meta = metas.first().unwrap();
+    let err = handle
+        .sort_u32(Key::of(meta), vec![1, 2, 3])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("bytes"));
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let meta = manifest.entries.first().unwrap();
+    let mut key = Key::of(meta);
+    key.n = 1 << 27; // certainly not exported
+    let err = handle.sort_u32(key, vec![0; 4]).unwrap_err();
+    assert!(format!("{err:#}").contains("no artifact"));
+}
+
+#[test]
+fn padding_contract_device_vs_cpu() {
+    // MAX-padding + truncate on the device equals CPU sort of the prefix —
+    // the contract the coordinator router relies on.
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let metas = manifest.size_classes(Variant::Optimized);
+    let meta = metas.first().unwrap();
+    let mut gen = Generator::new(6);
+    let real_len = meta.n - meta.n / 3;
+    let mut rows = vec![u32::MAX; meta.batch * meta.n];
+    let mut wants = Vec::new();
+    for r in 0..meta.batch {
+        let data = gen.u32s(real_len, Distribution::Uniform);
+        rows[r * meta.n..r * meta.n + real_len].copy_from_slice(&data);
+        let mut want = data;
+        quicksort(&mut want);
+        wants.push(want);
+    }
+    let sorted = handle.sort_u32(Key::of(meta), rows).unwrap();
+    for r in 0..meta.batch {
+        assert_eq!(&sorted[r * meta.n..r * meta.n + real_len], &wants[r][..]);
+    }
+}
