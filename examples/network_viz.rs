@@ -7,7 +7,7 @@
 
 use bitonic_tpu::sort::network::{Network, Variant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bitonic_tpu::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
         .map(|s| s.parse())

@@ -1,7 +1,7 @@
 //! Quickstart: the 60-second tour of the public API.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use bitonic_tpu::runtime::{spawn_device_host, Key};
@@ -9,7 +9,7 @@ use bitonic_tpu::sort::network::{Network, Variant};
 use bitonic_tpu::sort::{bitonic_sort, is_sorted, quicksort};
 use bitonic_tpu::workload::{Distribution, Generator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bitonic_tpu::Result<()> {
     // 1. Generate a workload (the paper's: uniform 32-bit integers).
     let mut gen = Generator::new(42);
     let keys = gen.u32s(10_000, Distribution::Uniform);
@@ -40,9 +40,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 4. The device path: AOT-compiled Pallas kernels via PJRT.
-    let (handle, manifest) = spawn_device_host("artifacts")?;
+    let (handle, manifest) = spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir())?;
     let metas = manifest.size_classes(Variant::Optimized);
-    let meta = metas.first().expect("run `make artifacts` first");
+    let meta = metas.first().expect("no artifacts — run `python -m compile.aot`");
     println!(
         "device: sorting a ({}, {}) batch with the '{}' artifact…",
         meta.batch, meta.n, meta.name

@@ -5,7 +5,7 @@
 //! a serving paper would.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example sort_service
+//! cargo run --release --example sort_service
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md §E10.
@@ -22,7 +22,7 @@ use bitonic_tpu::sort::is_sorted;
 use bitonic_tpu::util::metrics::Histogram;
 use bitonic_tpu::workload::{Distribution, Generator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bitonic_tpu::Result<()> {
     let requests: usize = std::env::args()
         .nth(1)
         .map(|s| s.parse())
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- bring the stack up -------------------------------------------
     let t0 = Instant::now();
-    let (handle, manifest) = spawn_device_host("artifacts")?;
+    let (handle, manifest) = spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir())?;
     let classes = manifest.size_classes(Variant::Optimized);
     println!(
         "loaded manifest: {} artifacts, {} optimized size classes",

@@ -28,11 +28,30 @@ import os
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
-from jax._src.lib import xla_client as xc
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax._src.lib import xla_client as xc
 
-from . import model
+    _JAX_IMPORT_ERROR = None
+except ImportError as _e:  # offline environment without JAX
+    jax = jnp = xc = model = None
+    _JAX_IMPORT_ERROR = _e
+else:
+    # Imported outside the guard so a genuine bug in compile.model (or
+    # its dependencies) surfaces as itself, not as "JAX is missing".
+    from . import model
+
+
+def _require_jax() -> None:
+    """Exit with a clear one-line message (not a traceback) without JAX."""
+    if jax is None:
+        sys.exit(
+            "error: compile.aot needs JAX (+ a working XLA client) to lower "
+            "artifacts; it is not installed in this environment. Install jax "
+            "or use the pre-exported artifacts/ fixture consumed by the rust "
+            f"runtime. (import error: {_JAX_IMPORT_ERROR})"
+        )
 
 # The artifact matrix. Kept moderate: lowering one full sort takes a few
 # seconds of trace time, and the rust side compiles each artifact once at
@@ -80,10 +99,13 @@ def artifact_name(variant: str, batch: int, n: int, dtype: str,
 
 
 def export_one(out_dir: str, variant: str, batch: int, n: int, dtype: str,
-               descending: bool, *, block: int = model.DEFAULT_BLOCK,
+               descending: bool, *, block: int | None = None,
                grid_cells: int = 4, kind: str = "sort") -> dict:
     """Lower one configuration and write its .hlo.txt. Returns the
     manifest row as a dict."""
+    _require_jax()
+    if block is None:
+        block = model.DEFAULT_BLOCK
     name = artifact_name(variant, batch, n, dtype, descending, kind)
     maker = model.make_sort_fn if kind == "sort" else model.make_merge_fn
     fn = maker(variant, block=block, descending=descending,
@@ -133,6 +155,7 @@ def main(argv=None) -> None:
                     help="interpret-mode grid split per pallas_call")
     args = ap.parse_args(argv)
 
+    _require_jax()
     os.makedirs(args.out_dir, exist_ok=True)
     sizes = QUICK_SIZES if args.quick else SIZES
     rows = []

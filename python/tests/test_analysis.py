@@ -3,6 +3,8 @@ targets the §Perf pass verifies (DESIGN.md §7)."""
 
 import pytest
 
+pytest.importorskip("jax", reason="JAX is not installed (offline env)")
+
 from compile import analysis, model
 
 

@@ -9,9 +9,10 @@ minus the FFI).
 import os
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 import pytest
+
+jax = pytest.importorskip("jax", reason="JAX is not installed (offline env)")
+import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from compile import aot, model

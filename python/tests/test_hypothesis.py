@@ -5,7 +5,12 @@ cost per fresh shape that dwarfs hypothesis's default budget.
 """
 
 import numpy as np
-import jax.numpy as jnp
+import pytest
+
+jnp = pytest.importorskip("jax.numpy", reason="JAX is not installed (offline env)")
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis is not installed (offline env)"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile import model

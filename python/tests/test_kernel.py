@@ -5,13 +5,14 @@ localises to a single (kernel, phase, stride) triple.
 """
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
+
+jnp = pytest.importorskip("jax.numpy", reason="JAX is not installed (offline env)")
 
 from compile.kernels import bitonic as kb
 from compile.kernels import ref
 
-from .conftest import random_rows
+from conftest import random_rows
 
 
 def all_steps(n):

@@ -1,12 +1,13 @@
 """Bitonic-merge primitive (paper §3's core; used by rust sort::hybrid)."""
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
+
+jnp = pytest.importorskip("jax.numpy", reason="JAX is not installed (offline env)")
 
 from compile import model
 
-from .conftest import random_rows
+from conftest import random_rows
 
 
 def sorted_halves(rng, b, n, dtype=np.uint32):

@@ -98,8 +98,11 @@ fn main() {
     println!("{}", t.render());
 
     // --- measured artifact ablation (real executions) --------------------
-    println!("== measured artifact path (PJRT CPU; ordering is the signal) ==");
-    match spawn_device_host("artifacts") {
+    println!("== measured artifact path (native-CPU executor) ==");
+    println!("   NOTE: the offline executor runs the same network for every");
+    println!("   variant — these rows sanity-check the execution path, not the");
+    println!("   paper's variant ordering (needs the PJRT backend).");
+    match spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir()) {
         Ok((handle, manifest)) => {
             let bench = Bench::quick();
             let mut gen = Generator::new(0xAB1A);

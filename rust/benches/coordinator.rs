@@ -24,7 +24,7 @@ impl BatchSorter for Mock {
     fn shape(&self) -> (usize, usize) {
         (self.batch, self.n)
     }
-    fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+    fn sort_rows(&self, mut rows: Vec<u32>) -> bitonic_tpu::Result<Vec<u32>> {
         if !self.exec_cost.is_zero() {
             std::thread::sleep(self.exec_cost);
         }

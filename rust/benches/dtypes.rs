@@ -67,8 +67,8 @@ fn main() {
     println!("→ 8-byte keys double bandwidth *and* halve the shared tile (more launches).\n");
 
     // --- measured artifacts: i32 / f32 ------------------------------------
-    println!("== measured non-u32 artifacts (PJRT CPU) ==");
-    match spawn_device_host("artifacts") {
+    println!("== measured non-u32 artifacts (native-CPU executor) ==");
+    match spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir()) {
         Ok((handle, manifest)) => {
             for meta in manifest
                 .entries

@@ -14,8 +14,8 @@ use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
 use bitonic_tpu::workload::{Distribution, Generator};
 
 fn main() {
-    let Ok((handle, manifest)) = spawn_device_host("artifacts") else {
-        println!("SKIP: run `make artifacts` first");
+    let Ok((handle, manifest)) = spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir()) else {
+        println!("SKIP: no artifacts — run `python -m compile.aot` first");
         return;
     };
     if manifest.merge_classes().is_empty() {

@@ -54,11 +54,13 @@ fn main() {
     }
     println!("{}", t.render());
 
-    // --- figure C: measured device path (artifacts, PJRT CPU) -----------
-    println!("== figure C: measured artifact execution (PJRT CPU, interpret-mode Pallas) ==");
-    println!("   absolute times are CPU-emulation times, NOT GPU estimates;");
-    println!("   the signal is the *variant ordering* on identical hardware.");
-    match spawn_device_host("artifacts") {
+    // --- figure C: measured device path (artifacts, native executor) ----
+    println!("== figure C: measured artifact execution (native-CPU executor) ==");
+    println!("   NOTE: the offline executor runs the same network for every");
+    println!("   variant, so the per-variant columns measure executor overhead");
+    println!("   only — variant ordering becomes meaningful once the PJRT");
+    println!("   backend is vendored (see runtime::executor docs).");
+    match spawn_device_host(bitonic_tpu::runtime::default_artifacts_dir()) {
         Ok((handle, manifest)) => {
             let mut t =
                 Table::new(vec!["(B,N)", "basic ms", "semi ms", "optimized ms", "opt/basic"]);
@@ -100,6 +102,6 @@ fn main() {
             }
             println!("{}", t.render());
         }
-        Err(e) => println!("   (skipped: {e:#} — run `make artifacts`)"),
+        Err(e) => println!("   (skipped: {e:#} — run `python -m compile.aot`)"),
     }
 }

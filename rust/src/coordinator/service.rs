@@ -23,7 +23,7 @@ pub trait BatchSorter: Send + Sync {
     /// buffer by value: the device path ships it across the host-thread
     /// channel anyway, and by-value avoids a defensive copy per batch
     /// (§Perf L3 iteration 1).
-    fn sort_rows(&self, rows: Vec<u32>) -> anyhow::Result<Vec<u32>>;
+    fn sort_rows(&self, rows: Vec<u32>) -> crate::Result<Vec<u32>>;
 }
 
 /// [`BatchSorter`] backed by a compiled PJRT artifact, executed via the
@@ -54,7 +54,7 @@ impl BatchSorter for RegistrySorter {
     fn shape(&self) -> (usize, usize) {
         (self.batch, self.n)
     }
-    fn sort_rows(&self, rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+    fn sort_rows(&self, rows: Vec<u32>) -> crate::Result<Vec<u32>> {
         self.handle.sort_u32(self.key, rows)
     }
 }
@@ -369,7 +369,7 @@ mod tests {
         fn shape(&self) -> (usize, usize) {
             (self.batch, self.n)
         }
-        fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+        fn sort_rows(&self, mut rows: Vec<u32>) -> crate::Result<Vec<u32>> {
             self.calls.inc();
             for r in rows.chunks_mut(self.n) {
                 bitonic_sort(r);

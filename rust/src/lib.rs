@@ -28,9 +28,9 @@
 //! * [`workload`] — PRNGs and input distributions for experiments.
 //! * [`bench`] — the measurement harness used by `rust/benches/*`
 //!   (criterion is unavailable offline).
-//! * [`util`] — CLI parsing, thread pool, metrics, property-testing and
-//!   table formatting substrates (their crates.io equivalents are
-//!   unavailable offline).
+//! * [`util`] — error handling ([`util::error`]), CLI parsing, thread
+//!   pool, metrics, property-testing and table formatting substrates
+//!   (their crates.io equivalents are unavailable offline).
 
 pub mod bench;
 pub mod coordinator;
@@ -40,5 +40,5 @@ pub mod sort;
 pub mod util;
 pub mod workload;
 
-/// Crate-wide result type.
-pub type Result<T, E = anyhow::Error> = std::result::Result<T, E>;
+/// Crate-wide result type (see [`util::error`] for the error subsystem).
+pub type Result<T, E = util::error::Error> = std::result::Result<T, E>;

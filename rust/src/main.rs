@@ -16,12 +16,12 @@ use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortReque
 use bitonic_tpu::runtime::{spawn_device_host, Key};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
-use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel, quicksort};
+use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort};
 use bitonic_tpu::util::cli::Parser;
 use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
 use bitonic_tpu::workload::{Distribution, Generator};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bitonic_tpu::Result<()> {
     let parser = Parser::new("bitonic-tpu", "bitonic sort on the rust+JAX+Pallas stack")
         .command("sort", "sort one generated workload")
         .command("serve", "run the sort service on a synthetic stream")
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
         .opt("variant", "device variant: basic|semi|optimized", Some("optimized"))
         .opt("dist", "workload distribution", Some("uniform"))
-        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("artifacts", "artifacts directory (default: auto-discover)", None)
         .opt("requests", "serve: number of requests", Some("200"))
         .opt("threads", "bitonic-par threads", Some("8"))
         .opt("seed", "workload seed", Some("42"))
@@ -56,11 +56,19 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+/// `--artifacts DIR` if given, else auto-discovery (env var, ./artifacts,
+/// the checked-in fixture).
+fn artifacts_dir(args: &bitonic_tpu::util::cli::Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(bitonic_tpu::runtime::default_artifacts_dir)
+}
+
+fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
     let dist = Distribution::parse(&args.get_or("dist", "uniform"))
-        .ok_or_else(|| anyhow::anyhow!("unknown distribution"))?;
+        .ok_or_else(|| bitonic_tpu::err!("unknown distribution"))?;
     let algo = args.get_or("algo", "device");
     let mut keys = Generator::new(seed).u32s(n, dist);
     let t0 = Instant::now();
@@ -69,15 +77,12 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
         "bitonic" => bitonic_sort_padded(&mut keys),
         "bitonic-par" => {
             let threads: usize = args.parsed_or("threads", 8)?;
-            let padded = n.next_power_of_two();
-            keys.resize(padded, u32::MAX);
-            bitonic_sort_parallel(&mut keys, threads);
-            keys.truncate(n);
+            bitonic_sort_parallel_padded(&mut keys, threads);
         }
         "hybrid" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
-                .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
-            let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+                .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
+            let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
             let sorter =
                 bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?;
             let stats = sorter.sort(&mut keys)?;
@@ -88,24 +93,24 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
         }
         "device" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
-                .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
-            let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+                .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
+            let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
             let padded = n.next_power_of_two();
             let meta = manifest
                 .size_classes(variant)
                 .into_iter()
                 .find(|m| m.n >= padded)
-                .ok_or_else(|| anyhow::anyhow!("no artifact fits n={n}"))?
+                .ok_or_else(|| bitonic_tpu::err!("no artifact fits n={n}"))?
                 .clone();
             let mut rows = keys.clone();
             rows.resize(meta.batch * meta.n, u32::MAX);
             let sorted = handle.sort_u32(Key::of(&meta), rows)?;
             keys = sorted[..n].to_vec();
         }
-        other => anyhow::bail!("unknown algo {other}"),
+        other => bitonic_tpu::bail!("unknown algo {other}"),
     }
     let ms = t0.elapsed().as_secs_f64() * 1e3;
-    anyhow::ensure!(
+    bitonic_tpu::ensure!(
         bitonic_tpu::sort::is_sorted(&keys),
         "output not sorted — bug"
     );
@@ -113,12 +118,12 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let requests: usize = args.parsed_or("requests", 200)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
     let variant = Variant::parse(&args.get_or("variant", "optimized"))
-        .ok_or_else(|| anyhow::anyhow!("bad variant"))?;
-    let (handle, manifest) = spawn_device_host(args.get_or("artifacts", "artifacts"))?;
+        .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
+    let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
     println!(
         "warming {} artifacts…",
         manifest.size_classes(variant).len()
@@ -146,7 +151,7 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     let mut ok = 0;
     for rx in rxs.into_iter().flatten() {
         let resp = rx.recv()?;
-        anyhow::ensure!(
+        bitonic_tpu::ensure!(
             bitonic_tpu::sort::is_sorted(&resp.keys),
             "unsorted response"
         );
@@ -167,7 +172,7 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table1(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_table1(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let verbose = args.flag("verbose");
     let cal = calibrate_from_table1();
     let mut table = Table::new(vec![
@@ -224,7 +229,7 @@ fn cmd_table1(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate() -> anyhow::Result<()> {
+fn cmd_simulate() -> bitonic_tpu::Result<()> {
     let cal = calibrate_from_table1();
     println!(
         "calibrated: t_launch={:.2}µs bw_eff={:.0} GB/s (fit on Basic @256K,16M)",
@@ -249,7 +254,7 @@ fn cmd_simulate() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 8)?;
     let net = Network::new(n);
     println!(
@@ -277,11 +282,11 @@ fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
     let dist = Distribution::parse(&args.get_or("dist", "uniform"))
-        .ok_or_else(|| anyhow::anyhow!("unknown distribution"))?;
+        .ok_or_else(|| bitonic_tpu::err!("unknown distribution"))?;
     let path = args
         .positionals()
         .first()
@@ -293,7 +298,7 @@ fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_analyze(args: &bitonic_tpu::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_analyze(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let net = Network::new(n.next_power_of_two());
     let block = 4096;

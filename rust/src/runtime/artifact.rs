@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context};
+use crate::util::error::Context;
 
 use crate::sort::network::Variant;
 
@@ -22,12 +22,12 @@ pub enum Dtype {
 
 impl Dtype {
     /// Parse the jnp dtype name used in the manifest.
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "uint32" => Dtype::U32,
             "int32" => Dtype::I32,
             "float32" => Dtype::F32,
-            other => bail!("unsupported dtype in manifest: {other}"),
+            other => crate::bail!("unsupported dtype in manifest: {other}"),
         })
     }
 
@@ -58,11 +58,11 @@ pub enum ArtifactKind {
 
 impl ArtifactKind {
     /// Parse the manifest name.
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "sort" => ArtifactKind::Sort,
             "merge" => ArtifactKind::Merge,
-            other => bail!("unknown artifact kind {other:?}"),
+            other => crate::bail!("unknown artifact kind {other:?}"),
         })
     }
 }
@@ -103,23 +103,23 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.tsv`.
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+            .with_context(|| format!("reading {path:?} — generate artifacts with `python -m compile.aot` (see README)"))?;
         Self::parse(dir, &text)
     }
 
     /// Parse manifest text (exposed for tests).
-    pub fn parse(dir: PathBuf, text: &str) -> anyhow::Result<Self> {
+    pub fn parse(dir: PathBuf, text: &str) -> crate::Result<Self> {
         let mut lines = text.lines();
         let header: Vec<&str> = lines
             .next()
             .context("empty manifest")?
             .split('\t')
             .collect();
-        let idx = |col: &str| -> anyhow::Result<usize> {
+        let idx = |col: &str| -> crate::Result<usize> {
             header
                 .iter()
                 .position(|h| *h == col)
@@ -143,7 +143,7 @@ impl Manifest {
                 continue;
             }
             let f: Vec<&str> = line.split('\t').collect();
-            let get = |i: usize| -> anyhow::Result<&str> {
+            let get = |i: usize| -> crate::Result<&str> {
                 f.get(i)
                     .copied()
                     .with_context(|| format!("manifest line {}: missing field {i}", lineno + 2))
@@ -164,7 +164,7 @@ impl Manifest {
             });
         }
         if entries.is_empty() {
-            bail!("manifest has no artifacts");
+            crate::bail!("manifest has no artifacts");
         }
         Ok(Self { dir, entries })
     }

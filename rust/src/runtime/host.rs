@@ -1,16 +1,17 @@
-//! Device-host thread: the single owner of all PJRT objects.
+//! Device-host thread: the single owner of the execution backend.
 //!
-//! The `xla` crate's client/executable wrappers are deliberately
-//! `!Send`/`!Sync` (`Rc` + raw PJRT pointers), so the runtime follows the
+//! In the PJRT design the client/executable wrappers are `!Send`/`!Sync`
+//! (`Rc` + raw PJRT pointers), so the runtime follows the
 //! single-device-owner model: one OS thread owns the [`Registry`] and
-//! serves execution requests over a channel. This also matches the
-//! hardware reality — there is one accelerator, and executions on it
-//! serialise anyway. Handles are cheap to clone and freely shared across
-//! the coordinator's worker threads.
+//! serves execution requests over a channel. The native-CPU executor has
+//! no such constraint, but the model is kept — it matches the hardware
+//! reality a real accelerator imposes (one device, executions serialise),
+//! and it keeps the swap back to PJRT local to the executor. Handles are
+//! cheap to clone and freely shared across the coordinator's workers.
 
 use std::sync::mpsc::{channel, Sender};
 
-use anyhow::Context;
+use crate::util::error::Context;
 
 use super::artifact::Manifest;
 use super::registry::{Key, Registry};
@@ -20,21 +21,21 @@ enum Request {
     SortU32 {
         key: Key,
         rows: Vec<u32>,
-        reply: Sender<anyhow::Result<Vec<u32>>>,
+        reply: Sender<crate::Result<Vec<u32>>>,
     },
     SortI32 {
         key: Key,
         rows: Vec<i32>,
-        reply: Sender<anyhow::Result<Vec<i32>>>,
+        reply: Sender<crate::Result<Vec<i32>>>,
     },
     SortF32 {
         key: Key,
         rows: Vec<f32>,
-        reply: Sender<anyhow::Result<Vec<f32>>>,
+        reply: Sender<crate::Result<Vec<f32>>>,
     },
     WarmUp {
         variant: Variant,
-        reply: Sender<anyhow::Result<usize>>,
+        reply: Sender<crate::Result<usize>>,
     },
     CompiledCount {
         reply: Sender<usize>,
@@ -54,38 +55,38 @@ macro_rules! roundtrip {
         $self
             .tx
             .send(Request::$variant { $($field: $value,)* reply })
-            .map_err(|_| anyhow::anyhow!("device host is gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("device host dropped reply"))?
+            .map_err(|_| crate::err!("device host is gone"))?;
+        rx.recv().map_err(|_| crate::err!("device host dropped reply"))?
     }};
 }
 
 impl DeviceHandle {
     /// Sort a `(batch, n)` u32 buffer with the artifact `key`.
-    pub fn sort_u32(&self, key: Key, rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+    pub fn sort_u32(&self, key: Key, rows: Vec<u32>) -> crate::Result<Vec<u32>> {
         roundtrip!(self, SortU32 { key: key, rows: rows })
     }
 
     /// Sort a `(batch, n)` i32 buffer.
-    pub fn sort_i32(&self, key: Key, rows: Vec<i32>) -> anyhow::Result<Vec<i32>> {
+    pub fn sort_i32(&self, key: Key, rows: Vec<i32>) -> crate::Result<Vec<i32>> {
         roundtrip!(self, SortI32 { key: key, rows: rows })
     }
 
     /// Sort a `(batch, n)` f32 buffer (finite keys).
-    pub fn sort_f32(&self, key: Key, rows: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+    pub fn sort_f32(&self, key: Key, rows: Vec<f32>) -> crate::Result<Vec<f32>> {
         roundtrip!(self, SortF32 { key: key, rows: rows })
     }
 
     /// Compile every artifact of `variant` ahead of traffic.
-    pub fn warm_up(&self, variant: Variant) -> anyhow::Result<usize> {
+    pub fn warm_up(&self, variant: Variant) -> crate::Result<usize> {
         roundtrip!(self, WarmUp { variant: variant })
     }
 
     /// Number of compiled executables cached on the host.
-    pub fn compiled_count(&self) -> anyhow::Result<usize> {
+    pub fn compiled_count(&self) -> crate::Result<usize> {
         let (reply, rx) = channel();
         self.tx
             .send(Request::CompiledCount { reply })
-            .map_err(|_| anyhow::anyhow!("device host is gone"))?;
+            .map_err(|_| crate::err!("device host is gone"))?;
         rx.recv().context("device host dropped reply")
     }
 
@@ -99,13 +100,13 @@ impl DeviceHandle {
 ///
 /// Returns the handle plus a *snapshot* of the manifest (plain data, so
 /// callers can route/plan without round-tripping to the host).
-pub fn spawn(dir: impl AsRef<std::path::Path>) -> anyhow::Result<(DeviceHandle, Manifest)> {
+pub fn spawn(dir: impl AsRef<std::path::Path>) -> crate::Result<(DeviceHandle, Manifest)> {
     let dir = dir.as_ref().to_path_buf();
     // Parse the manifest on the caller thread first: fail fast, and give
     // the caller its snapshot without a channel round-trip.
     let manifest = Manifest::load(&dir)?;
     let (tx, rx) = channel::<Request>();
-    let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+    let (ready_tx, ready_rx) = channel::<crate::Result<()>>();
     std::thread::Builder::new()
         .name("pjrt-device-host".into())
         .spawn(move || {
@@ -122,15 +123,15 @@ pub fn spawn(dir: impl AsRef<std::path::Path>) -> anyhow::Result<(DeviceHandle, 
             while let Ok(req) = rx.recv() {
                 match req {
                     Request::SortU32 { key, rows, reply } => {
-                        let res = registry.get(key).and_then(|exe| exe.sort_u32(&rows));
+                        let res = registry.get(key).and_then(|exe| exe.sort_u32(rows));
                         let _ = reply.send(res);
                     }
                     Request::SortI32 { key, rows, reply } => {
-                        let res = registry.get(key).and_then(|exe| exe.sort_i32(&rows));
+                        let res = registry.get(key).and_then(|exe| exe.sort_i32(rows));
                         let _ = reply.send(res);
                     }
                     Request::SortF32 { key, rows, reply } => {
-                        let res = registry.get(key).and_then(|exe| exe.sort_f32(&rows));
+                        let res = registry.get(key).and_then(|exe| exe.sort_f32(rows));
                         let _ = reply.send(res);
                     }
                     Request::WarmUp { variant, reply } => {

@@ -1,19 +1,21 @@
-//! PJRT runtime: loads the AOT artifacts produced by
+//! Artifact runtime: loads the AOT artifacts produced by
 //! `python/compile/aot.py` and executes them on the request path.
 //!
-//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! Flow:
 //!
 //! ```text
 //! artifacts/manifest.tsv ──> Registry (metadata)
-//! artifacts/<name>.hlo.txt ─ HloModuleProto::from_text_file
-//!                          ─ XlaComputation::from_proto
-//!                          ─ PjRtClient::cpu().compile()   (once, cached)
-//!                          ─ executable.execute(&[literal]) (hot path)
+//! artifacts/<name>.hlo.txt ─ SortExecutor::compile (load + validate, once, cached)
+//!                          ─ executor.sort_*()      (hot path)
 //! ```
 //!
 //! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see DESIGN.md and the aot.py docstring).
+//! 64-bit instruction ids that older PJRT bindings reject; the text
+//! parser reassigns ids (see DESIGN.md and the aot.py docstring). The
+//! execution backend is currently a deterministic native-CPU engine (see
+//! [`executor`]) because the `xla` PJRT bindings are not vendored in this
+//! offline environment; the module boundary is unchanged, so swapping
+//! PJRT back in touches only `executor.rs`.
 //!
 //! Python never runs here — the artifacts directory is the entire
 //! build-time/run-time interface.
@@ -27,3 +29,19 @@ pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
 pub use executor::SortExecutor;
 pub use host::{spawn as spawn_device_host, DeviceHandle};
 pub use registry::{Key, Registry};
+
+/// Resolve the artifacts directory used by drivers that do not take an
+/// explicit path: `$ARTIFACTS_DIR` if set, else `./artifacts` (a local
+/// `compile.aot` run), else the checked-in `rust/artifacts/` fixture
+/// next to this crate (resolved at compile time, so it works from any
+/// working directory on the build machine).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ARTIFACTS_DIR") {
+        return std::path::PathBuf::from(dir);
+    }
+    let local = std::path::PathBuf::from("artifacts");
+    if local.join("manifest.tsv").exists() {
+        return local;
+    }
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}

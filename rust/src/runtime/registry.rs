@@ -1,14 +1,16 @@
-//! Artifact registry: one PJRT client + lazily compiled executables.
+//! Artifact registry: lazily loaded executors, cached per artifact.
 //!
-//! XLA compilation of one sort artifact takes seconds, so executables are
-//! compiled on first use and cached for the life of the process. The
-//! registry is `Sync`: the service's worker threads share it behind an
-//! `Arc`.
+//! In the PJRT design, XLA compilation of one sort artifact takes
+//! seconds, so executables are compiled on first use and cached for the
+//! life of the process; the native-CPU executor keeps the same
+//! load-once/cache discipline (HLO validation is cheap, but the cache is
+//! the warm-up contract the service relies on). The registry is `Sync`:
+//! the service's worker threads share it behind an `Arc`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::Context;
+use crate::util::error::Context;
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
 use super::executor::SortExecutor;
@@ -45,21 +47,18 @@ impl Key {
     }
 }
 
-/// The registry. Cheap to clone (`Arc` inside).
+/// The registry: manifest plus the per-artifact executor cache.
 pub struct Registry {
     manifest: Manifest,
-    client: xla::PjRtClient,
     cache: Mutex<HashMap<Key, Arc<SortExecutor>>>,
 }
 
 impl Registry {
     /// Open the artifacts directory (must contain `manifest.tsv`).
-    pub fn open(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+    pub fn open(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Self {
             manifest,
-            client,
             cache: Mutex::new(HashMap::new()),
         })
     }
@@ -69,28 +68,28 @@ impl Registry {
         &self.manifest
     }
 
-    /// Fetch (compiling on first use) the executable for `key`.
-    pub fn get(&self, key: Key) -> anyhow::Result<Arc<SortExecutor>> {
+    /// Fetch (loading on first use) the executor for `key`.
+    pub fn get(&self, key: Key) -> crate::Result<Arc<SortExecutor>> {
         if let Some(e) = self.cache.lock().unwrap().get(&key) {
             return Ok(Arc::clone(e));
         }
-        // Compile outside the lock: first-touch latency must not serialise
-        // unrelated size classes. A racing double-compile is benign.
+        // Load outside the lock: first-touch latency must not serialise
+        // unrelated size classes. A racing double-load is benign.
         let meta = self
             .manifest
             .entries
             .iter()
             .find(|a| Key::of(a) == key)
-            .with_context(|| format!("no artifact for {key:?} — re-run `make artifacts`"))?
+            .with_context(|| format!("no artifact for {key:?} — re-run `python -m compile.aot`"))?
             .clone();
         let path = self.manifest.path_of(&meta);
-        let exe = Arc::new(SortExecutor::compile(&self.client, meta, &path)?);
+        let exe = Arc::new(SortExecutor::compile(meta, &path)?);
         let mut cache = self.cache.lock().unwrap();
         Ok(Arc::clone(cache.entry(key).or_insert(exe)))
     }
 
-    /// Eagerly compile every artifact of `variant` (service warm-up).
-    pub fn warm_up(&self, variant: Variant) -> anyhow::Result<usize> {
+    /// Eagerly load every artifact of `variant` (service warm-up).
+    pub fn warm_up(&self, variant: Variant) -> crate::Result<usize> {
         let keys: Vec<Key> = self
             .manifest
             .size_classes(variant)
@@ -143,6 +142,6 @@ mod tests {
             Err(e) => e,
             Ok(_) => panic!("open of missing dir must fail"),
         };
-        assert!(format!("{err:#}").contains("make artifacts"));
+        assert!(format!("{err:#}").contains("compile.aot"));
     }
 }

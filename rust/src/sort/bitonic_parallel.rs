@@ -91,6 +91,20 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
     assert_eq!(panics.load(Ordering::SeqCst), 0, "worker thread panicked");
 }
 
+/// Sort any-length input in parallel by padding to the next power of two
+/// with `T::MAX_KEY`, sorting, and truncating — the parallel analogue of
+/// [`crate::sort::bitonic_sort_padded`], and the safe entry point for
+/// non-power-of-two lengths (the unpadded function asserts on them).
+pub fn bitonic_sort_parallel_padded<T: SortKey>(xs: &mut Vec<T>, threads: usize) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    xs.resize(n.next_power_of_two(), T::MAX_KEY);
+    bitonic_sort_parallel(xs, threads);
+    xs.truncate(n);
+}
+
 /// Compare-exchange pairs whose *both* indices lie in [lo, hi) — valid
 /// when `stride < hi - lo` and `lo` is stride-group aligned.
 fn step_range<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usize) {

@@ -20,7 +20,7 @@
 //! The result is exact (`quicksort` oracle in tests) for any input
 //! length, not just powers of two.
 
-use anyhow::Context;
+use crate::util::error::Context;
 
 use crate::runtime::registry::Key;
 use crate::runtime::{ArtifactMeta, DeviceHandle, Manifest};
@@ -55,7 +55,7 @@ impl HybridSorter {
         handle: DeviceHandle,
         manifest: &Manifest,
         variant: Variant,
-    ) -> anyhow::Result<Self> {
+    ) -> crate::Result<Self> {
         let chunk = manifest
             .size_classes(variant)
             .into_iter()
@@ -73,7 +73,7 @@ impl HybridSorter {
         manifest: &Manifest,
         variant: Variant,
         chunk: usize,
-    ) -> anyhow::Result<Self> {
+    ) -> crate::Result<Self> {
         let sort_meta = manifest
             .size_classes(variant)
             .into_iter()
@@ -96,7 +96,7 @@ impl HybridSorter {
     }
 
     /// Sort `keys` ascending, any length. Returns execution statistics.
-    pub fn sort(&self, keys: &mut Vec<u32>) -> anyhow::Result<HybridStats> {
+    pub fn sort(&self, keys: &mut Vec<u32>) -> crate::Result<HybridStats> {
         let real_len = keys.len();
         let mut stats = HybridStats {
             chunk: self.chunk(),

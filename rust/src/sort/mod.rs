@@ -24,7 +24,7 @@ pub mod radix;
 pub mod verify;
 
 pub use bitonic::{bitonic_sort, bitonic_sort_desc, bitonic_sort_padded};
-pub use bitonic_parallel::bitonic_sort_parallel;
+pub use bitonic_parallel::{bitonic_sort_parallel, bitonic_sort_parallel_padded};
 pub use heapsort::heapsort;
 pub use hybrid::{HybridSorter, HybridStats};
 pub use mergesort::mergesort;
@@ -101,6 +101,55 @@ impl SortKey for f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Regression tests for the classic edge cases across every substrate:
+    /// empty input, a single element, all-equal keys, and non-power-of-two
+    /// lengths (via the padded entry points for the bitonic sorts, which
+    /// require power-of-two shapes directly).
+    #[test]
+    fn edge_cases_every_substrate() {
+        type SortFn = fn(&mut Vec<u32>);
+        let sorts: Vec<(&str, SortFn)> = vec![
+            ("quicksort", |v| quicksort(v)),
+            ("heapsort", |v| heapsort(v)),
+            ("mergesort", |v| mergesort(v)),
+            ("oddeven", |v| oddeven_sort(v)),
+            ("radix", |v| radix_sort_u32(v)),
+            ("bitonic_padded", |v| bitonic_sort_padded(v)),
+            ("bitonic_parallel_padded", |v| bitonic_sort_parallel_padded(v, 4)),
+        ];
+        let cases: Vec<(&str, Vec<u32>)> = vec![
+            ("empty", vec![]),
+            ("single", vec![7]),
+            ("two", vec![9, 3]),
+            ("all-equal", vec![5; 37]),
+            ("non-pow2", vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5]),
+            (
+                "non-pow2-with-max",
+                vec![u32::MAX, 0, u32::MAX, 42, 7, u32::MAX, 1],
+            ),
+        ];
+        for (sname, sort) in &sorts {
+            for (cname, case) in &cases {
+                let mut v = case.clone();
+                sort(&mut v);
+                let mut want = case.clone();
+                want.sort_unstable();
+                assert_eq!(v, want, "{sname} on {cname}");
+            }
+        }
+    }
+
+    /// The padded parallel entry must also survive degenerate thread
+    /// counts (0 and more threads than elements).
+    #[test]
+    fn parallel_padded_degenerate_threads() {
+        for threads in [0usize, 1, 64] {
+            let mut v = vec![5u32, 2, 8, 1, 9];
+            bitonic_sort_parallel_padded(&mut v, threads);
+            assert_eq!(v, vec![1, 2, 5, 8, 9], "threads={threads}");
+        }
+    }
 
     #[test]
     fn key_min_max_ints() {

@@ -41,7 +41,7 @@ impl Args {
     }
 
     /// Typed option value (parse error is reported with the key name).
-    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> crate::Result<Option<T>>
     where
         T::Err: std::fmt::Display,
     {
@@ -50,12 +50,12 @@ impl Args {
             Some(s) => s
                 .parse::<T>()
                 .map(Some)
-                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+                .map_err(|e| crate::err!("--{key} {s:?}: {e}")),
         }
     }
 
     /// Typed option with default.
-    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
     where
         T::Err: std::fmt::Display,
     {
@@ -156,7 +156,7 @@ impl Parser {
     }
 
     /// Parse a raw argument vector (without argv[0]).
-    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+    pub fn parse(&self, argv: &[String]) -> crate::Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
 
@@ -165,7 +165,7 @@ impl Parser {
                 Some(first) if !first.starts_with('-') => {
                     let name = it.next().unwrap();
                     if !self.commands.iter().any(|(c, _)| c == name) {
-                        anyhow::bail!("unknown command {name:?}\n\n{}", self.usage());
+                        crate::bail!("unknown command {name:?}\n\n{}", self.usage());
                     }
                     args.command = Some(name.clone());
                 }
@@ -175,7 +175,7 @@ impl Parser {
 
         while let Some(tok) = it.next() {
             if tok == "--help" || tok == "-h" {
-                anyhow::bail!("{}", self.usage());
+                crate::bail!("{}", self.usage());
             }
             if let Some(body) = tok.strip_prefix("--") {
                 let (key, inline_val) = match body.split_once('=') {
@@ -186,10 +186,10 @@ impl Parser {
                     .opts
                     .iter()
                     .find(|o| o.name == key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                    .ok_or_else(|| crate::err!("unknown option --{key}\n\n{}", self.usage()))?;
                 if spec.is_flag {
                     if inline_val.is_some() {
-                        anyhow::bail!("flag --{key} takes no value");
+                        crate::bail!("flag --{key} takes no value");
                     }
                     args.flags.push(key.to_string());
                 } else {
@@ -197,7 +197,7 @@ impl Parser {
                         Some(v) => v,
                         None => it
                             .next()
-                            .ok_or_else(|| anyhow::anyhow!("option --{key} needs a value"))?
+                            .ok_or_else(|| crate::err!("option --{key} needs a value"))?
                             .clone(),
                     };
                     args.values.insert(key.to_string(), val);
@@ -217,7 +217,7 @@ impl Parser {
     }
 
     /// Parse `std::env::args()`.
-    pub fn parse_env(&self) -> anyhow::Result<Args> {
+    pub fn parse_env(&self) -> crate::Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         self.parse(&argv)
     }

@@ -1,0 +1,265 @@
+//! In-crate error subsystem — the offline stand-in for the `anyhow` crate.
+//!
+//! The seed design used `anyhow` for its ergonomic dynamic errors, but the
+//! build must work with zero external dependencies, so this module
+//! re-implements exactly the API surface the crate uses:
+//!
+//! * [`Error`] — a dynamic error value: either a plain message, or a
+//!   wrapped `std::error::Error`, plus any number of context layers
+//!   (`anyhow::Error` analogue).
+//! * [`Result`] — `Result<T, Error>` alias (`anyhow::Result` analogue);
+//!   re-exported at the crate root as `crate::Result`.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option` (`anyhow::Context` analogue).
+//! * `err!` / `bail!` / `ensure!` — macros at the crate root
+//!   (`anyhow::anyhow!` / `bail!` / `ensure!` analogues).
+//!
+//! Display behaviour matches what the call sites rely on: `{}` prints the
+//! outermost message only; the alternate form `{:#}` prints the whole
+//! chain outermost→innermost joined by `": "`, so tests can assert on
+//! context text added deep in the stack.
+
+use std::fmt;
+
+/// Crate-wide result type (also exported as `crate::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root cause plus zero or more context layers.
+pub struct Error {
+    /// Context messages, innermost first (push order).
+    context: Vec<String>,
+    /// The root cause.
+    root: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// Root cause for errors built from a plain message (`err!`, `bail!`).
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Self {
+            context: Vec::new(),
+            root: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Wrap this error in one more layer of context (outermost).
+    pub fn context(mut self, message: impl fmt::Display) -> Self {
+        self.context.push(message.to_string());
+        self
+    }
+
+    /// The whole message chain, outermost first: context layers in
+    /// reverse push order, then the root cause, then the root's own
+    /// `std::error::Error::source` chain.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.context.iter().rev().cloned().collect();
+        out.push(self.root.to_string());
+        let mut source = self.root.source();
+        while let Some(s) = source {
+            out.push(s.to_string());
+            source = s.source();
+        }
+        out
+    }
+
+    /// The root cause (innermost error).
+    pub fn root_cause(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        self.root.as_ref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, anyhow-style.
+            return f.write_str(&self.chain().join(": "));
+        }
+        match self.context.last() {
+            Some(outer) => f.write_str(outer),
+            None => write!(f, "{}", self.root),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `main() -> Result<()>` prints errors via Debug: outermost
+        // message first, then the cause chain.
+        let chain = self.chain();
+        f.write_str(&chain[0])?;
+        if chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into `Error` (this is what makes `?` work on
+// io/parse/channel errors). `Error` deliberately does NOT implement
+// `std::error::Error` itself — exactly like `anyhow::Error` — so this
+// blanket impl does not collide with the identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self {
+            context: Vec::new(),
+            root: Box::new(e),
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`]
+    /// (on `Option`, `None` becomes an error with this message).
+    fn context<C: fmt::Display>(self, message: C) -> Result<T>;
+    /// Like [`Context::context`], but the message is built lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, message: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(message))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, message: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow::anyhow!`
+/// analogue). Exported at the crate root: `crate::err!(..)`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_missing() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn message_error_displays() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let n = 7;
+        let e: Error = crate::err!("bad value {n} ({})", "ctx");
+        assert_eq!(format!("{e}"), "bad value 7 (ctx)");
+    }
+
+    #[test]
+    fn context_layers_chain() {
+        let e = Error::from(io_missing())
+            .context("reading manifest")
+            .context("opening artifacts");
+        // `{}` = outermost only.
+        assert_eq!(format!("{e}"), "opening artifacts");
+        // `{:#}` = whole chain, outermost first.
+        assert_eq!(
+            format!("{e:#}"),
+            "opening artifacts: reading manifest: no such file"
+        );
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_missing());
+        let e = r.context("loading").unwrap_err();
+        assert_eq!(format!("{e:#}"), "loading: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "column")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing column");
+
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::from(io_missing()).context("reading manifest.tsv");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("reading manifest.tsv"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("no such file"), "{dbg}");
+    }
+
+    #[test]
+    fn root_cause_exposed() {
+        let e = Error::from(io_missing()).context("outer");
+        assert_eq!(e.root_cause().to_string(), "no such file");
+    }
+}

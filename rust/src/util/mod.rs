@@ -1,11 +1,12 @@
 //! Self-contained utility substrates.
 //!
-//! The build is fully offline (only the `xla` crate's vendored dependency
-//! closure is available), so the pieces a project would normally pull from
-//! crates.io — CLI parsing, a thread pool, metrics, property testing,
-//! table formatting — are implemented here from scratch. See DESIGN.md §3.
+//! The build is fully offline with zero external dependencies, so the
+//! pieces a project would normally pull from crates.io — error handling,
+//! CLI parsing, a thread pool, metrics, property testing, table
+//! formatting — are implemented here from scratch. See DESIGN.md §3.
 
 pub mod cli;
+pub mod error;
 pub mod metrics;
 pub mod prop;
 pub mod table;

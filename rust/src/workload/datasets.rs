@@ -9,7 +9,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context};
+use crate::util::error::Context;
 
 const MAGIC: &[u8; 4] = b"BTSD";
 const VERSION: u32 = 1;
@@ -26,12 +26,12 @@ pub enum DataTag {
 }
 
 impl DataTag {
-    fn from_u32(v: u32) -> anyhow::Result<Self> {
+    fn from_u32(v: u32) -> crate::Result<Self> {
         Ok(match v {
             1 => DataTag::U32,
             2 => DataTag::U64,
             3 => DataTag::F32,
-            other => bail!("unknown dtype tag {other}"),
+            other => crate::bail!("unknown dtype tag {other}"),
         })
     }
 }
@@ -46,21 +46,21 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 }
 
 /// Write `keys` to `path` in the dataset format.
-pub fn save_u32(path: impl AsRef<Path>, keys: &[u32]) -> anyhow::Result<()> {
+pub fn save_u32(path: impl AsRef<Path>, keys: &[u32]) -> crate::Result<()> {
     save_raw(path, DataTag::U32, keys.len(), bytes_of(keys))
 }
 
 /// Write u64 keys.
-pub fn save_u64(path: impl AsRef<Path>, keys: &[u64]) -> anyhow::Result<()> {
+pub fn save_u64(path: impl AsRef<Path>, keys: &[u64]) -> crate::Result<()> {
     save_raw(path, DataTag::U64, keys.len(), bytes_of(keys))
 }
 
 /// Write f32 keys.
-pub fn save_f32(path: impl AsRef<Path>, keys: &[f32]) -> anyhow::Result<()> {
+pub fn save_f32(path: impl AsRef<Path>, keys: &[f32]) -> crate::Result<()> {
     save_raw(path, DataTag::F32, keys.len(), bytes_of(keys))
 }
 
-fn save_raw(path: impl AsRef<Path>, tag: DataTag, count: usize, payload: &[u8]) -> anyhow::Result<()> {
+fn save_raw(path: impl AsRef<Path>, tag: DataTag, count: usize, payload: &[u8]) -> crate::Result<()> {
     let mut f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
     f.write_all(MAGIC)?;
@@ -73,43 +73,43 @@ fn save_raw(path: impl AsRef<Path>, tag: DataTag, count: usize, payload: &[u8]) 
 }
 
 /// Read a u32 dataset back.
-pub fn load_u32(path: impl AsRef<Path>) -> anyhow::Result<Vec<u32>> {
+pub fn load_u32(path: impl AsRef<Path>) -> crate::Result<Vec<u32>> {
     let (tag, payload) = load_raw(path)?;
     if tag != DataTag::U32 {
-        bail!("dataset holds {tag:?}, not u32");
+        crate::bail!("dataset holds {tag:?}, not u32");
     }
     Ok(from_bytes(&payload))
 }
 
 /// Read a u64 dataset back.
-pub fn load_u64(path: impl AsRef<Path>) -> anyhow::Result<Vec<u64>> {
+pub fn load_u64(path: impl AsRef<Path>) -> crate::Result<Vec<u64>> {
     let (tag, payload) = load_raw(path)?;
     if tag != DataTag::U64 {
-        bail!("dataset holds {tag:?}, not u64");
+        crate::bail!("dataset holds {tag:?}, not u64");
     }
     Ok(from_bytes(&payload))
 }
 
 /// Read an f32 dataset back.
-pub fn load_f32(path: impl AsRef<Path>) -> anyhow::Result<Vec<f32>> {
+pub fn load_f32(path: impl AsRef<Path>) -> crate::Result<Vec<f32>> {
     let (tag, payload) = load_raw(path)?;
     if tag != DataTag::F32 {
-        bail!("dataset holds {tag:?}, not f32");
+        crate::bail!("dataset holds {tag:?}, not f32");
     }
     Ok(from_bytes(&payload))
 }
 
-fn load_raw(path: impl AsRef<Path>) -> anyhow::Result<(DataTag, Vec<u8>)> {
+fn load_raw(path: impl AsRef<Path>) -> crate::Result<(DataTag, Vec<u8>)> {
     let mut f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?;
     let mut header = [0u8; 20];
     f.read_exact(&mut header).context("dataset header truncated")?;
     if &header[0..4] != MAGIC {
-        bail!("not a BTSD dataset");
+        crate::bail!("not a BTSD dataset");
     }
     let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
     if version != VERSION {
-        bail!("unsupported dataset version {version}");
+        crate::bail!("unsupported dataset version {version}");
     }
     let tag = DataTag::from_u32(u32::from_le_bytes(header[8..12].try_into().unwrap()))?;
     let count = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
@@ -122,7 +122,7 @@ fn load_raw(path: impl AsRef<Path>) -> anyhow::Result<(DataTag, Vec<u8>)> {
     let mut check = [0u8; 8];
     f.read_exact(&mut check).context("dataset checksum missing")?;
     if u64::from_le_bytes(check) != fnv1a(&payload) {
-        bail!("dataset checksum mismatch (corrupt or truncated)");
+        crate::bail!("dataset checksum mismatch (corrupt or truncated)");
     }
     Ok((tag, payload))
 }

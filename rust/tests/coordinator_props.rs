@@ -21,7 +21,7 @@ impl BatchSorter for Mock {
     fn shape(&self) -> (usize, usize) {
         (self.batch, self.n)
     }
-    fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
+    fn sort_rows(&self, mut rows: Vec<u32>) -> bitonic_tpu::Result<Vec<u32>> {
         for r in rows.chunks_mut(self.n) {
             bitonic_sort(r);
         }
@@ -214,8 +214,8 @@ fn batches_never_mix_size_classes() {
         fn shape(&self) -> (usize, usize) {
             (self.batch, self.n)
         }
-        fn sort_rows(&self, mut rows: Vec<u32>) -> anyhow::Result<Vec<u32>> {
-            anyhow::ensure!(
+        fn sort_rows(&self, mut rows: Vec<u32>) -> bitonic_tpu::Result<Vec<u32>> {
+            bitonic_tpu::ensure!(
                 rows.len() == self.batch * self.n,
                 "batch shape violated: {} != {}x{}",
                 rows.len(),

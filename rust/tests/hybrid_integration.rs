@@ -1,18 +1,17 @@
 //! Integration tests of the out-of-core hybrid sorter over the real
-//! artifacts (skipped with a message when `make artifacts` hasn't run).
+//! artifacts (skipped with a message when no artifacts directory exists).
 
 use bitonic_tpu::runtime::spawn_device_host;
 use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::sort::{is_sorted, quicksort, same_multiset, HybridSorter};
 use bitonic_tpu::workload::{Distribution, Generator};
 
-fn artifacts_dir() -> Option<String> {
-    let dir = std::env::var("ARTIFACTS_DIR")
-        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
         Some(dir)
     } else {
-        eprintln!("SKIP: no artifacts at {dir} — run `make artifacts`");
+        eprintln!("SKIP: no artifacts at {dir:?} — run `python -m compile.aot`");
         None
     }
 }

@@ -1,23 +1,21 @@
 //! Integration tests over the real artifacts: the PJRT path must agree
 //! bit-for-bit with the CPU substrates.
 //!
-//! These tests require `make artifacts` to have been run; they are skipped
-//! (with a loud message) when the artifacts directory is absent so `cargo
-//! test` stays usable in a fresh checkout.
+//! These tests run over the checked-in `rust/artifacts/` fixture (or a
+//! real `python -m compile.aot` export); they are skipped with a loud
+//! message when no artifacts directory is found at all.
 
 use bitonic_tpu::runtime::{spawn_device_host, Dtype, Key};
 use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::sort::{is_sorted, quicksort, same_multiset};
 use bitonic_tpu::workload::{Distribution, Generator};
 
-fn artifacts_dir() -> Option<String> {
-    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| {
-        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
-    });
-    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
         Some(dir)
     } else {
-        eprintln!("SKIP: no artifacts at {dir} — run `make artifacts`");
+        eprintln!("SKIP: no artifacts at {dir:?} — run `python -m compile.aot`");
         None
     }
 }

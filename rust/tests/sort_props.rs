@@ -1,0 +1,161 @@
+//! Property-based tests of the CPU sort substrates (ISSUE 1 satellite):
+//! every sort in `sort/` must agree with `slice::sort_unstable` (or
+//! `sort_by(total_cmp)` for floats) on u32/u64/f32 inputs across random,
+//! sorted, reversed, and duplicate-heavy distributions, using the in-repo
+//! `util::prop` framework.
+
+use bitonic_tpu::sort::{
+    bitonic_sort_padded, bitonic_sort_parallel_padded, heapsort, mergesort, oddeven_sort,
+    quicksort, radix_sort_u32,
+};
+use bitonic_tpu::sort::radix::radix_sort_u64;
+use bitonic_tpu::util::prop::{check_with, Config, Strategy};
+use bitonic_tpu::workload::rng::Pcg32;
+use bitonic_tpu::workload::{Distribution, Generator};
+
+/// A generated workload: a distribution shape, a length (including 0 and
+/// non-powers-of-two), and a seed for the deterministic generator.
+#[derive(Clone, Debug)]
+struct Workload {
+    dist: Distribution,
+    len: usize,
+    seed: u64,
+}
+
+struct WorkloadStrategy {
+    max_len: usize,
+}
+
+const DISTS: [Distribution; 4] = [
+    Distribution::Uniform,
+    Distribution::Sorted,
+    Distribution::Reverse,
+    Distribution::DupHeavy,
+];
+
+impl Strategy for WorkloadStrategy {
+    type Value = Workload;
+    fn sample(&self, rng: &mut Pcg32) -> Workload {
+        Workload {
+            dist: DISTS[rng.next_below(DISTS.len() as u32) as usize],
+            len: rng.next_below(self.max_len as u32 + 1) as usize,
+            seed: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &Workload) -> Vec<Workload> {
+        let mut out = Vec::new();
+        if v.len > 0 {
+            out.push(Workload { len: 0, ..v.clone() });
+            out.push(Workload {
+                len: v.len / 2,
+                ..v.clone()
+            });
+            out.push(Workload {
+                len: v.len - 1,
+                ..v.clone()
+            });
+        }
+        out
+    }
+}
+
+fn config() -> Config {
+    Config {
+        cases: 48,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn u32_sorts_agree_with_std() {
+    type SortFn = fn(&mut Vec<u32>);
+    let sorts: Vec<(&str, SortFn)> = vec![
+        ("quicksort", |v| quicksort(v)),
+        ("heapsort", |v| heapsort(v)),
+        ("mergesort", |v| mergesort(v)),
+        ("oddeven", |v| oddeven_sort(v)),
+        ("radix_u32", |v| radix_sort_u32(v)),
+        ("bitonic_padded", |v| bitonic_sort_padded(v)),
+        ("bitonic_parallel_padded", |v| {
+            bitonic_sort_parallel_padded(v, 4)
+        }),
+    ];
+    check_with(config(), &WorkloadStrategy { max_len: 2048 }, |w| {
+        let keys = Generator::new(w.seed).u32s(w.len, w.dist);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        for (name, sort) in &sorts {
+            let mut got = keys.clone();
+            sort(&mut got);
+            if got != want {
+                return Err(format!(
+                    "{name} disagrees with sort_unstable on {:?} len={}",
+                    w.dist, w.len
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn u64_sorts_agree_with_std() {
+    type SortFn = fn(&mut Vec<u64>);
+    let sorts: Vec<(&str, SortFn)> = vec![
+        ("quicksort", |v| quicksort(v)),
+        ("heapsort", |v| heapsort(v)),
+        ("mergesort", |v| mergesort(v)),
+        ("radix_u64", |v| radix_sort_u64(v)),
+        ("bitonic_padded", |v| bitonic_sort_padded(v)),
+    ];
+    check_with(config(), &WorkloadStrategy { max_len: 1024 }, |w| {
+        let keys = Generator::new(w.seed).u64s(w.len, w.dist);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        for (name, sort) in &sorts {
+            let mut got = keys.clone();
+            sort(&mut got);
+            if got != want {
+                return Err(format!(
+                    "{name} disagrees with sort_unstable on {:?} len={}",
+                    w.dist, w.len
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_sorts_agree_with_total_cmp() {
+    type SortFn = fn(&mut Vec<f32>);
+    let sorts: Vec<(&str, SortFn)> = vec![
+        ("quicksort", |v| quicksort(v)),
+        ("heapsort", |v| heapsort(v)),
+        ("mergesort", |v| mergesort(v)),
+        ("bitonic_padded", |v| bitonic_sort_padded(v)),
+    ];
+    check_with(config(), &WorkloadStrategy { max_len: 1024 }, |w| {
+        let keys = Generator::new(w.seed).f32s(w.len, w.dist);
+        let mut want = keys.clone();
+        want.sort_by(f32::total_cmp);
+        for (name, sort) in &sorts {
+            let mut got = keys.clone();
+            sort(&mut got);
+            // Bitwise comparison: total order distinguishes -0.0 / 0.0,
+            // and the generator only emits finite values.
+            let same = got.len() == want.len()
+                && got
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            if !same {
+                return Err(format!(
+                    "{name} disagrees with sort_by(total_cmp) on {:?} len={}",
+                    w.dist, w.len
+                ));
+            }
+        }
+        Ok(())
+    });
+}

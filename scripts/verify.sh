@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + tests, plus a format check when rustfmt
+# is available (it is optional in the offline toolchain image).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== cargo fmt unavailable; skipping format check =="
+fi
+
+# Python suite (skips itself per-module when JAX/hypothesis are absent,
+# but needs numpy + pytest to collect at all).
+if python3 -c "import numpy, pytest" >/dev/null 2>&1; then
+    echo "== pytest python/tests =="
+    (cd python && python3 -m pytest tests -q)
+else
+    echo "== numpy/pytest unavailable; skipping python tests =="
+fi
+
+echo "verify: OK"
