@@ -1,6 +1,8 @@
 //! L3 coordinator benchmarks: batching benefit, coordinator overhead over
-//! a raw backend call, and shed behaviour under overload — the numbers the
-//! §Perf pass optimizes (DESIGN.md §7).
+//! a raw backend call, shed behaviour under overload, and the
+//! plan/execute split's row-parallel executor sweep — the numbers the
+//! §Perf pass optimizes (DESIGN.md §7, ROADMAP "parallelise the native
+//! executor" measurement ask).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -9,8 +11,11 @@ use bitonic_tpu::bench::Bench;
 use bitonic_tpu::coordinator::{
     BatchSorter, BatcherConfig, Service, ServiceConfig, SortRequest,
 };
+use bitonic_tpu::runtime::{default_artifacts_dir, Key, Registry};
 use bitonic_tpu::sort::bitonic_sort;
+use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::util::table::{fmt_ms, Table};
+use bitonic_tpu::util::threadpool::ThreadPool;
 use bitonic_tpu::workload::{Distribution, Generator};
 
 struct Mock {
@@ -66,6 +71,7 @@ fn main() {
             batcher: BatcherConfig {
                 max_wait: Duration::from_micros(50),
                 max_rows: 1,
+                ..BatcherConfig::default()
             },
             ..ServiceConfig::default()
         },
@@ -110,6 +116,7 @@ fn main() {
                 batcher: BatcherConfig {
                     max_wait: Duration::from_millis(1),
                     max_rows: b,
+                    ..BatcherConfig::default()
                 },
                 ..ServiceConfig::default()
             },
@@ -165,5 +172,61 @@ fn main() {
         fmt_ms(t0.elapsed().as_secs_f64() * 1e3),
         fmt_ms(svc.stats().latency.quantile_ns(0.99) as f64 / 1e6),
     );
-    println!("  (shed>0 and bounded queue ⇒ latency stays flat under overload)");
+    println!("  (shed>0 and bounded queue ⇒ latency stays flat under overload)\n");
+
+    // --- 4. plan/execute split: row-parallel executor, before/after ------
+    // The real artifact path over the checked-in fixture: a serial
+    // registry vs pooled registries at 2/4/8 threads, batch throughput in
+    // rows/sec. This is the ROADMAP measurement ask for "parallelise the
+    // native executor across rows".
+    println!("== row-parallel executor (fixture artifacts, rows/sec) ==");
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("  (no artifacts at {dir:?} — skipping executor sweep)");
+        return;
+    }
+    // Largest-batch artifact of the optimized variant (size_classes
+    // already filters to ascending-u32 sort entries), B≥8 in the fixture.
+    let probe = Registry::open(&dir).expect("open artifacts");
+    let meta = probe
+        .manifest()
+        .size_classes(Variant::Optimized)
+        .into_iter()
+        .max_by_key(|m| m.batch)
+        .expect("no optimized u32 sort artifact in fixture")
+        .clone();
+    let (b, n) = (meta.batch, meta.n);
+    println!("  artifact: {} (B={b}, N={n})", meta.name);
+    let mut t = Table::new(vec!["pool threads", "ms / batch", "rows/sec", "speedup"]);
+    let mut serial_ms = f64::NAN;
+    for threads in [1usize, 2, 4, 8] {
+        // threads=1 is the serial baseline: no pool at all.
+        let pool = if threads > 1 {
+            Some(Arc::new(ThreadPool::new(threads, 2 * threads)))
+        } else {
+            None
+        };
+        let registry = Registry::open_with_pool(&dir, pool).expect("open artifacts");
+        let exe = registry.get(Key::of(&meta)).expect("compile artifact");
+        let m = bench.run_with_setup(
+            &format!("threads={threads}"),
+            || gen.u32s(b * n, Distribution::Uniform),
+            |rows| {
+                let _ = exe.sort_u32(rows).unwrap();
+            },
+        );
+        let ms = m.median_ms();
+        if threads == 1 {
+            serial_ms = ms;
+        }
+        t.row(vec![
+            threads.to_string(),
+            fmt_ms(ms),
+            format!("{:.0}", b as f64 / (ms / 1e3)),
+            format!("{:.2}x", serial_ms / ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("→ the ExecutionPlan walk is identical; only the row dispatch changes —");
+    println!("  pool threads >1 must beat the serial baseline on B≥8 batches.");
 }

@@ -1,6 +1,8 @@
 //! Dynamic batching: accumulate same-class requests into a device batch,
-//! dispatching when the batch fills or the oldest request's deadline
-//! expires — the classic throughput/latency trade of serving systems.
+//! dispatching when the batch fills, the oldest request's max-wait
+//! expires, or a pending request's **SLO budget** is about to run out —
+//! the classic throughput/latency trade of serving systems, made
+//! deadline-aware.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -16,6 +18,10 @@ pub struct BatcherConfig {
     /// Dispatch as soon as this many rows are pending (usually the device
     /// batch B).
     pub max_rows: usize,
+    /// Dispatch a partial batch early when any pending request's SLO
+    /// deadline ([`SortRequest::slo`]) is within this margin — the slack
+    /// reserved for queue hand-off plus execution.
+    pub slo_margin: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -23,6 +29,7 @@ impl Default for BatcherConfig {
         Self {
             max_wait: Duration::from_millis(2),
             max_rows: 8,
+            slo_margin: Duration::from_micros(500),
         }
     }
 }
@@ -38,6 +45,13 @@ pub struct Pending {
     pub reply: std::sync::mpsc::Sender<super::request::SortResponse>,
     /// Admission permit, released when the response is sent (dropped).
     pub permit: Option<super::backpressure::Permit>,
+}
+
+impl Pending {
+    /// Absolute SLO deadline, when the request carries a budget.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.request.slo.map(|slo| self.arrived + slo)
+    }
 }
 
 /// A dispatched batch: up to `max_rows` same-class requests.
@@ -78,24 +92,46 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Should a batch be dispatched now?
+    /// Should a batch be dispatched now? True when the batch is full,
+    /// the oldest request aged past max-wait, or any pending request's
+    /// SLO deadline falls within the configured margin.
     pub fn ready(&self, now: Instant) -> bool {
         if self.queue.len() >= self.config.max_rows {
             return true;
         }
-        match self.queue.front() {
-            Some(front) => now.duration_since(front.arrived) >= self.config.max_wait,
-            None => false,
+        // FIFO queue ⇒ the front is oldest, so max-wait only needs the
+        // front; SLO deadlines are not monotonic in arrival order, so
+        // they need the scan (queue length is bounded by admission).
+        if let Some(front) = self.queue.front() {
+            if now.duration_since(front.arrived) >= self.config.max_wait {
+                return true;
+            }
         }
+        self.queue
+            .iter()
+            .any(|p| p.deadline().map_or(false, |d| now + self.config.slo_margin >= d))
     }
 
-    /// Time until the oldest request's deadline (for worker sleep), or
-    /// `None` when empty.
+    /// Time until the earliest flush trigger (for worker sleep): the
+    /// oldest request's max-wait expiry or the tightest SLO deadline
+    /// minus the margin, whichever comes first. `None` when empty.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
-        self.queue.front().map(|front| {
-            let age = now.duration_since(front.arrived);
-            self.config.max_wait.saturating_sub(age)
-        })
+        self.queue
+            .iter()
+            .map(|p| {
+                let wait = self
+                    .config
+                    .max_wait
+                    .saturating_sub(now.duration_since(p.arrived));
+                match p.deadline() {
+                    Some(d) => wait.min(
+                        d.saturating_duration_since(now)
+                            .saturating_sub(self.config.slo_margin),
+                    ),
+                    None => wait,
+                }
+            })
+            .min()
     }
 
     /// Remove and return up to `max_rows` requests (FIFO).
@@ -122,10 +158,21 @@ mod tests {
         }
     }
 
+    fn pending_slo(id: u64, arrived: Instant, slo: Duration) -> Pending {
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            request: SortRequest::new(id, vec![1, 2]).with_slo(slo),
+            arrived,
+            reply: tx,
+            permit: None,
+        }
+    }
+
     fn cfg() -> BatcherConfig {
         BatcherConfig {
             max_wait: Duration::from_millis(10),
             max_rows: 4,
+            slo_margin: Duration::from_micros(500),
         }
     }
 
@@ -183,5 +230,56 @@ mod tests {
         b.push(pending(0, now));
         let d = b.next_deadline(now + Duration::from_millis(4)).unwrap();
         assert!(d <= Duration::from_millis(6), "{d:?}");
+    }
+
+    #[test]
+    fn slo_deadline_forces_early_flush() {
+        // max_wait is effectively infinite: only the SLO can trigger.
+        let mut b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(1000),
+            max_rows: 100,
+            slo_margin: Duration::from_millis(1),
+        });
+        let now = Instant::now();
+        b.push(pending(0, now));
+        assert!(!b.ready(now), "plain request must wait");
+        // A 3ms budget: not ready immediately, ready once now + margin
+        // crosses the deadline, and definitely ready after expiry.
+        b.push(pending_slo(1, now, Duration::from_millis(3)));
+        assert!(!b.ready(now));
+        assert!(b.ready(now + Duration::from_millis(2)));
+        assert!(b.ready(now + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn slo_not_limited_to_queue_front() {
+        // The SLO carrier arrives *after* a plain request; readiness must
+        // still trigger on it (deadlines are not monotonic in arrival).
+        let mut b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(1000),
+            max_rows: 100,
+            slo_margin: Duration::ZERO,
+        });
+        let now = Instant::now();
+        b.push(pending(0, now - Duration::from_millis(50)));
+        b.push(pending_slo(1, now, Duration::from_millis(2)));
+        assert!(!b.ready(now));
+        assert!(b.ready(now + Duration::from_millis(2)));
+    }
+
+    #[test]
+    fn next_deadline_tracks_tightest_slo() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(1000),
+            max_rows: 100,
+            slo_margin: Duration::ZERO,
+        });
+        let now = Instant::now();
+        b.push(pending(0, now));
+        b.push(pending_slo(1, now, Duration::from_millis(7)));
+        b.push(pending_slo(2, now, Duration::from_millis(3)));
+        let d = b.next_deadline(now).unwrap();
+        assert!(d <= Duration::from_millis(3), "{d:?}");
+        assert!(d > Duration::from_millis(1), "{d:?}");
     }
 }

@@ -7,14 +7,22 @@
 //! ```text
 //!                    ┌────────────┐   per-class queues   ┌──────────┐
 //!  submit(keys) ───> │   Router   │ ───────────────────> │ Batcher  │
-//!                    │ pad→2^k,   │                      │ deadline/ │
+//!                    │ pad→2^k,   │                      │ SLO/wait/ │
 //!                    │ pick class │                      │ capacity │
 //!                    └────────────┘                      └────┬─────┘
 //!        bounded admission (Backpressure)                    │ (B,N) batch
-//!                                                       ┌────▼─────┐
-//!  response channel <───────────────────────────────────│ Workers  │──> PJRT
-//!                                                       └──────────┘  executor
+//!                                                  ┌─────────▼────────┐
+//!  response channel <──────────────────────────────│ Worker pool      │──> PJRT
+//!                                                  │ (work stealing)  │  executor
+//!                                                  └──────────────────┘
 //! ```
+//!
+//! The queues are per size class but the workers are not: each worker
+//! scans its *home* class first and steals ready batches from any other
+//! class, so no worker idles while dispatchable work exists anywhere
+//! (`ServiceConfig::threads` sizes the pool). Batchers flush on capacity,
+//! max-wait, or when a pending request's SLO budget is about to expire
+//! (`SortRequest::slo` + `BatcherConfig::slo_margin`).
 //!
 //! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
 //! every admitted request is answered exactly once; the answer is the

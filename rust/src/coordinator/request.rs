@@ -10,16 +10,27 @@ pub struct SortRequest {
     pub keys: Vec<u32>,
     /// Sort direction.
     pub descending: bool,
+    /// Optional end-to-end latency budget (SLO). The batcher flushes a
+    /// partial batch early rather than letting this expire in queue;
+    /// `None` ⇒ only the class's max-wait/max-rows policy applies.
+    pub slo: Option<std::time::Duration>,
 }
 
 impl SortRequest {
-    /// Ascending request.
+    /// Ascending request with no SLO budget.
     pub fn new(id: u64, keys: Vec<u32>) -> Self {
         Self {
             id,
             keys,
             descending: false,
+            slo: None,
         }
+    }
+
+    /// Attach an end-to-end latency budget.
+    pub fn with_slo(mut self, slo: std::time::Duration) -> Self {
+        self.slo = Some(slo);
+        self
     }
 }
 
@@ -56,5 +67,8 @@ mod tests {
         let r = SortRequest::new(7, vec![3, 1]);
         assert_eq!(r.id, 7);
         assert!(!r.descending);
+        assert!(r.slo.is_none());
+        let r = r.with_slo(std::time::Duration::from_millis(5));
+        assert_eq!(r.slo, Some(std::time::Duration::from_millis(5)));
     }
 }

@@ -1,5 +1,15 @@
-//! The service leader: ties router, batchers, admission gate and worker
-//! threads together around a [`BatchSorter`] backend per size class.
+//! The service leader: ties router, batchers, admission gate and a
+//! shared worker pool together around a [`BatchSorter`] backend per size
+//! class.
+//!
+//! Scheduling is **multi-queue with work stealing**: there is one
+//! [`Batcher`] queue per size class, but workers are not bound to
+//! classes. Each worker has a *home* class (scanned first, for steady
+//! traffic affinity) and steals ready batches from any other class's
+//! queue when its home is idle — so no worker sits idle while another
+//! class has dispatchable work, and hot classes drain with every thread
+//! in the house. Flushes are deadline-aware: see
+//! [`BatcherConfig::slo_margin`].
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -7,7 +17,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::backpressure::AdmissionGate;
-use super::batcher::{Batcher, BatcherConfig, Pending};
+use super::batcher::{Batch, Batcher, BatcherConfig, Pending};
 use super::request::{ExecPath, SortRequest, SortResponse};
 use super::router::{Router, SizeClass};
 use crate::util::metrics::{Counter, Histogram};
@@ -80,6 +90,9 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Admission bound (in-flight requests).
     pub max_in_flight: usize,
+    /// Worker threads shared across ALL size classes (work stealing);
+    /// `0` ⇒ one worker per class, the pre-stealing default shape.
+    pub threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -87,6 +100,7 @@ impl Default for ServiceConfig {
         Self {
             batcher: BatcherConfig::default(),
             max_in_flight: 1024,
+            threads: 0,
         }
     }
 }
@@ -104,12 +118,21 @@ pub struct ServiceStats {
     pub device_rows: Counter,
     /// Requests served by the CPU fallback.
     pub cpu_fallbacks: Counter,
+    /// Batches executed by a worker whose home class differs (work
+    /// stealing across size classes).
+    pub stolen_batches: Counter,
     /// End-to-end latency distribution.
     pub latency: Histogram,
 }
 
-struct ClassState {
-    batcher: Mutex<Batcher>,
+/// The multi-queue scheduler: one batcher per size class behind a single
+/// lock, one condvar shared by every worker. Workers scan home-first and
+/// steal from peers; the lock covers only queue scans/takes, never batch
+/// execution.
+struct Scheduler {
+    /// One batcher per size class, index-aligned with `Service::sorters`.
+    batchers: Mutex<Vec<Batcher>>,
+    /// Wakes workers when requests arrive or shutdown begins.
     wake: Condvar,
 }
 
@@ -117,7 +140,7 @@ struct ClassState {
 /// per-request channels.
 pub struct Service {
     router: Router,
-    classes: Vec<Arc<ClassState>>,
+    sched: Scheduler,
     sorters: Vec<Arc<dyn BatchSorter>>,
     fallback: CpuFallbackSorter,
     gate: AdmissionGate,
@@ -148,21 +171,21 @@ impl Service {
             shaped.len(),
             "router/class mismatch"
         );
-        let classes: Vec<Arc<ClassState>> = shaped
+        let batchers: Vec<Batcher> = shaped
             .iter()
             .map(|(c, _)| {
-                Arc::new(ClassState {
-                    batcher: Mutex::new(Batcher::new(BatcherConfig {
-                        max_rows: c.batch,
-                        ..config.batcher
-                    })),
-                    wake: Condvar::new(),
+                Batcher::new(BatcherConfig {
+                    max_rows: c.batch,
+                    ..config.batcher
                 })
             })
             .collect();
         let service = Arc::new(Self {
             router,
-            classes,
+            sched: Scheduler {
+                batchers: Mutex::new(batchers),
+                wake: Condvar::new(),
+            },
             sorters: shaped.into_iter().map(|(_, s)| s).collect(),
             fallback: CpuFallbackSorter,
             gate: AdmissionGate::new(config.max_in_flight),
@@ -170,15 +193,25 @@ impl Service {
             shutdown: Arc::new(AtomicBool::new(false)),
             workers: Mutex::new(Vec::new()),
         });
-        // One worker per size class.
+        // A shared worker pool: `threads` workers serve every class via
+        // work stealing (0 ⇒ one per class, matching the old silo count
+        // while still allowing steals).
+        let classes = service.sorters.len();
+        let worker_count = if classes == 0 {
+            0
+        } else if config.threads == 0 {
+            classes
+        } else {
+            config.threads.max(1)
+        };
         let mut workers = service.workers.lock().unwrap();
-        for idx in 0..service.classes.len() {
+        for idx in 0..worker_count {
             let svc = Arc::clone(&service);
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("sort-class-{idx}"))
+                    .name(format!("sort-worker-{idx}"))
                     .spawn(move || svc.worker_loop(idx))
-                    .expect("spawn class worker"),
+                    .expect("spawn service worker"),
             );
         }
         drop(workers);
@@ -207,16 +240,16 @@ impl Service {
         let arrived = Instant::now();
         match self.router.route(request.keys.len()) {
             Some(class) => {
-                let state = &self.classes[class];
-                let mut batcher = state.batcher.lock().unwrap();
-                batcher.push(Pending {
+                let mut batchers = self.sched.batchers.lock().unwrap();
+                batchers[class].push(Pending {
                     request,
                     arrived,
                     reply: tx,
                     permit: Some(permit),
                 });
-                drop(batcher);
-                state.wake.notify_one();
+                drop(batchers);
+                // Any worker may serve any class; wake one.
+                self.sched.wake.notify_one();
             }
             None => {
                 // Oversized (or empty) request: CPU fallback, run inline —
@@ -249,86 +282,125 @@ impl Service {
         });
     }
 
-    fn worker_loop(&self, class: usize) {
-        let state = Arc::clone(&self.classes[class]);
-        let sorter = Arc::clone(&self.sorters[class]);
-        let (batch_rows, n) = sorter.shape();
+    /// One shared worker: scan the home class first, then steal a ready
+    /// batch from any other class's queue. The scheduler lock is held
+    /// only while scanning/taking, never during execution.
+    fn worker_loop(&self, worker: usize) {
+        let classes = self.sorters.len();
+        if classes == 0 {
+            return;
+        }
+        let home = worker % classes;
         loop {
-            let batch = {
-                let mut batcher = state.batcher.lock().unwrap();
+            let (class, batch, more_ready) = {
+                let mut batchers = self.sched.batchers.lock().unwrap();
                 loop {
                     let now = Instant::now();
-                    if batcher.ready(now) {
-                        break batcher.take_batch();
+                    // Home class first, then steal from peers in order.
+                    let mut found = None;
+                    for off in 0..classes {
+                        let idx = (home + off) % classes;
+                        if batchers[idx].ready(now) {
+                            found = Some(idx);
+                            break;
+                        }
                     }
-                    if self.shutdown.load(Ordering::Acquire) {
-                        if batcher.is_empty() {
+                    if found.is_none() && self.shutdown.load(Ordering::Acquire) {
+                        // Drain: flush leftovers, ready or not.
+                        found = (0..classes).find(|&i| !batchers[i].is_empty());
+                        if found.is_none() {
                             return;
                         }
-                        break batcher.take_batch();
                     }
-                    let wait = batcher
-                        .next_deadline(now)
+                    if let Some(idx) = found {
+                        let batch = batchers[idx].take_batch();
+                        // Hand remaining work to a sleeping peer before
+                        // going off to execute. Non-empty (not just
+                        // ready) on purpose: a woken peer recomputes the
+                        // global min deadline, so a pending SLO/max-wait
+                        // flush is watched while this worker is busy
+                        // instead of waiting out a stale 50ms timeout.
+                        let more = (0..classes).any(|i| !batchers[i].is_empty());
+                        break (idx, batch, more);
+                    }
+                    let wait = batchers
+                        .iter()
+                        .filter_map(|b| b.next_deadline(now))
+                        .min()
                         .unwrap_or(Duration::from_millis(50));
-                    let (g, _timeout) = state
+                    let (g, _timeout) = self
+                        .sched
                         .wake
-                        .wait_timeout(batcher, wait.max(Duration::from_micros(100)))
+                        .wait_timeout(batchers, wait.max(Duration::from_micros(100)))
                         .unwrap();
-                    batcher = g;
+                    batchers = g;
                 }
             };
+            if more_ready {
+                self.sched.wake.notify_one();
+            }
             if batch.items.is_empty() {
                 continue;
             }
-
-            // Assemble the (B, N) buffer writing each request directly
-            // into its row (no staging copy); unused rows keep MAX
-            // padding (cheapest: they sort to themselves).
-            let mut rows: Vec<u32> = Vec::with_capacity(batch_rows * n);
-            for item in &batch.items {
-                rows.extend_from_slice(&item.request.keys);
-                // Row padding: MAX sinks for ascending, 0 for descending
-                // (reversed at reply time) — same contract as pad_row.
-                let fill = if item.request.descending { 0 } else { u32::MAX };
-                rows.resize(rows.len() + (n - item.request.keys.len()), fill);
+            if class != home {
+                self.stats.stolen_batches.inc();
             }
-            rows.resize(batch_rows * n, u32::MAX);
+            self.run_batch(class, batch);
+        }
+    }
 
-            let occupancy = batch.items.len();
-            match sorter.sort_rows(rows) {
-                Ok(sorted) => {
-                    self.stats.device_batches.inc();
-                    self.stats.device_rows.add(occupancy as u64);
-                    for (i, item) in batch.items.into_iter().enumerate() {
-                        let len = item.request.keys.len();
-                        let row = &sorted[i * n..(i + 1) * n];
-                        let keys = if item.request.descending {
-                            // 0-pads sorted to the front; the request's
-                            // keys are the tail — reverse just that slice.
-                            row[n - len..].iter().rev().copied().collect()
-                        } else {
-                            row[..len].to_vec()
-                        };
-                        let latency = item.arrived.elapsed();
-                        self.stats.latency.record(latency);
-                        let _ = item.reply.send(SortResponse {
-                            id: item.request.id,
-                            keys,
-                            path: ExecPath::Device,
-                            latency,
-                            batch_occupancy: occupancy,
-                        });
-                        drop(item.permit);
-                    }
+    /// Assemble, execute and answer one dispatched batch.
+    fn run_batch(&self, class: usize, batch: Batch) {
+        let sorter = &self.sorters[class];
+        let (batch_rows, n) = sorter.shape();
+
+        // Assemble the (B, N) buffer writing each request directly
+        // into its row (no staging copy); unused rows keep MAX
+        // padding (cheapest: they sort to themselves).
+        let mut rows: Vec<u32> = Vec::with_capacity(batch_rows * n);
+        for item in &batch.items {
+            rows.extend_from_slice(&item.request.keys);
+            // Row padding: MAX sinks for ascending, 0 for descending
+            // (reversed at reply time) — same contract as pad_row.
+            let fill = if item.request.descending { 0 } else { u32::MAX };
+            rows.resize(rows.len() + (n - item.request.keys.len()), fill);
+        }
+        rows.resize(batch_rows * n, u32::MAX);
+
+        let occupancy = batch.items.len();
+        match sorter.sort_rows(rows) {
+            Ok(sorted) => {
+                self.stats.device_batches.inc();
+                self.stats.device_rows.add(occupancy as u64);
+                for (i, item) in batch.items.into_iter().enumerate() {
+                    let len = item.request.keys.len();
+                    let row = &sorted[i * n..(i + 1) * n];
+                    let keys = if item.request.descending {
+                        // 0-pads sorted to the front; the request's
+                        // keys are the tail — reverse just that slice.
+                        row[n - len..].iter().rev().copied().collect()
+                    } else {
+                        row[..len].to_vec()
+                    };
+                    let latency = item.arrived.elapsed();
+                    self.stats.latency.record(latency);
+                    let _ = item.reply.send(SortResponse {
+                        id: item.request.id,
+                        keys,
+                        path: ExecPath::Device,
+                        latency,
+                        batch_occupancy: occupancy,
+                    });
+                    drop(item.permit);
                 }
-                Err(err) => {
-                    // Device failure: degrade to the CPU path per item so
-                    // no request is ever dropped.
-                    eprintln!("device batch failed ({err:#}); CPU fallback");
-                    for item in batch.items {
-                        self.cpu_path(item.request, item.arrived, &item.reply);
-                        drop(item.permit);
-                    }
+            }
+            Err(err) => {
+                // Device failure: degrade to the CPU path per item so
+                // no request is ever dropped.
+                eprintln!("device batch failed ({err:#}); CPU fallback");
+                for item in batch.items {
+                    self.cpu_path(item.request, item.arrived, &item.reply);
+                    drop(item.permit);
                 }
             }
         }
@@ -337,9 +409,11 @@ impl Service {
     /// Stop workers after draining queues.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
-        for c in &self.classes {
-            c.wake.notify_all();
-        }
+        // Cycle the scheduler lock before notifying: the store cannot then
+        // slip between a worker's shutdown check and its condvar wait
+        // (classic lost-wakeup), because the check happens under the lock.
+        drop(self.sched.batchers.lock().unwrap());
+        self.sched.wake.notify_all();
         let mut workers = self.workers.lock().unwrap();
         for w in workers.drain(..) {
             let _ = w.join();
@@ -378,7 +452,7 @@ mod tests {
         }
     }
 
-    fn svc(classes: &[(usize, usize)]) -> Arc<Service> {
+    fn svc_with(classes: &[(usize, usize)], config: ServiceConfig) -> Arc<Service> {
         let sorters: Vec<Arc<dyn BatchSorter>> = classes
             .iter()
             .map(|&(batch, n)| {
@@ -389,7 +463,11 @@ mod tests {
                 }) as Arc<dyn BatchSorter>
             })
             .collect();
-        Service::new(sorters, ServiceConfig::default())
+        Service::new(sorters, config)
+    }
+
+    fn svc(classes: &[(usize, usize)]) -> Arc<Service> {
+        svc_with(classes, ServiceConfig::default())
     }
 
     #[test]
@@ -421,6 +499,7 @@ mod tests {
                 id: 2,
                 keys: vec![5, 3, 9, 1],
                 descending: true,
+                slo: None,
             })
             .unwrap();
         assert_eq!(resp.keys, vec![9, 5, 3, 1]);
@@ -475,7 +554,9 @@ mod tests {
                 batcher: BatcherConfig {
                     max_wait: Duration::from_secs(10), // hold the first one
                     max_rows: 2,
+                    ..BatcherConfig::default()
                 },
+                ..ServiceConfig::default()
             },
         );
         let _rx = s.submit(SortRequest::new(1, vec![1])).unwrap();
@@ -495,6 +576,135 @@ mod tests {
             .unwrap();
         assert_eq!(big.keys.len(), 512);
         assert!(big.keys.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    /// Mock with a fixed per-batch execution cost (so batches overlap in
+    /// time and stealing opportunities actually arise).
+    struct SlowMock {
+        batch: usize,
+        n: usize,
+        cost: Duration,
+    }
+
+    impl BatchSorter for SlowMock {
+        fn shape(&self) -> (usize, usize) {
+            (self.batch, self.n)
+        }
+        fn sort_rows(&self, mut rows: Vec<u32>) -> crate::Result<Vec<u32>> {
+            std::thread::sleep(self.cost);
+            for r in rows.chunks_mut(self.n) {
+                bitonic_sort(r);
+            }
+            Ok(rows)
+        }
+    }
+
+    #[test]
+    fn idle_workers_steal_ready_batches_across_size_classes() {
+        // Two classes, two workers, ALL traffic routed to class 0. With
+        // per-class silos the class-1 worker would idle while class-0
+        // batches queue behind a 3ms-per-batch backend; with the
+        // multi-queue scheduler it must steal them — a mixed-size-class
+        // deployment leaves no worker idle while another class has ready
+        // batches.
+        let s = Service::new(
+            vec![
+                Arc::new(SlowMock {
+                    batch: 2,
+                    n: 64,
+                    cost: Duration::from_millis(3),
+                }) as Arc<dyn BatchSorter>,
+                Arc::new(SlowMock {
+                    batch: 2,
+                    n: 256,
+                    cost: Duration::from_millis(3),
+                }) as Arc<dyn BatchSorter>,
+            ],
+            ServiceConfig {
+                threads: 2,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(200),
+                    max_rows: 2,
+                    ..BatcherConfig::default()
+                },
+                ..ServiceConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..32)
+            .map(|i| s.submit(SortRequest::new(i, vec![3, 1, 2])).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.keys, vec![1, 2, 3]);
+        }
+        assert!(
+            s.stats().stolen_batches.get() > 0,
+            "class-1's home worker never stole class-0 batches"
+        );
+    }
+
+    #[test]
+    fn threads_knob_scales_workers_beyond_class_count() {
+        // One class, four workers: 16 one-row batches at 3ms each drain
+        // ~4× faster than a single silo worker could.
+        let s = Service::new(
+            vec![Arc::new(SlowMock {
+                batch: 1,
+                n: 64,
+                cost: Duration::from_millis(3),
+            }) as Arc<dyn BatchSorter>],
+            ServiceConfig {
+                threads: 4,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(100),
+                    max_rows: 1,
+                    ..BatcherConfig::default()
+                },
+                ..ServiceConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| s.submit(SortRequest::new(i, vec![2, 1])).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // Serial would be ≥ 48ms (16×3ms); 4 workers ideal is ~12ms.
+        // Assert comfortably below serial so a loaded CI runner cannot
+        // flake the bound while a silo regression still trips it.
+        assert!(
+            t0.elapsed() < Duration::from_millis(36),
+            "no cross-worker parallelism: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn slo_request_flushes_partial_batch_early() {
+        // max_wait would hold a lone request for 10s; its 20ms SLO budget
+        // must flush the partial batch long before that.
+        let s = svc_with(
+            &[(8, 64)],
+            ServiceConfig {
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_secs(10),
+                    max_rows: 8,
+                    slo_margin: Duration::from_millis(1),
+                },
+                ..ServiceConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        let resp = s
+            .sort_blocking(SortRequest::new(1, vec![2, 1]).with_slo(Duration::from_millis(20)))
+            .unwrap();
+        assert_eq!(resp.keys, vec![1, 2]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "SLO flush never fired: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
-use bitonic_tpu::runtime::{spawn_device_host, Key};
+use bitonic_tpu::runtime::{spawn_device_host, spawn_device_host_with, HostConfig, Key};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
 use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort};
@@ -36,7 +36,11 @@ fn main() -> bitonic_tpu::Result<()> {
         .opt("dist", "workload distribution", Some("uniform"))
         .opt("artifacts", "artifacts directory (default: auto-discover)", None)
         .opt("requests", "serve: number of requests", Some("200"))
-        .opt("threads", "bitonic-par threads", Some("8"))
+        .opt(
+            "threads",
+            "worker threads: bitonic-par chunks, device-host row pool, serve workers",
+            Some("8"),
+        )
         .opt("seed", "workload seed", Some("42"))
         .flag("verbose", "more output");
     let args = parser.parse_env()?;
@@ -94,7 +98,9 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         "device" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
                 .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-            let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
+            let threads: usize = args.parsed_or("threads", 8)?;
+            let (handle, manifest) =
+                spawn_device_host_with(artifacts_dir(args), HostConfig { threads })?;
             let padded = n.next_power_of_two();
             let meta = manifest
                 .size_classes(variant)
@@ -121,11 +127,15 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
 fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let requests: usize = args.parsed_or("requests", 200)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
+    let threads: usize = args.parsed_or("threads", 8)?;
     let variant = Variant::parse(&args.get_or("variant", "optimized"))
         .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-    let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
+    // One pool on the device host (row-parallel execute) and the same
+    // knob for the service's work-stealing worker count.
+    let (handle, manifest) =
+        spawn_device_host_with(artifacts_dir(args), HostConfig { threads })?;
     println!(
-        "warming {} artifacts…",
+        "warming {} artifacts… ({threads} executor/service threads)",
         manifest.size_classes(variant).len()
     );
     handle.warm_up(variant)?;
@@ -137,7 +147,13 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
                 as Arc<dyn bitonic_tpu::coordinator::BatchSorter>
         })
         .collect();
-    let svc = Service::new(sorters, ServiceConfig::default());
+    let svc = Service::new(
+        sorters,
+        ServiceConfig {
+            threads,
+            ..ServiceConfig::default()
+        },
+    );
 
     let mut gen = Generator::new(seed);
     let t0 = Instant::now();

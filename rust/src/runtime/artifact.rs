@@ -44,6 +44,16 @@ impl Dtype {
     pub fn size(self) -> usize {
         4
     }
+
+    /// The dtype token XLA prints in HLO shapes (`u32[8,1024]` etc.);
+    /// note int32 is spelled `s32` there, not `i32`.
+    pub fn hlo_token(self) -> &'static str {
+        match self {
+            Dtype::U32 => "u32",
+            Dtype::I32 => "s32",
+            Dtype::F32 => "f32",
+        }
+    }
 }
 
 /// What computation an artifact performs.
@@ -296,5 +306,9 @@ mod tests {
             assert_eq!(Dtype::parse(d.name()).unwrap(), d);
         }
         assert!(Dtype::parse("float64").is_err());
+        // XLA's HLO spelling: int32 is s32.
+        assert_eq!(Dtype::U32.hlo_token(), "u32");
+        assert_eq!(Dtype::I32.hlo_token(), "s32");
+        assert_eq!(Dtype::F32.hlo_token(), "f32");
     }
 }

@@ -1,27 +1,116 @@
-//! A loaded sort artifact plus typed marshalling, executed natively.
+//! A loaded sort artifact plus typed marshalling, executed natively with
+//! a **plan/execute split**.
 //!
 //! The original design compiled `artifacts/*.hlo.txt` with the `xla`
 //! crate's PJRT CPU client. That crate is not vendored in this offline
 //! environment, so the executor is a deterministic **native-CPU
-//! fallback**: "compilation" loads and validates the artifact's HLO text
-//! (shape and module sanity — catching manifest/file drift at load time,
-//! exactly where PJRT compilation would fail), and execution walks the
-//! same abstract bitonic network the Pallas kernels implement
-//! ([`crate::sort::network`]), row by row over the `(batch, n)` buffer.
+//! fallback** organised the way a real PJRT backend is:
 //!
-//! The executor therefore honours the full artifact contract the
-//! integration tests pin down — ascending/descending, u32/i32/f32, sort
-//! and merge kinds, MAX-padding semantics — and is bit-exact with the CPU
-//! substrates. Swapping a real PJRT backend in later is a change local to
-//! this type: same constructor, same `sort_*` entry points.
+//! * **Plan (compile time).** [`SortExecutor::compile`] loads and
+//!   validates the artifact's HLO text (dtype+shape token and module
+//!   sanity — catching manifest/file drift at load time, exactly where
+//!   PJRT compilation would fail) and precomputes the full network
+//!   schedule — the `(phase_len, stride)` step list from
+//!   [`crate::sort::network`] — into an [`ExecutionPlan`]. This happens
+//!   once per artifact, cached by the registry.
+//! * **Execute (request time).** The `sort_*` entry points are a pure
+//!   walk over the plan: no schedule re-derivation per row per call.
+//!   When the executor holds a shared [`ThreadPool`] (threaded through
+//!   [`crate::runtime::Registry`] from the device-host config), the
+//!   `(B, N)` buffer is partitioned into row-chunk tasks dispatched via
+//!   [`ThreadPool::run_scoped`], so rows sort in parallel — the CPU
+//!   analogue of the paper's "keep every lane busy" objective. A
+//!   panicking row task fails the batch with an error instead of
+//!   poisoning the pool.
+//!
+//! The executor honours the full artifact contract the integration tests
+//! pin down — ascending/descending, u32/i32/f32, sort and merge kinds,
+//! MAX-padding semantics — and is bit-exact with the CPU substrates (and
+//! with its own serial path; property-tested below). Swapping a real
+//! PJRT backend in later replaces the plan walk, not the module
+//! boundary: same constructor, same `sort_*` entry points.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::sort::bitonic::{bitonic_sort, compare_exchange_step};
+use crate::sort::bitonic::compare_exchange_step;
+use crate::sort::network::{Network, Phase, Step};
 use crate::sort::SortKey;
 use crate::util::error::Context;
+use crate::util::threadpool::{ScopedJob, ThreadPool};
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype};
+
+/// The precompiled execution schedule of one artifact: the exact
+/// compare-exchange step list the bitonic network prescribes, plus the
+/// pre/post row transforms the artifact kind and direction require.
+/// Plain data, `Sync` — shared read-only by every row task. This is the
+/// seam a future PJRT backend replaces: planning stays, the walk becomes
+/// a device dispatch.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    /// Row length `n` the plan was built for.
+    n: usize,
+    /// Reverse the row's second half before the steps (merge artifacts:
+    /// two ascending halves form a bitonic sequence).
+    reverse_tail: bool,
+    /// `(phase_len, stride)` steps, execution order.
+    steps: Vec<Step>,
+    /// Reverse the whole row after the steps (descending artifacts).
+    reverse_output: bool,
+}
+
+impl ExecutionPlan {
+    /// Precompute the schedule for an artifact shape. For `Sort` this is
+    /// the full network; for `Merge` only the final merge phase
+    /// (`log2(n)` steps — the paper §3 primitive, not a full re-sort).
+    pub fn new(kind: ArtifactKind, n: usize, descending: bool) -> Self {
+        assert!(
+            n.is_power_of_two(),
+            "execution plans require a power-of-two row length, got {n}"
+        );
+        let (reverse_tail, steps) = if n < 2 {
+            (false, Vec::new())
+        } else {
+            match kind {
+                ArtifactKind::Sort => (false, Network::new(n).step_schedule()),
+                // phase_len = n ⇒ every pair compares ascending
+                // (i & n == 0 for all i < n).
+                ArtifactKind::Merge => (true, Phase { len: n }.steps().collect()),
+            }
+        };
+        Self {
+            n,
+            reverse_tail,
+            steps,
+            reverse_output: descending,
+        }
+    }
+
+    /// Row length the plan covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of compare-exchange steps the plan walks per row.
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Execute the plan over one row of length [`Self::n`].
+    pub fn run_row<T: SortKey>(&self, row: &mut [T]) {
+        debug_assert_eq!(row.len(), self.n);
+        if self.reverse_tail && self.n >= 2 {
+            row[self.n / 2..].reverse();
+        }
+        for s in &self.steps {
+            compare_exchange_step(row, s.phase_len, s.stride);
+        }
+        if self.reverse_output {
+            row.reverse();
+        }
+    }
+}
 
 /// One loaded sort/merge artifact, ready to execute.
 pub struct SortExecutor {
@@ -29,13 +118,27 @@ pub struct SortExecutor {
     pub meta: ArtifactMeta,
     /// Size of the loaded HLO text in bytes (artifact was really read).
     pub hlo_bytes: usize,
+    /// The precomputed schedule (plan layer).
+    plan: ExecutionPlan,
+    /// Shared row-parallel pool; `None` ⇒ serial execution.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl SortExecutor {
-    /// Load and validate `hlo_text_path` for `meta`. The HLO text must
-    /// exist, look like an HLO module, and declare the `(batch, n)` shape
-    /// the manifest promises.
+    /// Load and validate `hlo_text_path` for `meta`, serial execution.
+    /// The HLO text must exist, look like an HLO module, and declare the
+    /// dtype + `(batch, n)` shape the manifest promises.
     pub fn compile(meta: ArtifactMeta, hlo_text_path: &Path) -> crate::Result<Self> {
+        Self::compile_with_pool(meta, hlo_text_path, None)
+    }
+
+    /// [`compile`](Self::compile) with a shared execution pool: rows of
+    /// each `(B, N)` batch are sorted in parallel on `pool`.
+    pub fn compile_with_pool(
+        meta: ArtifactMeta,
+        hlo_text_path: &Path,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> crate::Result<Self> {
         crate::ensure!(
             meta.n.is_power_of_two() && meta.batch >= 1,
             "artifact {} has a malformed shape ({}x{})",
@@ -49,16 +152,32 @@ impl SortExecutor {
             text.contains("HloModule"),
             "{hlo_text_path:?} does not look like HLO text"
         );
-        let shape = format!("[{},{}]", meta.batch, meta.n);
+        // Validate the dtype token together with the shape (`u32[2,8]`,
+        // not just `[2,8]`): a manifest dtype/file mismatch must fail at
+        // load time, like a real PJRT compile would.
+        let shape = format!("{}[{},{}]", meta.dtype.hlo_token(), meta.batch, meta.n);
         crate::ensure!(
             text.contains(&shape),
-            "artifact {} HLO text does not declare shape {shape} — manifest/file mismatch",
+            "artifact {} HLO text does not declare {shape} — manifest dtype/shape vs file mismatch",
             meta.name
         );
+        let plan = ExecutionPlan::new(meta.kind, meta.n, meta.descending);
         Ok(Self {
             meta,
             hlo_bytes: text.len(),
+            plan,
+            pool,
         })
+    }
+
+    /// The precomputed schedule this executor walks.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Worker threads available for row-parallel execution (1 ⇒ serial).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
     }
 
     /// Sort a full `(batch, n)` buffer of u32 keys, row-major, in place.
@@ -99,38 +218,38 @@ impl SortExecutor {
             b * n * self.meta.dtype.size(),
             rows.len() * self.meta.dtype.size()
         );
-        for row in rows.chunks_mut(n) {
-            match self.meta.kind {
-                // The full network — the same `sort::bitonic` walk the CPU
-                // baseline uses, keeping the two paths bit-exact by
-                // construction.
-                ArtifactKind::Sort => bitonic_sort(row),
-                ArtifactKind::Merge => merge_row(row),
+        match &self.pool {
+            // Row-parallel path: worth the dispatch only when several
+            // rows can overlap and each carries real work.
+            Some(pool) if pool.threads() > 1 && b > 1 && n >= 64 => {
+                // Oversubscribe 2× so uneven worker speeds load-balance.
+                let chunks = (pool.threads() * 2).min(b);
+                let rows_per_task = (b + chunks - 1) / chunks;
+                let plan = &self.plan;
+                let tasks: Vec<ScopedJob> = rows
+                    .chunks_mut(rows_per_task * n)
+                    .map(|chunk| {
+                        Box::new(move || {
+                            for row in chunk.chunks_mut(n) {
+                                plan.run_row(row);
+                            }
+                        }) as ScopedJob
+                    })
+                    .collect();
+                pool.run_scoped(tasks).map_err(|panicked| {
+                    crate::err!(
+                        "artifact {}: {panicked} row task(s) panicked during parallel execute",
+                        self.meta.name
+                    )
+                })?;
             }
-            if self.meta.descending {
-                row.reverse();
+            _ => {
+                for row in rows.chunks_mut(n) {
+                    self.plan.run_row(row);
+                }
             }
         }
         Ok(rows)
-    }
-}
-
-/// Merge one row whose two halves are each sorted ascending (the merge
-/// artifact contract): reverse the second half to form a bitonic
-/// sequence, then run the final merge phase (`log2(n)` steps — the
-/// paper §3 primitive, not a full re-sort).
-fn merge_row<T: SortKey>(row: &mut [T]) {
-    let n = row.len();
-    if n < 2 {
-        return;
-    }
-    debug_assert!(n.is_power_of_two(), "artifact rows are powers of two");
-    row[n / 2..].reverse();
-    let mut stride = n / 2;
-    while stride >= 1 {
-        // phase_len = n ⇒ every pair compares ascending (i & n == 0).
-        compare_exchange_step(row, n, stride);
-        stride /= 2;
     }
 }
 
@@ -138,6 +257,8 @@ fn merge_row<T: SortKey>(row: &mut [T]) {
 mod tests {
     use super::*;
     use crate::sort::network::Variant;
+    use crate::util::prop::{check_with, Config, Strategy};
+    use crate::workload::rng::Pcg32;
     use crate::workload::{Distribution, Generator};
 
     fn meta(kind: ArtifactKind, batch: usize, n: usize, dtype: Dtype, desc: bool) -> ArtifactMeta {
@@ -155,26 +276,50 @@ mod tests {
         }
     }
 
-    fn executor(kind: ArtifactKind, batch: usize, n: usize, dtype: Dtype, desc: bool) -> SortExecutor {
+    fn executor_with_pool(
+        kind: ArtifactKind,
+        batch: usize,
+        n: usize,
+        dtype: Dtype,
+        desc: bool,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> SortExecutor {
         SortExecutor {
             meta: meta(kind, batch, n, dtype, desc),
             hlo_bytes: 0,
+            plan: ExecutionPlan::new(kind, n, desc),
+            pool,
         }
     }
 
+    fn executor(kind: ArtifactKind, batch: usize, n: usize, dtype: Dtype, desc: bool) -> SortExecutor {
+        executor_with_pool(kind, batch, n, dtype, desc, None)
+    }
+
     #[test]
-    fn merge_row_merges_sorted_halves() {
+    fn merge_plan_merges_sorted_halves() {
         let mut gen = Generator::new(2);
         for logn in 1..=12 {
             let n = 1usize << logn;
+            let plan = ExecutionPlan::new(ArtifactKind::Merge, n, false);
             let mut v = gen.u32s(n, Distribution::Uniform);
             v[..n / 2].sort_unstable();
             v[n / 2..].sort_unstable();
             let mut want = v.clone();
             want.sort_unstable();
-            merge_row(&mut v);
+            plan.run_row(&mut v);
             assert_eq!(v, want, "n=2^{logn}");
         }
+    }
+
+    #[test]
+    fn plan_precomputes_full_network_for_sort() {
+        let plan = ExecutionPlan::new(ArtifactKind::Sort, 1 << 10, false);
+        assert_eq!(plan.step_count(), Network::new(1 << 10).step_count());
+        assert_eq!(plan.n(), 1 << 10);
+        // Merge plans walk only the final phase: log2(n) steps.
+        let merge = ExecutionPlan::new(ArtifactKind::Merge, 1 << 10, false);
+        assert_eq!(merge.step_count(), 10);
     }
 
     #[test]
@@ -234,7 +379,7 @@ mod tests {
         )
         .is_err());
 
-        // Shape mismatch rejected; matching shape accepted.
+        // Shape mismatch rejected; matching dtype+shape accepted.
         let good = dir.join("good.hlo.txt");
         std::fs::write(&good, "HloModule test\nENTRY main { u32[2,8] parameter(0) }\n").unwrap();
         assert!(SortExecutor::compile(
@@ -242,10 +387,22 @@ mod tests {
             &good
         )
         .is_err());
+        // Dtype mismatch at the same shape also rejected: the manifest
+        // claims f32 but the HLO declares u32[2,8].
+        let dtype_drift = SortExecutor::compile(
+            meta(ArtifactKind::Sort, 2, 8, Dtype::F32, false),
+            &good,
+        );
+        assert!(
+            format!("{:#}", dtype_drift.unwrap_err()).contains("f32[2,8]"),
+            "dtype drift must name the expected token"
+        );
         let exe =
             SortExecutor::compile(meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false), &good)
                 .unwrap();
         assert!(exe.hlo_bytes > 0);
+        assert_eq!(exe.threads(), 1);
+        assert_eq!(exe.plan().step_count(), Network::new(8).step_count());
     }
 
     #[test]
@@ -258,5 +415,128 @@ mod tests {
         let out = exe.sort_u32(rows).unwrap();
         assert_eq!(&out[0..8], &[0, 1, 2, 3, 4, 5, 6, 7]);
         assert_eq!(&out[8..16], &[0, 0, 0, 1, 1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pooled_execution_sorts_large_batches() {
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let exe = executor_with_pool(ArtifactKind::Sort, 16, 256, Dtype::U32, false, Some(pool));
+        assert_eq!(exe.threads(), 4);
+        let mut gen = Generator::new(0xB00);
+        let rows = gen.u32s(16 * 256, Distribution::Uniform);
+        let out = exe.sort_u32(rows.clone()).unwrap();
+        for r in 0..16 {
+            let mut want = rows[r * 256..(r + 1) * 256].to_vec();
+            want.sort_unstable();
+            assert_eq!(&out[r * 256..(r + 1) * 256], &want[..], "row {r}");
+        }
+    }
+
+    /// One random executor configuration for the bit-exactness property.
+    #[derive(Clone, Debug)]
+    struct Case {
+        kind: ArtifactKind,
+        dtype: Dtype,
+        descending: bool,
+        batch: usize,
+        n: usize,
+        seed: u64,
+    }
+
+    struct CaseStrategy;
+    impl Strategy for CaseStrategy {
+        type Value = Case;
+        fn sample(&self, rng: &mut Pcg32) -> Case {
+            Case {
+                kind: if rng.next_below(2) == 0 {
+                    ArtifactKind::Sort
+                } else {
+                    ArtifactKind::Merge
+                },
+                dtype: match rng.next_below(3) {
+                    0 => Dtype::U32,
+                    1 => Dtype::I32,
+                    _ => Dtype::F32,
+                },
+                descending: rng.next_below(2) == 1,
+                batch: 1 + rng.next_below(8) as usize,
+                n: 1usize << (1 + rng.next_below(8)), // 2..=256
+                seed: rng.next_u32() as u64,
+            }
+        }
+        fn shrink(&self, v: &Case) -> Vec<Case> {
+            let mut out = Vec::new();
+            if v.batch > 1 {
+                out.push(Case { batch: v.batch / 2, ..v.clone() });
+            }
+            if v.n > 2 {
+                out.push(Case { n: v.n / 2, ..v.clone() });
+            }
+            out
+        }
+    }
+
+    /// Run the same input through a serial and a pooled executor of the
+    /// same configuration; outputs must agree bit-for-bit.
+    fn assert_bit_exact<T>(case: &Case, pool: &Arc<ThreadPool>, mut rows: Vec<T>) -> Result<(), String>
+    where
+        T: SortKey + PartialEq + std::fmt::Debug,
+    {
+        if case.kind == ArtifactKind::Merge {
+            // Merge contract: each row's two halves arrive sorted asc.
+            for row in rows.chunks_mut(case.n) {
+                let half = case.n / 2;
+                crate::sort::bitonic::bitonic_sort(&mut row[..half]);
+                crate::sort::bitonic::bitonic_sort(&mut row[half..]);
+            }
+        }
+        let serial = executor_with_pool(case.kind, case.batch, case.n, case.dtype, case.descending, None);
+        let pooled = executor_with_pool(
+            case.kind,
+            case.batch,
+            case.n,
+            case.dtype,
+            case.descending,
+            Some(Arc::clone(pool)),
+        );
+        let a = serial.execute(rows.clone()).map_err(|e| format!("{e:#}"))?;
+        let b = pooled.execute(rows).map_err(|e| format!("{e:#}"))?;
+        if a != b {
+            return Err("parallel output diverged from serial".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn pooled_bit_exact_with_serial_across_dtypes_kinds_directions() {
+        let pool = Arc::new(ThreadPool::new(4, 32));
+        check_with(
+            Config {
+                cases: 48,
+                ..Config::default()
+            },
+            &CaseStrategy,
+            |case| {
+                let mut gen = Generator::new(case.seed);
+                let count = case.batch * case.n;
+                match case.dtype {
+                    Dtype::U32 => {
+                        assert_bit_exact(case, &pool, gen.u32s(count, Distribution::DupHeavy))
+                    }
+                    Dtype::I32 => {
+                        let rows: Vec<i32> = gen
+                            .u32s(count, Distribution::Uniform)
+                            .into_iter()
+                            .map(|x| x as i32)
+                            .collect();
+                        assert_bit_exact(case, &pool, rows)
+                    }
+                    Dtype::F32 => {
+                        // Finite floats only (generator contract).
+                        assert_bit_exact(case, &pool, gen.f32s(count, Distribution::Uniform))
+                    }
+                }
+            },
+        );
     }
 }

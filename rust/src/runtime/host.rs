@@ -10,12 +10,29 @@
 //! cheap to clone and freely shared across the coordinator's workers.
 
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 
 use crate::util::error::Context;
+use crate::util::threadpool::ThreadPool;
 
 use super::artifact::Manifest;
 use super::registry::{Key, Registry};
 use crate::sort::network::Variant;
+
+/// Device-host configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HostConfig {
+    /// Row-parallel executor threads: `> 1` gives the host a shared
+    /// [`ThreadPool`] and every executor sorts its `(B, N)` rows in
+    /// parallel on it; `0` or `1` keeps execution serial.
+    pub threads: usize,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        Self { threads: 0 }
+    }
+}
 
 enum Request {
     SortU32 {
@@ -96,11 +113,24 @@ impl DeviceHandle {
     }
 }
 
-/// Spawn the device-host thread over the artifacts in `dir`.
+/// Spawn the device-host thread over the artifacts in `dir` with serial
+/// executors (see [`spawn_with`] for the row-parallel configuration).
 ///
 /// Returns the handle plus a *snapshot* of the manifest (plain data, so
 /// callers can route/plan without round-tripping to the host).
 pub fn spawn(dir: impl AsRef<std::path::Path>) -> crate::Result<(DeviceHandle, Manifest)> {
+    spawn_with(dir, HostConfig::default())
+}
+
+/// [`spawn`] with explicit configuration: `config.threads > 1` builds a
+/// shared [`ThreadPool`] owned by the host thread, and every executor
+/// the registry loads partitions its `(B, N)` buffer into row-chunk
+/// tasks on it — the host thread stops being the serial bottleneck while
+/// the single-device-owner model (one batch in flight) is preserved.
+pub fn spawn_with(
+    dir: impl AsRef<std::path::Path>,
+    config: HostConfig,
+) -> crate::Result<(DeviceHandle, Manifest)> {
     let dir = dir.as_ref().to_path_buf();
     // Parse the manifest on the caller thread first: fail fast, and give
     // the caller its snapshot without a channel round-trip.
@@ -110,7 +140,9 @@ pub fn spawn(dir: impl AsRef<std::path::Path>) -> crate::Result<(DeviceHandle, M
     std::thread::Builder::new()
         .name("pjrt-device-host".into())
         .spawn(move || {
-            let registry = match Registry::open(&dir) {
+            let pool = (config.threads > 1)
+                .then(|| Arc::new(ThreadPool::new(config.threads, 2 * config.threads)));
+            let registry = match Registry::open_with_pool(&dir, pool) {
                 Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
                     r

@@ -5,8 +5,12 @@
 //!
 //! ```text
 //! artifacts/manifest.tsv ──> Registry (metadata)
-//! artifacts/<name>.hlo.txt ─ SortExecutor::compile (load + validate, once, cached)
-//!                          ─ executor.sort_*()      (hot path)
+//! artifacts/<name>.hlo.txt ─ SortExecutor::compile (load + validate +
+//!                            precompute ExecutionPlan, once, cached)
+//!                          ─ executor.sort_*()      (hot path: pure walk
+//!                            over the plan, row-parallel on the shared
+//!                            ThreadPool when the host is configured
+//!                            with threads > 1)
 //! ```
 //!
 //! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
@@ -26,8 +30,10 @@ pub mod host;
 pub mod registry;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
-pub use executor::SortExecutor;
-pub use host::{spawn as spawn_device_host, DeviceHandle};
+pub use executor::{ExecutionPlan, SortExecutor};
+pub use host::{
+    spawn as spawn_device_host, spawn_with as spawn_device_host_with, DeviceHandle, HostConfig,
+};
 pub use registry::{Key, Registry};
 
 /// Resolve the artifacts directory used by drivers that do not take an

@@ -11,6 +11,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::util::error::Context;
+use crate::util::threadpool::ThreadPool;
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
 use super::executor::SortExecutor;
@@ -51,15 +52,32 @@ impl Key {
 pub struct Registry {
     manifest: Manifest,
     cache: Mutex<HashMap<Key, Arc<SortExecutor>>>,
+    /// Shared row-parallel execution pool handed to every executor this
+    /// registry loads; `None` ⇒ executors run serially.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Registry {
-    /// Open the artifacts directory (must contain `manifest.tsv`).
+    /// Open the artifacts directory (must contain `manifest.tsv`);
+    /// executors run serially.
     pub fn open(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        Self::open_with_pool(dir, None)
+    }
+
+    /// [`open`](Self::open) with a shared execution pool: every executor
+    /// loaded from this registry sorts its `(B, N)` rows in parallel on
+    /// `pool`. One pool is shared across all size classes on purpose —
+    /// the device-host thread dispatches one batch at a time, so a
+    /// per-class pool would just multiply idle threads.
+    pub fn open_with_pool(
+        dir: impl AsRef<std::path::Path>,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> crate::Result<Self> {
         let manifest = Manifest::load(dir)?;
         Ok(Self {
             manifest,
             cache: Mutex::new(HashMap::new()),
+            pool,
         })
     }
 
@@ -83,7 +101,11 @@ impl Registry {
             .with_context(|| format!("no artifact for {key:?} — re-run `python -m compile.aot`"))?
             .clone();
         let path = self.manifest.path_of(&meta);
-        let exe = Arc::new(SortExecutor::compile(meta, &path)?);
+        let exe = Arc::new(SortExecutor::compile_with_pool(
+            meta,
+            &path,
+            self.pool.clone(),
+        )?);
         let mut cache = self.cache.lock().unwrap();
         Ok(Arc::clone(cache.entry(key).or_insert(exe)))
     }

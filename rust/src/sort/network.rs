@@ -180,6 +180,14 @@ impl Network {
         self.phases().flat_map(Phase::steps)
     }
 
+    /// The flat `(phase_len, stride)` step schedule as an owned list —
+    /// the form the runtime precomputes once per artifact into an
+    /// [`crate::runtime::ExecutionPlan`] at compile time, so the hot
+    /// execute path is a pure walk instead of a per-row re-derivation.
+    pub fn step_schedule(self) -> Vec<Step> {
+        self.steps().collect()
+    }
+
     /// Total number of steps — the paper's `k(k+1)/2` "rounds".
     pub fn step_count(self) -> usize {
         let k = self.log2n() as usize;
@@ -309,6 +317,15 @@ mod tests {
                 assert_eq!(net.step_pairs(s).len(), 4);
             }
         }
+    }
+
+    #[test]
+    fn step_schedule_matches_iterator() {
+        let net = Network::new(1 << 10);
+        let owned = net.step_schedule();
+        let iterated: Vec<Step> = net.steps().collect();
+        assert_eq!(owned, iterated);
+        assert_eq!(owned.len(), net.step_count());
     }
 
     #[test]

@@ -4,6 +4,20 @@
 //! Jobs are `FnOnce() + Send` closures delivered over a bounded channel —
 //! the bound is the first backpressure stage of the coordinator (see
 //! `coordinator::backpressure` for the policy layer on top).
+//!
+//! Two dispatch styles:
+//!
+//! * [`ThreadPool::submit`] / [`ThreadPool::try_submit`] — fire-and-forget
+//!   `'static` jobs (the service's request path).
+//! * [`ThreadPool::run_scoped`] — a batch of jobs that may **borrow the
+//!   caller's stack** (the executor's row-parallel path: tasks hold
+//!   `&mut` row chunks of one `(B, N)` buffer). The call blocks until
+//!   every task finished, which is what makes the borrows sound — the
+//!   same discipline as `std::thread::scope`, enforced by the wait.
+//!
+//! Panics never poison the pool: a panicking job is caught on the worker,
+//! the worker keeps serving, and `run_scoped` reports the panic count to
+//! its caller instead of deadlocking the batch.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -11,6 +25,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A pool task that may borrow from the submitting stack frame; only
+/// [`ThreadPool::run_scoped`] accepts these (it blocks until completion,
+/// which is what keeps the borrows alive long enough).
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
 
 /// Bounded MPMC job queue. `push` blocks when full, `pop` blocks when
 /// empty; `close` wakes everyone and drains.
@@ -39,19 +58,20 @@ impl Queue {
         }
     }
 
-    /// Blocking push. Returns `false` if the queue is closed.
-    fn push(&self, job: Job) -> bool {
+    /// Blocking push. `Err` returns the job when the queue is closed (so
+    /// the caller can still run it inline).
+    fn push(&self, job: Job) -> Result<(), Job> {
         let mut g = self.inner.lock().unwrap();
         while g.jobs.len() >= self.capacity && !g.closed {
             g = self.not_full.wait(g).unwrap();
         }
         if g.closed {
-            return false;
+            return Err(job);
         }
         g.jobs.push_back(job);
         drop(g);
         self.not_empty.notify_one();
-        true
+        Ok(())
     }
 
     /// Non-blocking push. `Err` returns the job when full or closed.
@@ -114,7 +134,12 @@ impl ThreadPool {
                     .name(format!("pool-worker-{i}"))
                     .spawn(move || {
                         while let Some(job) = queue.pop() {
-                            job();
+                            // Contain panics: the worker must survive a
+                            // panicking job and the in-flight count must
+                            // stay balanced, or wait_idle() deadlocks.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
                             in_flight.fetch_sub(1, Ordering::Release);
                         }
                     })
@@ -136,12 +161,81 @@ impl ThreadPool {
 
     /// Blocking submit. Returns `false` if the pool is shut down.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        self.dispatch(Box::new(f)).is_ok()
+    }
+
+    /// Blocking boxed submit; `Err` hands the job back when the pool is
+    /// shut down so the caller can degrade to inline execution.
+    fn dispatch(&self, job: Job) -> Result<(), Job> {
         self.in_flight.fetch_add(1, Ordering::Acquire);
-        let ok = self.queue.push(Box::new(f));
-        if !ok {
-            self.in_flight.fetch_sub(1, Ordering::Release);
+        match self.queue.push(job) {
+            Ok(()) => Ok(()),
+            Err(job) => {
+                self.in_flight.fetch_sub(1, Ordering::Release);
+                Err(job)
+            }
         }
-        ok
+    }
+
+    /// Execute `tasks` on the pool and block until every one finished.
+    ///
+    /// Unlike [`submit`](Self::submit), tasks may borrow from the caller's
+    /// stack (e.g. disjoint `&mut` chunks of one buffer): this call does
+    /// not return before all tasks have run, so no borrow can outlive its
+    /// referent. If the pool is already shut down, tasks run inline on the
+    /// calling thread — the batch still completes.
+    ///
+    /// Panicking tasks are contained: the panic is caught on the worker,
+    /// sibling tasks still run, the pool stays usable, and the number of
+    /// panicked tasks comes back as `Err` so the caller can fail its batch
+    /// cleanly instead of deadlocking.
+    pub fn run_scoped<'env>(&self, tasks: Vec<ScopedJob<'env>>) -> Result<(), usize> {
+        if tasks.is_empty() {
+            return Ok(());
+        }
+        struct ScopeSync {
+            remaining: Mutex<usize>,
+            done: Condvar,
+            panicked: AtomicUsize,
+        }
+        let sync = Arc::new(ScopeSync {
+            remaining: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panicked: AtomicUsize::new(0),
+        });
+        for task in tasks {
+            // SAFETY: extending 'env to 'static is sound because this
+            // function blocks on `sync` until the wrapper below has run
+            // the task (or runs it inline) — the task can never be alive
+            // after 'env ends.
+            let task: ScopedJob<'static> = unsafe {
+                std::mem::transmute::<ScopedJob<'env>, ScopedJob<'static>>(task)
+            };
+            let sync2 = Arc::clone(&sync);
+            let job: Job = Box::new(move || {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err() {
+                    sync2.panicked.fetch_add(1, Ordering::Relaxed);
+                }
+                let mut left = sync2.remaining.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    sync2.done.notify_all();
+                }
+            });
+            if let Err(job) = self.dispatch(job) {
+                // Pool shut down between batches: run on the caller.
+                job();
+            }
+        }
+        let mut left = sync.remaining.lock().unwrap();
+        while *left > 0 {
+            left = sync.done.wait(left).unwrap();
+        }
+        drop(left);
+        match sync.panicked.load(Ordering::Acquire) {
+            0 => Ok(()),
+            n => Err(n),
+        }
     }
 
     /// Non-blocking submit; `false` when the queue is full (caller sheds).
@@ -264,6 +358,77 @@ mod tests {
         assert!(pool.in_flight() >= 1 || pool.queued() == 0);
         pool.wait_idle();
         assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn scoped_tasks_borrow_the_stack() {
+        let pool = ThreadPool::new(4, 16);
+        let mut data = vec![0u32; 64];
+        let tasks: Vec<ScopedJob> = data
+            .chunks_mut(16)
+            .map(|chunk| {
+                Box::new(move || {
+                    for x in chunk.iter_mut() {
+                        *x += 1;
+                    }
+                }) as ScopedJob
+            })
+            .collect();
+        pool.run_scoped(tasks).unwrap();
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scoped_panic_fails_batch_cleanly_without_deadlock() {
+        let pool = ThreadPool::new(2, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut tasks: Vec<ScopedJob> = Vec::new();
+        for i in 0..8u64 {
+            let c = Arc::clone(&counter);
+            tasks.push(Box::new(move || {
+                if i % 4 == 0 {
+                    panic!("injected row-task failure");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        // The batch fails (2 of 8 tasks panic) but run_scoped returns —
+        // no deadlocked latch, no dead workers.
+        assert_eq!(pool.run_scoped(tasks), Err(2));
+        assert_eq!(counter.load(Ordering::SeqCst), 6);
+        // And the pool is still fully usable afterwards.
+        let c = Arc::clone(&counter);
+        assert!(pool.submit(move || {
+            c.fetch_add(10, Ordering::SeqCst);
+        }));
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn worker_survives_panicking_direct_job() {
+        let pool = ThreadPool::new(1, 4);
+        pool.submit(|| panic!("die"));
+        pool.wait_idle();
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.submit(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_on_shut_down_pool_runs_inline() {
+        let pool = ThreadPool::new(1, 1);
+        pool.queue.close();
+        let mut hits = 0u32;
+        let tasks: Vec<ScopedJob> = vec![Box::new(|| hits += 1) as ScopedJob];
+        // hits is borrowed mutably by the task; run_scoped's blocking
+        // semantics make this legal even though execution is inline here.
+        pool.run_scoped(tasks).unwrap();
+        assert_eq!(hits, 1);
     }
 
     #[test]

@@ -116,6 +116,7 @@ fn every_request_answered_exactly_once_and_sorted() {
                         id: i as u64,
                         keys: keys.clone(),
                         descending: *desc,
+                        slo: None,
                     })
                 })
                 .collect();
@@ -146,6 +147,64 @@ fn every_request_answered_exactly_once_and_sorted() {
                 // Exactly once: a second recv must fail (sender dropped).
                 if rx.recv().is_ok() {
                     return Err(format!("request {i} answered twice"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn invariants_hold_with_shared_worker_pool() {
+    // The exactly-once/sorted invariants must survive the work-stealing
+    // scheduler when workers outnumber size classes (threads > classes).
+    let strategy = WorkloadStrategy {
+        max_requests: 40,
+        max_len: 700,
+    };
+    check_with(
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        &strategy,
+        |w| {
+            let svc = Service::new(
+                vec![
+                    Arc::new(Mock { batch: 4, n: 64 }) as Arc<dyn BatchSorter>,
+                    Arc::new(Mock { batch: 8, n: 256 }) as Arc<dyn BatchSorter>,
+                ],
+                ServiceConfig {
+                    threads: 4,
+                    ..ServiceConfig::default()
+                },
+            );
+            let rxs: Vec<_> = w
+                .requests
+                .iter()
+                .enumerate()
+                .map(|(i, (keys, desc))| {
+                    svc.submit(SortRequest {
+                        id: i as u64,
+                        keys: keys.clone(),
+                        descending: *desc,
+                        slo: None,
+                    })
+                })
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let rx = rx.map_err(|_| format!("request {i} shed unexpectedly"))?;
+                let resp = rx
+                    .recv()
+                    .map_err(|_| format!("request {i} never answered"))?;
+                let (keys, desc) = &w.requests[i];
+                let mut want = keys.clone();
+                want.sort_unstable();
+                if *desc {
+                    want.reverse();
+                }
+                if resp.keys != want {
+                    return Err(format!("request {i}: wrong output"));
                 }
             }
             Ok(())
@@ -288,6 +347,7 @@ fn responses_preserve_multisets_under_concurrency() {
                                 id: i as u64,
                                 keys: keys.clone(),
                                 descending: *desc,
+                                slo: None,
                             })
                             .map_err(|_| "shed".to_string())?;
                         let mut want = keys.clone();

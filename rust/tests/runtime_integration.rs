@@ -151,6 +151,28 @@ fn f32_and_i32_artifacts_work() {
 }
 
 #[test]
+fn pooled_host_bit_exact_with_serial_host() {
+    // The row-parallel device host must agree bit-for-bit with the
+    // serial one over the real artifacts.
+    let Some(dir) = artifacts_dir() else { return };
+    let (serial, manifest) = spawn_device_host(&dir).unwrap();
+    let (pooled, _) = bitonic_tpu::runtime::spawn_device_host_with(
+        &dir,
+        bitonic_tpu::runtime::HostConfig { threads: 4 },
+    )
+    .unwrap();
+    let mut gen = Generator::new(0x9A11E7);
+    for meta in manifest.size_classes(Variant::Optimized) {
+        let rows = gen.u32s(meta.batch * meta.n, Distribution::Uniform);
+        let a = serial.sort_u32(Key::of(meta), rows.clone()).unwrap();
+        let b = pooled.sort_u32(Key::of(meta), rows).unwrap();
+        assert_eq!(a, b, "{}", meta.name);
+    }
+    serial.shutdown();
+    pooled.shutdown();
+}
+
+#[test]
 fn wrong_buffer_size_rejected() {
     let Some(dir) = artifacts_dir() else { return };
     let (handle, manifest) = spawn_device_host(&dir).unwrap();

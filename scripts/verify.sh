@@ -10,6 +10,22 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Bench smoke, time-bounded: the coordinator bench drives the real
+# work-stealing scheduler and the row-parallel executor end to end, so a
+# scheduler regression (deadlock, starvation, lost wakeup) fails here
+# with a kill instead of hanging CI silently. CI runs this as its own
+# step and sets SKIP_BENCH_SMOKE=1 here to avoid the double run.
+if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
+    echo "== bench smoke: coordinator (timeout-bounded) =="
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL 300 cargo bench --bench coordinator
+    else
+        cargo bench --bench coordinator
+    fi
+else
+    echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
+fi
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --all -- --check
