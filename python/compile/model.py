@@ -4,7 +4,10 @@ Layer-1 Pallas kernels.
 A *plan* is the sequence of launches (pallas_calls) a variant executes for
 a given row length — the Python mirror of ``rust/src/sort/network.rs``
 ``Network::launches`` (the two enumerations are asserted equal in tests on
-both sides via the closed forms). ``sort()`` folds the plan over the input.
+both sides via the closed forms and a checked-in golden table). Planning
+itself lives in the jax-free ``compile.planner`` (re-exported here), so
+the parity guard runs without jax; ``sort()`` folds the plan over the
+input.
 
 Variants (paper Table 1 columns):
 
@@ -22,106 +25,22 @@ for the measured effect.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 
 from .kernels import bitonic as kb
-
-VARIANTS = ("basic", "semi", "optimized")
-
-#: Default VMEM tile width (keys per row per tile) for the fused stages.
-#: §Perf L1 iteration 1: 256 → 4096 cut interpret-mode launches ~2× and
-#: measured 2.3–3.6× faster at n=2^16 (EXPERIMENTS.md §Perf); 4096 u32
-#: keys/row × batch 8 × in+out = 256 KiB — 1.6% of a TPU core's 16 MiB
-#: VMEM (analysis.py), and exactly the K10's 48 KiB/2/4B shared-memory
-#: tile from the paper's own configuration.
-DEFAULT_BLOCK = 4096
-
-
-# ----------------------------------------------------------------------
-# Launch plan
-# ----------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class GlobalStep:
-    """One global compare-exchange pass (paper §3.3)."""
-
-    phase_len: int
-    stride: int
-
-
-@dataclass(frozen=True)
-class GlobalDoubleStep:
-    """Two register-paired global steps in one pass (paper §4.2)."""
-
-    phase_len: int
-    stride_hi: int
-
-
-@dataclass(frozen=True)
-class BlockFused:
-    """In-VMEM fused stage covering phases [phase_lo..phase_hi] (§4.1)."""
-
-    phase_lo: int
-    phase_hi: int
-    stride_max: int
-    paired: bool
-
-
-Launch = GlobalStep | GlobalDoubleStep | BlockFused
-
-
-def plan(n: int, variant: str, block: int = DEFAULT_BLOCK) -> Iterator[Launch]:
-    """The launch schedule for sorting rows of length ``n``.
-
-    Mirrors ``rust/src/sort/network.rs::Network::launches`` exactly.
-    """
-    if n < 2 or n & (n - 1):
-        raise ValueError(f"n must be a power of two >= 2, got {n}")
-    if variant not in VARIANTS:
-        raise ValueError(f"unknown variant {variant!r}")
-    block = min(block, n)
-
-    if variant == "basic":
-        k = 2
-        while k <= n:
-            j = k // 2
-            while j >= 1:
-                yield GlobalStep(k, j)
-                j //= 2
-            k *= 2
-        return
-
-    paired = variant == "optimized"
-    # Presort: every phase up to `block` runs inside the tile.
-    yield BlockFused(2, block, block // 2, paired)
-    k = 2 * block
-    while k <= n:
-        j = k // 2
-        if paired:
-            while j >= 2 * block:
-                yield GlobalDoubleStep(k, j)
-                j //= 4
-        while j >= block:
-            yield GlobalStep(k, j)
-            j //= 2
-        yield BlockFused(k, k, block // 2, paired)
-        k *= 2
-
-
-def launch_counts(n: int, variant: str, block: int = DEFAULT_BLOCK):
-    """(launches, global_passes) — the two quantities the paper optimizes.
-
-    Every launch is exactly one read+write pass over the array, so the two
-    numbers coincide; they are reported separately because the simulator
-    charges them differently (latency vs bandwidth).
-    """
-    launches = list(plan(n, variant, block))
-    return len(launches), len(launches)
+from .planner import (  # noqa: F401  (re-exported public surface)
+    DEFAULT_BLOCK,
+    VARIANTS,
+    BlockFused,
+    GlobalDoubleStep,
+    GlobalStep,
+    Launch,
+    launch_counts,
+    merge_plan,
+    plan,
+)
 
 
 # ----------------------------------------------------------------------
@@ -177,31 +96,6 @@ def make_sort_fn(variant: str, *, block: int = DEFAULT_BLOCK,
 # ----------------------------------------------------------------------
 # Bitonic merge (the paper §3's core primitive, exported standalone)
 # ----------------------------------------------------------------------
-
-
-def merge_plan(n: int, variant: str, block: int = DEFAULT_BLOCK):
-    """Launches of the *final phase only* (k = n): merging one bitonic
-    row of length n into sorted order. log2(n) steps instead of the full
-    network's k(k+1)/2 — this is what makes merge trees cheap."""
-    if n < 2 or n & (n - 1):
-        raise ValueError(f"n must be a power of two >= 2, got {n}")
-    block = min(block, n)
-    k = n
-    j = k // 2
-    paired = variant == "optimized"
-    if variant == "basic":
-        while j >= 1:
-            yield GlobalStep(k, j)
-            j //= 2
-        return
-    if paired:
-        while j >= 2 * block:
-            yield GlobalDoubleStep(k, j)
-            j //= 4
-    while j >= block:
-        yield GlobalStep(k, j)
-        j //= 2
-    yield BlockFused(k, k, block // 2, paired)
 
 
 def merge_sorted_halves(x, variant: str = "optimized", *,

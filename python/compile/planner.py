@@ -1,0 +1,146 @@
+"""Launch planning for the bitonic network — **jax-free on purpose**.
+
+A *plan* is the sequence of launches (``pallas_call``s) a variant executes
+for a given row length — the Python mirror of
+``rust/src/sort/network.rs::Network::launches`` / ``merge_launches``. It
+lives apart from the jax model (``compile.model`` re-exports everything
+here) so the rust/python parity guard (``tests/test_launch_parity.py`` vs
+``rust/tests/launch_parity.rs``, both pinned to the checked-in golden
+table) runs even where jax is not installed — CI installs only
+numpy+pytest, and a planner drift must fail there, not skip.
+
+Variants (paper Table 1 columns):
+
+* ``basic``      — §3.3: one launch per compare-exchange step.
+* ``semi``       — §4.1 (optimization 1): in-VMEM fused stages.
+* ``optimized``  — §4.1 + §4.2 (optimizations 1 and 2): fused stages plus
+                   register-paired double steps for the global stage.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+VARIANTS = ("basic", "semi", "optimized")
+
+#: Default VMEM tile width (keys per row per tile) for the fused stages.
+#: §Perf L1 iteration 1: 256 → 4096 cut interpret-mode launches ~2× and
+#: measured 2.3–3.6× faster at n=2^16 (EXPERIMENTS.md §Perf); 4096 u32
+#: keys/row × batch 8 × in+out = 256 KiB — 1.6% of a TPU core's 16 MiB
+#: VMEM (analysis.py), and exactly the K10's 48 KiB/2/4B shared-memory
+#: tile from the paper's own configuration. The rust native executor uses
+#: the same value (``runtime::DEFAULT_PLAN_BLOCK``).
+DEFAULT_BLOCK = 4096
+
+
+@dataclass(frozen=True)
+class GlobalStep:
+    """One global compare-exchange pass (paper §3.3)."""
+
+    phase_len: int
+    stride: int
+
+
+@dataclass(frozen=True)
+class GlobalDoubleStep:
+    """Two register-paired global steps in one pass (paper §4.2)."""
+
+    phase_len: int
+    stride_hi: int
+
+
+@dataclass(frozen=True)
+class BlockFused:
+    """In-VMEM fused stage covering phases [phase_lo..phase_hi] (§4.1)."""
+
+    phase_lo: int
+    phase_hi: int
+    stride_max: int
+    paired: bool
+
+
+Launch = GlobalStep | GlobalDoubleStep | BlockFused
+
+
+def _phase_tail(k: int, block: int, paired: bool) -> Iterator[Launch]:
+    """Launches of one post-presort phase ``k``: paired global doubles
+    while both strides stay >= block (opt 2), single global steps down to
+    ``block``, then the in-block fused tail (opt 1). Shared by ``plan``
+    (every phase k > block) and ``merge_plan`` (exactly this at k = n) so
+    the two cannot drift — mirrors ``phase_tail_launches`` in
+    ``rust/src/sort/network.rs``."""
+    j = k // 2
+    if paired:
+        while j >= 2 * block:
+            yield GlobalDoubleStep(k, j)
+            j //= 4
+    while j >= block:
+        yield GlobalStep(k, j)
+        j //= 2
+    yield BlockFused(k, k, block // 2, paired)
+
+
+def plan(n: int, variant: str, block: int = DEFAULT_BLOCK) -> Iterator[Launch]:
+    """The launch schedule for sorting rows of length ``n``.
+
+    Mirrors ``rust/src/sort/network.rs::Network::launches`` exactly.
+    """
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"n must be a power of two >= 2, got {n}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    if block < 2 or block & (block - 1):
+        raise ValueError(f"block must be a power of two >= 2, got {block}")
+    block = min(block, n)
+
+    if variant == "basic":
+        k = 2
+        while k <= n:
+            j = k // 2
+            while j >= 1:
+                yield GlobalStep(k, j)
+                j //= 2
+            k *= 2
+        return
+
+    paired = variant == "optimized"
+    # Presort: every phase up to `block` runs inside the tile.
+    yield BlockFused(2, block, block // 2, paired)
+    k = 2 * block
+    while k <= n:
+        yield from _phase_tail(k, block, paired)
+        k *= 2
+
+
+def merge_plan(n: int, variant: str, block: int = DEFAULT_BLOCK):
+    """Launches of the *final phase only* (k = n): merging one bitonic
+    row of length n into sorted order. log2(n) steps instead of the full
+    network's k(k+1)/2 — this is what makes merge trees cheap. The fused
+    grouping is structurally ``_phase_tail`` at k = n, the same helper
+    ``plan`` folds over every post-presort phase."""
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"n must be a power of two >= 2, got {n}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}")
+    if block < 2 or block & (block - 1):
+        raise ValueError(f"block must be a power of two >= 2, got {block}")
+    block = min(block, n)
+    if variant == "basic":
+        j = n // 2
+        while j >= 1:
+            yield GlobalStep(n, j)
+            j //= 2
+        return
+    yield from _phase_tail(n, block, variant == "optimized")
+
+
+def launch_counts(n: int, variant: str, block: int = DEFAULT_BLOCK):
+    """(launches, global_passes) — the two quantities the paper optimizes.
+
+    Every launch is exactly one read+write pass over the array, so the two
+    numbers coincide; they are reported separately because the simulator
+    charges them differently (latency vs bandwidth).
+    """
+    launches = list(plan(n, variant, block))
+    return len(launches), len(launches)

@@ -1,0 +1,56 @@
+"""Parity guard (python side): ``compile.planner.plan`` / ``merge_plan``
+(re-exported by ``compile.model`` for the jax layer) must agree with the
+checked-in golden launch-count table that ``rust/tests/launch_parity.rs``
+pins ``Network::launches`` / ``merge_launches`` against — so the Pallas
+planner, the simulator, and the native executor cannot drift apart
+silently. The planner is deliberately jax-free, so this guard runs in
+the numpy+pytest-only CI environment too (no skips)."""
+
+import os
+
+import pytest
+
+from compile import planner
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+    "launch_counts_golden.tsv",
+)
+
+
+def golden_rows():
+    with open(GOLDEN) as f:
+        lines = [l.rstrip("\n") for l in f if l.strip()]
+    assert lines[0] == "kind\tvariant\tn\tblock\tlaunches"
+    for line in lines[1:]:
+        kind, variant, n, block, launches = line.split("\t")
+        yield kind, variant, int(n), int(block), int(launches)
+
+
+def test_golden_table_is_complete():
+    assert sum(1 for _ in golden_rows()) == 48  # 8 shapes x 3 variants x 2 blocks
+
+
+@pytest.mark.parametrize("kind,variant,n,block,want", list(golden_rows()))
+def test_plan_launch_counts_match_golden(kind, variant, n, block, want):
+    if kind == "sort":
+        got = len(list(planner.plan(n, variant, block)))
+    else:
+        got = len(list(planner.merge_plan(n, variant, block)))
+    assert got == want, (
+        f"{kind} {variant} n={n} block={block}: python plans {got} launches, "
+        f"golden (and rust) say {want}"
+    )
+
+
+def test_model_reexports_planner():
+    """The jax model must serve the exact same planner objects, so the
+    parity pinned here covers what ``sort()``/``merge_sorted_halves()``
+    actually fold over."""
+    try:
+        from compile import model
+    except ImportError:  # works on every pytest version, unlike
+        pytest.skip("jax not installed")  # importorskip(exc_type=...)
+    assert model.plan is planner.plan
+    assert model.merge_plan is planner.merge_plan
+    assert model.DEFAULT_BLOCK == planner.DEFAULT_BLOCK

@@ -11,7 +11,7 @@ use bitonic_tpu::bench::Bench;
 use bitonic_tpu::coordinator::{
     BatchSorter, BatcherConfig, Service, ServiceConfig, SortRequest,
 };
-use bitonic_tpu::runtime::{default_artifacts_dir, Key, Registry};
+use bitonic_tpu::runtime::{default_artifacts_dir, Key, PlanConfig, Registry};
 use bitonic_tpu::sort::bitonic_sort;
 use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::util::table::{fmt_ms, Table};
@@ -206,7 +206,8 @@ fn main() {
         } else {
             None
         };
-        let registry = Registry::open_with_pool(&dir, pool).expect("open artifacts");
+        let registry =
+            Registry::open_with_pool(&dir, pool, PlanConfig::default()).expect("open artifacts");
         let exe = registry.get(Key::of(&meta)).expect("compile artifact");
         let m = bench.run_with_setup(
             &format!("threads={threads}"),

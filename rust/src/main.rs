@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
-use bitonic_tpu::runtime::{spawn_device_host, spawn_device_host_with, HostConfig, Key};
+use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, Key, PlanConfig};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
 use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort};
@@ -40,6 +40,16 @@ fn main() -> bitonic_tpu::Result<()> {
             "threads",
             "worker threads: bitonic-par chunks, device-host row pool, serve workers",
             Some("8"),
+        )
+        .opt(
+            "plan-variant",
+            "executor launch fusion: basic|semi|optimized (paper §4 optimizations)",
+            Some("optimized"),
+        )
+        .opt(
+            "plan-block",
+            "executor fused-tile block in keys (power of two >= 2)",
+            Some("4096"),
         )
         .opt("seed", "workload seed", Some("42"))
         .flag("verbose", "more output");
@@ -68,6 +78,19 @@ fn artifacts_dir(args: &bitonic_tpu::util::cli::Args) -> std::path::PathBuf {
         .unwrap_or_else(bitonic_tpu::runtime::default_artifacts_dir)
 }
 
+/// `--plan-variant`/`--plan-block`: how the native executor compiles its
+/// launch programs (which of the paper's §4 optimizations run).
+fn plan_config(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<PlanConfig> {
+    let variant = Variant::parse(&args.get_or("plan-variant", "optimized"))
+        .ok_or_else(|| bitonic_tpu::err!("bad --plan-variant (basic|semi|optimized)"))?;
+    let block: usize = args.parsed_or("plan-block", bitonic_tpu::runtime::DEFAULT_PLAN_BLOCK)?;
+    bitonic_tpu::ensure!(
+        block.is_power_of_two() && block >= 2,
+        "--plan-block must be a power of two >= 2, got {block}"
+    );
+    Ok(PlanConfig { variant, block })
+}
+
 fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
@@ -86,7 +109,14 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         "hybrid" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
                 .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-            let (handle, manifest) = spawn_device_host(artifacts_dir(args))?;
+            let threads: usize = args.parsed_or("threads", 8)?;
+            let (handle, manifest) = spawn_device_host_with(
+                artifacts_dir(args),
+                HostConfig {
+                    threads,
+                    plan: plan_config(args)?,
+                },
+            )?;
             let sorter =
                 bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?;
             let stats = sorter.sort(&mut keys)?;
@@ -99,8 +129,13 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
                 .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
             let threads: usize = args.parsed_or("threads", 8)?;
-            let (handle, manifest) =
-                spawn_device_host_with(artifacts_dir(args), HostConfig { threads })?;
+            let (handle, manifest) = spawn_device_host_with(
+                artifacts_dir(args),
+                HostConfig {
+                    threads,
+                    plan: plan_config(args)?,
+                },
+            )?;
             let padded = n.next_power_of_two();
             let meta = manifest
                 .size_classes(variant)
@@ -132,8 +167,13 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
     // One pool on the device host (row-parallel execute) and the same
     // knob for the service's work-stealing worker count.
-    let (handle, manifest) =
-        spawn_device_host_with(artifacts_dir(args), HostConfig { threads })?;
+    let (handle, manifest) = spawn_device_host_with(
+        artifacts_dir(args),
+        HostConfig {
+            threads,
+            plan: plan_config(args)?,
+        },
+    )?;
     println!(
         "warming {} artifacts… ({threads} executor/service threads)",
         manifest.size_classes(variant).len()
@@ -317,7 +357,9 @@ fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> 
 fn cmd_analyze(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let net = Network::new(n.next_power_of_two());
-    let block = 4096;
+    // Same knob the executor compiles its plans at, so the structural
+    // numbers printed here are the ones the native path actually pays.
+    let block = plan_config(args)?.block;
     let mut t = Table::new(vec!["variant", "launches", "hbm passes", "vs basic"]);
     let basic_launches = net.launches(Variant::Basic, block).len() as f64;
     for v in Variant::ALL {

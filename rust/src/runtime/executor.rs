@@ -9,13 +9,20 @@
 //! * **Plan (compile time).** [`SortExecutor::compile`] loads and
 //!   validates the artifact's HLO text (dtype+shape token and module
 //!   sanity — catching manifest/file drift at load time, exactly where
-//!   PJRT compilation would fail) and precomputes the full network
-//!   schedule — the `(phase_len, stride)` step list from
-//!   [`crate::sort::network`] — into an [`ExecutionPlan`]. This happens
-//!   once per artifact, cached by the registry.
+//!   PJRT compilation would fail) and compiles a **launch program** —
+//!   [`Network::launches`] / [`Network::merge_launches`] at a
+//!   configurable [`PlanConfig`] `{ variant, block }` — into an
+//!   [`ExecutionPlan`]. This happens once per artifact, cached by the
+//!   registry. The default plan is `Optimized` at an L1-sized block, so
+//!   the executor runs the paper's two §4 optimizations natively:
+//!   `BlockFused` launches keep a cache-resident tile hot across all
+//!   small strides (one read+write of the row per fused group instead of
+//!   one per step), and `GlobalDoubleStep` launches pair two global
+//!   strides in registers, halving the remaining full-row passes.
 //! * **Execute (request time).** The `sort_*` entry points are a pure
-//!   walk over the plan: no schedule re-derivation per row per call.
-//!   When the executor holds a shared [`ThreadPool`] (threaded through
+//!   walk over the launch program via [`crate::sort::network::run_launch`]:
+//!   no schedule re-derivation per row per call. When the executor holds
+//!   a shared [`ThreadPool`] (threaded through
 //!   [`crate::runtime::Registry`] from the device-host config), the
 //!   `(B, N)` buffer is partitioned into row-chunk tasks dispatched via
 //!   [`ThreadPool::run_scoped`], so rows sort in parallel — the CPU
@@ -33,57 +40,100 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::sort::bitonic::compare_exchange_step;
-use crate::sort::network::{Network, Phase, Step};
+use crate::sort::network::{run_launch_counting, Launch, Network, Variant};
 use crate::sort::SortKey;
 use crate::util::error::Context;
 use crate::util::threadpool::{ScopedJob, ThreadPool};
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype};
 
-/// The precompiled execution schedule of one artifact: the exact
-/// compare-exchange step list the bitonic network prescribes, plus the
-/// pre/post row transforms the artifact kind and direction require.
-/// Plain data, `Sync` — shared read-only by every row task. This is the
-/// seam a future PJRT backend replaces: planning stays, the walk becomes
-/// a device dispatch.
+/// Default fused-tile block for native execution, in keys: 4096 u32 keys
+/// = 16 KiB — half of a typical 32 KiB L1d, leaving room for the stack
+/// and prefetch; also exactly `python/compile/model.py::DEFAULT_BLOCK`
+/// (the paper's K10 48 KiB shared-memory tile: 48 KiB / 2 buffers / 4 B).
+pub const DEFAULT_PLAN_BLOCK: usize = 4096;
+
+/// How [`ExecutionPlan`] compiles the network into launches — which of
+/// the paper's §4 optimizations the native executor runs, and the fused
+/// tile size. The plan-level analogue of picking a kernel variant on the
+/// GPU; `Variant::Basic` degenerates to the serial one-pass-per-step walk
+/// (the reference schedule the property tests compare against).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanConfig {
+    /// Launch-fusion variant (paper Table 1 columns).
+    pub variant: Variant,
+    /// Fused-tile capacity in keys (power of two >= 2); clamped to the
+    /// row length at compile time.
+    pub block: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Optimized,
+            block: DEFAULT_PLAN_BLOCK,
+        }
+    }
+}
+
+/// The compiled launch program of one artifact: the exact pass sequence
+/// ([`Launch`] list) the configured variant executes, plus the pre/post
+/// row transforms the artifact kind and direction require. Plain data,
+/// `Sync` — shared read-only by every row task. This is the seam a
+/// future PJRT backend replaces: planning stays, the walk becomes a
+/// device dispatch.
 #[derive(Clone, Debug)]
 pub struct ExecutionPlan {
     /// Row length `n` the plan was built for.
     n: usize,
-    /// Reverse the row's second half before the steps (merge artifacts:
-    /// two ascending halves form a bitonic sequence).
+    /// Reverse the row's second half before the launches (merge
+    /// artifacts: two ascending halves form a bitonic sequence).
     reverse_tail: bool,
-    /// `(phase_len, stride)` steps, execution order.
-    steps: Vec<Step>,
-    /// Reverse the whole row after the steps (descending artifacts).
+    /// Launch program, execution order. Expanding each launch via
+    /// [`Launch::steps`] reproduces the flat `(phase_len, stride)`
+    /// schedule exactly (the invariant pinned in `sort::network` tests).
+    launches: Vec<Launch>,
+    /// Reverse the whole row after the launches (descending artifacts).
     reverse_output: bool,
+    /// The configuration the program was compiled at.
+    config: PlanConfig,
 }
 
 impl ExecutionPlan {
-    /// Precompute the schedule for an artifact shape. For `Sort` this is
-    /// the full network; for `Merge` only the final merge phase
-    /// (`log2(n)` steps — the paper §3 primitive, not a full re-sort).
+    /// Compile the default launch program ([`PlanConfig::default`]:
+    /// `Optimized`, L1-sized block) for an artifact shape.
     pub fn new(kind: ArtifactKind, n: usize, descending: bool) -> Self {
+        Self::with_config(kind, n, descending, PlanConfig::default())
+    }
+
+    /// Compile the launch program for an artifact shape at an explicit
+    /// [`PlanConfig`]. For `Sort` the program covers the full network;
+    /// for `Merge` only the final merge phase (`log2(n)` steps — the
+    /// paper §3 primitive, not a full re-sort).
+    pub fn with_config(kind: ArtifactKind, n: usize, descending: bool, config: PlanConfig) -> Self {
         assert!(
             n.is_power_of_two(),
             "execution plans require a power-of-two row length, got {n}"
         );
-        let (reverse_tail, steps) = if n < 2 {
+        let (reverse_tail, launches) = if n < 2 {
             (false, Vec::new())
         } else {
             match kind {
-                ArtifactKind::Sort => (false, Network::new(n).step_schedule()),
+                ArtifactKind::Sort => (false, Network::new(n).launches(config.variant, config.block)),
                 // phase_len = n ⇒ every pair compares ascending
                 // (i & n == 0 for all i < n).
-                ArtifactKind::Merge => (true, Phase { len: n }.steps().collect()),
+                ArtifactKind::Merge => (
+                    true,
+                    Network::new(n).merge_launches(config.variant, config.block),
+                ),
             }
         };
         Self {
             n,
             reverse_tail,
-            steps,
+            launches,
             reverse_output: descending,
+            config,
         }
     }
 
@@ -92,22 +142,57 @@ impl ExecutionPlan {
         self.n
     }
 
-    /// Number of compare-exchange steps the plan walks per row.
+    /// The configuration the launch program was compiled at.
+    pub fn config(&self) -> PlanConfig {
+        self.config
+    }
+
+    /// Number of compare-exchange steps the plan covers per row (the
+    /// network's step count — independent of fusion).
     pub fn step_count(&self) -> usize {
-        self.steps.len()
+        self.launches.iter().map(Launch::step_count).sum()
+    }
+
+    /// Number of launches = full-row read+write passes over memory per
+    /// row — the quantity the paper's two optimizations minimise (the
+    /// pre/post reversal copies are excluded: they are identical across
+    /// configurations of the same artifact). `Basic` pays one pass per
+    /// step; `Semi`/`Optimized` strictly fewer once `n > block`.
+    pub fn global_passes(&self) -> usize {
+        self.launches.iter().map(Launch::global_passes).sum()
     }
 
     /// Execute the plan over one row of length [`Self::n`].
     pub fn run_row<T: SortKey>(&self, row: &mut [T]) {
+        self.run_row_counting(row);
+    }
+
+    /// [`run_row`](Self::run_row), returning the number of full-row
+    /// memory passes actually performed, measured inside the interpreter
+    /// (elements streamed per launch — one tile per outer tile iteration
+    /// for fused launches — divided by the row length; see
+    /// [`crate::sort::network::run_launch_counting`]). This is the
+    /// instrumented entry the pass-count tests and the ablation bench
+    /// assert equals the static [`global_passes`](Self::global_passes):
+    /// the two are computed independently, so an interpreter regression
+    /// that re-streams the row (or skips part of it) breaks the equality.
+    pub fn run_row_counting<T: SortKey>(&self, row: &mut [T]) -> usize {
         debug_assert_eq!(row.len(), self.n);
         if self.reverse_tail && self.n >= 2 {
             row[self.n / 2..].reverse();
         }
-        for s in &self.steps {
-            compare_exchange_step(row, s.phase_len, s.stride);
+        let mut streamed = 0;
+        for l in &self.launches {
+            streamed += run_launch_counting(row, l);
         }
         if self.reverse_output {
             row.reverse();
+        }
+        if self.launches.is_empty() {
+            0
+        } else {
+            debug_assert_eq!(streamed % self.n, 0);
+            streamed / self.n
         }
     }
 }
@@ -125,19 +210,23 @@ pub struct SortExecutor {
 }
 
 impl SortExecutor {
-    /// Load and validate `hlo_text_path` for `meta`, serial execution.
-    /// The HLO text must exist, look like an HLO module, and declare the
-    /// dtype + `(batch, n)` shape the manifest promises.
+    /// Load and validate `hlo_text_path` for `meta`, serial execution at
+    /// the default [`PlanConfig`]. The HLO text must exist, look like an
+    /// HLO module, and declare the dtype + `(batch, n)` shape the
+    /// manifest promises.
     pub fn compile(meta: ArtifactMeta, hlo_text_path: &Path) -> crate::Result<Self> {
-        Self::compile_with_pool(meta, hlo_text_path, None)
+        Self::compile_with_pool(meta, hlo_text_path, None, PlanConfig::default())
     }
 
-    /// [`compile`](Self::compile) with a shared execution pool: rows of
-    /// each `(B, N)` batch are sorted in parallel on `pool`.
+    /// [`compile`](Self::compile) with a shared execution pool and an
+    /// explicit plan configuration: rows of each `(B, N)` batch are
+    /// sorted in parallel on `pool`, each walking the launch program
+    /// compiled at `plan`.
     pub fn compile_with_pool(
         meta: ArtifactMeta,
         hlo_text_path: &Path,
         pool: Option<Arc<ThreadPool>>,
+        plan: PlanConfig,
     ) -> crate::Result<Self> {
         crate::ensure!(
             meta.n.is_power_of_two() && meta.batch >= 1,
@@ -145,6 +234,14 @@ impl SortExecutor {
             meta.name,
             meta.batch,
             meta.n
+        );
+        // Reject a bad plan here, on the Result path: Network::launches
+        // asserts the same thing, but that assert would fire inside the
+        // device-host thread and kill it for every subsequent request.
+        crate::ensure!(
+            plan.block.is_power_of_two() && plan.block >= 2,
+            "plan block must be a power of two >= 2, got {}",
+            plan.block
         );
         let text = std::fs::read_to_string(hlo_text_path)
             .with_context(|| format!("reading {hlo_text_path:?} — generate artifacts with `python -m compile.aot` (see README)"))?;
@@ -161,7 +258,7 @@ impl SortExecutor {
             "artifact {} HLO text does not declare {shape} — manifest dtype/shape vs file mismatch",
             meta.name
         );
-        let plan = ExecutionPlan::new(meta.kind, meta.n, meta.descending);
+        let plan = ExecutionPlan::with_config(meta.kind, meta.n, meta.descending, plan);
         Ok(Self {
             meta,
             hlo_bytes: text.len(),
@@ -317,9 +414,162 @@ mod tests {
         let plan = ExecutionPlan::new(ArtifactKind::Sort, 1 << 10, false);
         assert_eq!(plan.step_count(), Network::new(1 << 10).step_count());
         assert_eq!(plan.n(), 1 << 10);
+        assert_eq!(plan.config(), PlanConfig::default());
         // Merge plans walk only the final phase: log2(n) steps.
         let merge = ExecutionPlan::new(ArtifactKind::Merge, 1 << 10, false);
         assert_eq!(merge.step_count(), 10);
+    }
+
+    #[test]
+    fn optimized_plan_slashes_global_passes() {
+        // Acceptance: at the default block, Optimized performs strictly
+        // fewer full-row memory passes than Semi, which performs strictly
+        // fewer than the serial step walk (Basic = one pass per step) —
+        // confirmed both statically and by a pass-counting instrumented
+        // run. At (n=64K, block=4096) the counts are pinned exactly:
+        // 136 → 15 → 11, the numbers ROADMAP records.
+        let at = |variant, n| {
+            ExecutionPlan::with_config(
+                ArtifactKind::Sort,
+                n,
+                false,
+                PlanConfig { variant, block: DEFAULT_PLAN_BLOCK },
+            )
+        };
+        for logn in [14usize, 16] {
+            let n = 1 << logn;
+            let (basic, semi, opt) =
+                (at(Variant::Basic, n), at(Variant::Semi, n), at(Variant::Optimized, n));
+            assert_eq!(basic.global_passes(), Network::new(n).step_count());
+            assert!(
+                opt.global_passes() < semi.global_passes()
+                    && semi.global_passes() < basic.global_passes(),
+                "passes must strictly drop: basic {} semi {} opt {} (n=2^{logn})",
+                basic.global_passes(),
+                semi.global_passes(),
+                opt.global_passes()
+            );
+            // The instrumented run must execute exactly the static count,
+            // and still sort.
+            let mut gen = Generator::new(logn as u64);
+            let mut row = gen.u32s(n, Distribution::Uniform);
+            let executed = opt.run_row_counting(&mut row);
+            assert_eq!(executed, opt.global_passes());
+            assert!(crate::sort::is_sorted(&row));
+        }
+        let n = 1 << 16;
+        assert_eq!(at(Variant::Basic, n).global_passes(), 136);
+        assert_eq!(at(Variant::Semi, n).global_passes(), 15);
+        assert_eq!(at(Variant::Optimized, n).global_passes(), 11);
+    }
+
+    /// Satellite: fused plans must be bit-exact with the serial step-walk
+    /// plan (`Variant::Basic`) across u32/i32/f32 × sort/merge ×
+    /// ascending/descending × block ∈ {4, 64, 1024}, including rows with
+    /// a MAX-padded tail (the coordinator router's padding contract).
+    #[test]
+    fn fused_plans_bit_exact_with_step_walk_all_configs() {
+        fn check<T>(rows_of: &mut dyn FnMut(usize) -> Vec<T>, label: &str)
+        where
+            T: SortKey + PartialEq + std::fmt::Debug,
+        {
+            let batch = 3usize;
+            for kind in [ArtifactKind::Sort, ArtifactKind::Merge] {
+                for descending in [false, true] {
+                    for n in [64usize, 1024] {
+                        for pad in [false, true] {
+                            let mut rows = rows_of(batch * n);
+                            for row in rows.chunks_mut(n) {
+                                if pad {
+                                    for x in &mut row[n - n / 3..] {
+                                        *x = T::MAX_KEY;
+                                    }
+                                }
+                                if kind == ArtifactKind::Merge {
+                                    // Merge contract: halves sorted asc.
+                                    let half = n / 2;
+                                    crate::sort::bitonic::bitonic_sort(&mut row[..half]);
+                                    crate::sort::bitonic::bitonic_sort(&mut row[half..]);
+                                }
+                            }
+                            let walk = ExecutionPlan::with_config(
+                                kind,
+                                n,
+                                descending,
+                                PlanConfig { variant: Variant::Basic, block: DEFAULT_PLAN_BLOCK },
+                            );
+                            let mut want = rows.clone();
+                            for row in want.chunks_mut(n) {
+                                walk.run_row(row);
+                            }
+                            for variant in [Variant::Semi, Variant::Optimized] {
+                                for block in [4usize, 64, 1024] {
+                                    let plan = ExecutionPlan::with_config(
+                                        kind,
+                                        n,
+                                        descending,
+                                        PlanConfig { variant, block },
+                                    );
+                                    let mut got = rows.clone();
+                                    for row in got.chunks_mut(n) {
+                                        plan.run_row(row);
+                                    }
+                                    assert_eq!(
+                                        got, want,
+                                        "{label} {kind:?} desc={descending} n={n} pad={pad} \
+                                         {variant:?} block={block}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut g1 = Generator::new(0xFE11);
+        check(&mut |c| g1.u32s(c, Distribution::DupHeavy), "u32");
+        let mut g2 = Generator::new(0xFE12);
+        check(
+            &mut |c| {
+                g2.u32s(c, Distribution::Uniform)
+                    .into_iter()
+                    .map(|x| x as i32)
+                    .collect()
+            },
+            "i32",
+        );
+        let mut g3 = Generator::new(0xFE13);
+        check(&mut |c| g3.f32s(c, Distribution::Uniform), "f32");
+    }
+
+    #[test]
+    fn fused_executor_bit_exact_with_step_walk_executor_pooled() {
+        // Same property one level up: through SortExecutor::execute with
+        // the row-chunk pool dispatch in the loop.
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let (b, n) = (8usize, 512usize);
+        let mk = |variant, block, pool: Option<Arc<ThreadPool>>| SortExecutor {
+            meta: meta(ArtifactKind::Sort, b, n, Dtype::U32, false),
+            hlo_bytes: 0,
+            plan: ExecutionPlan::with_config(
+                ArtifactKind::Sort,
+                n,
+                false,
+                PlanConfig { variant, block },
+            ),
+            pool,
+        };
+        let mut gen = Generator::new(0xAB5);
+        let rows = gen.u32s(b * n, Distribution::DupHeavy);
+        let want = mk(Variant::Basic, 64, None).sort_u32(rows.clone()).unwrap();
+        for variant in [Variant::Semi, Variant::Optimized] {
+            for block in [4usize, 64, 1024] {
+                let got = mk(variant, block, Some(Arc::clone(&pool)))
+                    .sort_u32(rows.clone())
+                    .unwrap();
+                assert_eq!(got, want, "{variant:?} block={block}");
+            }
+        }
     }
 
     #[test]
@@ -403,6 +653,16 @@ mod tests {
         assert!(exe.hlo_bytes > 0);
         assert_eq!(exe.threads(), 1);
         assert_eq!(exe.plan().step_count(), Network::new(8).step_count());
+
+        // A malformed plan block errors on the Result path instead of
+        // panicking inside the device-host thread later.
+        let bad_plan = SortExecutor::compile_with_pool(
+            meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
+            &good,
+            None,
+            PlanConfig { variant: Variant::Optimized, block: 3 },
+        );
+        assert!(format!("{:#}", bad_plan.unwrap_err()).contains("power of two"));
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 
 use super::artifact::Manifest;
+use super::executor::PlanConfig;
 use super::registry::{Key, Registry};
 use crate::sort::network::Variant;
 
@@ -26,11 +27,18 @@ pub struct HostConfig {
     /// [`ThreadPool`] and every executor sorts its `(B, N)` rows in
     /// parallel on it; `0` or `1` keeps execution serial.
     pub threads: usize,
+    /// Launch-program configuration every executor compiles at (fusion
+    /// variant + fused-tile block); default `Optimized` at the L1-sized
+    /// block. CLI: `--plan-variant` / `--plan-block`.
+    pub plan: PlanConfig,
 }
 
 impl Default for HostConfig {
     fn default() -> Self {
-        Self { threads: 0 }
+        Self {
+            threads: 0,
+            plan: PlanConfig::default(),
+        }
     }
 }
 
@@ -142,7 +150,7 @@ pub fn spawn_with(
         .spawn(move || {
             let pool = (config.threads > 1)
                 .then(|| Arc::new(ThreadPool::new(config.threads, 2 * config.threads)));
-            let registry = match Registry::open_with_pool(&dir, pool) {
+            let registry = match Registry::open_with_pool(&dir, pool, config.plan) {
                 Ok(r) => {
                     let _ = ready_tx.send(Ok(()));
                     r

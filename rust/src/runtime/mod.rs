@@ -30,7 +30,7 @@ pub mod host;
 pub mod registry;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
-pub use executor::{ExecutionPlan, SortExecutor};
+pub use executor::{ExecutionPlan, PlanConfig, SortExecutor, DEFAULT_PLAN_BLOCK};
 pub use host::{
     spawn as spawn_device_host, spawn_with as spawn_device_host_with, DeviceHandle, HostConfig,
 };

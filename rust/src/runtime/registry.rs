@@ -14,7 +14,7 @@ use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
-use super::executor::SortExecutor;
+use super::executor::{PlanConfig, SortExecutor};
 use crate::sort::network::Variant;
 
 /// Cache key for a compiled executable.
@@ -55,29 +55,35 @@ pub struct Registry {
     /// Shared row-parallel execution pool handed to every executor this
     /// registry loads; `None` ⇒ executors run serially.
     pool: Option<Arc<ThreadPool>>,
+    /// Launch-program configuration every executor compiles its
+    /// [`super::ExecutionPlan`] at (variant + fused-tile block).
+    plan: PlanConfig,
 }
 
 impl Registry {
     /// Open the artifacts directory (must contain `manifest.tsv`);
-    /// executors run serially.
+    /// executors run serially at the default [`PlanConfig`].
     pub fn open(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
-        Self::open_with_pool(dir, None)
+        Self::open_with_pool(dir, None, PlanConfig::default())
     }
 
-    /// [`open`](Self::open) with a shared execution pool: every executor
-    /// loaded from this registry sorts its `(B, N)` rows in parallel on
-    /// `pool`. One pool is shared across all size classes on purpose —
-    /// the device-host thread dispatches one batch at a time, so a
-    /// per-class pool would just multiply idle threads.
+    /// [`open`](Self::open) with a shared execution pool and a plan
+    /// configuration: every executor loaded from this registry compiles
+    /// its launch program at `plan` and sorts its `(B, N)` rows in
+    /// parallel on `pool`. One pool is shared across all size classes on
+    /// purpose — the device-host thread dispatches one batch at a time,
+    /// so a per-class pool would just multiply idle threads.
     pub fn open_with_pool(
         dir: impl AsRef<std::path::Path>,
         pool: Option<Arc<ThreadPool>>,
+        plan: PlanConfig,
     ) -> crate::Result<Self> {
         let manifest = Manifest::load(dir)?;
         Ok(Self {
             manifest,
             cache: Mutex::new(HashMap::new()),
             pool,
+            plan,
         })
     }
 
@@ -105,6 +111,7 @@ impl Registry {
             meta,
             &path,
             self.pool.clone(),
+            self.plan,
         )?);
         let mut cache = self.cache.lock().unwrap();
         Ok(Arc::clone(cache.entry(key).or_insert(exe)))

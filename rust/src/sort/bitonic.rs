@@ -32,27 +32,121 @@ pub fn bitonic_sort<T: SortKey>(xs: &mut [T]) {
 #[inline]
 pub fn compare_exchange_step<T: SortKey>(xs: &mut [T], k: usize, j: usize) {
     let n = xs.len();
-    let mut i = 0;
+    compare_exchange_step_range(xs, k, j, 0, n);
+}
+
+/// [`compare_exchange_step`] restricted to `xs[lo..hi)`: only pairs whose
+/// indices both lie in the range are touched. `lo` must be aligned to
+/// `2j` and `hi - lo` a multiple of `2j` (powers of two throughout), so
+/// every pair `(a, a ^ j)` with `a` in range has its partner in range —
+/// the contract the fused-tile interpreter and the chunked parallel sort
+/// rely on. Direction still comes from the *global* index (`i & k`).
+#[inline]
+pub fn compare_exchange_step_range<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(j >= 1 && lo % (2 * j) == 0 && (hi - lo) % (2 * j) == 0 && hi <= xs.len());
     // Iterate i over the "lower partner" indices only: groups of j
     // consecutive lows alternate with j highs, so skip j after every j.
-    while i < n {
-        let ascending = i & k == 0;
+    let mut i = lo;
+    while i < hi {
         // Whole run [i, i+j) shares the same direction when 2j <= k
-        // (always true within a phase), so hoist the branch.
-        for a in i..i + j {
-            let b = a ^ j;
-            let (lo, hi) = (xs[a], xs[b]);
-            let swap = if ascending {
-                hi.total_lt(&lo)
-            } else {
-                lo.total_lt(&hi)
-            };
-            if swap {
-                xs.swap(a, b);
+        // (always true within a phase), so hoist the branch out of the
+        // inner loop; the loop body itself is branchless min/max.
+        if i & k == 0 {
+            for a in i..i + j {
+                let b = a ^ j;
+                let (x, y) = (xs[a], xs[b]);
+                xs[a] = T::key_min(x, y);
+                xs[b] = T::key_max(x, y);
+            }
+        } else {
+            for a in i..i + j {
+                let b = a ^ j;
+                let (x, y) = (xs[a], xs[b]);
+                xs[a] = T::key_max(x, y);
+                xs[b] = T::key_min(x, y);
             }
         }
         i += 2 * j;
     }
+}
+
+/// Two consecutive compare-exchange steps (strides `j_hi`, `j_hi/2`) of
+/// phase `k` in **one pass over memory** — the CPU analogue of the
+/// paper's §4.2 register pairing: each iteration loads the quad
+/// `{a, a+j_lo, a+j_hi, a+j_hi+j_lo}` into locals, performs all four
+/// compare-exchanges of both strides in registers, and stores once.
+///
+/// Exactness: the quad is closed under `^j_hi` and `^j_lo`, so applying
+/// both whole-array steps restricted to each quad is bit-identical to the
+/// two serial sweeps. All four pair directions agree because `2*j_hi <= k`
+/// keeps bit `k` constant across the aligned run `[i, i + 2*j_hi)`.
+#[inline]
+pub fn compare_exchange_double_step<T: SortKey>(xs: &mut [T], k: usize, j_hi: usize) {
+    let n = xs.len();
+    compare_exchange_double_step_range(xs, k, j_hi, 0, n);
+}
+
+/// [`compare_exchange_double_step`] restricted to `xs[lo..hi)`, same
+/// alignment contract as [`compare_exchange_step_range`] (with `2*j_hi`
+/// in place of `2j`).
+#[inline]
+pub fn compare_exchange_double_step_range<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j_hi: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(j_hi >= 2 && 2 * j_hi <= k, "double step needs j_hi >= 2 and 2*j_hi <= k");
+    debug_assert!(lo % (2 * j_hi) == 0 && (hi - lo) % (2 * j_hi) == 0 && hi <= xs.len());
+    let j_lo = j_hi / 2;
+    let mut i = lo;
+    while i < hi {
+        let ascending = i & k == 0;
+        for a in i..i + j_lo {
+            let (b, c) = (a + j_lo, a + j_hi);
+            let d = c + j_lo;
+            let (mut va, mut vb, mut vc, mut vd) = (xs[a], xs[b], xs[c], xs[d]);
+            if ascending {
+                cx_asc(&mut va, &mut vc); // stride j_hi: (a, c)
+                cx_asc(&mut vb, &mut vd); //              (b, d)
+                cx_asc(&mut va, &mut vb); // stride j_lo: (a, b)
+                cx_asc(&mut vc, &mut vd); //              (c, d)
+            } else {
+                cx_desc(&mut va, &mut vc);
+                cx_desc(&mut vb, &mut vd);
+                cx_desc(&mut va, &mut vb);
+                cx_desc(&mut vc, &mut vd);
+            }
+            xs[a] = va;
+            xs[b] = vb;
+            xs[c] = vc;
+            xs[d] = vd;
+        }
+        i += 2 * j_hi;
+    }
+}
+
+/// Branchless in-register compare-exchange, ascending (low gets min).
+#[inline]
+fn cx_asc<T: SortKey>(lo: &mut T, hi: &mut T) {
+    let (a, b) = (*lo, *hi);
+    *lo = T::key_min(a, b);
+    *hi = T::key_max(a, b);
+}
+
+/// Branchless in-register compare-exchange, descending (low gets max).
+#[inline]
+fn cx_desc<T: SortKey>(lo: &mut T, hi: &mut T) {
+    let (a, b) = (*lo, *hi);
+    *lo = T::key_max(a, b);
+    *hi = T::key_min(a, b);
 }
 
 /// Sort any-length input by padding to the next power of two with
@@ -164,6 +258,61 @@ mod tests {
         let mut v = gen.u32s(256, Distribution::Uniform);
         bitonic_sort_desc(&mut v);
         assert!(is_sorted_desc(&v));
+    }
+
+    #[test]
+    fn double_step_bit_exact_with_two_single_steps() {
+        // Walk the full network twice: once pairing consecutive strides
+        // through the register-quad kernel, once as two serial sweeps.
+        // Every intermediate state must agree bit-for-bit.
+        let mut gen = Generator::new(0xD0B1E);
+        for logn in [3usize, 4, 8, 10] {
+            let n = 1 << logn;
+            let data = gen.u32s(n, Distribution::DupHeavy);
+            let mut paired = data.clone();
+            let mut serial = data;
+            for ph in Network::new(n).phases() {
+                let k = ph.len;
+                let mut j = k / 2;
+                while j >= 1 {
+                    if j >= 2 {
+                        compare_exchange_double_step(&mut paired, k, j);
+                        compare_exchange_step(&mut serial, k, j);
+                        compare_exchange_step(&mut serial, k, j / 2);
+                        j /= 4;
+                    } else {
+                        compare_exchange_step(&mut paired, k, j);
+                        compare_exchange_step(&mut serial, k, j);
+                        j = 0;
+                    }
+                    assert_eq!(paired, serial, "n=2^{logn} k={k}");
+                }
+            }
+            assert!(is_sorted(&paired), "n=2^{logn}");
+        }
+    }
+
+    #[test]
+    fn step_range_matches_full_step_on_aligned_tiles() {
+        // Running a small-stride step tile-by-tile must equal the full
+        // sweep: pairs never cross an aligned tile boundary when j < tile.
+        let mut gen = Generator::new(0x7A11);
+        let n = 1 << 10;
+        let k = 1 << 10;
+        for tile in [16usize, 64, 256] {
+            for j in [1usize, 2, tile / 2] {
+                let data = gen.u32s(n, Distribution::Uniform);
+                let mut whole = data.clone();
+                let mut tiled = data;
+                compare_exchange_step(&mut whole, k, j);
+                let mut off = 0;
+                while off < n {
+                    compare_exchange_step_range(&mut tiled, k, j, off, off + tile);
+                    off += tile;
+                }
+                assert_eq!(whole, tiled, "tile={tile} j={j}");
+            }
+        }
     }
 
     #[test]

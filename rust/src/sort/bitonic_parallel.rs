@@ -13,7 +13,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
 
-use super::network::Network;
+use super::network::{run_fused_tail_range, Network};
 use super::SortKey;
 
 /// Sort `xs` ascending in place using `threads` OS threads.
@@ -64,13 +64,12 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
                     let (k, j) = steps[i];
                     if j < chunk {
                         // Local tail: all remaining steps of this phase
-                        // touch only in-chunk pairs; no barriers needed.
-                        let mut jj = j;
-                        while jj >= 1 {
-                            step_range(xs, k, jj, lo, hi);
-                            i += 1;
-                            jj /= 2;
-                        }
+                        // touch only in-chunk pairs; run them through the
+                        // shared fused-tile kernel — the same kernel the
+                        // runtime's BlockFused launches execute — with no
+                        // barriers while the chunk stays cache-resident.
+                        run_fused_tail_range(xs, k, j, lo, hi, true);
+                        i += j.trailing_zeros() as usize + 1;
                         barrier.wait();
                     } else {
                         // Global step: split by pair-group. Thread t takes
@@ -103,19 +102,6 @@ pub fn bitonic_sort_parallel_padded<T: SortKey>(xs: &mut Vec<T>, threads: usize)
     xs.resize(n.next_power_of_two(), T::MAX_KEY);
     bitonic_sort_parallel(xs, threads);
     xs.truncate(n);
-}
-
-/// Compare-exchange pairs whose *both* indices lie in [lo, hi) — valid
-/// when `stride < hi - lo` and `lo` is stride-group aligned.
-fn step_range<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usize) {
-    let mut i = lo;
-    while i < hi {
-        let ascending = i & k == 0;
-        for a in i..i + j {
-            cx(xs, a, a ^ j, ascending);
-        }
-        i += 2 * j;
-    }
 }
 
 /// Compare-exchange pairs whose *low* index lies in [lo, hi) for a stride

@@ -13,6 +13,18 @@
 //! *phases*; phase `p` (1-based) sorts bitonic subsequences of length
 //! `2^p` and consists of `p` *steps* with compare-exchange strides
 //! `2^(p-1), 2^(p-2), …, 1`.
+//!
+//! Besides *generating* schedules, this module also *executes* them: the
+//! launch interpreter ([`run_launch`], [`run_fused_tail_range`]) runs one
+//! [`Launch`] in a single pass over memory — fused tile groups stay
+//! cache-resident, double steps pair strides in registers — and is what
+//! the runtime's [`crate::runtime::ExecutionPlan`] walks per row.
+
+use super::bitonic::{
+    compare_exchange_double_step, compare_exchange_double_step_range, compare_exchange_step,
+    compare_exchange_step_range,
+};
+use super::SortKey;
 
 /// One compare-exchange step: all pairs `(i, i ^ stride)` with direction
 /// decided by bit `phase_len` of `i` (ascending iff `i & phase_len == 0`).
@@ -114,29 +126,52 @@ pub enum Launch {
 }
 
 impl Launch {
-    /// Number of compare-exchange *steps* of the network this launch
-    /// covers.
-    pub fn step_count(&self) -> usize {
+    /// The exact `(phase_len, stride)` steps this launch covers, in
+    /// execution order.
+    ///
+    /// **Invariant (the fusion algebra):** concatenating `steps()` over
+    /// `Network::launches(variant, block)` reproduces
+    /// [`Network::step_schedule`] *exactly* — same steps, same order —
+    /// for every variant and block; likewise [`Network::merge_launches`]
+    /// reproduces the final phase's steps. Fusion only regroups
+    /// consecutive steps into passes, it never reorders them. This is the
+    /// single source of truth for step order: the interpreter
+    /// ([`run_launch`]), [`Launch::step_count`], and the tests all derive
+    /// from this expansion, pinned exhaustively by
+    /// `launch_expansion_reproduces_step_schedule_exactly`.
+    pub fn steps(&self) -> Vec<Step> {
         match *self {
-            Launch::GlobalStep(_) => 1,
-            Launch::GlobalDoubleStep { .. } => 2,
+            Launch::GlobalStep(s) => vec![s],
+            Launch::GlobalDoubleStep {
+                phase_len,
+                stride_hi,
+            } => vec![
+                Step { phase_len, stride: stride_hi },
+                Step { phase_len, stride: stride_hi / 2 },
+            ],
             Launch::BlockFused {
                 phase_lo,
                 phase_hi,
                 stride_max,
                 ..
             } => {
-                // For each covered phase k, the steps with stride <= stride_max.
-                let mut count = 0;
+                // For each covered phase k, the steps with stride <=
+                // stride_max, high to low (a phase's in-block tail).
+                let mut out = Vec::new();
                 let mut k = phase_lo;
                 while k <= phase_hi {
-                    let first = (k / 2).min(stride_max);
-                    count += first.trailing_zeros() as usize + 1;
+                    out.extend(Phase { len: k }.steps().filter(|s| s.stride <= stride_max));
                     k *= 2;
                 }
-                count
+                out
             }
         }
+    }
+
+    /// Number of compare-exchange *steps* of the network this launch
+    /// covers.
+    pub fn step_count(&self) -> usize {
+        self.steps().len()
     }
 
     /// Number of element-passes over *global* memory (HBM) this launch
@@ -181,9 +216,10 @@ impl Network {
     }
 
     /// The flat `(phase_len, stride)` step schedule as an owned list —
-    /// the form the runtime precomputes once per artifact into an
-    /// [`crate::runtime::ExecutionPlan`] at compile time, so the hot
-    /// execute path is a pure walk instead of a per-row re-derivation.
+    /// the reference order the launch fusion must preserve: expanding
+    /// [`Self::launches`] via [`Launch::steps`] reproduces this exactly.
+    /// (The runtime's [`crate::runtime::ExecutionPlan`] compiles the
+    /// *launch* form; `Variant::Basic` degenerates to this walk.)
     pub fn step_schedule(self) -> Vec<Step> {
         self.steps().collect()
     }
@@ -206,7 +242,10 @@ impl Network {
     /// (see `python/compile/model.py::plan`, which mirrors this function)
     /// and the sequence of kernel launches the simulator charges for.
     pub fn launches(self, variant: Variant, block: usize) -> Vec<Launch> {
-        assert!(block.is_power_of_two(), "block must be a power of two");
+        assert!(
+            block.is_power_of_two() && block >= 2,
+            "block must be a power of two >= 2, got {block}"
+        );
         let n = self.n;
         let block = block.min(n);
         let mut out = Vec::new();
@@ -229,35 +268,36 @@ impl Network {
                 // block, then one fused in-block launch for the tail.
                 let mut k = 2 * block;
                 while k <= n {
-                    let mut j = k / 2;
-                    if paired {
-                        // Fuse global steps two-at-a-time while both
-                        // strides stay >= block.
-                        while j >= 2 * block {
-                            out.push(Launch::GlobalDoubleStep {
-                                phase_len: k,
-                                stride_hi: j,
-                            });
-                            j /= 4;
-                        }
-                    }
-                    while j >= block {
-                        out.push(Launch::GlobalStep(Step {
-                            phase_len: k,
-                            stride: j,
-                        }));
-                        j /= 2;
-                    }
-                    out.push(Launch::BlockFused {
-                        phase_lo: k,
-                        phase_hi: k,
-                        stride_max: block / 2,
-                        register_paired: paired,
-                    });
+                    phase_tail_launches(k, block, paired, &mut out);
                     k *= 2;
                 }
             }
         }
+        out
+    }
+
+    /// The launch schedule of the *final phase only* (`phase_len = n`):
+    /// merging one bitonic row into sorted order, `log2(n)` steps instead
+    /// of the full network's `k(k+1)/2`. The Python mirror is
+    /// `python/compile/model.py::merge_plan`; the runtime compiles Merge
+    /// artifacts' [`crate::runtime::ExecutionPlan`]s from this.
+    pub fn merge_launches(self, variant: Variant, block: usize) -> Vec<Launch> {
+        assert!(
+            block.is_power_of_two() && block >= 2,
+            "block must be a power of two >= 2, got {block}"
+        );
+        let n = self.n;
+        let block = block.min(n);
+        let mut out = Vec::new();
+        if variant == Variant::Basic {
+            let mut j = n / 2;
+            while j >= 1 {
+                out.push(Launch::GlobalStep(Step { phase_len: n, stride: j }));
+                j /= 2;
+            }
+            return out;
+        }
+        phase_tail_launches(n, block, variant == Variant::Optimized, &mut out);
         out
     }
 
@@ -274,6 +314,145 @@ impl Network {
             }
         }
         pairs
+    }
+}
+
+/// The launch grouping of one post-presort phase `k` (Semi/Optimized):
+/// paired global double-steps while both strides stay `>= block` (opt 2,
+/// `paired` only), single global steps down to `block`, then the one
+/// in-block fused launch for the `stride < block` tail (opt 1). Shared by
+/// [`Network::launches`] (every phase `k > block`) and
+/// [`Network::merge_launches`] (exactly this at `k = n`) so the "merge is
+/// the final phase only" relationship is structural, not copy-paste —
+/// mirrored by `_phase_tail` in `python/compile/planner.py`.
+fn phase_tail_launches(k: usize, block: usize, paired: bool, out: &mut Vec<Launch>) {
+    let mut j = k / 2;
+    if paired {
+        // Fuse global steps two-at-a-time while both strides stay
+        // >= block (the lower stride of the pair is j/2).
+        while j >= 2 * block {
+            out.push(Launch::GlobalDoubleStep {
+                phase_len: k,
+                stride_hi: j,
+            });
+            j /= 4;
+        }
+    }
+    while j >= block {
+        out.push(Launch::GlobalStep(Step { phase_len: k, stride: j }));
+        j /= 2;
+    }
+    out.push(Launch::BlockFused {
+        phase_lo: k,
+        phase_hi: k,
+        stride_max: block / 2,
+        register_paired: paired,
+    });
+}
+
+// ----------------------------------------------------------------------
+// Launch interpreter — the native-CPU execution of one launch/pass.
+// ----------------------------------------------------------------------
+
+/// Execute one [`Launch`] over a full row, in exactly **one pass over the
+/// row's memory** — the property the paper's two optimizations buy:
+///
+/// * [`Launch::GlobalStep`] — one branchless compare-exchange sweep
+///   ([`compare_exchange_step`]).
+/// * [`Launch::GlobalDoubleStep`] — both strides in registers per quad,
+///   one read+write of the row ([`compare_exchange_double_step`], the
+///   paper §4.2).
+/// * [`Launch::BlockFused`] — the row is cut into aligned tiles of
+///   `2 * stride_max` keys and *all* fused steps run per tile while it is
+///   cache-resident (the paper §4.1 shared-memory stage translated to L1
+///   locality): one read+write of the row for the whole step group.
+///
+/// Bit-exactness with the serial step walk holds because every fused
+/// stride is `< tile`, so tiles are independent across all fused steps
+/// (pairs never cross a tile boundary) and per-tile execution order
+/// equals the flat [`Launch::steps`] order on each tile.
+pub fn run_launch<T: SortKey>(xs: &mut [T], launch: &Launch) {
+    run_launch_counting(xs, launch);
+}
+
+/// [`run_launch`], returning the number of row elements this launch
+/// streamed from row-level ("global") memory: the whole row for a global
+/// launch, and **one tile per outer tile iteration** for `BlockFused` —
+/// the fused steps inside a tile re-touch only cache-resident data and
+/// are deliberately not re-counted. This makes the pass-count
+/// instrumentation real rather than derived from the static launch list:
+/// a structural regression that, say, re-walks the row once per fused
+/// step (tile loop inside the step loop) inflates the streamed count and
+/// fails the `run_row_counting == global_passes` assertions in the
+/// runtime tests and the ablation bench.
+pub fn run_launch_counting<T: SortKey>(xs: &mut [T], launch: &Launch) -> usize {
+    match *launch {
+        Launch::GlobalStep(s) => {
+            compare_exchange_step(xs, s.phase_len, s.stride);
+            xs.len()
+        }
+        Launch::GlobalDoubleStep {
+            phase_len,
+            stride_hi,
+        } => {
+            compare_exchange_double_step(xs, phase_len, stride_hi);
+            xs.len()
+        }
+        Launch::BlockFused {
+            phase_lo,
+            phase_hi,
+            stride_max,
+            register_paired,
+        } => {
+            let n = xs.len();
+            let tile = 2 * stride_max;
+            debug_assert!(tile >= 2 && n % tile == 0, "tile {tile} must divide n {n}");
+            let mut streamed = 0;
+            let mut off = 0;
+            while off < n {
+                let end = off + tile;
+                streamed += tile;
+                let mut k = phase_lo;
+                while k <= phase_hi {
+                    run_fused_tail_range(xs, k, (k / 2).min(stride_max), off, end, register_paired);
+                    k *= 2;
+                }
+                off = end;
+            }
+            streamed
+        }
+    }
+}
+
+/// The shared fused-tile kernel: strides `stride_hi, stride_hi/2, …, 1`
+/// of phase `phase_len`, restricted to the aligned tile `xs[lo..hi)`
+/// (`lo` multiple of `2 * stride_hi`, tile length a multiple of it too).
+/// With `paired`, consecutive strides run through the register-quad
+/// kernel, mirroring what the Optimized variant's in-block stage does on
+/// the GPU. Used by [`run_launch`] for `BlockFused` launches and by
+/// [`crate::sort::bitonic_parallel`] for each worker's intra-row chunk —
+/// one kernel, both paths.
+pub fn run_fused_tail_range<T: SortKey>(
+    xs: &mut [T],
+    phase_len: usize,
+    stride_hi: usize,
+    lo: usize,
+    hi: usize,
+    paired: bool,
+) {
+    let mut j = stride_hi;
+    if paired {
+        // Pair strides (j, j/2) while both exist; 2*j <= phase_len always
+        // holds (strides start at phase_len/2), so the quad kernel's
+        // uniform-direction precondition is met.
+        while j >= 2 {
+            compare_exchange_double_step_range(xs, phase_len, j, lo, hi);
+            j /= 4;
+        }
+    }
+    while j >= 1 {
+        compare_exchange_step_range(xs, phase_len, j, lo, hi);
+        j /= 2;
     }
 }
 
@@ -375,46 +554,76 @@ mod tests {
     }
 
     #[test]
-    fn launch_schedules_cover_every_step_exactly_once() {
-        // Whatever the grouping, the multiset of (phase_len, stride)
-        // covered must equal the full network.
-        for variant in Variant::ALL {
-            for (n, b) in [(1 << 8, 1 << 4), (1 << 12, 1 << 6), (1 << 14, 1 << 8)] {
-                let net = Network::new(n);
-                let mut covered: Vec<(usize, usize)> = Vec::new();
-                for l in net.launches(variant, b) {
-                    match l {
-                        Launch::GlobalStep(s) => covered.push((s.phase_len, s.stride)),
-                        Launch::GlobalDoubleStep {
-                            phase_len,
-                            stride_hi,
-                        } => {
-                            covered.push((phase_len, stride_hi));
-                            covered.push((phase_len, stride_hi / 2));
-                        }
-                        Launch::BlockFused {
-                            phase_lo,
-                            phase_hi,
-                            stride_max,
-                            ..
-                        } => {
-                            let mut k = phase_lo;
-                            while k <= phase_hi {
-                                let mut j = (k / 2).min(stride_max);
-                                while j >= 1 {
-                                    covered.push((k, j));
-                                    j /= 2;
-                                }
-                                k *= 2;
-                            }
-                        }
-                    }
+    fn launch_expansion_reproduces_step_schedule_exactly() {
+        // The fusion algebra the runtime relies on: expanding each launch
+        // back to steps reproduces the flat schedule EXACTLY — same
+        // steps, same order, for every n up to 4096, every variant, and
+        // a spread of block sizes (smaller, equal, larger than n).
+        for logn in 1..=12usize {
+            let n = 1 << logn;
+            let net = Network::new(n);
+            let want = net.step_schedule();
+            for variant in Variant::ALL {
+                for block in [2usize, 4, 16, 64, 256, 1024, 4096, 1 << 14] {
+                    let got: Vec<Step> = net
+                        .launches(variant, block)
+                        .iter()
+                        .flat_map(Launch::steps)
+                        .collect();
+                    assert_eq!(got, want, "{variant:?} n={n} block={block}");
                 }
-                covered.sort_unstable();
-                let mut want: Vec<(usize, usize)> =
-                    net.steps().map(|s| (s.phase_len, s.stride)).collect();
-                want.sort_unstable();
-                assert_eq!(covered, want, "{variant:?} n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_launch_expansion_is_exactly_the_final_phase() {
+        for logn in 1..=12usize {
+            let n = 1 << logn;
+            let net = Network::new(n);
+            let want: Vec<Step> = Phase { len: n }.steps().collect();
+            for variant in Variant::ALL {
+                for block in [2usize, 16, 256, 4096] {
+                    let got: Vec<Step> = net
+                        .merge_launches(variant, block)
+                        .iter()
+                        .flat_map(Launch::steps)
+                        .collect();
+                    assert_eq!(got, want, "{variant:?} n={n} block={block}");
+                    assert_eq!(
+                        got.len(),
+                        logn,
+                        "merge must cost log2(n) steps, not the full network"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_launch_bit_exact_with_serial_step_walk() {
+        // Execute each launch program twice: fused through the
+        // interpreter vs its own step expansion through the plain sweep.
+        // Every intermediate state (after each launch) must agree
+        // bit-for-bit, and the result must be sorted.
+        use crate::workload::{Distribution, Generator};
+        let mut gen = Generator::new(0xF0);
+        for (n, blocks) in [(64usize, vec![4usize, 16, 64]), (1024, vec![4, 64, 256, 4096])] {
+            let net = Network::new(n);
+            for variant in Variant::ALL {
+                for &block in &blocks {
+                    let data = gen.u32s(n, Distribution::DupHeavy);
+                    let mut fused = data.clone();
+                    let mut serial = data;
+                    for l in net.launches(variant, block) {
+                        run_launch(&mut fused, &l);
+                        for s in l.steps() {
+                            compare_exchange_step(&mut serial, s.phase_len, s.stride);
+                        }
+                        assert_eq!(fused, serial, "{variant:?} n={n} block={block} {l:?}");
+                    }
+                    assert!(fused.windows(2).all(|w| w[0] <= w[1]));
+                }
             }
         }
     }

@@ -1,0 +1,78 @@
+//! Parity guard: the launch schedules three independent layers derive —
+//! `Network::launches`/`merge_launches` (simulator + native executor),
+//! `python/compile/model.py::plan`/`merge_plan` (the Pallas planner), and
+//! the checked-in golden table — must agree on launch counts for the
+//! fixture menu shapes. The Python side asserts the same table in
+//! `python/tests/test_launch_parity.py`, so the simulator, the Python
+//! planner, and the executor cannot drift apart silently.
+//!
+//! Regenerate `tests/data/launch_counts_golden.tsv` only when the fusion
+//! algebra itself changes, and update both test-suites' expectations
+//! together.
+
+use bitonic_tpu::sort::network::{Network, Variant};
+
+const GOLDEN: &str = include_str!("data/launch_counts_golden.tsv");
+
+#[test]
+fn launch_counts_match_golden_table() {
+    let mut lines = GOLDEN.lines();
+    assert_eq!(
+        lines.next(),
+        Some("kind\tvariant\tn\tblock\tlaunches"),
+        "golden table header changed"
+    );
+    let mut checked = 0;
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        assert_eq!(f.len(), 5, "malformed golden row {line:?}");
+        let (kind, variant, n, block, want): (&str, Variant, usize, usize, usize) = (
+            f[0],
+            Variant::parse(f[1]).expect("bad variant in golden table"),
+            f[2].parse().unwrap(),
+            f[3].parse().unwrap(),
+            f[4].parse().unwrap(),
+        );
+        let net = Network::new(n);
+        let got = match kind {
+            "sort" => net.launches(variant, block).len(),
+            "merge" => net.merge_launches(variant, block).len(),
+            other => panic!("unknown kind {other:?} in golden table"),
+        };
+        assert_eq!(
+            got, want,
+            "{kind} {variant:?} n={n} block={block}: rust derives {got} launches, golden says {want}"
+        );
+        checked += 1;
+    }
+    // The fixture menu sweep: 8 shapes x 3 variants x 2 blocks.
+    assert_eq!(checked, 48, "golden table row count changed");
+}
+
+#[test]
+fn golden_table_covers_the_fixture_menu() {
+    // Every (kind, n) the checked-in artifact fixture serves must appear
+    // in the golden table, so a menu extension forces a parity update.
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?}");
+        return;
+    }
+    let manifest = bitonic_tpu::runtime::Manifest::load(&dir).unwrap();
+    for meta in &manifest.entries {
+        let kind = match meta.kind {
+            bitonic_tpu::runtime::ArtifactKind::Sort => "sort",
+            bitonic_tpu::runtime::ArtifactKind::Merge => "merge",
+        };
+        let needle = format!("{kind}\t{}\t{}\t", meta.variant.name(), meta.n);
+        assert!(
+            GOLDEN.lines().any(|l| l.starts_with(&needle)),
+            "fixture artifact {} ({kind}, n={}) missing from golden table",
+            meta.name,
+            meta.n
+        );
+    }
+}

@@ -158,7 +158,10 @@ fn pooled_host_bit_exact_with_serial_host() {
     let (serial, manifest) = spawn_device_host(&dir).unwrap();
     let (pooled, _) = bitonic_tpu::runtime::spawn_device_host_with(
         &dir,
-        bitonic_tpu::runtime::HostConfig { threads: 4 },
+        bitonic_tpu::runtime::HostConfig {
+            threads: 4,
+            ..Default::default()
+        },
     )
     .unwrap();
     let mut gen = Generator::new(0x9A11E7);
@@ -170,6 +173,43 @@ fn pooled_host_bit_exact_with_serial_host() {
     }
     serial.shutdown();
     pooled.shutdown();
+}
+
+#[test]
+fn plan_variants_bit_exact_end_to_end() {
+    // The fused launch programs (Semi/Optimized, several blocks) must
+    // agree bit-for-bit with the step-walk program (Basic) through the
+    // whole device path — host thread, registry, executor — over every
+    // fixture artifact, while performing fewer full-row passes.
+    let Some(dir) = artifacts_dir() else { return };
+    use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, PlanConfig};
+    let (walk, manifest) = spawn_device_host_with(
+        &dir,
+        HostConfig {
+            plan: PlanConfig { variant: Variant::Basic, block: 256 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut gen = Generator::new(0xF00D);
+    for (variant, block) in [(Variant::Semi, 256), (Variant::Optimized, 256), (Variant::Optimized, 4096)] {
+        let (fused, _) = spawn_device_host_with(
+            &dir,
+            HostConfig {
+                threads: 4,
+                plan: PlanConfig { variant, block },
+            },
+        )
+        .unwrap();
+        for meta in manifest.size_classes(Variant::Optimized) {
+            let rows = gen.u32s(meta.batch * meta.n, Distribution::DupHeavy);
+            let a = walk.sort_u32(Key::of(meta), rows.clone()).unwrap();
+            let b = fused.sort_u32(Key::of(meta), rows).unwrap();
+            assert_eq!(a, b, "{} {variant:?} block={block}", meta.name);
+        }
+        fused.shutdown();
+    }
+    walk.shutdown();
 }
 
 #[test]

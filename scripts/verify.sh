@@ -13,15 +13,20 @@ cargo test -q
 # Bench smoke, time-bounded: the coordinator bench drives the real
 # work-stealing scheduler and the row-parallel executor end to end, so a
 # scheduler regression (deadlock, starvation, lost wakeup) fails here
-# with a kill instead of hanging CI silently. CI runs this as its own
-# step and sets SKIP_BENCH_SMOKE=1 here to avoid the double run.
+# with a kill instead of hanging CI silently; the ablation bench drives
+# the fused launch programs (Basic/Semi/Optimized) on the real executor,
+# so a fusion regression (wrong pass count, hung interpreter) fails the
+# same way. CI runs these as their own steps and sets SKIP_BENCH_SMOKE=1
+# here to avoid the double run.
 if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
-    echo "== bench smoke: coordinator (timeout-bounded) =="
-    if command -v timeout >/dev/null 2>&1; then
-        timeout --signal=KILL 300 cargo bench --bench coordinator
-    else
-        cargo bench --bench coordinator
-    fi
+    for smoke in coordinator ablation; do
+        echo "== bench smoke: ${smoke} (timeout-bounded) =="
+        if command -v timeout >/dev/null 2>&1; then
+            timeout --signal=KILL 300 cargo bench --bench "${smoke}"
+        else
+            cargo bench --bench "${smoke}"
+        fi
+    done
 else
     echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
 fi
