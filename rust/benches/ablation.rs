@@ -2,22 +2,32 @@
 //! combination — on the calibrated simulator (the paper's setting) and on
 //! the **real native executor**, whose `ExecutionPlan` now compiles the
 //! same `Network::launches` fusion the simulator charges for — plus the
-//! shared-tile block-size sweep.
+//! shared-tile block-size sweep, the batch-interleaved execution sweep,
+//! and an autotune smoke.
 //!
 //! "semi" = optimization 1 only; "optimized" = 1 + 2. Optimization 2 alone
 //! (double-steps without the shared-memory stage) is also modelled here by
 //! a custom schedule to complete the 2×2 grid.
 //!
+//! Every real-executor measurement is also recorded into
+//! `BENCH_ablation.json` at the current directory (repo root when run via
+//! scripts/verify.sh; override with `$BENCH_ABLATION_JSON`) so future PRs
+//! can diff against a recorded trajectory instead of re-deriving
+//! baselines from prose.
+//!
 //! Run time-bounded (`timeout --signal=KILL 300`) from scripts/verify.sh
 //! and CI, like the coordinator smoke: a hang fails loudly.
 
+use std::time::Duration;
+
 use bitonic_tpu::bench::{black_box, Bench};
 use bitonic_tpu::runtime::{
-    spawn_device_host_with, ArtifactKind, ExecutionPlan, HostConfig, Key, PlanConfig,
-    DEFAULT_PLAN_BLOCK,
+    effective_interleave, spawn_device_host_with, tune, ArtifactKind, Dtype, ExecutionPlan,
+    HostConfig, Key, PlanConfig, TuneRequest, DEFAULT_PLAN_BLOCK,
 };
 use bitonic_tpu::sim::{calibrate_from_table1, simulate};
 use bitonic_tpu::sort::network::{Network, Variant};
+use bitonic_tpu::util::json::Json;
 use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
 use bitonic_tpu::workload::{Distribution, Generator};
 
@@ -40,9 +50,26 @@ fn opt2_only_launches(n: usize) -> usize {
     count
 }
 
+/// Common fields of one bench-trajectory entry (callers append extras) —
+/// single point of truth for the JSON schema future PRs diff against.
+fn trajectory_entry(b: usize, n: usize, variant: &str, block: usize, interleave: usize, ms: f64) -> Json {
+    let mut e = Json::obj();
+    e.set("b", b)
+        .set("n", n)
+        .set("variant", variant)
+        .set("block", block)
+        .set("interleave", interleave)
+        .set("ms_per_batch", ms)
+        .set("rows_per_sec", b as f64 / (ms / 1e3));
+    e
+}
+
 fn main() {
     let cal = calibrate_from_table1();
     let n = 16 << 20;
+    // The machine-readable trajectory this bench leaves behind.
+    let mut report = Json::obj();
+    report.set("bench", "ablation");
 
     // --- 2×2 optimization grid (simulator) -------------------------------
     println!("== ablation: optimization grid at n=16M (calibrated sim) ==");
@@ -113,6 +140,7 @@ fn main() {
     {
         let bench = Bench::quick();
         let mut gen = Generator::new(0xAB1A);
+        let mut entries = Json::arr();
         let mut t = Table::new(vec![
             "(B,N)", "variant", "hbm passes", "ms / batch", "rows/sec", "vs basic",
         ]);
@@ -123,7 +151,7 @@ fn main() {
                     ArtifactKind::Sort,
                     n,
                     false,
-                    PlanConfig { variant: v, block: DEFAULT_PLAN_BLOCK },
+                    PlanConfig { variant: v, block: DEFAULT_PLAN_BLOCK, interleave: 1 },
                 );
                 // One instrumented row: the passes actually executed must
                 // equal the plan's static count (same assert as the tests).
@@ -143,20 +171,165 @@ fn main() {
                 if v == Variant::Basic {
                     basic_ms = ms;
                 }
+                let rows_per_sec = b as f64 / (ms / 1e3);
                 t.row(vec![
                     format!("({b},{})", fmt_size(n)),
                     v.name().to_string(),
                     plan.global_passes().to_string(),
                     fmt_ms(ms),
-                    format!("{:.0}", b as f64 / (ms / 1e3)),
+                    format!("{:.0}", rows_per_sec),
                     format!("{:.2}x", basic_ms / ms),
                 ]);
+                let mut e = trajectory_entry(b, n, v.name(), DEFAULT_PLAN_BLOCK, 1, ms);
+                e.set("hbm_passes", plan.global_passes())
+                    .set("speedup_vs_basic", basic_ms / ms);
+                entries.push(e);
             }
         }
         println!("{}", t.render());
         println!("→ the paper's ordering, measured on the real plan walk: fewer");
         println!("  full-row passes ⇒ more rows/sec (opt1 fuses the in-block tail,");
         println!("  opt2 halves the remaining global passes).\n");
+        report.set("plan_ablation", entries);
+    }
+
+    // --- batch-interleaved ablation: the n=64K acceptance sweep ----------
+    // Scalar Optimized (interleave 1 — exactly the PR 3 path) vs the
+    // batch-interleaved mode at several (block, R) on a 16-row batch of
+    // n=64K rows, serial plan walk (no pool), so the delta is purely the
+    // SIMT-style lane parallelism + its transpose tax. Bit-exactness with
+    // the scalar path is asserted inline on every config before timing.
+    println!("== batch-interleaved ablation at (16, 64K), serial plan walk ==");
+    {
+        let bench = Bench::quick();
+        let mut gen = Generator::new(0xAB1C);
+        let (b, n) = (16usize, 1usize << 16);
+        let mut entries = Json::arr();
+        let mut t = Table::new(vec![
+            "config", "block", "R", "ms / batch", "rows/sec", "vs scalar",
+        ]);
+        let run_tiles = |plan: &ExecutionPlan, rows: &mut [u32], r: usize| {
+            let mut scratch = Vec::new();
+            for tile in rows.chunks_mut(r * n) {
+                plan.run_tile(tile, &mut scratch);
+            }
+        };
+        let mk = |block, interleave| {
+            ExecutionPlan::with_config(
+                ArtifactKind::Sort,
+                n,
+                false,
+                PlanConfig { variant: Variant::Optimized, block, interleave },
+            )
+        };
+        // Correctness reference + scalar baseline.
+        let reference_rows = gen.u32s(b * n, Distribution::DupHeavy);
+        let scalar_plan = mk(DEFAULT_PLAN_BLOCK, 1);
+        let mut reference = reference_rows.clone();
+        run_tiles(&scalar_plan, &mut reference, 1);
+        let scalar_meas = bench.run_with_setup(
+            "scalar",
+            || gen.u32s(b * n, Distribution::Uniform),
+            |mut rows| {
+                run_tiles(&scalar_plan, &mut rows, 1);
+                black_box(rows);
+            },
+        );
+        let scalar_ms = scalar_meas.median_ms();
+        t.row(vec![
+            "scalar (PR 3 path)".into(),
+            DEFAULT_PLAN_BLOCK.to_string(),
+            "1".into(),
+            fmt_ms(scalar_ms),
+            format!("{:.0}", b as f64 / (scalar_ms / 1e3)),
+            "1.00x".into(),
+        ]);
+        let mut e = trajectory_entry(b, n, "optimized", DEFAULT_PLAN_BLOCK, 1, scalar_ms);
+        e.set("speedup_vs_scalar", 1.0f64);
+        entries.push(e);
+        let mut best_speedup = 1.0f64;
+        for (block, r) in [
+            (DEFAULT_PLAN_BLOCK, 4usize),
+            (DEFAULT_PLAN_BLOCK, 8),
+            (DEFAULT_PLAN_BLOCK, 16),
+            (1024, 8),
+            (1024, 16),
+        ] {
+            let plan = mk(block, r);
+            // Bit-exactness before timing: interleaved == scalar result.
+            let mut check = reference_rows.clone();
+            run_tiles(&plan, &mut check, r);
+            assert_eq!(check, reference, "interleaved diverged at block={block} R={r}");
+            let meas = bench.run_with_setup(
+                "interleaved",
+                || gen.u32s(b * n, Distribution::Uniform),
+                |mut rows| {
+                    run_tiles(&plan, &mut rows, r);
+                    black_box(rows);
+                },
+            );
+            let ms = meas.median_ms();
+            let speedup = scalar_ms / ms;
+            best_speedup = best_speedup.max(speedup);
+            t.row(vec![
+                "interleaved".into(),
+                block.to_string(),
+                r.to_string(),
+                fmt_ms(ms),
+                format!("{:.0}", b as f64 / (ms / 1e3)),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut e = trajectory_entry(b, n, "optimized", block, r, ms);
+            e.set("speedup_vs_scalar", speedup);
+            entries.push(e);
+        }
+        println!("{}", t.render());
+        println!("→ acceptance target: best interleaved config ≥ 2.00x the scalar path");
+        println!("  (best measured: {best_speedup:.2}x)\n");
+        report.set("interleaved_ablation", entries);
+        report.set("interleaved_speedup_vs_scalar", best_speedup);
+        report.set("interleaved_speedup_target_met", best_speedup >= 2.0);
+    }
+
+    // --- autotune smoke: the sweep the `tune` CLI runs, one class -------
+    // Records the per-host chosen config for the same n=64K class so the
+    // trajectory ties measured ablation numbers to what the autotuner
+    // would actually pick on this machine.
+    println!("== autotune smoke: chosen config for (65536, uint32) ==");
+    {
+        let request = TuneRequest {
+            classes: vec![(1 << 16, Dtype::U32)],
+            blocks: vec![1024, DEFAULT_PLAN_BLOCK],
+            interleaves: vec![1, 8, 16],
+            threads: vec![1],
+            rows: 8,
+            bench: Bench {
+                warmup: 1,
+                min_iters: 2,
+                max_iters: 6,
+                target: Duration::from_millis(200),
+            },
+            seed: 0xAB1D,
+        };
+        let outcome = tune(&request);
+        let chosen = &outcome.profile.entries[0];
+        println!(
+            "chosen: block={} interleave={} ({:.0} rows/sec over {} candidates)\n",
+            chosen.block,
+            chosen.interleave,
+            chosen.rows_per_sec,
+            outcome.measured.len()
+        );
+        let mut e = Json::obj();
+        e.set("n", chosen.n)
+            .set("dtype", chosen.dtype.name())
+            .set("variant", chosen.variant.name())
+            .set("block", chosen.block)
+            .set("interleave", chosen.interleave)
+            .set("threads", chosen.threads)
+            .set("rows_per_sec", chosen.rows_per_sec)
+            .set("candidates_measured", outcome.measured.len());
+        report.set("autotune_smoke", e);
     }
 
     // --- device-host path: same ablation end to end ----------------------
@@ -167,14 +340,22 @@ fn main() {
         let dir = bitonic_tpu::runtime::default_artifacts_dir();
         let bench = Bench::quick();
         let mut gen = Generator::new(0xAB1B);
-        let mut t = Table::new(vec!["artifact", "plan", "ms / batch", "rows/sec"]);
+        let mut entries = Json::arr();
+        let mut t = Table::new(vec!["artifact", "plan", "R", "ms / batch", "rows/sec"]);
         let mut ok = true;
-        for v in Variant::ALL {
+        // The three fusion variants scalar (the launch-program ablation),
+        // plus the default interleaved Optimized config end to end.
+        let configs: Vec<(Variant, usize)> = Variant::ALL
+            .into_iter()
+            .map(|v| (v, 1usize))
+            .chain([(Variant::Optimized, 8usize)])
+            .collect();
+        for (v, interleave) in configs {
             let host = spawn_device_host_with(
                 &dir,
                 HostConfig {
                     threads: 4,
-                    plan: PlanConfig { variant: v, block: DEFAULT_PLAN_BLOCK },
+                    plan: PlanConfig { variant: v, block: DEFAULT_PLAN_BLOCK, interleave }.into(),
                 },
             );
             let (handle, manifest) = match host {
@@ -185,10 +366,14 @@ fn main() {
                     break;
                 }
             };
+            // Scalar variant rows keep the max-n artifact (continuity
+            // with the PR 3 trajectory); the interleaved row needs rows
+            // to interleave, so it takes the max-batch artifact instead
+            // (the max-n fixture artifact has B = 1).
             let meta = manifest
                 .size_classes(Variant::Optimized)
                 .into_iter()
-                .max_by_key(|m| m.n)
+                .max_by_key(|m| if interleave > 1 { m.batch } else { m.n })
                 .expect("fixture menu empty")
                 .clone();
             let key = Key::of(&meta);
@@ -200,16 +385,32 @@ fn main() {
                     let _ = handle.sort_u32(key, rows).unwrap();
                 },
             );
+            let ms = meas.median_ms();
             t.row(vec![
                 format!("{} ({b},{})", meta.name, fmt_size(n)),
                 v.name().to_string(),
-                fmt_ms(meas.median_ms()),
-                format!("{:.0}", b as f64 / (meas.median_ms() / 1e3)),
+                interleave.to_string(),
+                fmt_ms(ms),
+                format!("{:.0}", b as f64 / (ms / 1e3)),
             ]);
+            let mut e = trajectory_entry(b, n, v.name(), DEFAULT_PLAN_BLOCK, interleave, ms);
+            // The executor narrows the configured width so all 4 pool
+            // workers get a tile; record what actually ran alongside the
+            // configured R so the trajectory is not mislabeled.
+            e.set("artifact", meta.name.as_str())
+                .set("threads", 4usize)
+                .set("interleave_effective", effective_interleave(interleave, b, 4));
+            entries.push(e);
             handle.shutdown();
         }
         if ok {
             println!("{}", t.render());
+            report.set("device_host", entries);
         }
     }
+
+    // --- persist the trajectory ------------------------------------------
+    let path = std::env::var("BENCH_ABLATION_JSON").unwrap_or_else(|_| "BENCH_ablation.json".into());
+    std::fs::write(&path, report.render()).expect("writing bench trajectory");
+    println!("wrote bench trajectory to {path}");
 }

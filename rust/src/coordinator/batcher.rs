@@ -62,10 +62,23 @@ pub struct Batch {
 }
 
 /// Per-size-class accumulation queue.
+///
+/// The earliest flush-trigger instant over the queue is **cached**
+/// (maintained on [`push`](Self::push), recomputed on
+/// [`take_batch`](Self::take_batch)), so [`ready`](Self::ready) and
+/// [`next_deadline`](Self::next_deadline) are O(1). That matters because
+/// every service-worker wake scans *every* class's batcher under the one
+/// scheduler mutex `submit()` also needs — an O(queue) scan there turned
+/// the whole scheduler O(classes × queue) per wake under load.
 #[derive(Debug)]
 pub struct Batcher {
     config: BatcherConfig,
     queue: VecDeque<Pending>,
+    /// Earliest flush-trigger instant over all pending requests (`None`
+    /// when empty). A request's trigger never changes after push, so the
+    /// cached minimum only needs a `min` on push and a rescan when
+    /// requests leave in `take_batch`.
+    min_trigger: Option<Instant>,
 }
 
 impl Batcher {
@@ -74,11 +87,42 @@ impl Batcher {
         Self {
             config,
             queue: VecDeque::new(),
+            min_trigger: None,
+        }
+    }
+
+    /// The instant at which `p` alone would force a flush: its max-wait
+    /// expiry, or its SLO deadline minus the dispatch margin, whichever
+    /// comes first. Fixed at push time (both terms derive from `arrived`
+    /// and the request, neither of which changes in the queue). `None`
+    /// means the request never forces a time-based flush — an effectively
+    /// infinite `max_wait` (e.g. `Duration::MAX` for "flush on capacity
+    /// or SLO only") overflows `Instant` arithmetic, which the old
+    /// saturating scan treated as "never"; `checked_add` preserves that
+    /// instead of panicking the worker on the first push.
+    fn trigger_of(config: &BatcherConfig, p: &Pending) -> Option<Instant> {
+        let wait = p.arrived.checked_add(config.max_wait);
+        // An SLO tighter than the margin triggers immediately
+        // (= at arrival), matching the scan semantics this cache
+        // replaced: now + margin >= deadline from the first check.
+        let slo = p
+            .deadline()
+            .map(|d| d.checked_sub(config.slo_margin).unwrap_or(p.arrived));
+        match (wait, slo) {
+            (Some(w), Some(s)) => Some(w.min(s)),
+            (Some(w), None) => Some(w),
+            (None, s) => s,
         }
     }
 
     /// Enqueue a pending request.
     pub fn push(&mut self, p: Pending) {
+        if let Some(trigger) = Self::trigger_of(&self.config, &p) {
+            self.min_trigger = Some(match self.min_trigger {
+                Some(m) => m.min(trigger),
+                None => trigger,
+            });
+        }
         self.queue.push_back(p);
     }
 
@@ -92,54 +136,41 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Should a batch be dispatched now? True when the batch is full,
-    /// the oldest request aged past max-wait, or any pending request's
-    /// SLO deadline falls within the configured margin.
+    /// Should a batch be dispatched now? True when the batch is full, the
+    /// oldest request aged past max-wait, or any pending request's SLO
+    /// deadline falls within the configured margin — i.e. `now` reached
+    /// the cached earliest trigger. O(1).
     pub fn ready(&self, now: Instant) -> bool {
         if self.queue.len() >= self.config.max_rows {
             return true;
         }
-        // FIFO queue ⇒ the front is oldest, so max-wait only needs the
-        // front; SLO deadlines are not monotonic in arrival order, so
-        // they need the scan (queue length is bounded by admission).
-        if let Some(front) = self.queue.front() {
-            if now.duration_since(front.arrived) >= self.config.max_wait {
-                return true;
-            }
-        }
-        self.queue
-            .iter()
-            .any(|p| p.deadline().map_or(false, |d| now + self.config.slo_margin >= d))
+        self.min_trigger.map_or(false, |t| now >= t)
     }
 
     /// Time until the earliest flush trigger (for worker sleep): the
     /// oldest request's max-wait expiry or the tightest SLO deadline
-    /// minus the margin, whichever comes first. `None` when empty.
+    /// minus the margin, whichever comes first. `None` when no
+    /// time-based trigger exists — the queue is empty, **or** every
+    /// pending request has an effectively infinite max-wait and no SLO
+    /// (so only capacity can flush it); use [`is_empty`](Self::is_empty)
+    /// to test for emptiness, never this. O(1).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
-        self.queue
-            .iter()
-            .map(|p| {
-                let wait = self
-                    .config
-                    .max_wait
-                    .saturating_sub(now.duration_since(p.arrived));
-                match p.deadline() {
-                    Some(d) => wait.min(
-                        d.saturating_duration_since(now)
-                            .saturating_sub(self.config.slo_margin),
-                    ),
-                    None => wait,
-                }
-            })
-            .min()
+        self.min_trigger.map(|t| t.saturating_duration_since(now))
     }
 
-    /// Remove and return up to `max_rows` requests (FIFO).
+    /// Remove and return up to `max_rows` requests (FIFO). Recomputes the
+    /// cached trigger over the survivors — the one place the minimum can
+    /// grow, and already O(batch) from the drain itself.
     pub fn take_batch(&mut self) -> Batch {
         let take = self.queue.len().min(self.config.max_rows);
-        Batch {
-            items: self.queue.drain(..take).collect(),
-        }
+        let items: Vec<Pending> = self.queue.drain(..take).collect();
+        let config = &self.config;
+        self.min_trigger = self
+            .queue
+            .iter()
+            .filter_map(|p| Self::trigger_of(config, p))
+            .min();
+        Batch { items }
     }
 }
 
@@ -281,5 +312,136 @@ mod tests {
         let d = b.next_deadline(now).unwrap();
         assert!(d <= Duration::from_millis(3), "{d:?}");
         assert!(d > Duration::from_millis(1), "{d:?}");
+    }
+
+    #[test]
+    fn effectively_infinite_max_wait_never_panics() {
+        // `Duration::MAX` is the natural "flush on capacity or SLO only"
+        // config; `arrived + max_wait` overflows Instant arithmetic, so
+        // the trigger cache must treat it as "never" (like the old
+        // saturating scan) instead of panicking on the first push.
+        let mut b = Batcher::new(BatcherConfig {
+            max_wait: Duration::MAX,
+            max_rows: 4,
+            slo_margin: Duration::from_micros(500),
+        });
+        let now = Instant::now();
+        b.push(pending(0, now));
+        assert!(!b.ready(now + Duration::from_secs(3600)));
+        assert_eq!(b.next_deadline(now), None, "no time-based trigger exists");
+        // An SLO carrier still triggers on its deadline.
+        b.push(pending_slo(1, now, Duration::from_millis(2)));
+        assert!(b.ready(now + Duration::from_millis(5)));
+        assert!(b.next_deadline(now).unwrap() <= Duration::from_millis(2));
+        // And draining recomputes without panicking.
+        b.take_batch();
+        assert!(b.is_empty());
+        assert_eq!(b.next_deadline(now), None);
+    }
+
+    /// The O(queue) scan the cached minimum replaced, kept as the test
+    /// oracle: readiness and sleep time computed fresh from every pending
+    /// request.
+    fn oracle_ready(b: &Batcher, now: Instant) -> bool {
+        if b.queue.len() >= b.config.max_rows {
+            return true;
+        }
+        if let Some(front) = b.queue.front() {
+            if now.duration_since(front.arrived) >= b.config.max_wait {
+                return true;
+            }
+        }
+        b.queue
+            .iter()
+            .any(|p| p.deadline().map_or(false, |d| now + b.config.slo_margin >= d))
+    }
+
+    fn oracle_next_deadline(b: &Batcher, now: Instant) -> Option<Duration> {
+        b.queue
+            .iter()
+            .map(|p| {
+                let wait = b.config.max_wait.saturating_sub(now.duration_since(p.arrived));
+                match p.deadline() {
+                    Some(d) => wait.min(
+                        d.saturating_duration_since(now)
+                            .saturating_sub(b.config.slo_margin),
+                    ),
+                    None => wait,
+                }
+            })
+            .min()
+    }
+
+    /// Regression (PR 3 review): the cached minimum trigger must track
+    /// the full-scan oracle exactly across arbitrary push/take
+    /// interleavings — mixed SLO and plain requests, out-of-order
+    /// deadlines, partial drains that remove the current minimum, and
+    /// queues that empty and refill.
+    #[test]
+    fn cached_deadline_matches_scan_oracle_across_push_take_interleavings() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_wait: Duration::from_millis(40),
+            max_rows: 3,
+            slo_margin: Duration::from_micros(500),
+        });
+        let t0 = Instant::now();
+        // Deterministic mixed schedule: (op, arrival offset µs, slo µs).
+        // slo = 0 ⇒ plain request; op 'T' ⇒ take_batch. Deadlines are
+        // deliberately NOT monotonic in arrival order.
+        let script: &[(char, u64, u64)] = &[
+            ('P', 0, 0),
+            ('P', 10, 9_000),
+            ('P', 20, 2_000), // tighter SLO arrives later
+            ('T', 0, 0),      // drains 3 incl. the current minimum
+            ('P', 30, 0),
+            ('P', 40, 50_000),
+            ('P', 50, 1_000),
+            ('P', 60, 700),
+            ('T', 0, 0),
+            ('T', 0, 0), // empties the queue
+            ('P', 70, 3_000),
+            ('P', 80, 0),
+        ];
+        let mut next_id = 0u64;
+        for &(op, arrive_us, slo_us) in script {
+            match op {
+                'P' => {
+                    let arrived = t0 + Duration::from_micros(arrive_us);
+                    if slo_us == 0 {
+                        b.push(pending(next_id, arrived));
+                    } else {
+                        b.push(pending_slo(next_id, arrived, Duration::from_micros(slo_us)));
+                    }
+                    next_id += 1;
+                }
+                'T' => {
+                    let drained = b.take_batch();
+                    assert!(drained.items.len() <= 3);
+                }
+                _ => unreachable!(),
+            }
+            // After every operation, the cache must agree with the scan
+            // at several probe instants around the interesting edges.
+            // Probes start at the latest scripted arrival (+80µs): a real
+            // worker's `now` is always past every `arrived`, and before
+            // an arrival the old scan's saturating `duration_since`
+            // deliberately differs from the trigger arithmetic.
+            for probe_us in [80u64, 110, 650, 1_500, 2_500, 10_000, 45_000, 100_000] {
+                let now = t0 + Duration::from_micros(probe_us);
+                assert_eq!(
+                    b.ready(now),
+                    oracle_ready(&b, now),
+                    "ready diverged after op {op} (queue {}) at +{probe_us}µs",
+                    b.len()
+                );
+                assert_eq!(
+                    b.next_deadline(now),
+                    oracle_next_deadline(&b, now),
+                    "next_deadline diverged after op {op} (queue {}) at +{probe_us}µs",
+                    b.len()
+                );
+            }
+        }
+        assert!(b.len() > 0, "script should leave a non-empty queue");
     }
 }

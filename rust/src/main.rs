@@ -13,7 +13,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
-use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, Key, PlanConfig};
+use bitonic_tpu::runtime::{
+    spawn_device_host_with, tune, ArtifactKind, HostConfig, Key, Manifest, PlanConfig, PlanPolicy,
+    TuneRequest, TuningProfile,
+};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
 use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort};
@@ -29,6 +32,7 @@ fn main() -> bitonic_tpu::Result<()> {
         .command("simulate", "GPU cost-model predictions")
         .command("network", "print the bitonic network (Fig. 2)")
         .command("analyze", "launch/pass counts per variant")
+        .command("tune", "sweep plan configs on this host; write a tuning profile")
         .command("gen-data", "write a workload dataset file (.btsd)")
         .opt("n", "array size (elements)", Some("65536"))
         .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
@@ -38,20 +42,36 @@ fn main() -> bitonic_tpu::Result<()> {
         .opt("requests", "serve: number of requests", Some("200"))
         .opt(
             "threads",
-            "worker threads: bitonic-par chunks, device-host row pool, serve workers",
-            Some("8"),
+            "worker threads: bitonic-par chunks, device-host row pool, serve workers \
+             (default: tuned profile, else 8)",
+            None,
         )
         .opt(
             "plan-variant",
-            "executor launch fusion: basic|semi|optimized (paper §4 optimizations)",
-            Some("optimized"),
+            "executor launch fusion: basic|semi|optimized (default optimized)",
+            None,
         )
         .opt(
             "plan-block",
-            "executor fused-tile block in keys (power of two >= 2)",
-            Some("4096"),
+            "executor fused-tile block in keys, power of two >= 2 (default 4096; \
+             explicit value pins it over the tuning profile)",
+            None,
         )
+        .opt(
+            "plan-interleave",
+            "batch-interleave width R, rows per interleaved tile (default 8, 1 = scalar; \
+             explicit value pins it over the tuning profile)",
+            None,
+        )
+        .opt(
+            "profile",
+            "tuning profile TSV (default: <artifacts>/autotune.tsv when present)",
+            None,
+        )
+        .opt("tune-rows", "tune: rows per measured batch", None)
         .opt("seed", "workload seed", Some("42"))
+        .flag("no-profile", "ignore any tuning profile")
+        .flag("smoke", "tune: tiny CI-sized sweep")
         .flag("verbose", "more output");
     let args = parser.parse_env()?;
 
@@ -62,6 +82,7 @@ fn main() -> bitonic_tpu::Result<()> {
         Some("simulate") => cmd_simulate(),
         Some("network") => cmd_network(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("tune") => cmd_tune(&args),
         Some("gen-data") => cmd_gen_data(&args),
         _ => {
             println!("{}", parser.usage());
@@ -78,17 +99,71 @@ fn artifacts_dir(args: &bitonic_tpu::util::cli::Args) -> std::path::PathBuf {
         .unwrap_or_else(bitonic_tpu::runtime::default_artifacts_dir)
 }
 
-/// `--plan-variant`/`--plan-block`: how the native executor compiles its
-/// launch programs (which of the paper's §4 optimizations run).
-fn plan_config(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<PlanConfig> {
-    let variant = Variant::parse(&args.get_or("plan-variant", "optimized"))
-        .ok_or_else(|| bitonic_tpu::err!("bad --plan-variant (basic|semi|optimized)"))?;
-    let block: usize = args.parsed_or("plan-block", bitonic_tpu::runtime::DEFAULT_PLAN_BLOCK)?;
+/// `--plan-variant`/`--plan-block`/`--plan-interleave`: the base launch
+/// program + execution geometry configuration (which of the paper's §4
+/// optimizations run, and how wide the batch-interleaved tiles are).
+/// Fields not given fall back to the defaults.
+fn plan_base(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<PlanConfig> {
+    let defaults = PlanConfig::default();
+    let variant = match args.get("plan-variant") {
+        Some(s) => Variant::parse(s)
+            .ok_or_else(|| bitonic_tpu::err!("bad --plan-variant (basic|semi|optimized)"))?,
+        None => defaults.variant,
+    };
+    let block: usize = args.parsed_or("plan-block", defaults.block)?;
     bitonic_tpu::ensure!(
         block.is_power_of_two() && block >= 2,
         "--plan-block must be a power of two >= 2, got {block}"
     );
-    Ok(PlanConfig { variant, block })
+    let interleave: usize = args.parsed_or("plan-interleave", defaults.interleave)?;
+    bitonic_tpu::ensure!(
+        interleave >= 1,
+        "--plan-interleave must be >= 1 (1 = scalar execution)"
+    );
+    Ok(PlanConfig { variant, block, interleave })
+}
+
+/// The full plan policy the device host runs: the base config, refined
+/// per size class by a tuning profile when one is available (`--profile`
+/// path, else `<artifacts>/autotune.tsv`, suppressed by `--no-profile`).
+/// Fields the operator set explicitly are pinned — the profile never
+/// overrides a flag.
+fn plan_policy(
+    args: &bitonic_tpu::util::cli::Args,
+    artifacts: &std::path::Path,
+) -> bitonic_tpu::Result<PlanPolicy> {
+    let base = plan_base(args)?;
+    let profile = if args.flag("no-profile") {
+        None
+    } else if let Some(path) = args.get("profile") {
+        Some(TuningProfile::load(path)?)
+    } else {
+        let path = TuningProfile::default_path(artifacts);
+        if path.exists() {
+            eprintln!("using tuning profile {path:?} (suppress with --no-profile)");
+            Some(TuningProfile::load(&path)?)
+        } else {
+            None
+        }
+    };
+    Ok(PlanPolicy {
+        base,
+        profile,
+        pin_block: args.get("plan-block").is_some(),
+        pin_interleave: args.get("plan-interleave").is_some(),
+    })
+}
+
+/// `--threads`, falling back to the tuning profile's recommendation and
+/// finally to 8.
+fn pick_threads(
+    args: &bitonic_tpu::util::cli::Args,
+    policy: &PlanPolicy,
+) -> bitonic_tpu::Result<usize> {
+    Ok(match args.get_parsed::<usize>("threads")? {
+        Some(t) => t,
+        None => policy.tuned_threads().unwrap_or(8),
+    })
 }
 
 fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
@@ -109,14 +184,11 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         "hybrid" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
                 .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-            let threads: usize = args.parsed_or("threads", 8)?;
-            let (handle, manifest) = spawn_device_host_with(
-                artifacts_dir(args),
-                HostConfig {
-                    threads,
-                    plan: plan_config(args)?,
-                },
-            )?;
+            let dir = artifacts_dir(args);
+            let plan = plan_policy(args, &dir)?;
+            let threads = pick_threads(args, &plan)?;
+            let (handle, manifest) =
+                spawn_device_host_with(&dir, HostConfig { threads, plan })?;
             let sorter =
                 bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?;
             let stats = sorter.sort(&mut keys)?;
@@ -128,14 +200,11 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         "device" => {
             let variant = Variant::parse(&args.get_or("variant", "optimized"))
                 .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-            let threads: usize = args.parsed_or("threads", 8)?;
-            let (handle, manifest) = spawn_device_host_with(
-                artifacts_dir(args),
-                HostConfig {
-                    threads,
-                    plan: plan_config(args)?,
-                },
-            )?;
+            let dir = artifacts_dir(args);
+            let plan = plan_policy(args, &dir)?;
+            let threads = pick_threads(args, &plan)?;
+            let (handle, manifest) =
+                spawn_device_host_with(&dir, HostConfig { threads, plan })?;
             let padded = n.next_power_of_two();
             let meta = manifest
                 .size_classes(variant)
@@ -162,20 +231,22 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
 fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let requests: usize = args.parsed_or("requests", 200)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
-    let threads: usize = args.parsed_or("threads", 8)?;
     let variant = Variant::parse(&args.get_or("variant", "optimized"))
         .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
-    // One pool on the device host (row-parallel execute) and the same
-    // knob for the service's work-stealing worker count.
-    let (handle, manifest) = spawn_device_host_with(
-        artifacts_dir(args),
-        HostConfig {
-            threads,
-            plan: plan_config(args)?,
-        },
-    )?;
+    let dir = artifacts_dir(args);
+    let plan = plan_policy(args, &dir)?;
+    // The tuning profile's threads recommendation applies to the device
+    // host's executor pool only — that is what the sweep measured. The
+    // service's work-stealing worker count shares the explicit --threads
+    // knob but never follows the profile: the tune does not benchmark
+    // service-level concurrency, and one tuned `threads=1` entry must not
+    // collapse the whole request plane to a single worker.
+    let host_threads = pick_threads(args, &plan)?;
+    let service_threads: usize = args.parsed_or("threads", 8)?;
+    let (handle, manifest) =
+        spawn_device_host_with(&dir, HostConfig { threads: host_threads, plan })?;
     println!(
-        "warming {} artifacts… ({threads} executor/service threads)",
+        "warming {} artifacts… ({host_threads} executor / {service_threads} service threads)",
         manifest.size_classes(variant).len()
     );
     handle.warm_up(variant)?;
@@ -190,7 +261,7 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let svc = Service::new(
         sorters,
         ServiceConfig {
-            threads,
+            threads: service_threads,
             ..ServiceConfig::default()
         },
     );
@@ -338,6 +409,126 @@ fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     Ok(())
 }
 
+/// `bitonic-tpu tune`: sweep `block × interleave × threads` on the real
+/// executor over the manifest's `(n, dtype)` size classes, print every
+/// measurement, and persist the fastest config per class as the tuning
+/// profile `sort`/`serve` consult on start-up.
+fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let smoke = args.flag("smoke");
+
+    // Distinct (n, dtype) classes over the sort artifacts — merge
+    // artifacts share their class's tuned config via the same lookup.
+    let mut classes: Vec<(usize, bitonic_tpu::runtime::Dtype)> = manifest
+        .entries
+        .iter()
+        .filter(|m| m.kind == ArtifactKind::Sort)
+        .map(|m| (m.n, m.dtype))
+        .collect();
+    classes.sort_by_key(|&(n, d)| (n, d.name()));
+    classes.dedup();
+    if smoke {
+        classes.truncate(2); // smallest two classes: seconds, not minutes
+    }
+    bitonic_tpu::ensure!(!classes.is_empty(), "no sort artifacts to tune for");
+
+    let mut request = if smoke {
+        TuneRequest::smoke(classes)
+    } else {
+        let mut r = TuneRequest::full(classes);
+        // Measure at the geometry serving actually dispatches: the
+        // largest batch the artifact menu ships (fixture batches are
+        // 1..8 rows, not the generic default) — so the interleave
+        // narrowing during measurement matches the narrowing at serve
+        // time. --tune-rows overrides for what-if sweeps.
+        let max_batch = manifest
+            .entries
+            .iter()
+            .filter(|m| m.kind == ArtifactKind::Sort)
+            .map(|m| m.batch)
+            .max()
+            .unwrap_or(r.rows);
+        r.rows = max_batch.max(1);
+        r
+    };
+    if let Some(rows) = args.get_parsed::<usize>("tune-rows")? {
+        bitonic_tpu::ensure!(rows >= 1, "--tune-rows must be >= 1");
+        request.rows = rows;
+    }
+    request.seed = args.parsed_or("seed", request.seed)?;
+    println!(
+        "tuning {} class(es) × blocks {:?} × interleave {:?} × threads {:?} ({} rows/batch{})…",
+        request.classes.len(),
+        request.blocks,
+        request.interleaves,
+        request.threads,
+        request.rows,
+        if smoke { ", smoke grid" } else { "" },
+    );
+
+    let t0 = Instant::now();
+    let outcome = tune(&request);
+
+    let mut measured = Table::new(vec![
+        "n", "dtype", "block", "interleave", "threads", "rows/sec",
+    ]);
+    for e in &outcome.measured {
+        measured.row(vec![
+            fmt_size(e.n),
+            e.dtype.name().to_string(),
+            e.block.to_string(),
+            e.interleave.to_string(),
+            e.threads.to_string(),
+            format!("{:.0}", e.rows_per_sec),
+        ]);
+    }
+    println!("{}", measured.render());
+
+    let mut chosen = Table::new(vec![
+        "class", "chosen block", "interleave", "threads", "rows/sec",
+    ]);
+    for e in &outcome.profile.entries {
+        chosen.row(vec![
+            format!("n={} {}", fmt_size(e.n), e.dtype.name()),
+            e.block.to_string(),
+            e.interleave.to_string(),
+            e.threads.to_string(),
+            format!("{:.0}", e.rows_per_sec),
+        ]);
+    }
+    println!("{}", chosen.render());
+
+    // A smoke sweep (tiny grid, truncated classes, threads=[1]) is a
+    // pipeline exercise, not a real tuning — persist it to a side path
+    // that sort/serve do NOT auto-consult, so a CI smoke can never
+    // silently downgrade production runs to its miniature config.
+    let path = match args.get("profile") {
+        Some(p) => std::path::PathBuf::from(p),
+        None if smoke => dir.join("autotune.smoke.tsv"),
+        None => TuningProfile::default_path(&dir),
+    };
+    outcome.profile.save(&path)?;
+    if smoke {
+        // A smoke grid is never a real tuning, wherever it was written —
+        // including an explicit `--profile` pointing at the auto-consulted
+        // path. Say so instead of advertising automatic pickup.
+        println!(
+            "wrote {} smoke-tuned class(es) to {path:?} in {:.1}s — smoke grids are for \
+             pipeline checks; run a full `tune` before relying on this profile",
+            outcome.profile.entries.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        println!(
+            "wrote {} tuned class(es) to {path:?} in {:.1}s — sort/serve pick it up automatically",
+            outcome.profile.entries.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let n: usize = args.parsed_or("n", 65536)?;
     let seed: u64 = args.parsed_or("seed", 42)?;
@@ -359,7 +550,7 @@ fn cmd_analyze(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let net = Network::new(n.next_power_of_two());
     // Same knob the executor compiles its plans at, so the structural
     // numbers printed here are the ones the native path actually pays.
-    let block = plan_config(args)?.block;
+    let block = plan_base(args)?.block;
     let mut t = Table::new(vec!["variant", "launches", "hbm passes", "vs basic"]);
     let basic_launches = net.launches(Variant::Basic, block).len() as f64;
     for v in Variant::ALL {

@@ -1,0 +1,581 @@
+//! Per-host plan autotuning: sweep `PlanConfig { block, interleave }` ×
+//! worker threads on the **real executor** and persist the fastest
+//! configuration per `(n, dtype)` size class.
+//!
+//! The paper tunes its kernels to one fixed device (a K10's 48 KiB of
+//! shared memory fixes `block`); this crate runs on whatever CPU hosts
+//! it, where the right fused-tile size and batch-interleave width depend
+//! on cache sizes and vector width. ROADMAP's "auto-tune `block` per
+//! host" item lands here:
+//!
+//! * [`tune`] measures every candidate through
+//!   `runtime::executor::execute_batch` — the exact dispatch path the
+//!   serving stack runs, pool included — and picks the highest rows/sec
+//!   per class.
+//! * [`TuningProfile`] persists the choices as a TSV next to the
+//!   artifacts (`<artifacts>/autotune.tsv` by default, see
+//!   [`TuningProfile::default_path`]), one line per `(n, dtype)` class.
+//! * [`PlanPolicy`] is how the profile is consulted: the
+//!   [`crate::runtime::Registry`] resolves each artifact's effective
+//!   [`PlanConfig`] through it when compiling the executor, with
+//!   operator-pinned fields (explicit `--plan-block` /
+//!   `--plan-interleave`) always winning over the profile.
+//!
+//! CLI: `bitonic-tpu tune [--smoke]` runs the sweep and writes the
+//! profile; `sort`/`serve` pick it up automatically.
+//!
+//! **Scope of a tuned entry.** `block`/`interleave` are resolved per
+//! class and re-narrowed against the live batch at dispatch, so a tuned
+//! width degrades gracefully when the serving batch differs from the
+//! measured one (the CLI measures at the menu's largest batch for this
+//! reason). The `threads` column is a *host-pool recommendation*: the
+//! device host owns one pool for all classes (single-device-owner
+//! model), so [`PlanPolicy::tuned_threads`] takes the max over entries —
+//! a class whose best measurement was serial still runs on the shared
+//! pool, where the narrowing keeps its tiles worker-aligned. Per-class
+//! pool sizing would need per-batch pools the runtime deliberately does
+//! not have (see ROADMAP).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::bench::{black_box, Bench};
+use crate::sort::network::Variant;
+use crate::sort::SortKey;
+use crate::util::error::Context;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{Distribution, Generator};
+
+use super::artifact::{ArtifactKind, Dtype};
+use super::executor::{effective_interleave, execute_batch, ExecutionPlan, PlanConfig};
+
+/// One measured (or chosen) tuning point: the fastest known executor
+/// configuration for a `(n, dtype)` size class on this host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedEntry {
+    /// Row length of the size class.
+    pub n: usize,
+    /// Key dtype of the size class.
+    pub dtype: Dtype,
+    /// Launch-fusion variant measured (the sweep stays on `Optimized`;
+    /// recorded so the TSV is self-describing).
+    pub variant: Variant,
+    /// Fused-tile block, in keys.
+    pub block: usize,
+    /// Batch-interleave width R.
+    pub interleave: usize,
+    /// Executor pool threads the measurement used (1 = serial).
+    pub threads: usize,
+    /// Measured throughput, rows per second.
+    pub rows_per_sec: f64,
+}
+
+/// A persisted set of per-class tuning choices (`autotune.tsv`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuningProfile {
+    /// One chosen entry per `(n, dtype)` class.
+    pub entries: Vec<TunedEntry>,
+}
+
+const PROFILE_HEADER: &str = "n\tdtype\tvariant\tblock\tinterleave\tthreads\trows_per_sec";
+
+impl TuningProfile {
+    /// Canonical profile location for an artifacts directory: the sweep
+    /// is a property of (host, artifact menu), so the profile lives next
+    /// to the manifest it tunes for.
+    pub fn default_path(artifacts_dir: impl AsRef<Path>) -> PathBuf {
+        artifacts_dir.as_ref().join("autotune.tsv")
+    }
+
+    /// Load a profile TSV, validating every row (a hand-edited file must
+    /// fail loudly here, not deep inside plan compilation).
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning profile {path:?} — generate one with `bitonic-tpu tune`"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line == PROFILE_HEADER {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            crate::ensure!(
+                f.len() == 7,
+                "tuning profile {path:?} line {}: want 7 tab-separated fields, got {}",
+                lineno + 1,
+                f.len()
+            );
+            let entry = TunedEntry {
+                n: f[0].parse().with_context(|| format!("line {}: n", lineno + 1))?,
+                dtype: Dtype::parse(f[1])?,
+                variant: Variant::parse(f[2])
+                    .with_context(|| format!("line {}: bad variant {:?}", lineno + 1, f[2]))?,
+                block: f[3].parse().with_context(|| format!("line {}: block", lineno + 1))?,
+                interleave: f[4]
+                    .parse()
+                    .with_context(|| format!("line {}: interleave", lineno + 1))?,
+                threads: f[5].parse().with_context(|| format!("line {}: threads", lineno + 1))?,
+                rows_per_sec: f[6]
+                    .parse()
+                    .with_context(|| format!("line {}: rows_per_sec", lineno + 1))?,
+            };
+            crate::ensure!(
+                entry.n.is_power_of_two()
+                    && entry.block.is_power_of_two()
+                    && entry.block >= 2
+                    && entry.interleave >= 1
+                    && entry.threads >= 1,
+                "tuning profile {path:?} line {}: malformed entry {entry:?}",
+                lineno + 1
+            );
+            entries.push(entry);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Write the profile TSV.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        let mut out = String::from("# bitonic-tpu tuning profile — written by `bitonic-tpu tune`\n");
+        out.push_str(PROFILE_HEADER);
+        out.push('\n');
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{:.1}\n",
+                e.n,
+                e.dtype.name(),
+                e.variant.name(),
+                e.block,
+                e.interleave,
+                e.threads,
+                e.rows_per_sec
+            ));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing tuning profile {path:?}"))
+    }
+
+    /// The tuned entry for a size class: an exact `(n, dtype)` match,
+    /// else the nearest same-dtype class with `entry.n >= n` (its cache
+    /// trade-offs dominate ours), else the largest same-dtype class.
+    pub fn lookup(&self, n: usize, dtype: Dtype) -> Option<&TunedEntry> {
+        let same: Vec<&TunedEntry> = self.entries.iter().filter(|e| e.dtype == dtype).collect();
+        same.iter()
+            .find(|e| e.n == n)
+            .copied()
+            .or_else(|| same.iter().filter(|e| e.n >= n).min_by_key(|e| e.n).copied())
+            .or_else(|| same.iter().max_by_key(|e| e.n).copied())
+    }
+
+    /// The pool size the profile recommends for a host serving every
+    /// class (the max over entries — a pool can idle, not grow).
+    pub fn tuned_threads(&self) -> Option<usize> {
+        self.entries.iter().map(|e| e.threads).max()
+    }
+}
+
+/// How the registry picks each artifact's effective [`PlanConfig`]: a
+/// base configuration (CLI flags or defaults), optionally refined per
+/// `(n, dtype)` class by a [`TuningProfile`] — except for fields the
+/// operator pinned explicitly, which always win. This is the seam the
+/// coordinator needed to run different plan configs per size class
+/// instead of one global default.
+#[derive(Clone, Debug, Default)]
+pub struct PlanPolicy {
+    /// Fallback / operator-chosen configuration.
+    pub base: PlanConfig,
+    /// Tuned per-class choices, when a profile exists.
+    pub profile: Option<TuningProfile>,
+    /// `--plan-block` was given explicitly: the profile must not override.
+    pub pin_block: bool,
+    /// `--plan-interleave` was given explicitly: ditto.
+    pub pin_interleave: bool,
+}
+
+impl PlanPolicy {
+    /// A policy that always resolves to `base` (no profile consulted).
+    pub fn fixed(base: PlanConfig) -> Self {
+        Self {
+            base,
+            profile: None,
+            pin_block: true,
+            pin_interleave: true,
+        }
+    }
+
+    /// A policy that refines `base` per class from `profile`.
+    pub fn tuned(base: PlanConfig, profile: TuningProfile) -> Self {
+        Self {
+            base,
+            profile: Some(profile),
+            pin_block: false,
+            pin_interleave: false,
+        }
+    }
+
+    /// The effective plan configuration for one `(n, dtype)` class.
+    pub fn resolve(&self, n: usize, dtype: Dtype) -> PlanConfig {
+        let mut cfg = self.base;
+        if let Some(profile) = &self.profile {
+            if let Some(e) = profile.lookup(n, dtype) {
+                if !self.pin_block {
+                    cfg.block = e.block;
+                }
+                if !self.pin_interleave {
+                    cfg.interleave = e.interleave;
+                }
+            }
+        }
+        cfg
+    }
+
+    /// Pool size the profile recommends, if tuned.
+    pub fn tuned_threads(&self) -> Option<usize> {
+        self.profile.as_ref().and_then(TuningProfile::tuned_threads)
+    }
+}
+
+impl From<PlanConfig> for PlanPolicy {
+    fn from(base: PlanConfig) -> Self {
+        Self::fixed(base)
+    }
+}
+
+/// One sweep request: which classes to tune and the candidate grid.
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    /// `(n, dtype)` size classes to tune (usually the manifest's menu).
+    pub classes: Vec<(usize, Dtype)>,
+    /// Candidate fused-tile blocks (keys; clamped to each class's n).
+    pub blocks: Vec<usize>,
+    /// Candidate batch-interleave widths R.
+    pub interleaves: Vec<usize>,
+    /// Candidate executor pool sizes (1 = serial).
+    pub threads: Vec<usize>,
+    /// Rows per measured batch.
+    pub rows: usize,
+    /// Measurement harness preset.
+    pub bench: Bench,
+    /// Workload seed (measurements are deterministic in input).
+    pub seed: u64,
+}
+
+impl TuneRequest {
+    /// Tiny grid for CI smoke: terminates in seconds, still exercises
+    /// the full sweep → choose → persist pipeline.
+    pub fn smoke(classes: Vec<(usize, Dtype)>) -> Self {
+        Self {
+            classes,
+            blocks: vec![1024],
+            interleaves: vec![1, 8],
+            threads: vec![1],
+            rows: 8,
+            bench: Bench {
+                warmup: 1,
+                min_iters: 2,
+                max_iters: 6,
+                target: Duration::from_millis(150),
+            },
+            seed: 0x7E57,
+        }
+    }
+
+    /// The real per-host grid: L2-to-L1 block range × the interleave
+    /// widths a 128/256/512-bit SIMD unit can saturate × serial vs one
+    /// pool sized to the machine.
+    pub fn full(classes: Vec<(usize, Dtype)>) -> Self {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        Self {
+            classes,
+            blocks: vec![256, 1024, 4096],
+            interleaves: vec![1, 4, 8, 16],
+            threads: if avail > 1 { vec![1, avail] } else { vec![1] },
+            rows: 32,
+            bench: Bench {
+                warmup: 1,
+                min_iters: 2,
+                max_iters: 10,
+                target: Duration::from_millis(250),
+            },
+            seed: 0x7E57,
+        }
+    }
+}
+
+/// Everything a sweep produced: the chosen profile plus every point
+/// measured (for reports and the bench trajectory JSON).
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Fastest config per class — what [`TuningProfile::save`] persists.
+    pub profile: TuningProfile,
+    /// All measured candidates, sweep order.
+    pub measured: Vec<TunedEntry>,
+}
+
+/// Run the sweep: for every class, measure every candidate
+/// `(block, interleave, threads)` on the real executor dispatch path and
+/// keep the fastest.
+pub fn tune(req: &TuneRequest) -> TuneOutcome {
+    let mut measured = Vec::new();
+    let mut chosen = Vec::new();
+    for &(n, dtype) in &req.classes {
+        let mut best: Option<TunedEntry> = None;
+        for &threads in &req.threads {
+            let pool = (threads > 1).then(|| ThreadPool::new(threads, 2 * threads));
+            let mut blocks: Vec<usize> = req.blocks.iter().map(|&b| b.min(n).max(2)).collect();
+            blocks.sort_unstable();
+            blocks.dedup();
+            // Candidate widths reduced to the *effective* width this
+            // (rows, threads) combination executes — the exact narrowing
+            // `execute_batch` applies, via the shared
+            // [`effective_interleave`]. Deduping after the reduction
+            // avoids re-measuring identical code paths, and the persisted
+            // entry records a width that actually ran.
+            let mut widths: Vec<usize> = req
+                .interleaves
+                .iter()
+                .map(|&r| effective_interleave(r, req.rows, threads))
+                .collect();
+            widths.sort_unstable();
+            widths.dedup();
+            for &block in &blocks {
+                for &interleave in &widths {
+                    let plan = ExecutionPlan::with_config(
+                        ArtifactKind::Sort,
+                        n,
+                        false,
+                        PlanConfig { variant: Variant::Optimized, block, interleave },
+                    );
+                    let rows_per_sec =
+                        measure_rows_per_sec(&plan, pool.as_ref(), dtype, req.rows, &req.bench, req.seed);
+                    let entry = TunedEntry {
+                        n,
+                        dtype,
+                        variant: Variant::Optimized,
+                        block,
+                        interleave,
+                        threads,
+                        rows_per_sec,
+                    };
+                    if best.as_ref().map_or(true, |b| entry.rows_per_sec > b.rows_per_sec) {
+                        best = Some(entry.clone());
+                    }
+                    measured.push(entry);
+                }
+            }
+        }
+        chosen.push(best.expect("tune(): empty candidate grid"));
+    }
+    TuneOutcome {
+        profile: TuningProfile { entries: chosen },
+        measured,
+    }
+}
+
+/// Measure one candidate: rows/sec sorting a fresh `rows × n` batch per
+/// iteration through [`execute_batch`] — the serving path's dispatch,
+/// including pool and interleave tiling.
+fn measure_rows_per_sec(
+    plan: &ExecutionPlan,
+    pool: Option<&ThreadPool>,
+    dtype: Dtype,
+    rows: usize,
+    bench: &Bench,
+    seed: u64,
+) -> f64 {
+    fn go<T: SortKey>(
+        plan: &ExecutionPlan,
+        pool: Option<&ThreadPool>,
+        rows: usize,
+        bench: &Bench,
+        mut make: impl FnMut() -> Vec<T>,
+    ) -> f64 {
+        let cfg = plan.config();
+        let label = format!("tune n={} b={} r={}", plan.n(), cfg.block, cfg.interleave);
+        let meas = bench.run_with_setup(&label, &mut make, |mut data| {
+            execute_batch(plan, pool, &mut data).expect("tune batch must execute");
+            black_box(&data);
+        });
+        let secs = meas.median_ns() as f64 / 1e9;
+        if secs > 0.0 {
+            rows as f64 / secs
+        } else {
+            f64::MAX
+        }
+    }
+    let n = plan.n();
+    let mut gen = Generator::new(seed);
+    match dtype {
+        Dtype::U32 => go(plan, pool, rows, bench, || gen.u32s(rows * n, Distribution::Uniform)),
+        Dtype::I32 => go(plan, pool, rows, bench, || {
+            gen.u32s(rows * n, Distribution::Uniform)
+                .into_iter()
+                .map(|x| x as i32)
+                .collect::<Vec<i32>>()
+        }),
+        Dtype::F32 => go(plan, pool, rows, bench, || gen.f32s(rows * n, Distribution::Uniform)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(n: usize, dtype: Dtype, block: usize, interleave: usize, threads: usize) -> TunedEntry {
+        TunedEntry {
+            n,
+            dtype,
+            variant: Variant::Optimized,
+            block,
+            interleave,
+            threads,
+            rows_per_sec: 1000.0,
+        }
+    }
+
+    #[test]
+    fn profile_tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("bitonic-tpu-autotune-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.tsv");
+        let profile = TuningProfile {
+            entries: vec![
+                entry(1024, Dtype::U32, 256, 8, 1),
+                entry(65536, Dtype::U32, 4096, 16, 4),
+                entry(1024, Dtype::F32, 1024, 4, 2),
+            ],
+        };
+        profile.save(&path).unwrap();
+        let loaded = TuningProfile::load(&path).unwrap();
+        assert_eq!(loaded.entries.len(), 3);
+        for (a, b) in loaded.entries.iter().zip(&profile.entries) {
+            assert_eq!((a.n, a.dtype, a.block, a.interleave, a.threads),
+                       (b.n, b.dtype, b.block, b.interleave, b.threads));
+        }
+        assert_eq!(loaded.tuned_threads(), Some(4));
+    }
+
+    #[test]
+    fn load_rejects_malformed_profiles() {
+        let dir = std::env::temp_dir().join("bitonic-tpu-autotune-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.tsv");
+        // block = 3 is not a power of two.
+        std::fs::write(&bad, format!("{PROFILE_HEADER}\n1024\tuint32\toptimized\t3\t8\t1\t10.0\n"))
+            .unwrap();
+        assert!(TuningProfile::load(&bad).is_err());
+        // interleave = 0 is rejected too.
+        std::fs::write(&bad, format!("{PROFILE_HEADER}\n1024\tuint32\toptimized\t256\t0\t1\t10.0\n"))
+            .unwrap();
+        assert!(TuningProfile::load(&bad).is_err());
+        // Missing file names the tune command.
+        let err = TuningProfile::load(dir.join("nope.tsv")).unwrap_err();
+        assert!(format!("{err:#}").contains("bitonic-tpu tune"));
+    }
+
+    #[test]
+    fn lookup_prefers_exact_then_next_larger_class() {
+        let p = TuningProfile {
+            entries: vec![
+                entry(1024, Dtype::U32, 256, 4, 1),
+                entry(16384, Dtype::U32, 1024, 8, 1),
+                entry(1024, Dtype::F32, 512, 2, 1),
+            ],
+        };
+        assert_eq!(p.lookup(1024, Dtype::U32).unwrap().block, 256);
+        // Between classes: the next larger same-dtype class wins.
+        assert_eq!(p.lookup(4096, Dtype::U32).unwrap().n, 16384);
+        // Beyond every class: the largest same-dtype class.
+        assert_eq!(p.lookup(1 << 20, Dtype::U32).unwrap().n, 16384);
+        // Dtypes never cross.
+        assert_eq!(p.lookup(1024, Dtype::F32).unwrap().block, 512);
+        assert!(p.lookup(1024, Dtype::I32).is_none());
+    }
+
+    #[test]
+    fn policy_resolves_profile_but_respects_pins() {
+        let base = PlanConfig { variant: Variant::Optimized, block: 4096, interleave: 1 };
+        let profile = TuningProfile {
+            entries: vec![entry(1024, Dtype::U32, 256, 16, 1)],
+        };
+        // Tuned policy: profile refines both fields.
+        let tuned = PlanPolicy::tuned(base, profile.clone());
+        let cfg = tuned.resolve(1024, Dtype::U32);
+        assert_eq!((cfg.block, cfg.interleave), (256, 16));
+        assert_eq!(cfg.variant, Variant::Optimized, "profile never flips the variant");
+        // No matching class ⇒ base untouched.
+        let cfg = tuned.resolve(1024, Dtype::I32);
+        assert_eq!((cfg.block, cfg.interleave), (4096, 1));
+        // Pinned fields win over the profile.
+        let pinned = PlanPolicy {
+            base,
+            profile: Some(profile),
+            pin_block: true,
+            pin_interleave: false,
+        };
+        let cfg = pinned.resolve(1024, Dtype::U32);
+        assert_eq!((cfg.block, cfg.interleave), (4096, 16));
+        // Fixed policy ignores any profile by construction.
+        let fixed = PlanPolicy::fixed(base);
+        assert_eq!(fixed.resolve(1024, Dtype::U32), base);
+        assert_eq!(PlanPolicy::from(base).resolve(64, Dtype::F32), base);
+    }
+
+    #[test]
+    fn tune_sweep_measures_and_chooses_per_class() {
+        // Structure, not timing: a tiny sweep must measure the full grid,
+        // choose one entry per class, and choose it from the grid.
+        let req = TuneRequest {
+            classes: vec![(64, Dtype::U32), (128, Dtype::F32)],
+            blocks: vec![16, 64],
+            interleaves: vec![1, 4],
+            threads: vec![1],
+            rows: 4,
+            bench: Bench {
+                warmup: 0,
+                min_iters: 1,
+                max_iters: 2,
+                target: Duration::from_millis(1),
+            },
+            seed: 1,
+        };
+        let out = tune(&req);
+        assert_eq!(out.measured.len(), 2 * 2 * 2);
+        assert_eq!(out.profile.entries.len(), 2);
+        for (chosen, &(n, dtype)) in out.profile.entries.iter().zip(&req.classes) {
+            assert_eq!((chosen.n, chosen.dtype), (n, dtype));
+            assert!(req.blocks.contains(&chosen.block));
+            assert!(req.interleaves.contains(&chosen.interleave));
+            assert!(chosen.rows_per_sec > 0.0);
+            assert!(out
+                .measured
+                .iter()
+                .all(|m| m.n != n || m.dtype != dtype || m.rows_per_sec <= chosen.rows_per_sec));
+        }
+    }
+
+    #[test]
+    fn blocks_clamp_to_class_n() {
+        // A candidate block larger than the class's row length must be
+        // clamped (Network::launches would clamp it anyway; the sweep
+        // dedupes so the grid stays honest).
+        let req = TuneRequest {
+            classes: vec![(64, Dtype::U32)],
+            blocks: vec![64, 4096, 65536],
+            interleaves: vec![1],
+            threads: vec![1],
+            rows: 2,
+            bench: Bench {
+                warmup: 0,
+                min_iters: 1,
+                max_iters: 1,
+                target: Duration::from_millis(1),
+            },
+            seed: 2,
+        };
+        let out = tune(&req);
+        // 64, 4096→64, 65536→64 dedupe to a single candidate.
+        assert_eq!(out.measured.len(), 1);
+        assert_eq!(out.measured[0].block, 64);
+    }
+}

@@ -20,15 +20,21 @@
 //!   one per step), and `GlobalDoubleStep` launches pair two global
 //!   strides in registers, halving the remaining full-row passes.
 //! * **Execute (request time).** The `sort_*` entry points are a pure
-//!   walk over the launch program via [`crate::sort::network::run_launch`]:
-//!   no schedule re-derivation per row per call. When the executor holds
+//!   walk over the launch program: no schedule re-derivation per row per
+//!   call. The `(B, N)` buffer is cut into tiles of
+//!   `PlanConfig::interleave` rows, and each tile executes every launch
+//!   **across its rows at once** in an element-major interleaved layout
+//!   ([`ExecutionPlan::run_tile`] →
+//!   [`crate::sort::network::run_launch_interleaved`]) — the inner
+//!   compare-exchange loops become long branchless stride-1 sweeps, one
+//!   SIMD lane per row, the CPU translation of the paper's one-warp-lane-
+//!   per-element geometry (`interleave: 1` keeps the scalar
+//!   [`crate::sort::network::run_launch`] walk). When the executor holds
 //!   a shared [`ThreadPool`] (threaded through
-//!   [`crate::runtime::Registry`] from the device-host config), the
-//!   `(B, N)` buffer is partitioned into row-chunk tasks dispatched via
-//!   [`ThreadPool::run_scoped`], so rows sort in parallel — the CPU
-//!   analogue of the paper's "keep every lane busy" objective. A
-//!   panicking row task fails the batch with an error instead of
-//!   poisoning the pool.
+//!   [`crate::runtime::Registry`] from the device-host config), tiles
+//!   are dispatched via [`ThreadPool::run_scoped`], so tiles sort in
+//!   parallel on top of the per-tile lane parallelism. A panicking tile
+//!   task fails the batch with an error instead of poisoning the pool.
 //!
 //! The executor honours the full artifact contract the integration tests
 //! pin down — ascending/descending, u32/i32/f32, sort and merge kinds,
@@ -40,7 +46,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::sort::network::{run_launch_counting, Launch, Network, Variant};
+use crate::sort::network::{run_launch_counting, run_launch_interleaved, Launch, Network, Variant};
 use crate::sort::SortKey;
 use crate::util::error::Context;
 use crate::util::threadpool::{ScopedJob, ThreadPool};
@@ -53,11 +59,20 @@ use super::artifact::{ArtifactKind, ArtifactMeta, Dtype};
 /// (the paper's K10 48 KiB shared-memory tile: 48 KiB / 2 buffers / 4 B).
 pub const DEFAULT_PLAN_BLOCK: usize = 4096;
 
+/// Default batch-interleave width R (rows per interleaved tile): 8 u32
+/// lanes = one 32-byte AVX2 vector per compare-exchange operand, the
+/// narrowest width that keeps the small-stride sweeps (length `j * R`)
+/// vector-saturated down to stride 1. Per-host sweeps pick better values
+/// (`bitonic-tpu tune`); 1 disables interleaving (scalar row-at-a-time).
+pub const DEFAULT_PLAN_INTERLEAVE: usize = 8;
+
 /// How [`ExecutionPlan`] compiles the network into launches — which of
 /// the paper's §4 optimizations the native executor runs, and the fused
-/// tile size. The plan-level analogue of picking a kernel variant on the
-/// GPU; `Variant::Basic` degenerates to the serial one-pass-per-step walk
-/// (the reference schedule the property tests compare against).
+/// tile size — plus how the executor *drives* the plan over a batch (the
+/// batch-interleave width). The plan-level analogue of picking a kernel
+/// variant and launch geometry on the GPU; `Variant::Basic` at
+/// `interleave: 1` degenerates to the serial one-pass-per-step walk (the
+/// reference schedule the property tests compare against).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanConfig {
     /// Launch-fusion variant (paper Table 1 columns).
@@ -65,6 +80,15 @@ pub struct PlanConfig {
     /// Fused-tile capacity in keys (power of two >= 2); clamped to the
     /// row length at compile time.
     pub block: usize,
+    /// Batch-interleave width R (>= 1): the executor cuts each `(B, N)`
+    /// batch into tiles of R rows and runs every launch *across* the
+    /// tile's rows in an element-major interleaved layout — one SIMD lane
+    /// per row, the CPU translation of the paper's one-thread-per-element
+    /// SIMT geometry. 1 = scalar row-at-a-time execution (the PR 3 path).
+    /// At dispatch time the width is clamped to the batch size and, when
+    /// an execution pool is attached, narrowed so the batch still yields
+    /// at least one tile per worker (threads scale better than lanes).
+    pub interleave: usize,
 }
 
 impl Default for PlanConfig {
@@ -72,6 +96,7 @@ impl Default for PlanConfig {
         Self {
             variant: Variant::Optimized,
             block: DEFAULT_PLAN_BLOCK,
+            interleave: DEFAULT_PLAN_INTERLEAVE,
         }
     }
 }
@@ -195,6 +220,130 @@ impl ExecutionPlan {
             streamed / self.n
         }
     }
+
+    /// Execute the plan over a row-major tile of `tile.len() / n` rows.
+    ///
+    /// With more than one row, this is the **batch-interleaved** path:
+    /// the tile is transposed into an element-major scratch layout
+    /// (`scratch[e * r + l]` = element `e` of row `l`), every launch runs
+    /// across all rows at once via
+    /// [`crate::sort::network::run_launch_interleaved`] — long branchless
+    /// stride-1 sweeps, one SIMD lane per row — and the result is
+    /// transposed back. A single-row tile takes the scalar
+    /// [`run_row`](Self::run_row) walk (no transpose tax). The lane count
+    /// comes from the tile length, so a ragged final tile (batch not a
+    /// multiple of the interleave width) simply runs narrower.
+    ///
+    /// `scratch` is caller-provided so one allocation amortises across a
+    /// batch's tiles; it is cleared and refilled here.
+    pub fn run_tile<T: SortKey>(&self, tile: &mut [T], scratch: &mut Vec<T>) {
+        let n = self.n;
+        debug_assert!(n >= 1 && tile.len() % n == 0);
+        let r = tile.len() / n;
+        if r <= 1 || n < 2 {
+            for row in tile.chunks_mut(n) {
+                self.run_row(row);
+            }
+            return;
+        }
+        if self.reverse_tail {
+            for row in tile.chunks_mut(n) {
+                row[n / 2..].reverse();
+            }
+        }
+        scratch.clear();
+        scratch.reserve(r * n);
+        for e in 0..n {
+            for l in 0..r {
+                scratch.push(tile[l * n + e]);
+            }
+        }
+        for launch in &self.launches {
+            run_launch_interleaved(scratch, launch, r);
+        }
+        for (l, row) in tile.chunks_mut(n).enumerate() {
+            for (e, x) in row.iter_mut().enumerate() {
+                *x = scratch[e * r + l];
+            }
+        }
+        if self.reverse_output {
+            for row in tile.chunks_mut(n) {
+                row.reverse();
+            }
+        }
+    }
+}
+
+/// The batch-interleave width a `(B, N)` batch actually executes at: the
+/// configured R clamped to the batch — and, with `threads > 1` pool
+/// workers, narrowed so the batch still splits into at least one tile
+/// per worker (floor division: `r <= b/threads` guarantees
+/// `ceil(b/r) >= threads` tiles even on ragged batches). Thread
+/// parallelism scales near-linearly while lane parallelism tops out at a
+/// small constant, so a (B=8, threads=8) batch must become 8 scalar row
+/// jobs, not one 8-wide tile on the dispatching thread.
+///
+/// This is the **single definition** of the narrowing policy: the
+/// dispatch ([`execute_batch`]), the autotuner's candidate reduction
+/// (`runtime::autotune::tune`) and the bench trajectory's
+/// `interleave_effective` label all call it, so the profile always
+/// records widths that serving really executes.
+pub fn effective_interleave(want: usize, b: usize, threads: usize) -> usize {
+    let cap = if threads > 1 { b / threads } else { b };
+    want.max(1).min(cap.max(1)).min(b.max(1))
+}
+
+/// Drive `plan` over a row-major `(B, N)` buffer, honouring the plan's
+/// batch-interleave width and (when given) dispatching whole tiles onto
+/// the shared pool — the one batch-execution path shared by
+/// [`SortExecutor::execute`] and the autotuner's measurement loop, so the
+/// numbers `bitonic-tpu tune` records are produced by exactly the code
+/// the serving path runs.
+pub(crate) fn execute_batch<T: SortKey>(
+    plan: &ExecutionPlan,
+    pool: Option<&ThreadPool>,
+    rows: &mut [T],
+) -> crate::Result<()> {
+    let n = plan.n().max(1);
+    debug_assert_eq!(rows.len() % n, 0);
+    let b = rows.len() / n;
+    let r = effective_interleave(
+        plan.config().interleave,
+        b,
+        pool.map_or(1, |p| p.threads()),
+    );
+    let tile_len = r * n;
+    match pool {
+        // Tile-parallel path: worth the dispatch only when several tiles
+        // can overlap and each row carries real work.
+        Some(pool) if pool.threads() > 1 && b > r && n >= 64 => {
+            let tiles = (b + r - 1) / r;
+            // Oversubscribe 2× so uneven worker speeds load-balance.
+            let jobs = (pool.threads() * 2).min(tiles);
+            let tiles_per_job = (tiles + jobs - 1) / jobs;
+            let tasks: Vec<ScopedJob> = rows
+                .chunks_mut(tiles_per_job * tile_len)
+                .map(|chunk| {
+                    Box::new(move || {
+                        let mut scratch = Vec::new();
+                        for tile in chunk.chunks_mut(tile_len) {
+                            plan.run_tile(tile, &mut scratch);
+                        }
+                    }) as ScopedJob
+                })
+                .collect();
+            pool.run_scoped(tasks).map_err(|panicked| {
+                crate::err!("{panicked} sort task(s) panicked during parallel execute")
+            })?;
+        }
+        _ => {
+            let mut scratch = Vec::new();
+            for tile in rows.chunks_mut(tile_len) {
+                plan.run_tile(tile, &mut scratch);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// One loaded sort/merge artifact, ready to execute.
@@ -242,6 +391,10 @@ impl SortExecutor {
             plan.block.is_power_of_two() && plan.block >= 2,
             "plan block must be a power of two >= 2, got {}",
             plan.block
+        );
+        crate::ensure!(
+            plan.interleave >= 1,
+            "plan interleave must be >= 1 (1 = scalar execution), got 0"
         );
         let text = std::fs::read_to_string(hlo_text_path)
             .with_context(|| format!("reading {hlo_text_path:?} — generate artifacts with `python -m compile.aot` (see README)"))?;
@@ -315,37 +468,8 @@ impl SortExecutor {
             b * n * self.meta.dtype.size(),
             rows.len() * self.meta.dtype.size()
         );
-        match &self.pool {
-            // Row-parallel path: worth the dispatch only when several
-            // rows can overlap and each carries real work.
-            Some(pool) if pool.threads() > 1 && b > 1 && n >= 64 => {
-                // Oversubscribe 2× so uneven worker speeds load-balance.
-                let chunks = (pool.threads() * 2).min(b);
-                let rows_per_task = (b + chunks - 1) / chunks;
-                let plan = &self.plan;
-                let tasks: Vec<ScopedJob> = rows
-                    .chunks_mut(rows_per_task * n)
-                    .map(|chunk| {
-                        Box::new(move || {
-                            for row in chunk.chunks_mut(n) {
-                                plan.run_row(row);
-                            }
-                        }) as ScopedJob
-                    })
-                    .collect();
-                pool.run_scoped(tasks).map_err(|panicked| {
-                    crate::err!(
-                        "artifact {}: {panicked} row task(s) panicked during parallel execute",
-                        self.meta.name
-                    )
-                })?;
-            }
-            _ => {
-                for row in rows.chunks_mut(n) {
-                    self.plan.run_row(row);
-                }
-            }
-        }
+        execute_batch(&self.plan, self.pool.as_deref(), &mut rows)
+            .map_err(|e| e.context(format!("artifact {}", self.meta.name)))?;
         Ok(rows)
     }
 }
@@ -394,6 +518,32 @@ mod tests {
     }
 
     #[test]
+    fn effective_interleave_prefers_threads_over_lanes() {
+        // Serial keeps the full width (clamped to the batch).
+        assert_eq!(effective_interleave(8, 8, 1), 8);
+        assert_eq!(effective_interleave(8, 3, 1), 3);
+        assert_eq!(effective_interleave(0, 5, 1), 1, "0 treated as scalar");
+        // With a pool, the batch must yield >= one tile per worker.
+        assert_eq!(effective_interleave(8, 8, 8), 1);
+        assert_eq!(effective_interleave(8, 16, 8), 2);
+        assert_eq!(effective_interleave(8, 64, 4), 8);
+        assert_eq!(effective_interleave(3, 5, 4), 1, "ragged: floor, not ceil");
+        for b in 1..=64usize {
+            for want in [1usize, 3, 4, 8, 16] {
+                for threads in [2usize, 4, 8] {
+                    let r = effective_interleave(want, b, threads);
+                    assert!(r >= 1 && r <= b.max(1));
+                    if b > r {
+                        // Pool dispatch engages: enough tiles for everyone.
+                        let tiles = (b + r - 1) / r;
+                        assert!(tiles >= threads.min(b), "b={b} want={want} t={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn merge_plan_merges_sorted_halves() {
         let mut gen = Generator::new(2);
         for logn in 1..=12 {
@@ -433,7 +583,7 @@ mod tests {
                 ArtifactKind::Sort,
                 n,
                 false,
-                PlanConfig { variant, block: DEFAULT_PLAN_BLOCK },
+                PlanConfig { variant, block: DEFAULT_PLAN_BLOCK, interleave: 1 },
             )
         };
         for logn in [14usize, 16] {
@@ -496,7 +646,11 @@ mod tests {
                                 kind,
                                 n,
                                 descending,
-                                PlanConfig { variant: Variant::Basic, block: DEFAULT_PLAN_BLOCK },
+                                PlanConfig {
+                                    variant: Variant::Basic,
+                                    block: DEFAULT_PLAN_BLOCK,
+                                    interleave: 1,
+                                },
                             );
                             let mut want = rows.clone();
                             for row in want.chunks_mut(n) {
@@ -508,7 +662,7 @@ mod tests {
                                         kind,
                                         n,
                                         descending,
-                                        PlanConfig { variant, block },
+                                        PlanConfig { variant, block, interleave: 1 },
                                     );
                                     let mut got = rows.clone();
                                     for row in got.chunks_mut(n) {
@@ -542,6 +696,113 @@ mod tests {
         check(&mut |c| g3.f32s(c, Distribution::Uniform), "f32");
     }
 
+    /// Satellite: batch-interleaved tiles must be bit-exact with the
+    /// scalar row-at-a-time walk across u32/i32/f32 × sort/merge ×
+    /// ascending/descending × R ∈ {1, 4, 16}, including MAX-padded rows
+    /// and a ragged final tile (batch 5 is not a multiple of 4 or 16).
+    #[test]
+    fn interleaved_tiles_bit_exact_with_scalar_rows_all_configs() {
+        fn check<T>(rows_of: &mut dyn FnMut(usize) -> Vec<T>, label: &str)
+        where
+            T: SortKey + PartialEq + std::fmt::Debug,
+        {
+            let batch = 5usize;
+            let n = 256usize;
+            for kind in [ArtifactKind::Sort, ArtifactKind::Merge] {
+                for descending in [false, true] {
+                    for pad in [false, true] {
+                        let mut rows = rows_of(batch * n);
+                        for row in rows.chunks_mut(n) {
+                            if pad {
+                                for x in &mut row[n - n / 3..] {
+                                    *x = T::MAX_KEY;
+                                }
+                            }
+                            if kind == ArtifactKind::Merge {
+                                let half = n / 2;
+                                crate::sort::bitonic::bitonic_sort(&mut row[..half]);
+                                crate::sort::bitonic::bitonic_sort(&mut row[half..]);
+                            }
+                        }
+                        let plan = |interleave| {
+                            ExecutionPlan::with_config(
+                                kind,
+                                n,
+                                descending,
+                                PlanConfig {
+                                    variant: Variant::Optimized,
+                                    block: 64,
+                                    interleave,
+                                },
+                            )
+                        };
+                        let mut want = rows.clone();
+                        for row in want.chunks_mut(n) {
+                            plan(1).run_row(row);
+                        }
+                        for r in [1usize, 4, 16] {
+                            let p = plan(r);
+                            let mut got = rows.clone();
+                            let mut scratch = Vec::new();
+                            // Tile exactly as execute_batch does: R rows
+                            // per tile, ragged tail allowed.
+                            for tile in got.chunks_mut(r.min(batch) * n) {
+                                p.run_tile(tile, &mut scratch);
+                            }
+                            assert_eq!(
+                                got, want,
+                                "{label} {kind:?} desc={descending} pad={pad} R={r}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        let mut g1 = Generator::new(0x11EA);
+        check(&mut |c| g1.u32s(c, Distribution::DupHeavy), "u32");
+        let mut g2 = Generator::new(0x11EB);
+        check(
+            &mut |c| {
+                g2.u32s(c, Distribution::Uniform)
+                    .into_iter()
+                    .map(|x| x as i32)
+                    .collect()
+            },
+            "i32",
+        );
+        let mut g3 = Generator::new(0x11EC);
+        check(&mut |c| g3.f32s(c, Distribution::Uniform), "f32");
+    }
+
+    /// Same property one level up, through SortExecutor::execute with the
+    /// pool dispatching whole interleaved tiles: scalar serial executor
+    /// == interleaved pooled executor, for every interleave width.
+    #[test]
+    fn interleaved_executor_bit_exact_with_scalar_executor_pooled() {
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let (b, n) = (13usize, 512usize); // 13 rows: ragged tiles at R=4/16
+        let mk = |interleave, pool: Option<Arc<ThreadPool>>| SortExecutor {
+            meta: meta(ArtifactKind::Sort, b, n, Dtype::U32, false),
+            hlo_bytes: 0,
+            plan: ExecutionPlan::with_config(
+                ArtifactKind::Sort,
+                n,
+                false,
+                PlanConfig { variant: Variant::Optimized, block: 256, interleave },
+            ),
+            pool,
+        };
+        let mut gen = Generator::new(0xAB51);
+        let rows = gen.u32s(b * n, Distribution::DupHeavy);
+        let want = mk(1, None).sort_u32(rows.clone()).unwrap();
+        for r in [1usize, 4, 8, 16] {
+            let got = mk(r, Some(Arc::clone(&pool))).sort_u32(rows.clone()).unwrap();
+            assert_eq!(got, want, "R={r} pooled");
+            let got_serial = mk(r, None).sort_u32(rows.clone()).unwrap();
+            assert_eq!(got_serial, want, "R={r} serial");
+        }
+    }
+
     #[test]
     fn fused_executor_bit_exact_with_step_walk_executor_pooled() {
         // Same property one level up: through SortExecutor::execute with
@@ -555,7 +816,7 @@ mod tests {
                 ArtifactKind::Sort,
                 n,
                 false,
-                PlanConfig { variant, block },
+                PlanConfig { variant, block, interleave: 1 },
             ),
             pool,
         };
@@ -660,9 +921,18 @@ mod tests {
             meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
             &good,
             None,
-            PlanConfig { variant: Variant::Optimized, block: 3 },
+            PlanConfig { variant: Variant::Optimized, block: 3, interleave: 1 },
         );
         assert!(format!("{:#}", bad_plan.unwrap_err()).contains("power of two"));
+
+        // interleave = 0 is rejected on the same Result path.
+        let bad_interleave = SortExecutor::compile_with_pool(
+            meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
+            &good,
+            None,
+            PlanConfig { variant: Variant::Optimized, block: 4, interleave: 0 },
+        );
+        assert!(format!("{:#}", bad_interleave.unwrap_err()).contains("interleave"));
     }
 
     #[test]
@@ -737,7 +1007,10 @@ mod tests {
     }
 
     /// Run the same input through a serial and a pooled executor of the
-    /// same configuration; outputs must agree bit-for-bit.
+    /// same configuration; outputs must agree bit-for-bit. An odd
+    /// interleave width (3) keeps the tile count above the batch-clamped
+    /// width, so the pooled executor really exercises the tile-dispatch
+    /// path (and non-power-of-two lane counts) whenever `batch > 3`.
     fn assert_bit_exact<T>(case: &Case, pool: &Arc<ThreadPool>, mut rows: Vec<T>) -> Result<(), String>
     where
         T: SortKey + PartialEq + std::fmt::Debug,
@@ -750,15 +1023,18 @@ mod tests {
                 crate::sort::bitonic::bitonic_sort(&mut row[half..]);
             }
         }
-        let serial = executor_with_pool(case.kind, case.batch, case.n, case.dtype, case.descending, None);
-        let pooled = executor_with_pool(
-            case.kind,
-            case.batch,
-            case.n,
-            case.dtype,
-            case.descending,
-            Some(Arc::clone(pool)),
-        );
+        let config = PlanConfig {
+            interleave: 3,
+            ..PlanConfig::default()
+        };
+        let mk = |pool: Option<Arc<ThreadPool>>| SortExecutor {
+            meta: meta(case.kind, case.batch, case.n, case.dtype, case.descending),
+            hlo_bytes: 0,
+            plan: ExecutionPlan::with_config(case.kind, case.n, case.descending, config),
+            pool,
+        };
+        let serial = mk(None);
+        let pooled = mk(Some(Arc::clone(pool)));
         let a = serial.execute(rows.clone()).map_err(|e| format!("{e:#}"))?;
         let b = pooled.execute(rows).map_err(|e| format!("{e:#}"))?;
         if a != b {

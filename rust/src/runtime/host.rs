@@ -16,28 +16,31 @@ use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 
 use super::artifact::Manifest;
-use super::executor::PlanConfig;
+use super::autotune::PlanPolicy;
 use super::registry::{Key, Registry};
 use crate::sort::network::Variant;
 
 /// Device-host configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct HostConfig {
     /// Row-parallel executor threads: `> 1` gives the host a shared
     /// [`ThreadPool`] and every executor sorts its `(B, N)` rows in
     /// parallel on it; `0` or `1` keeps execution serial.
     pub threads: usize,
-    /// Launch-program configuration every executor compiles at (fusion
-    /// variant + fused-tile block); default `Optimized` at the L1-sized
-    /// block. CLI: `--plan-variant` / `--plan-block`.
-    pub plan: PlanConfig,
+    /// How every executor's launch program is configured (fusion variant,
+    /// fused-tile block, batch-interleave width): a base
+    /// [`super::PlanConfig`] — which converts into a fixed policy via
+    /// `.into()` — optionally refined per size class by a tuning profile
+    /// (`bitonic-tpu tune`). CLI: `--plan-variant` / `--plan-block` /
+    /// `--plan-interleave` / `--profile` / `--no-profile`.
+    pub plan: PlanPolicy,
 }
 
 impl Default for HostConfig {
     fn default() -> Self {
         Self {
             threads: 0,
-            plan: PlanConfig::default(),
+            plan: PlanPolicy::default(),
         }
     }
 }

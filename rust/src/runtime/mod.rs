@@ -25,12 +25,19 @@
 //! build-time/run-time interface.
 
 pub mod artifact;
+pub mod autotune;
 pub mod executor;
 pub mod host;
 pub mod registry;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
-pub use executor::{ExecutionPlan, PlanConfig, SortExecutor, DEFAULT_PLAN_BLOCK};
+pub use autotune::{
+    tune, PlanPolicy, TuneOutcome, TuneRequest, TunedEntry, TuningProfile,
+};
+pub use executor::{
+    effective_interleave, ExecutionPlan, PlanConfig, SortExecutor, DEFAULT_PLAN_BLOCK,
+    DEFAULT_PLAN_INTERLEAVE,
+};
 pub use host::{
     spawn as spawn_device_host, spawn_with as spawn_device_host_with, DeviceHandle, HostConfig,
 };

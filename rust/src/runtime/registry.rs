@@ -14,7 +14,8 @@ use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 
 use super::artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
-use super::executor::{PlanConfig, SortExecutor};
+use super::autotune::PlanPolicy;
+use super::executor::SortExecutor;
 use crate::sort::network::Variant;
 
 /// Cache key for a compiled executable.
@@ -55,35 +56,39 @@ pub struct Registry {
     /// Shared row-parallel execution pool handed to every executor this
     /// registry loads; `None` ⇒ executors run serially.
     pool: Option<Arc<ThreadPool>>,
-    /// Launch-program configuration every executor compiles its
-    /// [`super::ExecutionPlan`] at (variant + fused-tile block).
-    plan: PlanConfig,
+    /// How each artifact's launch-program configuration (variant,
+    /// fused-tile block, interleave width) is chosen: a base
+    /// [`super::PlanConfig`] optionally refined per `(n, dtype)` size
+    /// class by a tuning profile — see [`PlanPolicy::resolve`].
+    policy: PlanPolicy,
 }
 
 impl Registry {
     /// Open the artifacts directory (must contain `manifest.tsv`);
-    /// executors run serially at the default [`PlanConfig`].
+    /// executors run serially at the default plan configuration.
     pub fn open(dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
-        Self::open_with_pool(dir, None, PlanConfig::default())
+        Self::open_with_pool(dir, None, PlanPolicy::default())
     }
 
     /// [`open`](Self::open) with a shared execution pool and a plan
-    /// configuration: every executor loaded from this registry compiles
-    /// its launch program at `plan` and sorts its `(B, N)` rows in
-    /// parallel on `pool`. One pool is shared across all size classes on
-    /// purpose — the device-host thread dispatches one batch at a time,
-    /// so a per-class pool would just multiply idle threads.
+    /// policy: every executor loaded from this registry compiles its
+    /// launch program at the policy's per-class resolution (a plain
+    /// [`super::PlanConfig`] converts to a fixed policy) and sorts its
+    /// `(B, N)` rows in parallel on `pool`. One pool is shared across all
+    /// size classes on purpose — the device-host thread dispatches one
+    /// batch at a time, so a per-class pool would just multiply idle
+    /// threads.
     pub fn open_with_pool(
         dir: impl AsRef<std::path::Path>,
         pool: Option<Arc<ThreadPool>>,
-        plan: PlanConfig,
+        policy: impl Into<PlanPolicy>,
     ) -> crate::Result<Self> {
         let manifest = Manifest::load(dir)?;
         Ok(Self {
             manifest,
             cache: Mutex::new(HashMap::new()),
             pool,
-            plan,
+            policy: policy.into(),
         })
     }
 
@@ -107,11 +112,14 @@ impl Registry {
             .with_context(|| format!("no artifact for {key:?} — re-run `python -m compile.aot`"))?
             .clone();
         let path = self.manifest.path_of(&meta);
+        // Per-class plan resolution: the tuning profile (when the policy
+        // carries one) picks this size class's block/interleave.
+        let plan = self.policy.resolve(meta.n, meta.dtype);
         let exe = Arc::new(SortExecutor::compile_with_pool(
             meta,
             &path,
             self.pool.clone(),
-            self.plan,
+            plan,
         )?);
         let mut cache = self.cache.lock().unwrap();
         Ok(Arc::clone(cache.entry(key).or_insert(exe)))

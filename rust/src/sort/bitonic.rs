@@ -133,6 +133,112 @@ pub fn compare_exchange_double_step_range<T: SortKey>(
     }
 }
 
+/// [`compare_exchange_step_range`] over a **lane-interleaved tile** — the
+/// batch-interleaved (SIMT-style) kernel: `xs` holds `lanes` independent
+/// rows in element-major order (`xs[e * lanes + l]` is element `e` of row
+/// `l`), and one call runs the step on every row at once. `lo`/`hi` are
+/// *element* indices with the same `2j`-alignment contract as the scalar
+/// range kernel; `hi * lanes <= xs.len()`.
+///
+/// Why this layout: within an aligned run `[i, i + 2j)` the low partners
+/// `[i, i + j)` are contiguous, and (since `a & j == 0` there) each
+/// partner is `a + j`, so in element-major order the run is two adjacent
+/// blocks of `j * lanes` keys compared pointwise — one long, branchless,
+/// stride-1 min/max sweep the compiler can keep vector-width-saturated.
+/// This is the CPU translation of "one warp lane per row": the direction
+/// bit depends only on the element index, so all lanes agree, exactly
+/// like the paper's threads executing one compare-exchange in lockstep.
+/// At `lanes == 1` the kernel degenerates to the scalar sweep bit-for-bit.
+#[inline]
+pub fn compare_exchange_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(lanes >= 1 && j >= 1);
+    debug_assert!(lo % (2 * j) == 0 && (hi - lo) % (2 * j) == 0 && hi * lanes <= xs.len());
+    let w = j * lanes;
+    let mut i = lo;
+    while i < hi {
+        let base = i * lanes;
+        let (lows, highs) = xs[base..base + 2 * w].split_at_mut(w);
+        if i & k == 0 {
+            for (x, y) in lows.iter_mut().zip(highs.iter_mut()) {
+                let (a, b) = (*x, *y);
+                *x = T::key_min(a, b);
+                *y = T::key_max(a, b);
+            }
+        } else {
+            for (x, y) in lows.iter_mut().zip(highs.iter_mut()) {
+                let (a, b) = (*x, *y);
+                *x = T::key_max(a, b);
+                *y = T::key_min(a, b);
+            }
+        }
+        i += 2 * j;
+    }
+}
+
+/// [`compare_exchange_double_step_range`] over a lane-interleaved tile:
+/// both strides of the pair `(j_hi, j_hi/2)` across all `lanes` rows in
+/// one pass. The aligned run `[i, i + 2*j_hi)` is four adjacent blocks of
+/// `j_lo * lanes` keys (`A B C D`), and the scalar register quad
+/// `{a, a+j_lo, a+j_hi, a+j_hi+j_lo}` is `(A[t], B[t], C[t], D[t])`
+/// pointwise — so the whole run is one branchless four-stream sweep.
+/// Same preconditions as the scalar kernel (`j_hi >= 2`, `2*j_hi <= k`,
+/// `2*j_hi`-aligned range), plus `hi * lanes <= xs.len()`.
+#[inline]
+pub fn compare_exchange_double_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j_hi: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(j_hi >= 2 && 2 * j_hi <= k, "double step needs j_hi >= 2 and 2*j_hi <= k");
+    debug_assert!(lanes >= 1);
+    debug_assert!(lo % (2 * j_hi) == 0 && (hi - lo) % (2 * j_hi) == 0 && hi * lanes <= xs.len());
+    let j_lo = j_hi / 2;
+    let w = j_lo * lanes;
+    let mut i = lo;
+    while i < hi {
+        let base = i * lanes;
+        let (ab, cd) = xs[base..base + 4 * w].split_at_mut(2 * w);
+        let (blk_a, blk_b) = ab.split_at_mut(w);
+        let (blk_c, blk_d) = cd.split_at_mut(w);
+        if i & k == 0 {
+            for t in 0..w {
+                let (mut va, mut vb, mut vc, mut vd) = (blk_a[t], blk_b[t], blk_c[t], blk_d[t]);
+                cx_asc(&mut va, &mut vc); // stride j_hi: (a, c)
+                cx_asc(&mut vb, &mut vd); //              (b, d)
+                cx_asc(&mut va, &mut vb); // stride j_lo: (a, b)
+                cx_asc(&mut vc, &mut vd); //              (c, d)
+                blk_a[t] = va;
+                blk_b[t] = vb;
+                blk_c[t] = vc;
+                blk_d[t] = vd;
+            }
+        } else {
+            for t in 0..w {
+                let (mut va, mut vb, mut vc, mut vd) = (blk_a[t], blk_b[t], blk_c[t], blk_d[t]);
+                cx_desc(&mut va, &mut vc);
+                cx_desc(&mut vb, &mut vd);
+                cx_desc(&mut va, &mut vb);
+                cx_desc(&mut vc, &mut vd);
+                blk_a[t] = va;
+                blk_b[t] = vb;
+                blk_c[t] = vc;
+                blk_d[t] = vd;
+            }
+        }
+        i += 2 * j_hi;
+    }
+}
+
 /// Branchless in-register compare-exchange, ascending (low gets min).
 #[inline]
 fn cx_asc<T: SortKey>(lo: &mut T, hi: &mut T) {
@@ -311,6 +417,97 @@ mod tests {
                     off += tile;
                 }
                 assert_eq!(whole, tiled, "tile={tile} j={j}");
+            }
+        }
+    }
+
+    /// Element-major interleave of `lanes` equal-length rows.
+    fn interleave(rows: &[Vec<u32>]) -> Vec<u32> {
+        let lanes = rows.len();
+        let n = rows[0].len();
+        let mut out = vec![0u32; lanes * n];
+        for (l, row) in rows.iter().enumerate() {
+            for (e, &x) in row.iter().enumerate() {
+                out[e * lanes + l] = x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn interleaved_step_bit_exact_with_per_lane_scalar_sweep() {
+        // Running one interleaved step over an R-lane tile must equal
+        // running the scalar step on each lane's row independently —
+        // including lanes = 1 (degenerate) and non-power-of-two lane
+        // counts, full rows and aligned sub-ranges.
+        let mut gen = Generator::new(0x1A7E5);
+        let n = 256;
+        for lanes in [1usize, 2, 3, 5, 8, 16] {
+            for ph in Network::new(n).phases() {
+                let k = ph.len;
+                for step in ph.steps() {
+                    let j = step.stride;
+                    for (lo, hi) in [(0, n), (0, n / 2), (n / 2, n)] {
+                        if lo % (2 * j) != 0 || (hi - lo) % (2 * j) != 0 {
+                            continue;
+                        }
+                        let rows: Vec<Vec<u32>> =
+                            (0..lanes).map(|_| gen.u32s(n, Distribution::DupHeavy)).collect();
+                        let mut tile = interleave(&rows);
+                        compare_exchange_step_interleaved(&mut tile, k, j, lanes, lo, hi);
+                        let mut want = rows;
+                        for row in want.iter_mut() {
+                            compare_exchange_step_range(row, k, j, lo, hi);
+                        }
+                        assert_eq!(tile, interleave(&want), "lanes={lanes} k={k} j={j} [{lo},{hi})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_double_step_bit_exact_with_per_lane_scalar_quads() {
+        let mut gen = Generator::new(0x2B0B);
+        let n = 256;
+        for lanes in [1usize, 3, 4, 16] {
+            for ph in Network::new(n).phases() {
+                let k = ph.len;
+                let mut j = k / 2;
+                while j >= 2 {
+                    let rows: Vec<Vec<u32>> =
+                        (0..lanes).map(|_| gen.u32s(n, Distribution::DupHeavy)).collect();
+                    let mut tile = interleave(&rows);
+                    compare_exchange_double_step_interleaved(&mut tile, k, j, lanes, 0, n);
+                    let mut want = rows;
+                    for row in want.iter_mut() {
+                        compare_exchange_double_step(row, k, j);
+                    }
+                    assert_eq!(tile, interleave(&want), "lanes={lanes} k={k} j_hi={j}");
+                    j /= 2;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_full_network_walk_sorts_every_lane() {
+        // Walk the whole network through the interleaved kernels only:
+        // every lane must come out sorted, independent of the others.
+        let mut gen = Generator::new(0x3C4D);
+        let n = 512;
+        for lanes in [2usize, 7] {
+            let rows: Vec<Vec<u32>> =
+                (0..lanes).map(|_| gen.u32s(n, Distribution::Uniform)).collect();
+            let mut tile = interleave(&rows);
+            for step in Network::new(n).steps() {
+                compare_exchange_step_interleaved(&mut tile, step.phase_len, step.stride, lanes, 0, n);
+            }
+            for (l, row) in rows.iter().enumerate() {
+                let got: Vec<u32> = (0..n).map(|e| tile[e * lanes + l]).collect();
+                let mut want = row.clone();
+                want.sort_unstable();
+                assert_eq!(got, want, "lane {l} of {lanes}");
             }
         }
     }

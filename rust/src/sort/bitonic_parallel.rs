@@ -8,7 +8,13 @@
 //! paper's host synchronization). Like the GPU "semi" optimisation, small
 //! strides are handled by giving each thread a contiguous chunk and
 //! running the whole tail of the phase locally without any barrier —
-//! the shared-memory optimisation translated to cache locality.
+//! the shared-memory optimisation translated to cache locality. And like
+//! the GPU "optimized" variant, *global* steps are paired two-at-a-time
+//! (the paper's §4.2 register fusion): whenever both strides of the pair
+//! stay at or above the chunk size, each thread executes whole register
+//! quads across chunk boundaries in one barrier interval, halving the
+//! barrier count of the global portion — see [`double_step_lows_in`] for
+//! the two-stride ownership argument.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
@@ -52,10 +58,20 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
             let ptr = ptr;
             scope.spawn(move || {
                 let guard = PanicCounter(&panics);
-                // SAFETY: each thread writes only indices whose pair (a, a^j)
-                // both fall in [t*chunk, (t+1)*chunk) when j < chunk, or
-                // disjoint index sets split by pair-group when j >= chunk;
-                // barriers separate steps.
+                // SAFETY: within one barrier interval each element is
+                // written by at most one thread, by one of three
+                // disjointness arguments: (1) local tails (j < chunk) —
+                // every pair (a, a^j) falls inside the owning thread's
+                // [t*chunk, (t+1)*chunk); (2) paired global steps
+                // (j/2 >= chunk) — the index space partitions into
+                // register quads closed under both strides, and only the
+                // thread owning the quad's MINIMUM index touches its four
+                // elements (three of which live in other threads'
+                // chunks — see double_step_lows_in); (3) single global
+                // steps — pairs are owned by their low index, and lows
+                // are disjoint across threads. Barriers separate
+                // intervals, and every thread takes the same branch
+                // (conditions depend only on the shared j and chunk).
                 let xs: &mut [T] = unsafe { ptr.slice() };
                 let lo = t * chunk;
                 let hi = lo + chunk;
@@ -70,6 +86,17 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
                         // barriers while the chunk stays cache-resident.
                         run_fused_tail_range(xs, k, j, lo, hi, true);
                         i += j.trailing_zeros() as usize + 1;
+                        barrier.wait();
+                    } else if j / 2 >= chunk {
+                        // Paired global steps (paper §4.2 applied across
+                        // chunk boundaries): the next stride j/2 is still
+                        // global, so run both through register quads in
+                        // ONE barrier interval — every thread takes this
+                        // branch in lockstep (the test depends only on
+                        // the shared j and chunk), halving the global
+                        // barrier count.
+                        double_step_lows_in(xs, k, j, lo, hi);
+                        i += 2;
                         barrier.wait();
                     } else {
                         // Global step: split by pair-group. Thread t takes
@@ -110,6 +137,41 @@ fn step_lows_in<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usi
     for a in lo..hi {
         if a & j == 0 {
             cx(xs, a, a ^ j, a & k == 0);
+        }
+    }
+}
+
+/// Both steps of the stride pair `(j_hi, j_hi/2)` of phase `k`, restricted
+/// to register quads whose *minimum* index lies in `[lo, hi)` — the
+/// two-stride ownership argument that lets the pairing cross chunk
+/// boundaries safely:
+///
+/// * The quads `{a, a+j_lo, a+j_hi, a+j_hi+j_lo}` (over all `a` with
+///   `a & (j_hi | j_lo) == 0`) partition the index space, and a quad is
+///   closed under both `^j_hi` and `^j_lo` — so executing both steps
+///   quad-by-quad is bit-identical to the two serial sweeps (the same
+///   argument as [`crate::sort::bitonic::compare_exchange_double_step`]).
+/// * Exactly one thread owns each quad (the owner of its minimum index),
+///   so within the single barrier interval no element is touched by two
+///   threads, even though three of the four indices live in other
+///   threads' chunks (`j_lo >= chunk` here).
+/// * All four compare-exchanges share one direction: the quad spans
+///   offsets `< 2*j_hi <= k`, never flipping bit `k` (the minimum has
+///   `a & j_hi == a & j_lo == 0`, so the additions carry nothing into
+///   bit `k`).
+fn double_step_lows_in<T: SortKey>(xs: &mut [T], k: usize, j_hi: usize, lo: usize, hi: usize) {
+    debug_assert!(j_hi >= 2 && 2 * j_hi <= k);
+    let j_lo = j_hi / 2;
+    let quad_bits = j_hi | j_lo;
+    for a in lo..hi {
+        if a & quad_bits == 0 {
+            let (b, c) = (a + j_lo, a + j_hi);
+            let d = c + j_lo;
+            let ascending = a & k == 0;
+            cx(xs, a, c, ascending); // stride j_hi: (a, c)
+            cx(xs, b, d, ascending); //              (b, d)
+            cx(xs, a, b, ascending); // stride j_lo: (a, b)
+            cx(xs, c, d, ascending); //              (c, d)
         }
     }
 }
@@ -178,6 +240,125 @@ mod tests {
             bitonic_sort_parallel(&mut v, 4);
             assert!(is_sorted(&v), "{}", d.name());
             assert!(same_multiset(&orig, &v));
+        }
+    }
+
+    /// Satellite: the chunked schedule — fused local tails, paired global
+    /// double-steps, leftover single global steps — must be bit-exact
+    /// with the serial network walk after every barrier interval. The
+    /// worker loop is emulated deterministically on one thread (running
+    /// every chunk's slice of the interval before the "barrier"), which
+    /// pins exactly the step grouping the real workers execute.
+    #[test]
+    fn chunked_schedule_bit_exact_with_serial_network_walk() {
+        use crate::sort::bitonic::compare_exchange_step;
+        let mut gen = Generator::new(0xBA121E2);
+        for logn in [10usize, 12, 13] {
+            let n = 1 << logn;
+            for threads in [2usize, 4, 8] {
+                let chunk = n / threads;
+                let data = gen.u32s(n, Distribution::DupHeavy);
+                let mut chunked = data.clone();
+                let mut serial = data;
+                let steps: Vec<(usize, usize)> =
+                    Network::new(n).steps().map(|s| (s.phase_len, s.stride)).collect();
+                let mut paired_intervals = 0usize;
+                let mut i = 0;
+                while i < steps.len() {
+                    let (k, j) = steps[i];
+                    if j < chunk {
+                        for t in 0..threads {
+                            run_fused_tail_range(&mut chunked, k, j, t * chunk, (t + 1) * chunk, true);
+                        }
+                        for jj in
+                            std::iter::successors(Some(j), |&x| (x > 1).then_some(x / 2))
+                        {
+                            compare_exchange_step(&mut serial, k, jj);
+                        }
+                        i += j.trailing_zeros() as usize + 1;
+                    } else if j / 2 >= chunk {
+                        for t in 0..threads {
+                            double_step_lows_in(&mut chunked, k, j, t * chunk, (t + 1) * chunk);
+                        }
+                        compare_exchange_step(&mut serial, k, j);
+                        compare_exchange_step(&mut serial, k, j / 2);
+                        i += 2;
+                        paired_intervals += 1;
+                    } else {
+                        for t in 0..threads {
+                            step_lows_in(&mut chunked, k, j, t * chunk, (t + 1) * chunk);
+                        }
+                        compare_exchange_step(&mut serial, k, j);
+                        i += 1;
+                    }
+                    assert_eq!(
+                        chunked, serial,
+                        "diverged at n=2^{logn} threads={threads} step {i} (k={k}, j={j})"
+                    );
+                }
+                assert!(is_sorted(&chunked));
+                // The pairing must actually engage whenever at least two
+                // global strides exist (n >= 4 * chunk).
+                if n >= 4 * chunk {
+                    assert!(paired_intervals > 0, "pairing never engaged at n=2^{logn} t={threads}");
+                }
+            }
+        }
+    }
+
+    /// The paired schedule halves the barrier count of the global
+    /// portion: count barrier intervals structurally.
+    #[test]
+    fn pairing_halves_global_barrier_count() {
+        let n = 1 << 16;
+        let chunk = n / 8; // 8 threads
+        let steps: Vec<(usize, usize)> =
+            Network::new(n).steps().map(|s| (s.phase_len, s.stride)).collect();
+        let (mut paired_intervals, mut unpaired_intervals) = (0usize, 0usize);
+        let mut i = 0;
+        while i < steps.len() {
+            let (_, j) = steps[i];
+            if j < chunk {
+                i += j.trailing_zeros() as usize + 1;
+                unpaired_intervals += 1; // local tail: one barrier either way
+            } else if j / 2 >= chunk {
+                i += 2;
+                paired_intervals += 1;
+            } else {
+                i += 1;
+                unpaired_intervals += 1;
+            }
+        }
+        // Without pairing every global step is its own interval; with it,
+        // paired intervals cover two steps each.
+        let with_pairing = paired_intervals + unpaired_intervals;
+        let without_pairing = 2 * paired_intervals + unpaired_intervals;
+        assert!(paired_intervals > 0);
+        assert!(
+            with_pairing < without_pairing,
+            "pairing saved no barriers: {with_pairing} vs {without_pairing}"
+        );
+    }
+
+    /// End to end across real threads: the parallel sort (with paired
+    /// global steps) must produce byte-identical output to the serial
+    /// network walk — sorted u32 output is unique per multiset, so this
+    /// is full bit-exactness, across sizes, thread counts and
+    /// distributions.
+    #[test]
+    fn parallel_output_identical_to_serial_walk() {
+        let mut gen = Generator::new(0xB17DB1);
+        for logn in [12usize, 14] {
+            for threads in [2usize, 3, 4, 8] {
+                for dist in [Distribution::Uniform, Distribution::DupHeavy] {
+                    let data = gen.u32s(1 << logn, dist);
+                    let mut par = data.clone();
+                    bitonic_sort_parallel(&mut par, threads);
+                    let mut ser = data;
+                    crate::sort::bitonic::bitonic_sort(&mut ser);
+                    assert_eq!(par, ser, "n=2^{logn} t={threads} {}", dist.name());
+                }
+            }
         }
     }
 

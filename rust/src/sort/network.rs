@@ -21,7 +21,8 @@
 //! the runtime's [`crate::runtime::ExecutionPlan`] walks per row.
 
 use super::bitonic::{
-    compare_exchange_double_step, compare_exchange_double_step_range, compare_exchange_step,
+    compare_exchange_double_step, compare_exchange_double_step_interleaved,
+    compare_exchange_double_step_range, compare_exchange_step, compare_exchange_step_interleaved,
     compare_exchange_step_range,
 };
 use super::SortKey;
@@ -456,6 +457,94 @@ pub fn run_fused_tail_range<T: SortKey>(
     }
 }
 
+/// [`run_launch`] over a **lane-interleaved tile** of `lanes` rows —
+/// the batch-interleaved execution mode: `xs.len() = n * lanes` holds
+/// `lanes` independent rows element-major (`xs[e * lanes + l]`), and one
+/// call executes the launch across every row at once through the
+/// interleaved kernels in [`crate::sort::bitonic`]. The grouping into
+/// passes is unchanged — only the inner sweeps widen by `lanes` — so the
+/// per-row pass count is identical to the scalar interpreter:
+///
+/// * `GlobalStep` / `GlobalDoubleStep` — one pass over the whole
+///   `n * lanes` tile, i.e. still one pass per row.
+/// * `BlockFused` — the row is cut into the same aligned element tiles of
+///   `2 * stride_max` keys; each becomes a `(lanes × tile)`-key cache
+///   block that stays resident across all fused steps.
+///
+/// Bit-exactness with `lanes` independent scalar walks holds because the
+/// compare-exchange partner and direction of every key depend only on its
+/// element index, never on its lane — pinned by
+/// `interleaved_launch_bit_exact_with_per_lane_scalar_walk`.
+pub fn run_launch_interleaved<T: SortKey>(xs: &mut [T], launch: &Launch, lanes: usize) {
+    debug_assert!(lanes >= 1 && xs.len() % lanes == 0);
+    let n = xs.len() / lanes;
+    match *launch {
+        Launch::GlobalStep(s) => {
+            compare_exchange_step_interleaved(xs, s.phase_len, s.stride, lanes, 0, n);
+        }
+        Launch::GlobalDoubleStep {
+            phase_len,
+            stride_hi,
+        } => {
+            compare_exchange_double_step_interleaved(xs, phase_len, stride_hi, lanes, 0, n);
+        }
+        Launch::BlockFused {
+            phase_lo,
+            phase_hi,
+            stride_max,
+            register_paired,
+        } => {
+            let tile = 2 * stride_max;
+            debug_assert!(tile >= 2 && n % tile == 0, "tile {tile} must divide n {n}");
+            let mut off = 0;
+            while off < n {
+                let end = off + tile;
+                let mut k = phase_lo;
+                while k <= phase_hi {
+                    run_fused_tail_range_interleaved(
+                        xs,
+                        k,
+                        (k / 2).min(stride_max),
+                        off,
+                        end,
+                        register_paired,
+                        lanes,
+                    );
+                    k *= 2;
+                }
+                off = end;
+            }
+        }
+    }
+}
+
+/// [`run_fused_tail_range`] over a lane-interleaved tile: strides
+/// `stride_hi, …, 1` of phase `phase_len` restricted to elements
+/// `[lo, hi)` of every lane at once — same pairing structure, interleaved
+/// kernels. `lo`/`hi` are element indices (the caller's alignment
+/// contract is unchanged).
+pub fn run_fused_tail_range_interleaved<T: SortKey>(
+    xs: &mut [T],
+    phase_len: usize,
+    stride_hi: usize,
+    lo: usize,
+    hi: usize,
+    paired: bool,
+    lanes: usize,
+) {
+    let mut j = stride_hi;
+    if paired {
+        while j >= 2 {
+            compare_exchange_double_step_interleaved(xs, phase_len, j, lanes, lo, hi);
+            j /= 4;
+        }
+    }
+    while j >= 1 {
+        compare_exchange_step_interleaved(xs, phase_len, j, lanes, lo, hi);
+        j /= 2;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -623,6 +712,49 @@ mod tests {
                         assert_eq!(fused, serial, "{variant:?} n={n} block={block} {l:?}");
                     }
                     assert!(fused.windows(2).all(|w| w[0] <= w[1]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_launch_bit_exact_with_per_lane_scalar_walk() {
+        // The batch-interleaved interpreter must agree bit-for-bit with
+        // running the scalar interpreter on each lane's row independently,
+        // after every launch of every program — including lanes = 1 and
+        // non-power-of-two lane counts.
+        use crate::workload::{Distribution, Generator};
+        let mut gen = Generator::new(0x1A7E);
+        let n = 512;
+        let net = Network::new(n);
+        for variant in Variant::ALL {
+            for block in [16usize, 64, 1024] {
+                for lanes in [1usize, 3, 4, 16] {
+                    let rows: Vec<Vec<u32>> =
+                        (0..lanes).map(|_| gen.u32s(n, Distribution::DupHeavy)).collect();
+                    let mut tile = vec![0u32; lanes * n];
+                    for (l, row) in rows.iter().enumerate() {
+                        for (e, &x) in row.iter().enumerate() {
+                            tile[e * lanes + l] = x;
+                        }
+                    }
+                    let mut scalar = rows;
+                    for launch in net.launches(variant, block) {
+                        run_launch_interleaved(&mut tile, &launch, lanes);
+                        for row in scalar.iter_mut() {
+                            run_launch(row, &launch);
+                        }
+                        for (l, row) in scalar.iter().enumerate() {
+                            let got: Vec<u32> = (0..n).map(|e| tile[e * lanes + l]).collect();
+                            assert_eq!(
+                                &got, row,
+                                "{variant:?} block={block} lanes={lanes} lane={l} {launch:?}"
+                            );
+                        }
+                    }
+                    for (l, row) in scalar.iter().enumerate() {
+                        assert!(row.windows(2).all(|w| w[0] <= w[1]), "lane {l} unsorted");
+                    }
                 }
             }
         }

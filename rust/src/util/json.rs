@@ -1,0 +1,248 @@
+//! Minimal JSON document builder (serde is unavailable offline): just
+//! enough to emit machine-readable bench/tuning reports like
+//! `BENCH_ablation.json` — insertion-ordered objects, pretty printing,
+//! correct string escaping, nothing else. There is deliberately no
+//! parser; the reports are write-only from this crate's point of view
+//! (future PRs diff them as text or load them with real tooling).
+
+/// A JSON value. Objects keep insertion order so reports diff cleanly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null` (also what non-finite floats become).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any finite number.
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Empty object.
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    /// Empty array.
+    pub fn arr() -> Self {
+        Json::Arr(Vec::new())
+    }
+
+    /// Set `key` on an object (replacing an existing key in place).
+    /// Panics on non-objects — report-building is programmer-controlled.
+    pub fn set(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        match self {
+            Json::Obj(fields) => {
+                let value = value.into();
+                if let Some(f) = fields.iter_mut().find(|(k, _)| k == key) {
+                    f.1 = value;
+                } else {
+                    fields.push((key.to_string(), value));
+                }
+            }
+            other => panic!("Json::set on non-object {other:?}"),
+        }
+        self
+    }
+
+    /// Append to an array. Panics on non-arrays.
+    pub fn push(&mut self, value: impl Into<Json>) -> &mut Self {
+        match self {
+            Json::Arr(items) => items.push(value.into()),
+            other => panic!("Json::push on non-array {other:?}"),
+        }
+        self
+    }
+
+    /// Pretty-print with two-space indentation and a trailing newline.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if *x == x.trunc() && x.abs() < 9e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    indent(out, depth + 1);
+                    item.write(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    indent(out, depth + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_document() {
+        let mut doc = Json::obj();
+        doc.set("name", "ablation").set("passes", 11usize).set("ok", true);
+        let mut rows = Json::arr();
+        let mut row = Json::obj();
+        row.set("variant", "optimized").set("rows_per_sec", 1234.5f64);
+        rows.push(row);
+        doc.set("rows", rows);
+        let s = doc.render();
+        assert!(s.contains("\"name\": \"ablation\""), "{s}");
+        assert!(s.contains("\"passes\": 11"), "{s}");
+        assert!(s.contains("\"rows_per_sec\": 1234.5"), "{s}");
+        assert!(s.ends_with("}\n"), "{s}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn integers_render_without_decimals() {
+        assert_eq!(Json::from(42usize).render(), "42\n");
+        assert_eq!(Json::from(1e6).render(), "1000000\n");
+        assert_eq!(Json::from(1.25).render(), "1.25\n");
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(Json::from(f64::NAN).render(), "null\n");
+        assert_eq!(Json::from(f64::INFINITY).render(), "null\n");
+    }
+
+    #[test]
+    fn strings_escape_specials() {
+        let s = Json::from("a\"b\\c\nd\te\u{1}").render();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\te\\u0001\"\n");
+    }
+
+    #[test]
+    fn set_replaces_existing_key_in_place() {
+        let mut o = Json::obj();
+        o.set("k", 1usize).set("j", 2usize).set("k", 3usize);
+        match &o {
+            Json::Obj(fields) => {
+                assert_eq!(fields.len(), 2);
+                assert_eq!(fields[0], ("k".to_string(), Json::Num(3.0)));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn empty_collections_render_compact() {
+        assert_eq!(Json::obj().render(), "{}\n");
+        assert_eq!(Json::arr().render(), "[]\n");
+    }
+}

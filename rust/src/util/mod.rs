@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod json;
 pub mod metrics;
 pub mod prop;
 pub mod table;

@@ -186,7 +186,7 @@ fn plan_variants_bit_exact_end_to_end() {
     let (walk, manifest) = spawn_device_host_with(
         &dir,
         HostConfig {
-            plan: PlanConfig { variant: Variant::Basic, block: 256 },
+            plan: PlanConfig { variant: Variant::Basic, block: 256, interleave: 1 }.into(),
             ..Default::default()
         },
     )
@@ -197,7 +197,7 @@ fn plan_variants_bit_exact_end_to_end() {
             &dir,
             HostConfig {
                 threads: 4,
-                plan: PlanConfig { variant, block },
+                plan: PlanConfig { variant, block, interleave: 1 }.into(),
             },
         )
         .unwrap();
@@ -210,6 +210,97 @@ fn plan_variants_bit_exact_end_to_end() {
         fused.shutdown();
     }
     walk.shutdown();
+}
+
+/// Satellite: the batch-interleaved execution mode must agree bit-for-bit
+/// with the scalar row walk through the whole device path — host thread,
+/// registry, executor, tile pool — over every fixture artifact, for
+/// several interleave widths (fixture batches of 1/2/4/8 rows also
+/// exercise the ragged-tile and single-row degenerations).
+#[test]
+fn interleaved_host_bit_exact_with_scalar_host() {
+    let Some(dir) = artifacts_dir() else { return };
+    use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, PlanConfig};
+    let scalar_plan = PlanConfig { variant: Variant::Optimized, block: 4096, interleave: 1 };
+    let (scalar, manifest) = spawn_device_host_with(
+        &dir,
+        HostConfig {
+            plan: scalar_plan.into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut gen = Generator::new(0x1EAF);
+    for r in [4usize, 16] {
+        let (interleaved, _) = spawn_device_host_with(
+            &dir,
+            HostConfig {
+                threads: 4,
+                plan: PlanConfig { interleave: r, ..scalar_plan }.into(),
+            },
+        )
+        .unwrap();
+        for meta in manifest.size_classes(Variant::Optimized) {
+            let rows = gen.u32s(meta.batch * meta.n, Distribution::DupHeavy);
+            let a = scalar.sort_u32(Key::of(meta), rows.clone()).unwrap();
+            let b = interleaved.sort_u32(Key::of(meta), rows).unwrap();
+            assert_eq!(a, b, "{} R={r}", meta.name);
+        }
+        interleaved.shutdown();
+    }
+    scalar.shutdown();
+}
+
+/// The registry consults a tuning profile per (n, dtype) class: an
+/// executor loaded under a tuned policy must carry the profile's
+/// block/interleave for its class, while a pinned field keeps the base
+/// value.
+#[test]
+fn registry_resolves_plan_from_tuning_profile() {
+    let Some(dir) = artifacts_dir() else { return };
+    use bitonic_tpu::runtime::{
+        PlanConfig, PlanPolicy, Registry, TunedEntry, TuningProfile,
+    };
+    let (serial, manifest) = spawn_device_host(&dir).unwrap();
+    serial.shutdown();
+    let meta = manifest.size_classes(Variant::Optimized)[0].clone();
+    let profile = TuningProfile {
+        entries: vec![TunedEntry {
+            n: meta.n,
+            dtype: meta.dtype,
+            variant: Variant::Optimized,
+            block: 64,
+            interleave: 2,
+            threads: 1,
+            rows_per_sec: 1.0,
+        }],
+    };
+    let base = PlanConfig::default();
+    let registry =
+        Registry::open_with_pool(&dir, None, PlanPolicy::tuned(base, profile.clone())).unwrap();
+    let exe = registry.get(Key::of(&meta)).unwrap();
+    assert_eq!(exe.plan().config().block, 64, "profile block must be consulted");
+    assert_eq!(exe.plan().config().interleave, 2);
+    // Same profile, but the operator pinned --plan-block: base wins there.
+    let pinned = PlanPolicy {
+        base,
+        profile: Some(profile),
+        pin_block: true,
+        pin_interleave: false,
+    };
+    let registry = Registry::open_with_pool(&dir, None, pinned).unwrap();
+    let exe = registry.get(Key::of(&meta)).unwrap();
+    assert_eq!(exe.plan().config().block, base.block, "pinned block must win");
+    assert_eq!(exe.plan().config().interleave, 2);
+    // And the tuned executor still sorts correctly.
+    let mut gen = Generator::new(0x7E57ED);
+    let rows = gen.u32s(meta.batch * meta.n, Distribution::DupHeavy);
+    let sorted = exe.sort_u32(rows.clone()).unwrap();
+    for r in 0..meta.batch {
+        let mut want = rows[r * meta.n..(r + 1) * meta.n].to_vec();
+        want.sort_unstable();
+        assert_eq!(&sorted[r * meta.n..(r + 1) * meta.n], &want[..], "row {r}");
+    }
 }
 
 #[test]

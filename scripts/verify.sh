@@ -19,6 +19,10 @@ cargo test -q
 # same way. CI runs these as their own steps and sets SKIP_BENCH_SMOKE=1
 # here to avoid the double run.
 if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
+    # Remove any stale trajectory first: the existence check below must
+    # prove THIS run wrote it, not a previous one (the file is gitignored
+    # and lingers in the working tree).
+    rm -f BENCH_ablation.json
     for smoke in coordinator ablation; do
         echo "== bench smoke: ${smoke} (timeout-bounded) =="
         if command -v timeout >/dev/null 2>&1; then
@@ -27,6 +31,14 @@ if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
             cargo bench --bench "${smoke}"
         fi
     done
+    # The ablation bench must leave the machine-readable trajectory
+    # behind (rows/sec, passes, interleaved speedup, autotuned config) —
+    # future PRs compare against it instead of re-deriving baselines.
+    if [ ! -f BENCH_ablation.json ]; then
+        echo "ERROR: ablation bench did not write BENCH_ablation.json" >&2
+        exit 1
+    fi
+    echo "== BENCH_ablation.json written =="
 else
     echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
 fi
