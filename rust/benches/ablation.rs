@@ -13,14 +13,16 @@
 //! `BENCH_ablation.json` at the current directory (repo root when run via
 //! scripts/verify.sh; override with `$BENCH_ABLATION_JSON`) so future PRs
 //! can diff against a recorded trajectory instead of re-deriving
-//! baselines from prose.
+//! baselines from prose — and appended to the unified
+//! `BENCH_trajectory.json` (see `bitonic_tpu::bench::record`) so the
+//! `report` subcommand sees them alongside the matrix sweep.
 //!
 //! Run time-bounded (`timeout --signal=KILL 300`) from scripts/verify.sh
 //! and CI, like the coordinator smoke: a hang fails loudly.
 
 use std::time::Duration;
 
-use bitonic_tpu::bench::{black_box, Bench};
+use bitonic_tpu::bench::{black_box, Bench, BenchRecord, Trajectory};
 use bitonic_tpu::runtime::{
     effective_interleave, spawn_device_host_with, tune, ArtifactKind, Dtype, ExecutionPlan,
     HostConfig, Key, PlanConfig, TuneRequest, DEFAULT_PLAN_BLOCK,
@@ -70,6 +72,8 @@ fn main() {
     // The machine-readable trajectory this bench leaves behind.
     let mut report = Json::obj();
     report.set("bench", "ablation");
+    // Plus the unified cross-bench trajectory (schema-validated records).
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- 2×2 optimization grid (simulator) -------------------------------
     println!("== ablation: optimization grid at n=16M (calibrated sim) ==");
@@ -184,6 +188,14 @@ fn main() {
                 e.set("hbm_passes", plan.global_passes())
                     .set("speedup_vs_basic", basic_ms / ms);
                 entries.push(e);
+                records.push(
+                    BenchRecord::new("ablation", "bitonic-plan", "uniform", "u32", n)
+                        .with_batch(b)
+                        .with_timing(&meas)
+                        .with_extra("variant", v.name())
+                        .with_extra("hbm_passes", plan.global_passes())
+                        .with_extra("speedup_vs_basic", basic_ms / ms),
+                );
             }
         }
         println!("{}", t.render());
@@ -247,6 +259,14 @@ fn main() {
         let mut e = trajectory_entry(b, n, "optimized", DEFAULT_PLAN_BLOCK, 1, scalar_ms);
         e.set("speedup_vs_scalar", 1.0f64);
         entries.push(e);
+        records.push(
+            BenchRecord::new("ablation", "bitonic-interleaved", "uniform", "u32", n)
+                .with_batch(b)
+                .with_timing(&scalar_meas)
+                .with_extra("block", DEFAULT_PLAN_BLOCK)
+                .with_extra("interleave", 1usize)
+                .with_extra("speedup_vs_scalar", 1.0f64),
+        );
         let mut best_speedup = 1.0f64;
         for (block, r) in [
             (DEFAULT_PLAN_BLOCK, 4usize),
@@ -282,6 +302,14 @@ fn main() {
             let mut e = trajectory_entry(b, n, "optimized", block, r, ms);
             e.set("speedup_vs_scalar", speedup);
             entries.push(e);
+            records.push(
+                BenchRecord::new("ablation", "bitonic-interleaved", "uniform", "u32", n)
+                    .with_batch(b)
+                    .with_timing(&meas)
+                    .with_extra("block", block)
+                    .with_extra("interleave", r)
+                    .with_extra("speedup_vs_scalar", speedup),
+            );
         }
         println!("{}", t.render());
         println!("→ acceptance target: best interleaved config ≥ 2.00x the scalar path");
@@ -409,8 +437,10 @@ fn main() {
         }
     }
 
-    // --- persist the trajectory ------------------------------------------
+    // --- persist the trajectories ----------------------------------------
     let path = std::env::var("BENCH_ABLATION_JSON").unwrap_or_else(|_| "BENCH_ablation.json".into());
     std::fs::write(&path, report.render()).expect("writing bench trajectory");
     println!("wrote bench trajectory to {path}");
+
+    Trajectory::append_default_or_exit(records);
 }

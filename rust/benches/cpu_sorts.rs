@@ -1,8 +1,13 @@
 //! CPU substrate shoot-out (DESIGN.md E1/E2/E9): every from-scratch sort
 //! vs the std library across distributions, plus the multicore bitonic
 //! scaling study the paper lists as future work (§6).
+//!
+//! Every measurement is also appended to the unified bench trajectory
+//! (`BENCH_trajectory.json`, see `bitonic_tpu::bench::record`) so the
+//! numbers land next to the matrix sweep's instead of evaporating with
+//! the terminal scrollback.
 
-use bitonic_tpu::bench::Bench;
+use bitonic_tpu::bench::{Bench, BenchRecord, Trajectory};
 use bitonic_tpu::sort::{
     bitonic_sort, bitonic_sort_parallel, heapsort, mergesort, oddeven_sort, quicksort,
     radix_sort_u32,
@@ -13,6 +18,7 @@ use bitonic_tpu::workload::{Distribution, Generator};
 fn main() {
     let bench = Bench::quick();
     let mut gen = Generator::new(0xC0DE);
+    let mut records: Vec<BenchRecord> = Vec::new();
     let n = 1 << 20;
 
     // --- all sorts on uniform u32 ---------------------------------------
@@ -23,22 +29,32 @@ fn main() {
             v.sort_unstable()
         })
         .median_ms();
-    let algos: Vec<(&str, Box<dyn FnMut(Vec<u32>)>)> = vec![
-        ("std sort_unstable", Box::new(|mut v: Vec<u32>| v.sort_unstable())),
-        ("quicksort (ours)", Box::new(|mut v: Vec<u32>| quicksort(&mut v))),
-        ("heapsort", Box::new(|mut v: Vec<u32>| heapsort(&mut v))),
-        ("mergesort", Box::new(|mut v: Vec<u32>| mergesort(&mut v))),
-        ("radix (LSD)", Box::new(|mut v: Vec<u32>| radix_sort_u32(&mut v))),
-        ("bitonic (seq)", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v))),
-        ("bitonic (4 thr)", Box::new(|mut v: Vec<u32>| bitonic_sort_parallel(&mut v, 4))),
+    // (label for the table, substrate slug for the trajectory, sort fn)
+    let algos: Vec<(&str, &str, Box<dyn FnMut(Vec<u32>)>)> = vec![
+        ("std sort_unstable", "std-sort", Box::new(|mut v: Vec<u32>| v.sort_unstable())),
+        ("quicksort (ours)", "quicksort", Box::new(|mut v: Vec<u32>| quicksort(&mut v))),
+        ("heapsort", "heap", Box::new(|mut v: Vec<u32>| heapsort(&mut v))),
+        ("mergesort", "merge", Box::new(|mut v: Vec<u32>| mergesort(&mut v))),
+        ("radix (LSD)", "radix", Box::new(|mut v: Vec<u32>| radix_sort_u32(&mut v))),
+        ("bitonic (seq)", "bitonic-scalar", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v))),
+        (
+            "bitonic (4 thr)",
+            "bitonic-parallel",
+            Box::new(|mut v: Vec<u32>| bitonic_sort_parallel(&mut v, 4)),
+        ),
     ];
-    for (name, mut f) in algos {
+    for (name, slug, mut f) in algos {
         let m = bench.run_with_setup(name, || gen.u32s(n, Distribution::Uniform), &mut f);
         t.row(vec![
             name.to_string(),
             fmt_ms(m.median_ms()),
             format!("{:.2}x", m.median_ms() / std_ms),
         ]);
+        let mut r = BenchRecord::new("cpu_sorts", slug, "uniform", "u32", n).with_timing(&m);
+        if slug == "bitonic-parallel" {
+            r = r.with_extra("threads", 4usize);
+        }
+        records.push(r.with_extra("vs_std", m.median_ms() / std_ms));
     }
     println!("{}", t.render());
 
@@ -46,13 +62,15 @@ fn main() {
     println!("== quicksort robustness across distributions, n = 1M ==");
     let mut t = Table::new(vec!["distribution", "quick ms", "bitonic ms"]);
     for d in Distribution::ALL {
-        let q = bench
-            .run_with_setup("q", || gen.u32s(n, d), |mut v| quicksort(&mut v))
-            .median_ms();
-        let b = bench
-            .run_with_setup("b", || gen.u32s(n, d), |mut v| bitonic_sort(&mut v))
-            .median_ms();
-        t.row(vec![d.name().to_string(), fmt_ms(q), fmt_ms(b)]);
+        let qm = bench.run_with_setup("q", || gen.u32s(n, d), |mut v| quicksort(&mut v));
+        let bm = bench.run_with_setup("b", || gen.u32s(n, d), |mut v| bitonic_sort(&mut v));
+        t.row(vec![d.name().to_string(), fmt_ms(qm.median_ms()), fmt_ms(bm.median_ms())]);
+        records.push(
+            BenchRecord::new("cpu_sorts", "quicksort", d.name(), "u32", n).with_timing(&qm),
+        );
+        records.push(
+            BenchRecord::new("cpu_sorts", "bitonic-scalar", d.name(), "u32", n).with_timing(&bm),
+        );
     }
     println!("{}", t.render());
     println!("→ bitonic is distribution-oblivious (data-independent network); quicksort varies.\n");
@@ -60,13 +78,15 @@ fn main() {
     // --- multicore bitonic scaling (paper §6 future work, E9) ------------
     println!("== multicore bitonic scaling, n = 4M (paper §6 future work) ==");
     let n = 4 << 20;
-    let seq = bench
-        .run_with_setup("seq", || gen.u32s(n, Distribution::Uniform), |mut v| {
-            bitonic_sort(&mut v)
-        })
-        .median_ms();
+    let seq_m = bench.run_with_setup("seq", || gen.u32s(n, Distribution::Uniform), |mut v| {
+        bitonic_sort(&mut v)
+    });
+    let seq = seq_m.median_ms();
     let mut t = Table::new(vec!["threads", "median ms", "speedup"]);
     t.row(vec!["1 (seq)".to_string(), fmt_ms(seq), "1.00x".to_string()]);
+    records.push(
+        BenchRecord::new("cpu_sorts", "bitonic-scalar", "uniform", "u32", n).with_timing(&seq_m),
+    );
     for threads in [2usize, 4, 8, 16] {
         let m = bench.run_with_setup(
             "par",
@@ -78,6 +98,12 @@ fn main() {
             fmt_ms(m.median_ms()),
             format!("{:.2}x", seq / m.median_ms()),
         ]);
+        records.push(
+            BenchRecord::new("cpu_sorts", "bitonic-parallel", "uniform", "u32", n)
+                .with_timing(&m)
+                .with_extra("threads", threads)
+                .with_extra("speedup_vs_serial", seq / m.median_ms()),
+        );
     }
     println!("{}", t.render());
 
@@ -85,13 +111,16 @@ fn main() {
     println!("== network baselines, n = 64K (odd-even is O(n²) comparators) ==");
     let n = 1 << 16;
     let mut t = Table::new(vec!["network", "median ms"]);
-    for (name, f) in [
-        ("bitonic", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v)) as Box<dyn FnMut(Vec<u32>)>),
-        ("odd-even", Box::new(|mut v: Vec<u32>| oddeven_sort(&mut v))),
-    ] {
-        let mut f = f;
+    let nets: Vec<(&str, &str, Box<dyn FnMut(Vec<u32>)>)> = vec![
+        ("bitonic", "bitonic-scalar", Box::new(|mut v: Vec<u32>| bitonic_sort(&mut v))),
+        ("odd-even", "odd-even", Box::new(|mut v: Vec<u32>| oddeven_sort(&mut v))),
+    ];
+    for (name, slug, mut f) in nets {
         let m = bench.run_with_setup(name, || gen.u32s(n, Distribution::Uniform), &mut f);
         t.row(vec![name.to_string(), fmt_ms(m.median_ms())]);
+        records.push(BenchRecord::new("cpu_sorts", slug, "uniform", "u32", n).with_timing(&m));
     }
     println!("{}", t.render());
+
+    Trajectory::append_default_or_exit(records);
 }

@@ -1,52 +1,64 @@
 //! Key-type study (DESIGN.md E8 — the paper's §6 future work: "64-bit
 //! integer, 32-bit float, 64-bit double"): CPU measurements for all four
 //! key types, simulator predictions for the byte-width effect, and the
-//! measured f32/i32 artifacts.
+//! measured f32/i32 artifacts — all appended to the unified bench
+//! trajectory (`BENCH_trajectory.json`).
 
-use bitonic_tpu::bench::Bench;
+use bitonic_tpu::bench::{Bench, BenchRecord, Measurement, Trajectory};
 use bitonic_tpu::runtime::{spawn_device_host, Dtype, Key};
 use bitonic_tpu::sim::{calibrate_from_table1, simulate};
 use bitonic_tpu::sort::network::Variant;
-use bitonic_tpu::sort::{bitonic_sort, quicksort};
+use bitonic_tpu::sort::{bitonic_sort, quicksort, SortKey};
 use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
 use bitonic_tpu::workload::{Distribution, Generator};
 
 fn main() {
     let bench = Bench::quick();
     let mut gen = Generator::new(0xD7E5);
+    let mut records: Vec<BenchRecord> = Vec::new();
     let n = 1 << 20;
 
     // --- CPU: four key types ---------------------------------------------
     println!("== CPU sorts by key type, n = {} uniform ==", fmt_size(n));
     let mut t = Table::new(vec!["key type", "quicksort ms", "bitonic ms", "bitonic/quick"]);
-    let q32 = bench
-        .run_with_setup("q", || gen.u32s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
-        .median_ms();
-    let b32 = bench
-        .run_with_setup("b", || gen.u32s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
-        .median_ms();
-    t.row(vec!["u32".into(), fmt_ms(q32), fmt_ms(b32), format!("{:.1}x", b32 / q32)]);
-    let q64 = bench
-        .run_with_setup("q", || gen.u64s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
-        .median_ms();
-    let b64 = bench
-        .run_with_setup("b", || gen.u64s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
-        .median_ms();
-    t.row(vec!["u64".into(), fmt_ms(q64), fmt_ms(b64), format!("{:.1}x", b64 / q64)]);
-    let qf = bench
-        .run_with_setup("q", || gen.f32s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
-        .median_ms();
-    let bf = bench
-        .run_with_setup("b", || gen.f32s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
-        .median_ms();
-    t.row(vec!["f32".into(), fmt_ms(qf), fmt_ms(bf), format!("{:.1}x", bf / qf)]);
-    let qd = bench
-        .run_with_setup("q", || gen.f64s(n, Distribution::Uniform), |mut v| quicksort(&mut v))
-        .median_ms();
-    let bd = bench
-        .run_with_setup("b", || gen.f64s(n, Distribution::Uniform), |mut v| bitonic_sort(&mut v))
-        .median_ms();
-    t.row(vec!["f64".into(), fmt_ms(qd), fmt_ms(bd), format!("{:.1}x", bd / qd)]);
+    let mut row = |dtype: &str, qm: Measurement, bm: Measurement| {
+        let (q, b) = (qm.median_ms(), bm.median_ms());
+        t.row(vec![dtype.into(), fmt_ms(q), fmt_ms(b), format!("{:.1}x", b / q)]);
+        records.push(BenchRecord::new("dtypes", "quicksort", "uniform", dtype, n).with_timing(&qm));
+        records.push(
+            BenchRecord::new("dtypes", "bitonic-scalar", "uniform", dtype, n).with_timing(&bm),
+        );
+    };
+    fn pair<T: SortKey>(
+        bench: &Bench,
+        mut make: impl FnMut() -> Vec<T> + Clone,
+    ) -> (Measurement, Measurement) {
+        let mut make2 = make.clone();
+        let q = bench.run_with_setup("q", &mut make, |mut v| quicksort(&mut v));
+        let b = bench.run_with_setup("b", &mut make2, |mut v| bitonic_sort(&mut v));
+        (q, b)
+    }
+    let (q, b) = pair(&bench, {
+        let mut g = gen.clone();
+        move || g.u32s(n, Distribution::Uniform)
+    });
+    row("u32", q, b);
+    let (q, b) = pair(&bench, {
+        let mut g = gen.clone();
+        move || g.u64s(n, Distribution::Uniform)
+    });
+    row("u64", q, b);
+    let (q, b) = pair(&bench, {
+        let mut g = gen.clone();
+        move || g.f32s(n, Distribution::Uniform)
+    });
+    row("f32", q, b);
+    let (q, b) = pair(&bench, {
+        let mut g = gen.clone();
+        move || g.f64s(n, Distribution::Uniform)
+    });
+    row("f64", q, b);
+    drop(row);
     println!("{}", t.render());
 
     // --- simulator: byte-width effect on the GPU --------------------------
@@ -78,19 +90,18 @@ fn main() {
                 let key = Key::of(meta);
                 let rows_f: Vec<f32>;
                 let rows_i: Vec<i32>;
-                let ms = match meta.dtype {
+                let (dtype, m) = match meta.dtype {
                     Dtype::F32 => {
                         rows_f = gen.f32s(meta.batch * meta.n, Distribution::Uniform);
                         let _ = handle.sort_f32(key, rows_f.clone()).unwrap();
-                        bench
-                            .run_with_setup(
-                                "f32",
-                                || rows_f.clone(),
-                                |r| {
-                                    let _ = handle.sort_f32(key, r).unwrap();
-                                },
-                            )
-                            .median_ms()
+                        let m = bench.run_with_setup(
+                            "f32",
+                            || rows_f.clone(),
+                            |r| {
+                                let _ = handle.sort_f32(key, r).unwrap();
+                            },
+                        );
+                        ("f32", m)
                     }
                     Dtype::I32 => {
                         rows_i = gen
@@ -99,21 +110,29 @@ fn main() {
                             .map(|x| x as i32)
                             .collect();
                         let _ = handle.sort_i32(key, rows_i.clone()).unwrap();
-                        bench
-                            .run_with_setup(
-                                "i32",
-                                || rows_i.clone(),
-                                |r| {
-                                    let _ = handle.sort_i32(key, r).unwrap();
-                                },
-                            )
-                            .median_ms()
+                        let m = bench.run_with_setup(
+                            "i32",
+                            || rows_i.clone(),
+                            |r| {
+                                let _ = handle.sort_i32(key, r).unwrap();
+                            },
+                        );
+                        ("i32", m)
                     }
                     Dtype::U32 => unreachable!(),
                 };
-                println!("  {:<44} {} ms", meta.name, fmt_ms(ms));
+                println!("  {:<44} {} ms", meta.name, fmt_ms(m.median_ms()));
+                records.push(
+                    BenchRecord::new("dtypes", "bitonic-executor", "uniform", dtype, meta.n)
+                        .with_batch(meta.batch)
+                        .with_timing(&m)
+                        .with_extra("artifact", meta.name.as_str())
+                        .with_extra("variant", meta.variant.name()),
+                );
             }
         }
         Err(e) => println!("   (skipped: {e:#})"),
     }
+
+    Trajectory::append_default_or_exit(records);
 }

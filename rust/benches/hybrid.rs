@@ -4,9 +4,11 @@
 //!
 //! Absolute device times are XLA-CPU interpret-mode emulation; the
 //! interesting outputs are the stage statistics (how much work lands on
-//! the device vs the CPU tail) and the chunk-size ablation.
+//! the device vs the CPU tail) and the chunk-size ablation. Measurements
+//! are appended to the unified bench trajectory with the stage
+//! statistics as extras.
 
-use bitonic_tpu::bench::Bench;
+use bitonic_tpu::bench::{Bench, BenchRecord, Trajectory};
 use bitonic_tpu::runtime::spawn_device_host;
 use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::sort::{quicksort, HybridSorter};
@@ -24,6 +26,7 @@ fn main() {
     }
     let bench = Bench::quick();
     let mut gen = Generator::new(0xB12D);
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- hybrid vs CPU at 2x..8x the largest artifact row ----------------
     println!("== hybrid (device chunks + merge tree) vs CPU quicksort ==");
@@ -34,21 +37,19 @@ fn main() {
     ]);
     for mult in [2usize, 4, 8] {
         let n = chunk * mult + 321;
-        let q = bench
-            .run_with_setup("q", || gen.u32s(n, Distribution::Uniform), |mut v| {
-                quicksort(&mut v)
-            })
-            .median_ms();
+        let qm = bench.run_with_setup("q", || gen.u32s(n, Distribution::Uniform), |mut v| {
+            quicksort(&mut v)
+        });
+        let q = qm.median_ms();
         let mut last_stats = None;
-        let h = bench
-            .run_with_setup(
-                "h",
-                || gen.u32s(n, Distribution::Uniform),
-                |mut v| {
-                    last_stats = Some(sorter.sort(&mut v).unwrap());
-                },
-            )
-            .median_ms();
+        let hm = bench.run_with_setup(
+            "h",
+            || gen.u32s(n, Distribution::Uniform),
+            |mut v| {
+                last_stats = Some(sorter.sort(&mut v).unwrap());
+            },
+        );
+        let h = hm.median_ms();
         let s = last_stats.unwrap();
         t.row(vec![
             fmt_size(n),
@@ -58,6 +59,16 @@ fn main() {
             s.device_merges.to_string(),
             s.cpu_merges.to_string(),
         ]);
+        records.push(BenchRecord::new("hybrid", "quicksort", "uniform", "u32", n).with_timing(&qm));
+        records.push(
+            BenchRecord::new("hybrid", "hybrid", "uniform", "u32", n)
+                .with_timing(&hm)
+                .with_extra("chunk", chunk)
+                .with_extra("device_sorts", s.device_sorts)
+                .with_extra("device_merges", s.device_merges)
+                .with_extra("cpu_merges", s.cpu_merges)
+                .with_extra("speedup_vs_quicksort", q / h),
+        );
     }
     println!("{}", t.render());
 
@@ -74,15 +85,14 @@ fn main() {
             continue;
         };
         let mut last_stats = None;
-        let h = bench
-            .run_with_setup(
-                "h",
-                || gen.u32s(n, Distribution::Uniform),
-                |mut v| {
-                    last_stats = Some(sorter.sort(&mut v).unwrap());
-                },
-            )
-            .median_ms();
+        let hm = bench.run_with_setup(
+            "h",
+            || gen.u32s(n, Distribution::Uniform),
+            |mut v| {
+                last_stats = Some(sorter.sort(&mut v).unwrap());
+            },
+        );
+        let h = hm.median_ms();
         let s = last_stats.unwrap();
         t.row(vec![
             fmt_size(chunk),
@@ -91,8 +101,18 @@ fn main() {
             s.device_merges.to_string(),
             s.cpu_merges.to_string(),
         ]);
+        records.push(
+            BenchRecord::new("hybrid", "hybrid", "uniform", "u32", n)
+                .with_timing(&hm)
+                .with_extra("chunk", chunk)
+                .with_extra("device_sorts", s.device_sorts)
+                .with_extra("device_merges", s.device_merges)
+                .with_extra("cpu_merges", s.cpu_merges),
+        );
     }
     println!("{}", t.render());
     println!("→ bigger chunks shift work from the merge tree into the chunk sort; the");
     println!("  crossover depends on the device's sort-vs-merge throughput ratio.");
+
+    Trajectory::append_default_or_exit(records);
 }

@@ -2,9 +2,10 @@
 //! paper implies — time vs n per variant, and speedup ratio vs n (the
 //! ratio "hump" peaking near 2^18) — plus the *measured* end-to-end device
 //! path (PJRT CPU, interpret-mode kernels) for the artifact sizes, which
-//! validates the relative variant ordering on real executions.
+//! validates the relative variant ordering on real executions. Measured
+//! points are appended to the unified bench trajectory.
 
-use bitonic_tpu::bench::Bench;
+use bitonic_tpu::bench::{Bench, BenchRecord, Trajectory};
 use bitonic_tpu::runtime::{spawn_device_host, Key};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::Variant;
@@ -14,6 +15,7 @@ use bitonic_tpu::workload::{Distribution, Generator};
 
 fn main() {
     let cal = calibrate_from_table1();
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- figure A: simulated time vs n, per variant ---------------------
     println!("== figure A: GPU time vs n (calibrated model; paper cols for reference) ==");
@@ -45,12 +47,21 @@ fn main() {
             || gen.u32s(n, Distribution::Uniform),
             |mut v| quicksort(&mut v),
         );
-        let ratio = m.median_ms() / cal.predict_ms(Variant::Optimized, n);
+        let sim_opt = cal.predict_ms(Variant::Optimized, n);
+        let ratio = m.median_ms() / sim_opt;
         t.row(vec![
             fmt_size(n),
             format!("{ratio:.1}"),
             row.ratio.map(|r| format!("{r:.1}")).unwrap_or("—".into()),
         ]);
+        let mut rec = BenchRecord::new("scaling", "quicksort", "uniform", "u32", n)
+            .with_timing(&m)
+            .with_extra("sim_optimized_ms", sim_opt)
+            .with_extra("ratio_vs_sim_optimized", ratio);
+        if let Some(paper) = row.ratio {
+            rec = rec.with_extra("paper_ratio", paper);
+        }
+        records.push(rec);
     }
     println!("{}", t.render());
 
@@ -88,6 +99,13 @@ fn main() {
                             let _ = handle.sort_u32(key, rows).unwrap();
                         },
                     );
+                    records.push(
+                        BenchRecord::new("scaling", "bitonic-executor", "uniform", "u32", n)
+                            .with_batch(b)
+                            .with_timing(&m)
+                            .with_extra("artifact", meta.name.as_str())
+                            .with_extra("variant", v.name()),
+                    );
                     ms.push(m.median_ms());
                 }
                 if ms.len() == 3 {
@@ -104,4 +122,6 @@ fn main() {
         }
         Err(e) => println!("   (skipped: {e:#} — run `python -m compile.aot`)"),
     }
+
+    Trajectory::append_default_or_exit(records);
 }

@@ -5,11 +5,13 @@
 //! Sizes ≤ 4M are measured with repetition via the harness; larger CPU
 //! sizes run once (they take seconds each and the paper's own numbers are
 //! single-run). Set BENCH_TABLE1_FULL=1 to measure through 256M (needs
-//! ~8 GiB RAM and several minutes).
+//! ~8 GiB RAM and several minutes). Measured CPU points are appended to
+//! the unified bench trajectory with the simulator prediction and the
+//! paper's printed ratio as extras.
 
 use std::time::Instant;
 
-use bitonic_tpu::bench::Bench;
+use bitonic_tpu::bench::{Bench, BenchRecord, Trajectory};
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::Variant;
 use bitonic_tpu::sort::{bitonic_sort, quicksort};
@@ -43,6 +45,7 @@ fn main() {
         "Δratio",
     ]);
     let mut gen = Generator::new(0x7AB1E1);
+    let mut records: Vec<BenchRecord> = Vec::new();
     for row in PAPER_TABLE1.iter().filter(|r| r.n <= cap) {
         let n = row.n;
         let quick_ms;
@@ -73,6 +76,18 @@ fn main() {
         }
         let opt = cal.predict_ms(Variant::Optimized, n);
         let ratio = quick_ms / opt;
+        for (substrate, ms) in [("quicksort", quick_ms), ("bitonic-scalar", bitonic_ms)] {
+            let mut rec = BenchRecord::new("table1", substrate, "uniform", "u32", n)
+                .with_ms(ms)
+                .with_extra("sim_optimized_ms", opt);
+            if substrate == "quicksort" {
+                rec = rec.with_extra("ratio_vs_sim_optimized", ratio);
+                if let Some(paper) = row.ratio {
+                    rec = rec.with_extra("paper_ratio", paper);
+                }
+            }
+            records.push(rec);
+        }
         t.row(vec![
             fmt_size(n),
             fmt_ms(quick_ms),
@@ -106,4 +121,6 @@ fn main() {
         "  {} Basic > Semi > Optimized at every size",
         if ok { "✓" } else { "✗" }
     );
+
+    Trajectory::append_default_or_exit(records);
 }

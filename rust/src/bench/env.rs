@@ -1,0 +1,132 @@
+//! Environment stamping for bench trajectories.
+//!
+//! A throughput number is meaningless without the host it was measured
+//! on: the trajectory JSON therefore opens with an [`EnvStamp`] captured
+//! when the file is first created. The stamp is informational — the
+//! report prints it, nothing branches on it — but it is what lets a
+//! future reader decide whether two trajectories are comparable at all.
+
+use crate::util::json::Json;
+
+/// Where and how a trajectory's numbers were measured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvStamp {
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// `available_parallelism()` at capture time (0 = unknown).
+    pub cpus: usize,
+    /// `bitonic_tpu` crate version that ran the benches.
+    pub crate_version: String,
+    /// True when the binary was built with debug assertions — a loud
+    /// marker that absolute numbers are not release-grade.
+    pub debug_assertions: bool,
+    /// Unix timestamp (seconds) of the first record batch (0 = unknown).
+    pub unix_secs: u64,
+}
+
+impl EnvStamp {
+    /// Capture the current process environment.
+    pub fn capture() -> Self {
+        Self {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0),
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            debug_assertions: cfg!(debug_assertions),
+            unix_secs: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Serialise into the trajectory's `env` object.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("os", self.os.as_str())
+            .set("arch", self.arch.as_str())
+            .set("cpus", self.cpus)
+            .set("crate_version", self.crate_version.as_str())
+            .set("debug_assertions", self.debug_assertions)
+            .set("unix_secs", self.unix_secs);
+        o
+    }
+
+    /// Parse a trajectory's `env` object (every field required — the
+    /// stamp is written by [`EnvStamp::to_json`] only).
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let str_field = |key: &str| -> crate::Result<String> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| crate::err!("env stamp: missing/invalid string field {key:?}"))
+        };
+        Ok(Self {
+            os: str_field("os")?,
+            arch: str_field("arch")?,
+            cpus: v
+                .get("cpus")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| crate::err!("env stamp: missing/invalid field \"cpus\""))?,
+            crate_version: str_field("crate_version")?,
+            debug_assertions: v
+                .get("debug_assertions")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| crate::err!("env stamp: missing/invalid field \"debug_assertions\""))?,
+            unix_secs: v
+                .get("unix_secs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| crate::err!("env stamp: missing/invalid field \"unix_secs\""))?
+                as u64,
+        })
+    }
+
+    /// One-line human summary for report headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} · {} cpu(s) · bitonic-tpu v{}{}",
+            self.os,
+            self.arch,
+            self.cpus,
+            self.crate_version,
+            if self.debug_assertions { " · DEBUG BUILD" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_roundtrips_through_json() {
+        let e = EnvStamp::capture();
+        assert!(!e.os.is_empty());
+        assert!(!e.crate_version.is_empty());
+        let back = EnvStamp::from_json(&e.to_json()).unwrap();
+        assert_eq!(back, e);
+        // Render → parse → from_json too (the on-disk path).
+        let back = EnvStamp::from_json(&Json::parse(&e.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let mut o = EnvStamp::capture().to_json();
+        o.set("cpus", "four"); // wrong type
+        assert!(EnvStamp::from_json(&o).is_err());
+        assert!(EnvStamp::from_json(&Json::obj()).is_err());
+        assert!(EnvStamp::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn summary_flags_debug_builds() {
+        let mut e = EnvStamp::capture();
+        e.debug_assertions = true;
+        assert!(e.summary().contains("DEBUG BUILD"));
+        e.debug_assertions = false;
+        assert!(!e.summary().contains("DEBUG BUILD"));
+    }
+}

@@ -1,0 +1,612 @@
+//! The survey-style benchmark matrix: **substrates × distributions ×
+//! dtypes × sizes**, in the shape of Božidar & Dobravec's parallel-sort
+//! comparison and the Arkhipov et al. GPU-sorting survey (PAPERS.md).
+//!
+//! Every cell is measured by the shared [`Bench`] harness and emitted as
+//! one [`BenchRecord`], so a single `bitonic-tpu bench` run leaves a
+//! machine-readable trajectory a future PR can diff. The CPU substrates
+//! run in-process; the **device substrate routes through the real
+//! serving stack** — [`crate::runtime::Registry`] via a
+//! [`crate::runtime::DeviceHandle`], plan resolved per size class by the
+//! autotune [`crate::runtime::PlanPolicy`] — so its numbers are the
+//! numbers `serve` would see, not an idealised inner loop.
+//!
+//! The sweep also computes the paper's headline per size class:
+//! `speedup_vs_quicksort` is attached to every non-quicksort record that
+//! has a same-`(n, dtype, dist)` quicksort baseline (normalised per row,
+//! so batch-B device records compare fairly with batch-1 CPU records).
+//!
+//! [`run_pass_ablation`] contributes the Basic → Semi → Optimized
+//! launch-fusion ablation (measured ms + static full-row pass counts) to
+//! the same trajectory; the report renders it as the paper's §4 table.
+
+use crate::runtime::{
+    ArtifactKind, DeviceHandle, Dtype, ExecutionPlan, Manifest, PlanConfig, DEFAULT_PLAN_BLOCK,
+};
+use crate::sort::network::Variant;
+use crate::sort::{
+    bitonic_sort_padded, bitonic_sort_parallel_padded, heapsort, mergesort, oddeven_sort,
+    quicksort, radix_sort_u32, SortKey,
+};
+use crate::workload::{Distribution, Generator};
+
+use super::harness::{black_box, Bench, Measurement};
+use super::record::BenchRecord;
+
+/// Key dtypes the matrix sweeps (the trio the artifact menu ships).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixDtype {
+    /// 32-bit unsigned (the paper's workload).
+    U32,
+    /// 32-bit signed.
+    I32,
+    /// 32-bit float.
+    F32,
+}
+
+impl MatrixDtype {
+    /// All matrix dtypes.
+    pub const ALL: [MatrixDtype; 3] = [MatrixDtype::U32, MatrixDtype::I32, MatrixDtype::F32];
+
+    /// Record/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MatrixDtype::U32 => "u32",
+            MatrixDtype::I32 => "i32",
+            MatrixDtype::F32 => "f32",
+        }
+    }
+
+    /// The runtime's artifact dtype for the device substrate.
+    pub fn runtime_dtype(self) -> Dtype {
+        match self {
+            MatrixDtype::U32 => Dtype::U32,
+            MatrixDtype::I32 => Dtype::I32,
+            MatrixDtype::F32 => Dtype::F32,
+        }
+    }
+}
+
+/// The substrate menu: the paper's two CPU baselines, the multicore
+/// bitonic it lists as future work, the device path, and the classical
+/// auxiliary baselines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Substrate {
+    /// CPU quicksort — the paper's baseline every speedup is against.
+    Quicksort,
+    /// Sequential bitonic sort (the paper's second CPU column).
+    BitonicScalar,
+    /// Multicore bitonic ([`crate::sort::bitonic_parallel`]).
+    BitonicParallel,
+    /// The device path: batch-interleaved executor behind the registry,
+    /// plan resolved by the autotune policy.
+    BitonicExecutor,
+    /// LSD radix sort (u32 keys only).
+    Radix,
+    /// Top-down mergesort.
+    Merge,
+    /// Heapsort.
+    Heap,
+    /// Odd-even transposition network (O(n²) comparators — size-capped).
+    OddEven,
+}
+
+impl Substrate {
+    /// Canonical sweep/report order.
+    pub const ALL: [Substrate; 8] = [
+        Substrate::Quicksort,
+        Substrate::BitonicScalar,
+        Substrate::BitonicParallel,
+        Substrate::BitonicExecutor,
+        Substrate::Radix,
+        Substrate::Merge,
+        Substrate::Heap,
+        Substrate::OddEven,
+    ];
+
+    /// Record/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Substrate::Quicksort => "quicksort",
+            Substrate::BitonicScalar => "bitonic-scalar",
+            Substrate::BitonicParallel => "bitonic-parallel",
+            Substrate::BitonicExecutor => "bitonic-executor",
+            Substrate::Radix => "radix",
+            Substrate::Merge => "merge",
+            Substrate::Heap => "heap",
+            Substrate::OddEven => "odd-even",
+        }
+    }
+
+    /// Whether the substrate can sort this key type (LSD radix digits
+    /// are u32-only here).
+    pub fn supports(self, dtype: MatrixDtype) -> bool {
+        match self {
+            Substrate::Radix => dtype == MatrixDtype::U32,
+            _ => true,
+        }
+    }
+
+    /// Largest n the matrix will ask of this substrate (odd-even's n
+    /// rounds × n/2 comparators make 64K cells minutes-long; everything
+    /// else is uncapped).
+    pub fn size_cap(self) -> usize {
+        match self {
+            Substrate::OddEven => 1 << 14,
+            _ => usize::MAX,
+        }
+    }
+
+    /// True for the substrate that needs a device host.
+    pub fn is_device(self) -> bool {
+        self == Substrate::BitonicExecutor
+    }
+}
+
+/// The device-host context the matrix routes [`Substrate::BitonicExecutor`]
+/// through: the handle's registry applies the autotune plan policy the
+/// caller configured at spawn time.
+pub struct DeviceCtx {
+    /// Handle to the device-host thread (registry + executor pool).
+    pub handle: DeviceHandle,
+    /// The artifact menu the registry serves.
+    pub manifest: Manifest,
+    /// Executor pool threads the host was spawned with (recorded into
+    /// the trajectory; the handle itself does not expose it).
+    pub threads: usize,
+}
+
+/// One matrix sweep: which cells to measure and how hard.
+#[derive(Clone, Debug)]
+pub struct MatrixConfig {
+    /// Substrates to sweep, in [`Substrate::ALL`] order for reports.
+    pub substrates: Vec<Substrate>,
+    /// Input distributions.
+    pub dists: Vec<Distribution>,
+    /// Key dtypes.
+    pub dtypes: Vec<MatrixDtype>,
+    /// Array sizes (powers of two — the bitonic substrates and the
+    /// artifact menu are power-of-two shaped).
+    pub sizes: Vec<usize>,
+    /// Threads for [`Substrate::BitonicParallel`].
+    pub threads: usize,
+    /// Measurement harness preset.
+    pub bench: Bench,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl MatrixConfig {
+    /// The survey grid: every substrate × the four survey distributions
+    /// × all three dtypes × sizes up to the fixture ceiling (64K rows).
+    pub fn full() -> Self {
+        Self {
+            substrates: Substrate::ALL.to_vec(),
+            dists: Distribution::SURVEY.to_vec(),
+            dtypes: MatrixDtype::ALL.to_vec(),
+            sizes: vec![1 << 10, 1 << 12, 1 << 14, 1 << 16],
+            threads: 4,
+            bench: Bench::quick(),
+            seed: 0x5EED_17,
+        }
+    }
+
+    /// CI-sized grid: same dimensional coverage (all substrates, the
+    /// four survey distributions, all dtypes) at the two smallest sizes
+    /// with a millisecond-budget harness — seconds, not minutes.
+    pub fn smoke() -> Self {
+        Self {
+            sizes: vec![1 << 10, 1 << 12],
+            bench: Bench {
+                warmup: 1,
+                min_iters: 2,
+                max_iters: 8,
+                target: std::time::Duration::from_millis(60),
+            },
+            ..Self::full()
+        }
+    }
+}
+
+/// Run the matrix. `device` is the host for the executor substrate;
+/// `None` (no artifacts) skips those cells. Cells whose substrate does
+/// not support the dtype, exceeds its size cap, or has no matching
+/// artifact are skipped, not errors — the matrix is the union of what
+/// this host can measure. Returns the records with
+/// `speedup_vs_quicksort` annotations already applied.
+pub fn run_matrix(
+    cfg: &MatrixConfig,
+    device: Option<&DeviceCtx>,
+) -> crate::Result<Vec<BenchRecord>> {
+    crate::ensure!(!cfg.sizes.is_empty(), "matrix: no sizes configured");
+    for &n in &cfg.sizes {
+        crate::ensure!(
+            n.is_power_of_two() && n >= 2,
+            "matrix: size {n} is not a power of two >= 2"
+        );
+    }
+    let mut records = Vec::new();
+    let mut seed = cfg.seed;
+    for &dtype in &cfg.dtypes {
+        for &dist in &cfg.dists {
+            for &n in &cfg.sizes {
+                for &sub in &cfg.substrates {
+                    // Distinct seed per cell, deterministic in the config.
+                    seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+                    if !sub.supports(dtype) || n > sub.size_cap() {
+                        continue;
+                    }
+                    let record = if sub.is_device() {
+                        let Some(ctx) = device else { continue };
+                        match measure_device(ctx, dtype, dist, n, &cfg.bench, seed)? {
+                            Some(r) => r,
+                            None => continue, // no artifact for (n, dtype)
+                        }
+                    } else {
+                        let m = measure_cpu(sub, dtype, dist, n, cfg.threads, &cfg.bench, seed);
+                        let mut r = BenchRecord::new("matrix", sub.name(), dist.name(), dtype.name(), n)
+                            .with_timing(&m);
+                        if sub == Substrate::BitonicParallel {
+                            r = r.with_extra("threads", cfg.threads);
+                        }
+                        r
+                    };
+                    records.push(record);
+                }
+            }
+        }
+    }
+    annotate_speedups(&mut records);
+    Ok(records)
+}
+
+/// Attach `speedup_vs_quicksort` (per-row time ratio, > 1 = faster than
+/// quicksort) to every record that has a same-`(n, dtype, dist)`
+/// quicksort baseline in the slice.
+pub fn annotate_speedups(records: &mut [BenchRecord]) {
+    let baselines: Vec<(String, String, usize, f64)> = records
+        .iter()
+        .filter(|r| r.substrate == Substrate::Quicksort.name() && r.ms > 0.0)
+        .map(|r| (r.dtype.clone(), r.dist.clone(), r.n, r.ms_per_row()))
+        .collect();
+    for r in records.iter_mut() {
+        if r.substrate == Substrate::Quicksort.name() || r.ms <= 0.0 {
+            continue;
+        }
+        if let Some((_, _, _, quick)) = baselines
+            .iter()
+            .find(|(dtype, dist, n, _)| *dtype == r.dtype && *dist == r.dist && *n == r.n)
+        {
+            let speedup = quick / r.ms_per_row();
+            r.extra.set("speedup_vs_quicksort", speedup);
+        }
+    }
+}
+
+/// i.i.d.-cast helper: map u32 keys to i32 preserving order (flip the
+/// sign bit), so "sorted"/"reverse" distributions stay sorted/reverse in
+/// the signed domain.
+fn monotone_i32(keys: Vec<u32>) -> Vec<i32> {
+    keys.into_iter().map(|x| (x ^ 0x8000_0000) as i32).collect()
+}
+
+/// Measure one CPU cell.
+fn measure_cpu(
+    sub: Substrate,
+    dtype: MatrixDtype,
+    dist: Distribution,
+    n: usize,
+    threads: usize,
+    bench: &Bench,
+    seed: u64,
+) -> Measurement {
+    fn go<T: SortKey>(
+        sub: Substrate,
+        threads: usize,
+        bench: &Bench,
+        mut make: impl FnMut() -> Vec<T>,
+        radix: Option<Box<dyn FnMut(&mut Vec<T>)>>,
+    ) -> Measurement {
+        let mut f: Box<dyn FnMut(&mut Vec<T>)> = match sub {
+            Substrate::Quicksort => Box::new(|v| quicksort(v)),
+            Substrate::BitonicScalar => Box::new(bitonic_sort_padded),
+            Substrate::BitonicParallel => Box::new(move |v| bitonic_sort_parallel_padded(v, threads)),
+            Substrate::Merge => Box::new(|v| mergesort(v)),
+            Substrate::Heap => Box::new(|v| heapsort(v)),
+            Substrate::OddEven => Box::new(|v| oddeven_sort(v)),
+            Substrate::Radix => radix.expect("radix gated to u32 by Substrate::supports"),
+            Substrate::BitonicExecutor => unreachable!("device cells use measure_device"),
+        };
+        bench.run_with_setup(sub.name(), &mut make, move |mut v| {
+            f(&mut v);
+            black_box(&v);
+        })
+    }
+    match dtype {
+        MatrixDtype::U32 => {
+            let mut gen = Generator::new(seed);
+            go(
+                sub,
+                threads,
+                bench,
+                move || gen.u32s(n, dist),
+                Some(Box::new(radix_sort_u32)),
+            )
+        }
+        MatrixDtype::I32 => {
+            let mut gen = Generator::new(seed);
+            go(sub, threads, bench, move || monotone_i32(gen.u32s(n, dist)), None)
+        }
+        MatrixDtype::F32 => {
+            let mut gen = Generator::new(seed);
+            go(sub, threads, bench, move || gen.f32s(n, dist), None)
+        }
+    }
+}
+
+/// Measure one device cell: the `(batch, n)` Optimized-variant artifact
+/// for this dtype, executed through the registry (autotune plan policy
+/// applied at compile time). Returns `None` when the menu has no such
+/// artifact; a failing execution is a real error.
+fn measure_device(
+    ctx: &DeviceCtx,
+    dtype: MatrixDtype,
+    dist: Distribution,
+    n: usize,
+    bench: &Bench,
+    seed: u64,
+) -> crate::Result<Option<BenchRecord>> {
+    let Some(meta) = ctx
+        .manifest
+        .entries
+        .iter()
+        .find(|m| {
+            m.kind == ArtifactKind::Sort
+                && m.variant == Variant::Optimized
+                && !m.descending
+                && m.dtype == dtype.runtime_dtype()
+                && m.n == n
+        })
+        .cloned()
+    else {
+        return Ok(None);
+    };
+    let key = crate::runtime::Key::of(&meta);
+    let (b, n) = (meta.batch, meta.n);
+    let mut gen = Generator::new(seed);
+    // One checked execution first: compile errors and artifact drift
+    // surface as Err here instead of panicking mid-measurement.
+    let m = match dtype {
+        MatrixDtype::U32 => {
+            ctx.handle
+                .sort_u32(key, gen.u32s(b * n, dist))
+                .map_err(|e| e.context(format!("device probe for {}", meta.name)))?;
+            bench.run_with_setup(
+                meta.name.as_str(),
+                || gen.u32s(b * n, dist),
+                |rows| {
+                    let _ = black_box(ctx.handle.sort_u32(key, rows).expect("probed artifact"));
+                },
+            )
+        }
+        MatrixDtype::I32 => {
+            ctx.handle
+                .sort_i32(key, monotone_i32(gen.u32s(b * n, dist)))
+                .map_err(|e| e.context(format!("device probe for {}", meta.name)))?;
+            bench.run_with_setup(
+                meta.name.as_str(),
+                || monotone_i32(gen.u32s(b * n, dist)),
+                |rows| {
+                    let _ = black_box(ctx.handle.sort_i32(key, rows).expect("probed artifact"));
+                },
+            )
+        }
+        MatrixDtype::F32 => {
+            ctx.handle
+                .sort_f32(key, gen.f32s(b * n, dist))
+                .map_err(|e| e.context(format!("device probe for {}", meta.name)))?;
+            bench.run_with_setup(
+                meta.name.as_str(),
+                || gen.f32s(b * n, dist),
+                |rows| {
+                    let _ = black_box(ctx.handle.sort_f32(key, rows).expect("probed artifact"));
+                },
+            )
+        }
+    };
+    Ok(Some(
+        BenchRecord::new(
+            "matrix",
+            Substrate::BitonicExecutor.name(),
+            dist.name(),
+            dtype.name(),
+            n,
+        )
+        .with_batch(b)
+        .with_timing(&m)
+        .with_extra("artifact", meta.name.as_str())
+        .with_extra("variant", meta.variant.name())
+        .with_extra("threads", ctx.threads),
+    ))
+}
+
+/// The paper's §4 ablation as trajectory records: for each size, compile
+/// the Basic / Semi / Optimized launch programs and record the measured
+/// per-row time plus the **static full-row memory-pass count** — the
+/// quantity the two optimizations exist to shrink.
+pub fn run_pass_ablation(sizes: &[usize], bench: &Bench, seed: u64) -> Vec<BenchRecord> {
+    let mut records = Vec::new();
+    let mut gen = Generator::new(seed);
+    for &n in sizes {
+        if !n.is_power_of_two() || n < 2 {
+            continue;
+        }
+        for variant in Variant::ALL {
+            let plan = ExecutionPlan::with_config(
+                ArtifactKind::Sort,
+                n,
+                false,
+                PlanConfig {
+                    variant,
+                    block: DEFAULT_PLAN_BLOCK.min(n),
+                    interleave: 1,
+                },
+            );
+            let m = bench.run_with_setup(
+                variant.name(),
+                || gen.u32s(n, Distribution::Uniform),
+                |mut row| {
+                    plan.run_row(&mut row);
+                    black_box(&row);
+                },
+            );
+            records.push(
+                BenchRecord::new("matrix", "bitonic-plan", "uniform", "u32", n)
+                    .with_timing(&m)
+                    .with_extra("variant", variant.name())
+                    .with_extra("hbm_passes", plan.global_passes()),
+            );
+        }
+    }
+    records
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tiny_bench() -> Bench {
+        Bench {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn substrate_names_unique_and_gates_sane() {
+        let names: Vec<&str> = Substrate::ALL.iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        assert!(Substrate::Radix.supports(MatrixDtype::U32));
+        assert!(!Substrate::Radix.supports(MatrixDtype::I32));
+        assert!(Substrate::BitonicExecutor.supports(MatrixDtype::F32));
+        assert!(Substrate::OddEven.size_cap() < usize::MAX);
+        assert!(Substrate::BitonicExecutor.is_device());
+        assert!(!Substrate::Quicksort.is_device());
+    }
+
+    #[test]
+    fn cpu_matrix_covers_dimensions_and_annotates_speedups() {
+        let cfg = MatrixConfig {
+            substrates: Substrate::ALL.to_vec(),
+            dists: vec![Distribution::Uniform, Distribution::Sorted],
+            dtypes: vec![MatrixDtype::U32, MatrixDtype::F32],
+            sizes: vec![64, 128],
+            threads: 2,
+            bench: tiny_bench(),
+            seed: 1,
+        };
+        let records = run_matrix(&cfg, None).unwrap();
+        // Per (dtype, dist, n): 7 CPU substrates for u32, 6 for f32
+        // (radix gated), executor skipped without a device.
+        assert_eq!(records.len(), 2 * 2 * 7 + 2 * 2 * 6);
+        for r in &records {
+            assert_eq!(r.bench, "matrix");
+            assert_eq!(r.batch, 1);
+            assert!(r.ms >= 0.0);
+            assert!(r.p10_ms.is_some() && r.p90_ms.is_some());
+        }
+        // Every non-quicksort record with a positive-ms quicksort
+        // baseline in the same (dtype, dist, n) cell carries the speedup.
+        let baselines: Vec<(&str, &str, usize)> = records
+            .iter()
+            .filter(|r| r.substrate == "quicksort" && r.ms > 0.0)
+            .map(|r| (r.dtype.as_str(), r.dist.as_str(), r.n))
+            .collect();
+        for r in &records {
+            if r.substrate != "quicksort"
+                && r.ms > 0.0
+                && baselines.contains(&(r.dtype.as_str(), r.dist.as_str(), r.n))
+            {
+                assert!(
+                    r.extra_f64("speedup_vs_quicksort").is_some(),
+                    "missing speedup on {} {} {} {}",
+                    r.substrate,
+                    r.dtype,
+                    r.dist,
+                    r.n
+                );
+            }
+        }
+        // Sorted output sanity is the substrates' own tests' job; here we
+        // check the sweep's bookkeeping: every expected cell exists.
+        for dtype in ["u32", "f32"] {
+            for dist in ["uniform", "sorted"] {
+                for n in [64usize, 128] {
+                    assert!(records
+                        .iter()
+                        .any(|r| r.substrate == "heap" && r.dtype == dtype && r.dist == dist && r.n == n));
+                }
+            }
+        }
+        assert!(!records.iter().any(|r| r.substrate == "bitonic-executor"));
+        assert!(!records
+            .iter()
+            .any(|r| r.substrate == "radix" && r.dtype == "f32"));
+    }
+
+    #[test]
+    fn non_power_of_two_size_rejected() {
+        let cfg = MatrixConfig {
+            sizes: vec![100],
+            bench: tiny_bench(),
+            ..MatrixConfig::smoke()
+        };
+        assert!(run_matrix(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn pass_ablation_tracks_the_paper_ordering() {
+        let records = run_pass_ablation(&[1 << 14], &tiny_bench(), 3);
+        assert_eq!(records.len(), 3);
+        let passes: Vec<f64> = Variant::ALL
+            .iter()
+            .map(|v| {
+                records
+                    .iter()
+                    .find(|r| r.extra_str("variant") == Some(v.name()))
+                    .unwrap()
+                    .extra_f64("hbm_passes")
+                    .unwrap()
+            })
+            .collect();
+        // Basic > Semi >= Optimized, the §4 claim the executor reproduces.
+        assert!(passes[0] > passes[1], "{passes:?}");
+        assert!(passes[1] >= passes[2], "{passes:?}");
+    }
+
+    #[test]
+    fn monotone_i32_preserves_order() {
+        let a = vec![0u32, 1, u32::MAX / 2, u32::MAX];
+        let b = monotone_i32(a);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(b[0], i32::MIN);
+        assert_eq!(b[3], i32::MAX);
+    }
+
+    #[test]
+    fn presets_cover_acceptance_dimensions() {
+        for cfg in [MatrixConfig::full(), MatrixConfig::smoke()] {
+            assert!(cfg.substrates.len() >= 4);
+            assert!(cfg.dists.len() >= 3);
+            assert!(cfg.dtypes.len() >= 2);
+            assert!(!cfg.sizes.is_empty());
+        }
+        assert!(MatrixConfig::full().sizes.contains(&(1 << 16)));
+    }
+}

@@ -1,214 +1,46 @@
-//! Measurement harness used by `rust/benches/*` (criterion is unavailable
-//! offline). Provides warmup, adaptive repetition, and robust statistics
-//! (median, p10/p90, MAD) so bench numbers are stable enough to compare
-//! variants.
+//! Benchmark subsystem: measurement harness, the machine-readable
+//! **bench trajectory**, the survey-style scenario matrix, and the
+//! `RESULTS.md` report generator.
+//!
+//! The paper's headline claim is empirical (~20× GPU-bitonic over CPU
+//! quicksort, peaking around 30×), so this crate treats benchmark output
+//! as a first-class artifact rather than scattered stdout tables:
+//!
+//! * [`harness`] — warmup + adaptive repetition + robust statistics
+//!   ([`Bench`], [`Measurement`]); the criterion stand-in every bench
+//!   binary uses.
+//! * [`record`] — the JSON schema: one [`BenchRecord`] per measured
+//!   scenario, appended by every bench run to a single
+//!   [`Trajectory`] file (`BENCH_trajectory.json`), schema-validated on
+//!   load so future PRs diff baselines instead of re-deriving them.
+//! * [`env`] — the [`EnvStamp`] recorded into each trajectory: numbers
+//!   without host/thread/build context are not comparable.
+//! * [`matrix`] — the survey-grade scenario sweep (substrates ×
+//!   distributions × dtypes × sizes, after Božidar & Dobravec's
+//!   parallel-sort comparison and the Arkhipov et al. GPU-sorting
+//!   survey): CPU substrates run directly, device-path substrates route
+//!   through the real [`crate::runtime::Registry`] + autotune plan
+//!   policy. Drives the `bitonic-tpu bench` subcommand.
+//! * [`report`] — renders a trajectory into the paper-style `RESULTS.md`
+//!   (Table-1 matrix, pass-count ablation, speedup-vs-quicksort
+//!   headline). Pure function of the JSON: regeneration is
+//!   deterministic. Drives the `bitonic-tpu report` subcommand.
+//!
+//! ```text
+//! benches/* ─┐
+//! bitonic-tpu bench ──> Trajectory::append ──> BENCH_trajectory.json
+//!                                                   │ Trajectory::load
+//!                              bitonic-tpu report ──┴──> RESULTS.md
+//! ```
 
-use std::time::{Duration, Instant};
+pub mod env;
+pub mod harness;
+pub mod matrix;
+pub mod record;
+pub mod report;
 
-/// Result of one benchmark: robust statistics over per-iteration times.
-#[derive(Clone, Debug)]
-pub struct Measurement {
-    /// Benchmark label.
-    pub name: String,
-    /// Per-iteration wall times, sorted ascending.
-    pub samples_ns: Vec<u64>,
-}
-
-impl Measurement {
-    /// Median iteration time in nanoseconds.
-    pub fn median_ns(&self) -> u64 {
-        percentile(&self.samples_ns, 0.5)
-    }
-
-    /// Median in milliseconds (Table 1's unit).
-    pub fn median_ms(&self) -> f64 {
-        self.median_ns() as f64 / 1e6
-    }
-
-    /// p10 in nanoseconds.
-    pub fn p10_ns(&self) -> u64 {
-        percentile(&self.samples_ns, 0.10)
-    }
-
-    /// p90 in nanoseconds.
-    pub fn p90_ns(&self) -> u64 {
-        percentile(&self.samples_ns, 0.90)
-    }
-
-    /// Median absolute deviation (spread indicator).
-    pub fn mad_ns(&self) -> u64 {
-        let med = self.median_ns();
-        let mut dev: Vec<u64> = self.samples_ns.iter().map(|&s| s.abs_diff(med)).collect();
-        dev.sort_unstable();
-        percentile(&dev, 0.5)
-    }
-
-    /// One-line report.
-    pub fn summary(&self) -> String {
-        format!(
-            "{:<32} median {:>10.4} ms  (p10 {:>9.4}, p90 {:>9.4}, n={})",
-            self.name,
-            self.median_ms(),
-            self.p10_ns() as f64 / 1e6,
-            self.p90_ns() as f64 / 1e6,
-            self.samples_ns.len()
-        )
-    }
-}
-
-fn percentile(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let pos = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[pos]
-}
-
-/// Harness configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct Bench {
-    /// Warmup iterations (not recorded).
-    pub warmup: u32,
-    /// Minimum recorded iterations.
-    pub min_iters: u32,
-    /// Maximum recorded iterations.
-    pub max_iters: u32,
-    /// Target total measuring time; iteration stops after this once
-    /// `min_iters` is reached.
-    pub target: Duration,
-}
-
-impl Default for Bench {
-    fn default() -> Self {
-        Self {
-            warmup: 2,
-            min_iters: 5,
-            max_iters: 200,
-            target: Duration::from_secs(2),
-        }
-    }
-}
-
-impl Bench {
-    /// Quick preset for slow end-to-end benches.
-    pub fn quick() -> Self {
-        Self {
-            warmup: 1,
-            min_iters: 3,
-            max_iters: 20,
-            target: Duration::from_millis(1500),
-        }
-    }
-
-    /// Measure `f`, which must regenerate its own input (use
-    /// [`Bench::run_with_setup`] when setup must be excluded).
-    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
-        self.run_with_setup(name, || (), |()| f())
-    }
-
-    /// Measure `work(setup())` excluding `setup` time from samples.
-    pub fn run_with_setup<S, T, F>(&self, name: &str, mut setup: S, mut work: F) -> Measurement
-    where
-        S: FnMut() -> T,
-        F: FnMut(T),
-    {
-        for _ in 0..self.warmup {
-            let input = setup();
-            work(input);
-        }
-        let mut samples = Vec::new();
-        let started = Instant::now();
-        for i in 0..self.max_iters {
-            let input = setup();
-            let t0 = Instant::now();
-            work(input);
-            samples.push(t0.elapsed().as_nanos() as u64);
-            if i + 1 >= self.min_iters && started.elapsed() >= self.target {
-                break;
-            }
-        }
-        samples.sort_unstable();
-        Measurement {
-            name: name.to_string(),
-            samples_ns: samples,
-        }
-    }
-}
-
-/// Prevent the optimizer from discarding a computed value
-/// (`std::hint::black_box` wrapper kept for call-site clarity).
-#[inline]
-pub fn black_box<T>(x: T) -> T {
-    std::hint::black_box(x)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn measures_something_positive() {
-        let b = Bench {
-            warmup: 1,
-            min_iters: 3,
-            max_iters: 10,
-            target: Duration::from_millis(50),
-        };
-        let m = b.run("spin", || {
-            let mut acc = 0u64;
-            for i in 0..10_000 {
-                acc = acc.wrapping_add(black_box(i));
-            }
-            black_box(acc);
-        });
-        assert!(m.median_ns() > 0);
-        assert!(m.samples_ns.len() >= 3);
-    }
-
-    #[test]
-    fn setup_excluded_from_samples() {
-        let b = Bench {
-            warmup: 0,
-            min_iters: 3,
-            max_iters: 3,
-            target: Duration::from_millis(1),
-        };
-        let m = b.run_with_setup(
-            "setup-heavy",
-            || std::thread::sleep(Duration::from_millis(20)),
-            |()| {},
-        );
-        // Work is ~nothing; if setup leaked into timing, median would be ≥20ms.
-        assert!(m.median_ns() < 5_000_000, "median {}", m.median_ns());
-    }
-
-    #[test]
-    fn respects_max_iters() {
-        let b = Bench {
-            warmup: 0,
-            min_iters: 1,
-            max_iters: 4,
-            target: Duration::from_secs(999),
-        };
-        let m = b.run("fast", || {});
-        assert!(m.samples_ns.len() <= 4);
-    }
-
-    #[test]
-    fn percentile_edges() {
-        assert_eq!(percentile(&[], 0.5), 0);
-        assert_eq!(percentile(&[7], 0.5), 7);
-        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.0), 1);
-        assert_eq!(percentile(&[1, 2, 3, 4, 5], 1.0), 5);
-    }
-
-    #[test]
-    fn summary_contains_name() {
-        let m = Measurement {
-            name: "abc".into(),
-            samples_ns: vec![1000, 2000, 3000],
-        };
-        assert!(m.summary().contains("abc"));
-        assert_eq!(m.median_ns(), 2000);
-    }
-}
+pub use env::EnvStamp;
+pub use harness::{black_box, Bench, Measurement};
+pub use matrix::{MatrixConfig, MatrixDtype, Substrate};
+pub use record::{BenchRecord, Trajectory, SCHEMA_NAME, SCHEMA_VERSION};
+pub use report::render_results;

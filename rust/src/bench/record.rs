@@ -1,0 +1,555 @@
+//! The bench-trajectory JSON schema: [`BenchRecord`] (one measured
+//! scenario) and [`Trajectory`] (the single `BENCH_trajectory.json` file
+//! every bench appends to).
+//!
+//! Design rules:
+//!
+//! * **One file, many writers — run sequentially.** Every bench binary
+//!   and the `bitonic-tpu bench` subcommand append records to the same
+//!   trajectory ([`Trajectory::append_to`]): load-if-present, extend,
+//!   rewrite via write-then-rename (a killed producer never leaves a
+//!   torn file). There is deliberately **no cross-process lock**: two
+//!   producers appending concurrently race load-vs-rename and the last
+//!   rename wins, dropping the other's records — verify.sh and CI run
+//!   the benches one at a time, and so should you. The environment
+//!   stamp is captured when the file is first created.
+//! * **Flat records.** A record is a flat JSON object — fixed, typed
+//!   core fields (`bench`, `substrate`, `dist`, `dtype`, `n`, `batch`,
+//!   `ms`, optional `p10_ms`/`p90_ms`) plus arbitrary extra scalar
+//!   fields kept verbatim — so external tooling (`jq`, pandas) needs no
+//!   schema knowledge beyond "array of flat objects".
+//! * **Validated on load.** [`Trajectory::load`] re-validates everything
+//!   ([`BenchRecord::from_json`]): a malformed or hand-edited trajectory
+//!   fails with the record index and field named, instead of feeding a
+//!   quietly wrong table into `RESULTS.md`.
+//! * **Derived fields are never trusted.** `keys_per_sec` is written for
+//!   the convenience of external consumers but recomputed from
+//!   `batch·n/ms` on load.
+//!
+//! Producers: `benches/{cpu_sorts,dtypes,scaling,table1,hybrid,ablation}`
+//! and the `bench` subcommand ([`super::matrix`]). Consumer:
+//! [`super::report`] / the `report` subcommand.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::Context;
+use crate::util::json::Json;
+
+use super::env::EnvStamp;
+use super::harness::Measurement;
+
+/// Top-level `schema` tag of the trajectory file.
+pub const SCHEMA_NAME: &str = "bitonic-tpu-bench-trajectory";
+/// Schema version understood by this crate.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Core record fields; every other key on a record object is an extra
+/// and round-trips verbatim. `keys_per_sec` is derived (rewritten on
+/// save, ignored on load).
+const CORE_FIELDS: [&str; 10] = [
+    "bench", "substrate", "dist", "dtype", "n", "batch", "ms", "p10_ms", "p90_ms", "keys_per_sec",
+];
+
+/// One measured scenario: which code sorted what, and how fast.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Producer (bench binary or subcommand): `"matrix"`, `"cpu_sorts"`…
+    pub bench: String,
+    /// Sorting substrate (see [`super::matrix::Substrate::name`] for the
+    /// canonical menu; free-form for bench-specific entries).
+    pub substrate: String,
+    /// Input distribution name ([`crate::workload::Distribution::name`]).
+    pub dist: String,
+    /// Key dtype name: `"u32"`, `"i32"`, `"f32"`, `"u64"`, `"f64"`.
+    pub dtype: String,
+    /// Keys per row (CPU substrates: the whole array).
+    pub n: usize,
+    /// Rows per measured batch (1 for CPU substrates).
+    pub batch: usize,
+    /// Median wall milliseconds per batch.
+    pub ms: f64,
+    /// 10th-percentile milliseconds, when the harness measured spread.
+    pub p10_ms: Option<f64>,
+    /// 90th-percentile milliseconds, when the harness measured spread.
+    pub p90_ms: Option<f64>,
+    /// Substrate-specific extra fields (always a [`Json::Obj`]): e.g.
+    /// `variant`, `threads`, `hbm_passes`, `speedup_vs_quicksort`.
+    pub extra: Json,
+}
+
+impl BenchRecord {
+    /// New record with `batch = 1` and no timing yet.
+    pub fn new(
+        bench: impl Into<String>,
+        substrate: impl Into<String>,
+        dist: impl Into<String>,
+        dtype: impl Into<String>,
+        n: usize,
+    ) -> Self {
+        Self {
+            bench: bench.into(),
+            substrate: substrate.into(),
+            dist: dist.into(),
+            dtype: dtype.into(),
+            n,
+            batch: 1,
+            ms: 0.0,
+            p10_ms: None,
+            p90_ms: None,
+            extra: Json::obj(),
+        }
+    }
+
+    /// Set the rows-per-batch of the measured execution.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the median milliseconds directly (single-shot measurements).
+    pub fn with_ms(mut self, ms: f64) -> Self {
+        self.ms = ms;
+        self
+    }
+
+    /// Take median/p10/p90 from a harness [`Measurement`].
+    pub fn with_timing(mut self, m: &Measurement) -> Self {
+        self.ms = m.median_ms();
+        self.p10_ms = Some(m.p10_ns() as f64 / 1e6);
+        self.p90_ms = Some(m.p90_ns() as f64 / 1e6);
+        self
+    }
+
+    /// Attach an extra field (kept verbatim in the JSON).
+    pub fn with_extra(mut self, key: &str, value: impl Into<Json>) -> Self {
+        self.extra.set(key, value);
+        self
+    }
+
+    /// Milliseconds per row — the unit the report compares CPU
+    /// (batch = 1) and device (batch = B) substrates in.
+    pub fn ms_per_row(&self) -> f64 {
+        self.ms / self.batch.max(1) as f64
+    }
+
+    /// Sorted keys per second over the whole batch.
+    pub fn keys_per_sec(&self) -> f64 {
+        if self.ms > 0.0 {
+            (self.batch * self.n) as f64 / (self.ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// An extra field as a number.
+    pub fn extra_f64(&self, key: &str) -> Option<f64> {
+        self.extra.get(key).and_then(Json::as_f64)
+    }
+
+    /// An extra field as a string.
+    pub fn extra_str(&self, key: &str) -> Option<&str> {
+        self.extra.get(key).and_then(Json::as_str)
+    }
+
+    /// Serialise as a flat JSON object (core fields first, extras after,
+    /// insertion order preserved).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("bench", self.bench.as_str())
+            .set("substrate", self.substrate.as_str())
+            .set("dist", self.dist.as_str())
+            .set("dtype", self.dtype.as_str())
+            .set("n", self.n)
+            .set("batch", self.batch)
+            .set("ms", self.ms);
+        if let Some(p10) = self.p10_ms {
+            o.set("p10_ms", p10);
+        }
+        if let Some(p90) = self.p90_ms {
+            o.set("p90_ms", p90);
+        }
+        o.set("keys_per_sec", self.keys_per_sec());
+        if let Some(fields) = self.extra.fields() {
+            for (k, v) in fields {
+                o.set(k, v.clone());
+            }
+        }
+        o
+    }
+
+    /// Parse and validate one record object. Core fields are required
+    /// with the right types; unknown fields become extras; the derived
+    /// `keys_per_sec` is ignored (recomputed on save).
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        v.fields()
+            .ok_or_else(|| crate::err!("record is not an object"))?;
+        let str_field = |key: &str| -> crate::Result<String> {
+            let s = v
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| crate::err!("record: missing/invalid string field {key:?}"))?;
+            crate::ensure!(!s.is_empty(), "record: field {key:?} is empty");
+            Ok(s.to_string())
+        };
+        let usize_field = |key: &str| -> crate::Result<usize> {
+            let x = v
+                .get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| crate::err!("record: missing/invalid integer field {key:?}"))?;
+            crate::ensure!(x >= 1, "record: field {key:?} must be >= 1");
+            Ok(x)
+        };
+        let ms = v
+            .get("ms")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| crate::err!("record: missing/invalid number field \"ms\""))?;
+        crate::ensure!(ms >= 0.0, "record: \"ms\" must be >= 0, got {ms}");
+        let opt_ms = |key: &str| -> crate::Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => {
+                    let x = x
+                        .as_f64()
+                        .ok_or_else(|| crate::err!("record: field {key:?} must be a number"))?;
+                    crate::ensure!(x >= 0.0, "record: field {key:?} must be >= 0");
+                    Ok(Some(x))
+                }
+            }
+        };
+        let mut extra = Json::obj();
+        for (k, val) in v.fields().unwrap() {
+            if !CORE_FIELDS.contains(&k.as_str()) {
+                extra.set(k, val.clone());
+            }
+        }
+        Ok(Self {
+            bench: str_field("bench")?,
+            substrate: str_field("substrate")?,
+            dist: str_field("dist")?,
+            dtype: str_field("dtype")?,
+            n: usize_field("n")?,
+            batch: usize_field("batch")?,
+            ms,
+            p10_ms: opt_ms("p10_ms")?,
+            p90_ms: opt_ms("p90_ms")?,
+            extra,
+        })
+    }
+}
+
+/// The whole trajectory file: env stamp + every appended record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trajectory {
+    /// Host/build environment captured when the file was first created.
+    pub env: EnvStamp,
+    /// All records, append order.
+    pub records: Vec<BenchRecord>,
+}
+
+impl Default for Trajectory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Trajectory {
+    /// Fresh empty trajectory stamped with the current environment.
+    pub fn new() -> Self {
+        Self {
+            env: EnvStamp::capture(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Canonical trajectory location: `$BENCH_TRAJECTORY_JSON` if set,
+    /// else `BENCH_trajectory.json` at the **workspace root** (the
+    /// parent of this crate's manifest dir, resolved at compile time
+    /// like [`crate::runtime::default_artifacts_dir`]). Anchoring
+    /// matters because the producers run with different cwds — `cargo
+    /// run` keeps the shell's, `cargo bench` sets the *package* root
+    /// `rust/` — and "one file, many writers" only works if they all
+    /// resolve the same file without per-caller env plumbing.
+    pub fn default_path() -> PathBuf {
+        if let Ok(path) = std::env::var("BENCH_TRAJECTORY_JSON") {
+            return PathBuf::from(path);
+        }
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        manifest.parent().unwrap_or(manifest).join("BENCH_trajectory.json")
+    }
+
+    /// Append a record.
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    /// Serialise the whole trajectory document.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("schema", SCHEMA_NAME)
+            .set("version", SCHEMA_VERSION)
+            .set("env", self.env.to_json());
+        let mut records = Json::arr();
+        for r in &self.records {
+            records.push(r.to_json());
+        }
+        doc.set("records", records);
+        doc
+    }
+
+    /// Parse and validate a trajectory document.
+    pub fn from_json(doc: &Json) -> crate::Result<Self> {
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::err!("trajectory: missing \"schema\" tag"))?;
+        crate::ensure!(
+            schema == SCHEMA_NAME,
+            "trajectory: schema is {schema:?}, want {SCHEMA_NAME:?}"
+        );
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| crate::err!("trajectory: missing \"version\""))?;
+        crate::ensure!(
+            version as u64 == SCHEMA_VERSION,
+            "trajectory: version {version} not understood (this crate reads {SCHEMA_VERSION})"
+        );
+        let env = EnvStamp::from_json(
+            doc.get("env")
+                .ok_or_else(|| crate::err!("trajectory: missing \"env\""))?,
+        )?;
+        let items = doc
+            .get("records")
+            .and_then(Json::items)
+            .ok_or_else(|| crate::err!("trajectory: missing \"records\" array"))?;
+        let mut records = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            records.push(
+                BenchRecord::from_json(item)
+                    .map_err(|e| e.context(format!("trajectory record [{i}]")))?,
+            );
+        }
+        Ok(Self { env, records })
+    }
+
+    /// Load and validate a trajectory file.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading bench trajectory {path:?} — generate one with `bitonic-tpu bench`")
+        })?;
+        let doc = Json::parse(&text)
+            .map_err(|e| e.context(format!("parsing bench trajectory {path:?}")))?;
+        Self::from_json(&doc)
+            .map_err(|e| e.context(format!("validating bench trajectory {path:?}")))
+    }
+
+    /// Load if the file exists, else start a fresh trajectory. A file
+    /// that exists but fails validation is an error — appending to a
+    /// corrupt trajectory would launder it.
+    pub fn load_or_new(path: impl AsRef<Path>) -> crate::Result<Self> {
+        if path.as_ref().exists() {
+            Self::load(path)
+        } else {
+            Ok(Self::new())
+        }
+    }
+
+    /// Write the trajectory file (pretty-printed, trailing newline).
+    /// Write-then-rename, so a producer killed mid-write (the CI smokes
+    /// run under `timeout --signal=KILL`) can never leave a torn
+    /// half-document that fails every later bench run at load.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().render())
+            .with_context(|| format!("writing bench trajectory {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving bench trajectory into place at {path:?}"))
+    }
+
+    /// The append protocol every bench uses: load-or-create `path`, add
+    /// `records`, rewrite. Returns the total record count afterwards.
+    pub fn append_to(path: impl AsRef<Path>, records: Vec<BenchRecord>) -> crate::Result<usize> {
+        let mut t = Self::load_or_new(&path)?;
+        t.records.extend(records);
+        t.save(&path)?;
+        Ok(t.records.len())
+    }
+
+    /// Bench-binary epilogue: append `records` to [`Self::default_path`],
+    /// report the running total on stdout, and **exit the process** with
+    /// a failure code when the existing file is malformed — a corrupt
+    /// trajectory must fail the bench run loudly, never be clobbered.
+    /// One definition so the six bench binaries cannot drift; library
+    /// code should use [`Self::append_to`] and handle the error.
+    pub fn append_default_or_exit(records: Vec<BenchRecord>) -> usize {
+        let path = Self::default_path();
+        match Self::append_to(&path, records) {
+            Ok(total) => {
+                println!("trajectory: {path:?} now holds {total} records");
+                total
+            }
+            Err(e) => {
+                eprintln!("ERROR: could not append bench trajectory: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("bitonic-tpu-record-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_record() -> BenchRecord {
+        BenchRecord::new("matrix", "quicksort", "uniform", "u32", 65536)
+            .with_batch(4)
+            .with_ms(2.5)
+            .with_extra("threads", 4usize)
+            .with_extra("variant", "optimized")
+    }
+
+    #[test]
+    fn record_json_roundtrip_preserves_everything() {
+        let mut r = sample_record();
+        r.p10_ms = Some(2.25);
+        r.p90_ms = Some(3.5);
+        let back = BenchRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // Through text too (the on-disk path).
+        let back = BenchRecord::from_json(&Json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.extra_str("variant"), Some("optimized"));
+        assert_eq!(back.extra_f64("threads"), Some(4.0));
+    }
+
+    #[test]
+    fn derived_fields_computed_not_trusted() {
+        let r = sample_record();
+        // 4 rows × 65536 keys in 2.5 ms.
+        let expect = (4.0 * 65536.0) / (2.5 / 1e3);
+        assert!((r.keys_per_sec() - expect).abs() < 1e-6);
+        assert!((r.ms_per_row() - 0.625).abs() < 1e-12);
+        // A lying keys_per_sec in the JSON is ignored on load.
+        let mut j = r.to_json();
+        j.set("keys_per_sec", 1.0);
+        let back = BenchRecord::from_json(&j).unwrap();
+        assert!((back.keys_per_sec() - expect).abs() < 1e-6);
+        // Zero-ms records report zero throughput instead of inf.
+        let z = BenchRecord::new("b", "s", "d", "u32", 8);
+        assert_eq!(z.keys_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn record_rejects_missing_and_invalid_fields() {
+        let good = sample_record().to_json();
+        for field in ["bench", "substrate", "dist", "dtype", "n", "batch", "ms"] {
+            let mut j = Json::obj();
+            for (k, v) in good.fields().unwrap() {
+                if k != field {
+                    j.set(k, v.clone());
+                }
+            }
+            assert!(BenchRecord::from_json(&j).is_err(), "accepted without {field}");
+        }
+        for (field, bad) in [
+            ("n", Json::Num(0.0)),
+            ("n", Json::Str("64".into())),
+            ("batch", Json::Num(2.5)),
+            ("ms", Json::Num(-1.0)),
+            ("ms", Json::Str("fast".into())),
+            ("p10_ms", Json::Str("slow".into())),
+            ("bench", Json::Str(String::new())),
+        ] {
+            let mut j = good.clone();
+            j.set(field, bad);
+            assert!(BenchRecord::from_json(&j).is_err(), "accepted bad {field}");
+        }
+        assert!(BenchRecord::from_json(&Json::arr()).is_err());
+    }
+
+    #[test]
+    fn trajectory_file_roundtrip_and_append() {
+        let path = tmp("roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+        // First append creates the file.
+        let count = Trajectory::append_to(&path, vec![sample_record()]).unwrap();
+        assert_eq!(count, 1);
+        // Second append extends it, same env stamp.
+        let first = Trajectory::load(&path).unwrap();
+        let count =
+            Trajectory::append_to(&path, vec![sample_record().with_ms(9.0)]).unwrap();
+        assert_eq!(count, 2);
+        let second = Trajectory::load(&path).unwrap();
+        assert_eq!(second.env, first.env);
+        assert_eq!(second.records.len(), 2);
+        assert_eq!(second.records[0], first.records[0]);
+        assert!((second.records[1].ms - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_rejects_malformed_trajectories() {
+        let path = tmp("malformed.json");
+        // Not JSON at all.
+        std::fs::write(&path, "not json {").unwrap();
+        assert!(Trajectory::load(&path).is_err());
+        // Wrong schema tag.
+        std::fs::write(&path, r#"{"schema": "other", "version": 1}"#).unwrap();
+        assert!(Trajectory::load(&path).is_err());
+        // Future version.
+        let mut t = Trajectory::new();
+        t.push(sample_record());
+        let mut doc = t.to_json();
+        doc.set("version", 999usize);
+        std::fs::write(&path, doc.render()).unwrap();
+        assert!(Trajectory::load(&path).is_err());
+        // A record with a broken field, index named in the error.
+        let mut doc = t.to_json();
+        match doc.get("records").unwrap().clone() {
+            Json::Arr(mut items) => {
+                items[0].set("ms", "not a number");
+                doc.set("records", Json::Arr(items));
+            }
+            _ => unreachable!(),
+        }
+        std::fs::write(&path, doc.render()).unwrap();
+        let err = format!("{:#}", Trajectory::load(&path).unwrap_err());
+        assert!(err.contains("record [0]"), "{err}");
+        // load_or_new refuses corrupt files rather than clobbering them…
+        assert!(Trajectory::load_or_new(&path).is_err());
+        // …but starts fresh when the file simply does not exist.
+        let missing = tmp("missing.json");
+        let _ = std::fs::remove_file(&missing);
+        assert!(Trajectory::load_or_new(&missing).unwrap().records.is_empty());
+        // Missing file on load names the generating command.
+        let err = format!("{:#}", Trajectory::load(&missing).unwrap_err());
+        assert!(err.contains("bitonic-tpu bench"), "{err}");
+    }
+
+    #[test]
+    fn default_path_is_workspace_anchored() {
+        // `cargo run` (shell cwd) and `cargo bench` (cwd = rust/) must
+        // agree on ONE trajectory file, so the default cannot be
+        // cwd-relative.
+        let p = Trajectory::default_path();
+        assert!(p.ends_with("BENCH_trajectory.json"), "{p:?}");
+        if std::env::var("BENCH_TRAJECTORY_JSON").is_err() {
+            assert!(p.is_absolute(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn empty_trajectory_is_valid() {
+        let path = tmp("empty.json");
+        Trajectory::new().save(&path).unwrap();
+        let t = Trajectory::load(&path).unwrap();
+        assert!(t.records.is_empty());
+    }
+}

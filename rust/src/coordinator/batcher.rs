@@ -3,6 +3,22 @@
 //! expires, or a pending request's **SLO budget** is about to run out —
 //! the classic throughput/latency trade of serving systems, made
 //! deadline-aware.
+//!
+//! Every pending request has one *flush-trigger instant*:
+//! `min(arrived + max_wait, slo − slo_margin)`; the batcher is ready the
+//! moment `now` passes the minimum trigger over the queue. That minimum
+//! is **cached** — maintained incrementally on push, rescanned only when
+//! a batch is taken — so the scheduler's hot queries (`ready`,
+//! `next_deadline`) are O(1) instead of O(queue) under the one scheduler
+//! mutex that `submit()` also needs (flagged in PR 3 review, fixed in
+//! PR 4; regression-tested against a full-scan oracle). Capacity-based
+//! readiness (`len >= max_rows`) needs no cache.
+//!
+//! `max_wait: Duration::MAX` means "never flush on age alone": the
+//! trigger arithmetic is `checked_add`, an overflowing wait counts as
+//! "no time-based trigger", and `next_deadline` then returns `None`
+//! even for a non-empty queue (test emptiness with `is_empty`, never
+//! `next_deadline`).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

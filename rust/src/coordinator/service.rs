@@ -10,6 +10,25 @@
 //! class has dispatchable work, and hot classes drain with every thread
 //! in the house. Flushes are deadline-aware: see
 //! [`BatcherConfig::slo_margin`].
+//!
+//! Scheduling invariants worth knowing when reading this module:
+//!
+//! * All batcher queues sit behind **one scheduler mutex**, shared by
+//!   `submit()` and the workers; the per-queue readiness checks it makes
+//!   under that lock are O(1) (the batcher caches its earliest
+//!   flush-trigger instant — see [`super::batcher`]).
+//! * Workers sleep on a condvar with a timeout equal to the earliest
+//!   `next_deadline` across queues, and shutdown cycles the lock before
+//!   `notify_all` so the flag cannot slip between a worker's check and
+//!   its wait (the classic lost-wakeup).
+//! * A device failure degrades the affected batch to the per-item CPU
+//!   path ([`ExecPath::Cpu`] in the response) — requests are
+//!   never dropped by the execution layer; only admission
+//!   ([`super::backpressure`]) sheds, and that is counted in
+//!   [`ServiceStats::shed`].
+//! * Work stealing is unweighted today: a hot class can still starve a
+//!   cold class's SLOs under sustained overload (per-class admission
+//!   budgets and priority stealing are ROADMAP items).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};

@@ -26,11 +26,27 @@
 //!   batcher that packs requests into the artifacts' `(B, N)` row-sorted
 //!   executions, bounded queues with shedding, and a worker pool.
 //! * [`workload`] — PRNGs and input distributions for experiments.
-//! * [`bench`] — the measurement harness used by `rust/benches/*`
-//!   (criterion is unavailable offline).
-//! * [`util`] — error handling ([`util::error`]), CLI parsing, thread
-//!   pool, metrics, property-testing and table formatting substrates
-//!   (their crates.io equivalents are unavailable offline).
+//! * [`bench`] — the benchmark subsystem: measurement harness
+//!   (criterion stand-in), the survey-style scenario matrix
+//!   ([`bench::matrix`]), the unified machine-readable trajectory every
+//!   bench appends to (`BENCH_trajectory.json`, [`bench::record`]), and
+//!   the `RESULTS.md` generator ([`bench::report`]).
+//! * [`util`] — error handling ([`util::error`]), CLI parsing, JSON
+//!   builder + parser ([`util::json`]), thread pool, metrics,
+//!   property-testing and table formatting substrates (their crates.io
+//!   equivalents are unavailable offline).
+//!
+//! ## Where the numbers live
+//!
+//! Performance claims in this repo are backed by the bench trajectory:
+//! `bitonic-tpu bench` (or any `cargo bench` binary) appends
+//! schema-validated records to `BENCH_trajectory.json`, and `bitonic-tpu
+//! report` regenerates `RESULTS.md` from it deterministically — see
+//! README "Benchmarks & results".
+
+// Public API is the reproduction's documentation of record; undocumented
+// items are a defect the build should flag.
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod coordinator;

@@ -8,10 +8,16 @@
 //! * `simulate`  — print calibrated GPU-model predictions
 //! * `network`   — print the bitonic network (paper Fig. 2)
 //! * `analyze`   — launch/pass counts per variant (structural perf model)
+//! * `bench`     — the survey benchmark matrix → `BENCH_trajectory.json`
+//! * `report`    — regenerate `RESULTS.md` from the trajectory
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use bitonic_tpu::bench::{
+    matrix::{run_matrix, run_pass_ablation, DeviceCtx},
+    render_results, MatrixConfig, Substrate, Trajectory,
+};
 use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
 use bitonic_tpu::runtime::{
     spawn_device_host_with, tune, ArtifactKind, HostConfig, Key, Manifest, PlanConfig, PlanPolicy,
@@ -33,6 +39,8 @@ fn main() -> bitonic_tpu::Result<()> {
         .command("network", "print the bitonic network (Fig. 2)")
         .command("analyze", "launch/pass counts per variant")
         .command("tune", "sweep plan configs on this host; write a tuning profile")
+        .command("bench", "survey matrix: substrates × dists × dtypes × sizes → trajectory JSON")
+        .command("report", "regenerate RESULTS.md from the bench trajectory")
         .command("gen-data", "write a workload dataset file (.btsd)")
         .opt("n", "array size (elements)", Some("65536"))
         .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
@@ -69,9 +77,16 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt("tune-rows", "tune: rows per measured batch", None)
+        .opt(
+            "trajectory",
+            "bench/report: trajectory JSON path (default: $BENCH_TRAJECTORY_JSON \
+             or BENCH_trajectory.json at the workspace root)",
+            None,
+        )
+        .opt("out", "report: output markdown path", Some("RESULTS.md"))
         .opt("seed", "workload seed", Some("42"))
         .flag("no-profile", "ignore any tuning profile")
-        .flag("smoke", "tune: tiny CI-sized sweep")
+        .flag("smoke", "tune/bench: tiny CI-sized sweep")
         .flag("verbose", "more output");
     let args = parser.parse_env()?;
 
@@ -83,6 +98,8 @@ fn main() -> bitonic_tpu::Result<()> {
         Some("network") => cmd_network(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("tune") => cmd_tune(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("report") => cmd_report(&args),
         Some("gen-data") => cmd_gen_data(&args),
         _ => {
             println!("{}", parser.usage());
@@ -526,6 +543,113 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    Ok(())
+}
+
+/// `--trajectory PATH` if given, else the library default
+/// (`$BENCH_TRAJECTORY_JSON`, or `BENCH_trajectory.json` at the
+/// workspace root — producers run with different cwds, see
+/// [`Trajectory::default_path`]).
+fn trajectory_path(args: &bitonic_tpu::util::cli::Args) -> std::path::PathBuf {
+    args.get("trajectory")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Trajectory::default_path)
+}
+
+/// `bitonic-tpu bench [--smoke]`: run the survey matrix (substrates ×
+/// distributions × dtypes × sizes) plus the launch-fusion pass ablation,
+/// print the per-size speedup-vs-quicksort headline, and append every
+/// record to the bench trajectory. The device substrate routes through
+/// the real registry with the same autotune plan policy `sort`/`serve`
+/// resolve (`--profile`/`--no-profile`/`--plan-*` all apply).
+fn cmd_bench(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let smoke = args.flag("smoke");
+    let mut cfg = if smoke { MatrixConfig::smoke() } else { MatrixConfig::full() };
+    cfg.seed = args.parsed_or("seed", cfg.seed)?;
+    if let Some(threads) = args.get_parsed::<usize>("threads")? {
+        bitonic_tpu::ensure!(threads >= 1, "--threads must be >= 1");
+        cfg.threads = threads;
+    }
+
+    // Device substrate: a real device host — registry, executor pool,
+    // autotune plan policy — not an inlined plan walk. Missing artifacts
+    // degrade to a CPU-only matrix rather than failing the sweep.
+    let dir = artifacts_dir(args);
+    let device = (|| -> bitonic_tpu::Result<DeviceCtx> {
+        let plan = plan_policy(args, &dir)?;
+        let threads = pick_threads(args, &plan)?;
+        let (handle, manifest) = spawn_device_host_with(&dir, HostConfig { threads, plan })?;
+        Ok(DeviceCtx { handle, manifest, threads })
+    })();
+    let device = match device {
+        Ok(ctx) => Some(ctx),
+        Err(e) => {
+            eprintln!("device path unavailable ({e:#}); running CPU substrates only");
+            None
+        }
+    };
+
+    println!(
+        "bench matrix: {} substrate(s) × {} dist(s) × {} dtype(s) × sizes {:?}{}{}",
+        cfg.substrates.len(),
+        cfg.dists.len(),
+        cfg.dtypes.len(),
+        cfg.sizes,
+        if smoke { " (smoke grid)" } else { "" },
+        if device.is_some() { "" } else { " [no device]" },
+    );
+    let t0 = Instant::now();
+    let mut records = run_matrix(&cfg, device.as_ref())?;
+    records.extend(run_pass_ablation(&cfg.sizes, &cfg.bench, cfg.seed));
+    if let Some(ctx) = device {
+        ctx.handle.shutdown();
+    }
+
+    // The paper's headline, per size class, on stdout.
+    let mut t = Table::new(vec!["n", "quick ms/row", "executor ms/row", "speedup vs quick"]);
+    for &n in &cfg.sizes {
+        let find = |sub: &str| {
+            records
+                .iter()
+                .find(|r| r.substrate == sub && r.dtype == "u32" && r.dist == "uniform" && r.n == n)
+        };
+        let quick = find(Substrate::Quicksort.name());
+        let exec = find("bitonic-executor");
+        t.row(vec![
+            fmt_size(n),
+            quick.map(|r| fmt_ms(r.ms_per_row())).unwrap_or("—".into()),
+            exec.map(|r| fmt_ms(r.ms_per_row())).unwrap_or("—".into()),
+            exec.and_then(|r| r.extra_f64("speedup_vs_quicksort"))
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or("—".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let path = trajectory_path(args);
+    let appended = records.len();
+    let total = Trajectory::append_to(&path, records)?;
+    println!(
+        "appended {appended} records to {path:?} ({total} total) in {:.1}s — render with `bitonic-tpu report`",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// `bitonic-tpu report`: regenerate `RESULTS.md` from the trajectory.
+/// Pure function of the JSON — same trajectory, byte-identical output.
+fn cmd_report(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let path = trajectory_path(args);
+    let trajectory = Trajectory::load(&path)?;
+    let out = args.get_or("out", "RESULTS.md");
+    let text = render_results(&trajectory);
+    std::fs::write(&out, &text)
+        .map_err(|e| bitonic_tpu::err!("writing {out}: {e}"))?;
+    println!(
+        "wrote {out} from {path:?} ({} records, {} bytes)",
+        trajectory.records.len(),
+        text.len()
+    );
     Ok(())
 }
 

@@ -22,7 +22,11 @@
 //!   `--plan-interleave`) always winning over the profile.
 //!
 //! CLI: `bitonic-tpu tune [--smoke]` runs the sweep and writes the
-//! profile; `sort`/`serve` pick it up automatically.
+//! profile; `sort`/`serve` pick it up automatically, and the survey
+//! bench (`bitonic-tpu bench`, [`crate::bench::matrix`]) routes its
+//! device substrate through the same resolved policy — so the numbers
+//! recorded in `BENCH_trajectory.json` are the tuned configuration's,
+//! not a hardcoded default's.
 //!
 //! **Scope of a tuned entry.** `block`/`interleave` are resolved per
 //! class and re-narrowed against the live batch at dispatch, so a tuned

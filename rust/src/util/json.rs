@@ -1,9 +1,20 @@
-//! Minimal JSON document builder (serde is unavailable offline): just
-//! enough to emit machine-readable bench/tuning reports like
-//! `BENCH_ablation.json` — insertion-ordered objects, pretty printing,
-//! correct string escaping, nothing else. There is deliberately no
-//! parser; the reports are write-only from this crate's point of view
-//! (future PRs diff them as text or load them with real tooling).
+//! Minimal JSON document builder **and parser** (serde is unavailable
+//! offline): enough to emit and reload machine-readable bench reports
+//! like `BENCH_trajectory.json` — insertion-ordered objects, pretty
+//! printing, correct string escaping, and a strict recursive-descent
+//! reader ([`Json::parse`]).
+//!
+//! The parser exists because the bench trajectory is read back by this
+//! crate itself: `bitonic-tpu report` regenerates `RESULTS.md` from the
+//! JSON the benches append (see [`crate::bench::record`]), and every
+//! bench run appends to the existing file rather than clobbering it. It
+//! is strict (no trailing commas or garbage, control characters must be
+//! escaped, depth-limited) so a hand-edited trajectory fails loudly at
+//! load instead of producing a quietly wrong report.
+//!
+//! `render` → `parse` round-trips every value except the float forms
+//! that [`Json::render`] normalises on output (non-finite numbers become
+//! `null`, integral floats print without a decimal point).
 
 /// A JSON value. Objects keep insertion order so reports diff cleanly.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,6 +68,83 @@ impl Json {
             other => panic!("Json::push on non-array {other:?}"),
         }
         self
+    }
+
+    /// Field of an object (first match), `None` on non-objects too.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a (finite) number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload as a non-negative integer: the number must be
+    /// integral and fit `usize` (sizes, batches, counts).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && *x == x.trunc() && *x < 9e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array items, if this is an array.
+    pub fn items(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Object fields in insertion order, if this is an object.
+    pub fn fields(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Parse a complete JSON document (strict: exactly one value, no
+    /// trailing garbage, nesting depth ≤ 128).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let mut p = Reader {
+            bytes: text.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        crate::ensure!(
+            p.pos == p.bytes.len(),
+            "JSON: trailing data at byte {} of {}",
+            p.pos,
+            p.bytes.len()
+        );
+        Ok(v)
     }
 
     /// Pretty-print with two-space indentation and a trailing newline.
@@ -120,6 +208,278 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Strict recursive-descent JSON reader over the input bytes. The input
+/// is a `&str`, so the bytes are valid UTF-8 throughout; the reader only
+/// ever stops on ASCII structural characters, which keeps `pos` on char
+/// boundaries.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+/// Containers deeper than this are rejected (keeps a hostile input from
+/// overflowing the parse stack; real trajectories nest ~4 levels).
+const MAX_DEPTH: usize = 128;
+
+impl Reader<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn next_byte(&mut self) -> crate::Result<u8> {
+        let b = self
+            .peek()
+            .ok_or_else(|| crate::err!("JSON: unexpected end of input at byte {}", self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn expect(&mut self, want: u8) -> crate::Result<()> {
+        let got = self.next_byte()?;
+        crate::ensure!(
+            got == want,
+            "JSON: expected {:?} at byte {}, got {:?}",
+            want as char,
+            self.pos - 1,
+            got as char
+        );
+        Ok(())
+    }
+
+    /// Consume the exact ASCII keyword `kw` (after its first byte has
+    /// been peeked by the caller).
+    fn literal(&mut self, kw: &str, value: Json) -> crate::Result<Json> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(value)
+        } else {
+            crate::bail!("JSON: bad literal at byte {} (expected {kw:?})", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(other) => crate::bail!(
+                "JSON: unexpected byte {:?} at {}",
+                other as char,
+                self.pos
+            ),
+            None => crate::bail!("JSON: unexpected end of input at byte {}", self.pos),
+        }
+    }
+
+    fn eat_digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let int_start = self.pos;
+        crate::ensure!(self.eat_digits() > 0, "JSON: bad number at byte {start}");
+        // RFC 8259: no leading zeros ("0123" is not a number) — stdlib
+        // readers of the trajectory would reject what we accepted.
+        crate::ensure!(
+            self.bytes[int_start] != b'0' || self.pos == int_start + 1,
+            "JSON: leading zero in number at byte {start}"
+        );
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            crate::ensure!(
+                self.eat_digits() > 0,
+                "JSON: digits must follow '.' at byte {}",
+                self.pos
+            );
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            crate::ensure!(
+                self.eat_digits() > 0,
+                "JSON: digits must follow exponent at byte {}",
+                self.pos
+            );
+        }
+        // The scanned slice matches the JSON number grammar, so it is
+        // ASCII and f64::from_str accepts it; only overflow can fail us.
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x: f64 = s
+            .parse()
+            .map_err(|e| crate::err!("JSON: number {s:?} at byte {start}: {e}"))?;
+        crate::ensure!(x.is_finite(), "JSON: number {s:?} overflows f64");
+        Ok(Json::Num(x))
+    }
+
+    fn hex4(&mut self) -> crate::Result<u32> {
+        crate::ensure!(
+            self.pos + 4 <= self.bytes.len(),
+            "JSON: truncated \\u escape at byte {}",
+            self.pos
+        );
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| crate::err!("JSON: non-ASCII \\u escape at byte {}", self.pos))?;
+        let v = u32::from_str_radix(s, 16)
+            .map_err(|_| crate::err!("JSON: bad \\u escape {s:?} at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.next_byte()?;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => match self.next_byte()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = self.hex4()?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // High surrogate: a low surrogate escape must
+                            // follow; combine into one code point.
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.hex4()?;
+                            crate::ensure!(
+                                (0xDC00..0xE000).contains(&lo),
+                                "JSON: unpaired surrogate \\u{hi:04x} at byte {}",
+                                self.pos
+                            );
+                            0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        out.push(char::from_u32(cp).ok_or_else(|| {
+                            crate::err!("JSON: invalid code point \\u{cp:04x}")
+                        })?);
+                    }
+                    other => crate::bail!(
+                        "JSON: bad escape \\{} at byte {}",
+                        other as char,
+                        self.pos - 1
+                    ),
+                },
+                c if c < 0x20 => crate::bail!(
+                    "JSON: unescaped control character 0x{c:02x} at byte {}",
+                    self.pos - 1
+                ),
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // Multi-byte UTF-8: the input is a valid &str, so the
+                    // full sequence is present — copy it through.
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.pos - 1;
+                    crate::ensure!(
+                        start + len <= self.bytes.len(),
+                        "JSON: truncated UTF-8 at byte {start}"
+                    );
+                    self.pos = start + len;
+                    out.push_str(std::str::from_utf8(&self.bytes[start..start + len]).unwrap());
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.depth += 1;
+        crate::ensure!(self.depth <= MAX_DEPTH, "JSON: nesting deeper than {MAX_DEPTH}");
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.next_byte()? {
+                b',' => continue,
+                b']' => break,
+                other => crate::bail!(
+                    "JSON: expected ',' or ']' at byte {}, got {:?}",
+                    self.pos - 1,
+                    other as char
+                ),
+            }
+        }
+        self.depth -= 1;
+        Ok(Json::Arr(items))
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.depth += 1;
+        crate::ensure!(self.depth <= MAX_DEPTH, "JSON: nesting deeper than {MAX_DEPTH}");
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.next_byte()? {
+                b',' => continue,
+                b'}' => break,
+                other => crate::bail!(
+                    "JSON: expected ',' or '}}' at byte {}, got {:?}",
+                    self.pos - 1,
+                    other as char
+                ),
+            }
+        }
+        self.depth -= 1;
+        Ok(Json::Obj(fields))
     }
 }
 
@@ -244,5 +604,120 @@ mod tests {
     fn empty_collections_render_compact() {
         assert_eq!(Json::obj().render(), "{}\n");
         assert_eq!(Json::arr().render(), "[]\n");
+    }
+
+    // --- parser ----------------------------------------------------------
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.25e2").unwrap(), Json::Num(-125.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+        assert_eq!(Json::parse("  7  ").unwrap(), Json::Num(7.0));
+    }
+
+    #[test]
+    fn parse_nested_document_preserves_order() {
+        let doc = Json::parse(
+            r#"{"b": [1, 2, {"x": null}], "a": {"k": "v"}, "n": -0.5}"#,
+        )
+        .unwrap();
+        let fields = doc.fields().unwrap();
+        assert_eq!(fields[0].0, "b");
+        assert_eq!(fields[1].0, "a");
+        assert_eq!(doc.get("n"), Some(&Json::Num(-0.5)));
+        assert_eq!(doc.get("b").unwrap().items().unwrap().len(), 3);
+        assert_eq!(
+            doc.get("a").unwrap().get("k").and_then(Json::as_str),
+            Some("v")
+        );
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        let s = Json::parse(r#""a\"b\\c\nd\teA☃""#).unwrap();
+        assert_eq!(s.as_str(), Some("a\"b\\c\nd\teA☃"));
+        // \uXXXX escapes, BMP and (via surrogate pair) astral.
+        let s = Json::parse(r#""\u0041\u2603""#).unwrap();
+        assert_eq!(s.as_str(), Some("A☃"));
+        let s = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(s.as_str(), Some("😀"));
+        // Raw astral chars pass through unescaped too.
+        let s = Json::parse("\"😀\"").unwrap();
+        assert_eq!(s.as_str(), Some("😀"));
+        // Raw (unescaped) multi-byte UTF-8 passes through.
+        let s = Json::parse("\"héllo ☃\"").unwrap();
+        assert_eq!(s.as_str(), Some("héllo ☃"));
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let mut doc = Json::obj();
+        doc.set("name", "trajectory \"v1\"\n")
+            .set("count", 3usize)
+            .set("ratio", 1.5)
+            .set("ok", true)
+            .set("missing", Json::Null);
+        let mut arr = Json::arr();
+        arr.push(1u64).push("two").push(Json::obj());
+        doc.set("items", arr);
+        let text = doc.render();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2",
+            "{\"a\": }",
+            "{\"a\" 1}",
+            "[1,, 2]",
+            "nul",
+            "truex",
+            "1 2",
+            "{\"a\": 1} garbage",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"ctrl \u{1} char\"",
+            "\"\\ud83d alone\"",
+            "'single'",
+            "- 1",
+            "1.",
+            ".5",
+            "1e",
+            "1e999",
+            "0123",
+            "-012",
+            "[1] ]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_depth_limited() {
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn accessors_type_check() {
+        let doc = Json::parse(r#"{"s": "x", "n": 3, "f": 1.5, "b": false, "a": [1]}"#).unwrap();
+        assert_eq!(doc.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(doc.get("n").and_then(Json::as_usize), Some(3));
+        assert_eq!(doc.get("f").and_then(Json::as_usize), None);
+        assert_eq!(doc.get("f").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(doc.get("b").and_then(Json::as_bool), Some(false));
+        assert_eq!(doc.get("a").and_then(Json::items).map(<[Json]>::len), Some(1));
+        assert_eq!(doc.get("nope"), None);
+        assert_eq!(Json::Null.get("s"), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
     }
 }

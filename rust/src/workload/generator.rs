@@ -44,6 +44,18 @@ impl Distribution {
         Distribution::OrganPipe,
     ];
 
+    /// The survey quartet the benchmark matrix sweeps (after Božidar &
+    /// Dobravec's parallel-sort comparison): the paper's i.i.d.-uniform
+    /// workload plus the classic easy/adversarial cases — pre-sorted,
+    /// reverse-sorted, and few-distinct-keys. One definition so the
+    /// matrix bench, its smoke preset and the report stay in lockstep.
+    pub const SURVEY: [Distribution; 4] = [
+        Distribution::Uniform,
+        Distribution::Sorted,
+        Distribution::Reverse,
+        Distribution::DupHeavy,
+    ];
+
     /// Stable name used in CLI flags and reports.
     pub fn name(self) -> &'static str {
         match self {
@@ -241,6 +253,15 @@ mod tests {
         for d in Distribution::ALL {
             assert!(g.f32s(256, d).iter().all(|x| x.is_finite()));
         }
+    }
+
+    #[test]
+    fn survey_subset_of_all() {
+        for d in Distribution::SURVEY {
+            assert!(Distribution::ALL.contains(&d), "{}", d.name());
+        }
+        assert_eq!(Distribution::SURVEY.len(), 4);
+        assert_eq!(Distribution::SURVEY[0], Distribution::Uniform);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! End-to-end tests for the bench trajectory subsystem: matrix sweep →
+//! schema-validated JSON on disk → deterministic RESULTS.md, including
+//! the device substrate over the checked-in artifact fixture.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bitonic_tpu::bench::matrix::{run_matrix, run_pass_ablation, DeviceCtx, MatrixConfig};
+use bitonic_tpu::bench::{render_results, Bench, BenchRecord, MatrixDtype, Substrate, Trajectory};
+use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig};
+use bitonic_tpu::workload::Distribution;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bitonic-tpu-bench-schema-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn tiny_bench() -> Bench {
+    Bench {
+        warmup: 0,
+        min_iters: 1,
+        max_iters: 2,
+        target: Duration::from_millis(5),
+    }
+}
+
+fn tiny_config() -> MatrixConfig {
+    MatrixConfig {
+        substrates: Substrate::ALL.to_vec(),
+        dists: vec![
+            Distribution::Uniform,
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::DupHeavy,
+        ],
+        dtypes: MatrixDtype::ALL.to_vec(),
+        sizes: vec![256, 1024],
+        threads: 2,
+        bench: tiny_bench(),
+        seed: 0x7E57_BE,
+    }
+}
+
+/// The full pipeline on disk, CPU substrates only: run → append →
+/// re-load (validating) → render, twice, byte-identical.
+#[test]
+fn matrix_to_trajectory_to_report_pipeline() {
+    let path = tmp("pipeline.json");
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = tiny_config();
+    let mut records = run_matrix(&cfg, None).unwrap();
+    records.extend(run_pass_ablation(&cfg.sizes, &cfg.bench, cfg.seed));
+    assert!(!records.is_empty());
+    let total = Trajectory::append_to(&path, records).unwrap();
+
+    let t = Trajectory::load(&path).unwrap();
+    assert_eq!(t.records.len(), total);
+
+    // Acceptance-shaped coverage: ≥ 4 substrates × ≥ 3 dists × ≥ 2 dtypes.
+    let distinct = |f: &dyn Fn(&BenchRecord) -> String| {
+        let mut v: Vec<String> = t.records.iter().map(f).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    assert!(distinct(&|r| r.substrate.clone()).len() >= 4);
+    assert!(distinct(&|r| r.dist.clone()).len() >= 3);
+    assert!(distinct(&|r| r.dtype.clone()).len() >= 2);
+
+    // Deterministic report: same JSON → byte-identical markdown, and a
+    // re-saved (re-serialised) trajectory renders identically too.
+    let a = render_results(&t);
+    let b = render_results(&Trajectory::load(&path).unwrap());
+    assert_eq!(a, b);
+    let resaved = tmp("pipeline_resaved.json");
+    t.save(&resaved).unwrap();
+    assert_eq!(render_results(&Trajectory::load(&resaved).unwrap()), a);
+
+    // The report carries the survey matrix, ablation and headline quote.
+    assert!(a.contains("## Survey matrix"), "{a}");
+    assert!(a.contains("## Launch-fusion ablation"), "{a}");
+    assert!(a.contains("nearly 20 times"), "{a}");
+    assert!(a.contains("quick ÷ executor"), "{a}");
+}
+
+/// The device substrate routes through a real device host (registry +
+/// plan policy) over the checked-in fixture, and its records land with
+/// batch, artifact and speedup annotations.
+#[test]
+fn device_substrate_routes_through_registry() {
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    let Ok((handle, manifest)) = spawn_device_host_with(
+        &dir,
+        HostConfig {
+            threads: 2,
+            ..HostConfig::default()
+        },
+    ) else {
+        eprintln!("no artifacts fixture — skipping device matrix test");
+        return;
+    };
+    let ctx = DeviceCtx {
+        handle,
+        manifest,
+        threads: 2,
+    };
+    let cfg = MatrixConfig {
+        substrates: vec![Substrate::Quicksort, Substrate::BitonicExecutor],
+        dists: vec![Distribution::Uniform],
+        dtypes: MatrixDtype::ALL.to_vec(),
+        sizes: vec![1024],
+        threads: 2,
+        bench: tiny_bench(),
+        seed: 1,
+    };
+    let records = run_matrix(&cfg, Some(&ctx)).unwrap();
+    ctx.handle.shutdown();
+
+    // The fixture ships n=1024 sort artifacts for all three dtypes.
+    let device: Vec<&BenchRecord> = records
+        .iter()
+        .filter(|r| r.substrate == "bitonic-executor")
+        .collect();
+    assert_eq!(device.len(), 3, "u32/i32/f32 executor cells: {records:?}");
+    for r in device {
+        assert_eq!(r.n, 1024);
+        assert!(r.batch >= 1);
+        assert!(r.extra_str("artifact").is_some());
+        assert_eq!(r.extra_f64("threads"), Some(2.0));
+        if r.ms > 0.0 {
+            assert!(r.extra_f64("speedup_vs_quicksort").is_some());
+        }
+    }
+
+    // And the report's headline section can pair them with quicksort.
+    let mut t = Trajectory::new();
+    for r in records {
+        t.push(r);
+    }
+    let out = render_results(&t);
+    assert!(out.contains("bitonic-executor"), "{out}");
+}
+
+/// Malformed trajectories fail loudly at load (the satellite acceptance:
+/// a corrupt file must never feed the report).
+#[test]
+fn malformed_trajectory_rejected_end_to_end() {
+    let path = tmp("corrupt.json");
+    // Truncated JSON.
+    std::fs::write(&path, "{\"schema\": \"bitonic-tpu-bench-trajectory\",").unwrap();
+    assert!(Trajectory::load(&path).is_err());
+    // Valid JSON, wrong shape.
+    std::fs::write(&path, "[1, 2, 3]\n").unwrap();
+    assert!(Trajectory::load(&path).is_err());
+    // Valid trajectory with one record missing a required field.
+    let mut t = Trajectory::new();
+    t.push(BenchRecord::new("matrix", "quicksort", "uniform", "u32", 64).with_ms(0.5));
+    let text = t.to_json().render().replace("\"dist\": \"uniform\",\n", "");
+    std::fs::write(&path, text).unwrap();
+    let err = format!("{:#}", Trajectory::load(&path).unwrap_err());
+    assert!(err.contains("dist"), "{err}");
+}
+
+/// Empty and single-record trajectories render without panicking — via
+/// the same load/render path the CLI uses.
+#[test]
+fn report_smoke_empty_and_single() {
+    let path = tmp("empty.json");
+    Trajectory::new().save(&path).unwrap();
+    let out = render_results(&Trajectory::load(&path).unwrap());
+    assert!(out.contains("No records yet"), "{out}");
+
+    let mut t = Trajectory::new();
+    t.push(
+        BenchRecord::new("matrix", "quicksort", "uniform", "u32", 1024)
+            .with_ms(0.25)
+            .with_extra("note", "single"),
+    );
+    t.save(&path).unwrap();
+    let out = render_results(&Trajectory::load(&path).unwrap());
+    assert!(out.contains("Records: 1"), "{out}");
+    assert!(out.contains("quicksort"), "{out}");
+}

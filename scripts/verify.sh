@@ -4,8 +4,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== cargo build --release =="
-cargo build --release
+echo "== cargo build --release (incl. all bench binaries) =="
+# --benches: every bench appends to the trajectory now, so a bench that
+# stops compiling is a broken producer even when CI only *runs* two of
+# them — build them all.
+cargo build --release --all-targets
 
 echo "== cargo test -q =="
 cargo test -q
@@ -19,10 +22,18 @@ cargo test -q
 # same way. CI runs these as their own steps and sets SKIP_BENCH_SMOKE=1
 # here to avoid the double run.
 if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
-    # Remove any stale trajectory first: the existence check below must
-    # prove THIS run wrote it, not a previous one (the file is gitignored
-    # and lingers in the working tree).
-    rm -f BENCH_ablation.json
+    # Pin both trajectory paths to the repo root explicitly. The unified
+    # trajectory already defaults to the workspace root at compile time,
+    # but `cargo bench` runs binaries with cwd = the *package* root
+    # (rust/) while `cargo run` keeps this script's cwd — BENCH_ablation
+    # defaults to cwd, and pinning both keeps every producer and the
+    # existence checks below on exactly the files this script asserts.
+    export BENCH_ABLATION_JSON="$PWD/BENCH_ablation.json"
+    export BENCH_TRAJECTORY_JSON="$PWD/BENCH_trajectory.json"
+    # Remove any stale trajectories first: the existence checks below
+    # must prove THIS run wrote them, not a previous one (the files are
+    # gitignored and linger in the working tree).
+    rm -f BENCH_ablation.json BENCH_trajectory.json RESULTS.md rust/BENCH_ablation.json rust/BENCH_trajectory.json
     for smoke in coordinator ablation; do
         echo "== bench smoke: ${smoke} (timeout-bounded) =="
         if command -v timeout >/dev/null 2>&1; then
@@ -39,6 +50,26 @@ if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
         exit 1
     fi
     echo "== BENCH_ablation.json written =="
+
+    # Survey matrix smoke + report generation: the bench subcommand must
+    # append a schema-valid unified trajectory (the ablation bench above
+    # already appended its records to it) and the report subcommand must
+    # regenerate RESULTS.md from it.
+    echo "== bench smoke: survey matrix (timeout-bounded) =="
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL 300 cargo run --release --bin bitonic-tpu -- bench --smoke
+    else
+        cargo run --release --bin bitonic-tpu -- bench --smoke
+    fi
+    echo "== report generation =="
+    cargo run --release --bin bitonic-tpu -- report
+    for f in BENCH_trajectory.json RESULTS.md; do
+        if [ ! -f "$f" ]; then
+            echo "ERROR: bench/report smoke did not produce $f" >&2
+            exit 1
+        fi
+    done
+    echo "== BENCH_trajectory.json + RESULTS.md written =="
 else
     echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
 fi
