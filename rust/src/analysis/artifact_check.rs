@@ -1,0 +1,230 @@
+//! Pass 3: the artifact auditor — lint `manifest.tsv` and the HLO texts
+//! for drift before the registry ever compiles a plan from them.
+//!
+//! The manifest is the contract between the Python AOT compiler and the
+//! native executor; nothing else cross-checks it. The auditor verifies,
+//! per entry: the shape is executable (power-of-two `n`, positive batch,
+//! power-of-two block), the referenced HLO file exists, and the HLO text
+//! actually declares a module with the entry's dtype/shape token (so a
+//! regenerated artifact whose dtype or geometry drifted from the
+//! manifest row is caught as a hard failure, not a runtime surprise).
+//! Softer wrinkles — duplicated size classes, HLO files on disk no row
+//! references, names that disagree with their own order flag — are
+//! warnings: the executor tolerates them, a human should not.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{Report, Verdict};
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::runtime::Key;
+
+/// Audit one manifest entry's metadata shape (no I/O).
+fn audit_shape(meta: &ArtifactMeta) -> Result<(), String> {
+    if !meta.n.is_power_of_two() || meta.n < 2 {
+        return Err(format!("n={} is not a power of two >= 2", meta.n));
+    }
+    if meta.batch == 0 {
+        return Err("batch is zero".into());
+    }
+    if !meta.block.is_power_of_two() || meta.block < 2 {
+        return Err(format!("block={} is not a power of two >= 2", meta.block));
+    }
+    if meta.grid_cells == 0 {
+        return Err("grid_cells is zero".into());
+    }
+    Ok(())
+}
+
+/// Audit one entry's HLO text against its manifest row.
+fn audit_hlo(meta: &ArtifactMeta, text: &str) -> Result<(), String> {
+    if !text.contains("HloModule") {
+        return Err("file does not declare an HloModule".into());
+    }
+    let shape = format!("{}[{},{}]", meta.dtype.hlo_token(), meta.batch, meta.n);
+    if !text.contains(&shape) {
+        return Err(format!(
+            "HLO text never mentions the manifest shape {shape} — dtype/shape drift"
+        ));
+    }
+    Ok(())
+}
+
+/// Lint the whole manifest: shapes, files, HLO drift, duplicates and
+/// dangling files. Pass 3 of [`super::verify_plans`]; also exposed as
+/// [`Manifest::analyze`].
+pub fn audit_manifest(manifest: &Manifest) -> Report {
+    let mut report = Report::new();
+    let mut seen: HashMap<Key, String> = HashMap::new();
+    let mut referenced: HashSet<std::path::PathBuf> = HashSet::new();
+    let mut clean = 0usize;
+
+    for meta in &manifest.entries {
+        let mut entry_ok = true;
+        if let Err(e) = audit_shape(meta) {
+            report.push("artifact.shape", &meta.name, Verdict::Fail, e);
+            entry_ok = false;
+        }
+        let path = manifest.path_of(meta);
+        referenced.insert(path.clone());
+        match std::fs::read_to_string(&path) {
+            Err(e) => {
+                report.push(
+                    "artifact.file",
+                    &meta.name,
+                    Verdict::Fail,
+                    format!("HLO file {} unreadable: {e}", meta.file.display()),
+                );
+                entry_ok = false;
+            }
+            Ok(text) => {
+                if let Err(e) = audit_hlo(meta, &text) {
+                    report.push("artifact.hlo", &meta.name, Verdict::Fail, e);
+                    entry_ok = false;
+                }
+            }
+        }
+        // The aot namer encodes the order in the name; a flag that
+        // disagrees is almost certainly a hand-edit gone wrong.
+        let order = if meta.descending { "desc" } else { "asc" };
+        let flipped = if meta.descending { "asc" } else { "desc" };
+        if meta.name.ends_with(flipped) && !meta.name.ends_with(order) {
+            report.push(
+                "artifact.order",
+                &meta.name,
+                Verdict::Warn,
+                format!("name suggests {flipped} but descending={}", meta.descending as u8),
+            );
+        }
+        if let Some(prev) = seen.insert(Key::of(meta), meta.name.clone()) {
+            report.push(
+                "artifact.duplicate",
+                &meta.name,
+                Verdict::Warn,
+                format!("same size class as {prev}; the registry will only ever use one"),
+            );
+        }
+        if entry_ok {
+            clean += 1;
+        }
+    }
+
+    // Dangling HLO files: on disk, referenced by no row.
+    if let Ok(dir) = std::fs::read_dir(&manifest.dir) {
+        let mut dangling: Vec<String> = dir
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|f| f.to_str())
+                    .is_some_and(|f| f.ends_with(".hlo.txt"))
+                    && !referenced.contains(p)
+            })
+            .filter_map(|p| p.file_name().map(|f| f.to_string_lossy().into_owned()))
+            .collect();
+        dangling.sort();
+        if !dangling.is_empty() {
+            report.push(
+                "artifact.dangling",
+                manifest.dir.display().to_string(),
+                Verdict::Warn,
+                format!("{} HLO file(s) referenced by no manifest row: {}", dangling.len(), dangling.join(", ")),
+            );
+        }
+    }
+
+    report.push(
+        "artifact.manifest",
+        manifest.dir.display().to_string(),
+        if clean == manifest.entries.len() { Verdict::Pass } else { Verdict::Warn },
+        format!(
+            "{clean}/{} entries audit clean (shape, file, HLO dtype/shape token)",
+            manifest.entries.len()
+        ),
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bitonic-artifact-check-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_hlo(dir: &std::path::Path, file: &str, shape: &str) {
+        std::fs::write(
+            dir.join(file),
+            format!("HloModule jit_sort\n\nENTRY main {{\n  p = {shape} parameter(0)\n}}\n"),
+        )
+        .unwrap();
+    }
+
+    const HEADER: &str = "name\tkind\tvariant\tbatch\tn\tdtype\tdescending\tblock\tgrid_cells\tfile\n";
+
+    #[test]
+    fn clean_manifest_passes() {
+        let dir = temp_dir("clean");
+        write_hlo(&dir, "a.hlo.txt", "u32[8,1024]");
+        let text = format!(
+            "{HEADER}sort_basic_b8_n1024_uint32_asc\tsort\tbasic\t8\t1024\tuint32\t0\t256\t16\ta.hlo.txt\n"
+        );
+        let m = Manifest::parse(dir, &text).unwrap();
+        let report = audit_manifest(&m);
+        assert!(!report.has_fail(), "{}", report.render_markdown());
+        assert_eq!(report.worst(), Verdict::Pass);
+    }
+
+    #[test]
+    fn dtype_drift_and_bad_n_fail() {
+        let dir = temp_dir("drift");
+        // HLO says s32 but the manifest row says uint32.
+        write_hlo(&dir, "a.hlo.txt", "s32[8,1024]");
+        write_hlo(&dir, "b.hlo.txt", "u32[8,48]");
+        let text = format!(
+            "{HEADER}sort_basic_b8_n1024_uint32_asc\tsort\tbasic\t8\t1024\tuint32\t0\t256\t16\ta.hlo.txt\n\
+             sort_basic_b8_n48_uint32_asc\tsort\tbasic\t8\t48\tuint32\t0\t256\t16\tb.hlo.txt\n"
+        );
+        let m = Manifest::parse(dir, &text).unwrap();
+        let report = audit_manifest(&m);
+        assert!(report.has_fail());
+        assert!(report.findings.iter().any(|f| f.check == "artifact.hlo"));
+        assert!(report.findings.iter().any(|f| f.check == "artifact.shape"));
+    }
+
+    #[test]
+    fn missing_file_dangling_and_duplicate_flagged() {
+        let dir = temp_dir("files");
+        write_hlo(&dir, "a.hlo.txt", "u32[8,1024]");
+        write_hlo(&dir, "orphan.hlo.txt", "u32[1,16]");
+        let text = format!(
+            "{HEADER}sort_basic_b8_n1024_uint32_asc\tsort\tbasic\t8\t1024\tuint32\t0\t256\t16\ta.hlo.txt\n\
+             sort_basic_b8_n1024_uint32_asc_v2\tsort\tbasic\t8\t1024\tuint32\t0\t256\t16\tmissing.hlo.txt\n"
+        );
+        let m = Manifest::parse(dir, &text).unwrap();
+        let report = audit_manifest(&m);
+        assert!(report.findings.iter().any(|f| f.check == "artifact.file" && f.verdict == Verdict::Fail));
+        assert!(report.findings.iter().any(|f| f.check == "artifact.dangling" && f.detail.contains("orphan.hlo.txt")));
+        assert!(report.findings.iter().any(|f| f.check == "artifact.duplicate"));
+    }
+
+    #[test]
+    fn order_flag_name_disagreement_warns() {
+        let dir = temp_dir("order");
+        write_hlo(&dir, "a.hlo.txt", "u32[8,1024]");
+        let text = format!(
+            "{HEADER}sort_basic_b8_n1024_uint32_desc\tsort\tbasic\t8\t1024\tuint32\t0\t256\t16\ta.hlo.txt\n"
+        );
+        let m = Manifest::parse(dir, &text).unwrap();
+        let report = audit_manifest(&m);
+        assert!(!report.has_fail());
+        assert!(report.findings.iter().any(|f| f.check == "artifact.order" && f.verdict == Verdict::Warn));
+    }
+}

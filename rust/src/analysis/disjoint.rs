@@ -1,0 +1,426 @@
+//! Pass 2: the concurrency-disjointness checker — prove parallel
+//! schedules never write one index from two workers.
+//!
+//! Two symbolic emulations, both consuming the **same geometry code the
+//! runtime dispatches from** (no parallel re-derivation that could
+//! drift):
+//!
+//! * **Chunked barrier schedule** ([`check_parallel_schedule`]): walks
+//!   [`barrier_intervals`] — the exact interval list
+//!   [`crate::sort::bitonic_parallel::bitonic_sort_parallel`]'s workers
+//!   execute — and, per interval, marks every index each worker writes
+//!   (local fused tails, low-owned global pairs, minimum-owned register
+//!   quads). Every index must be written by **exactly one** worker per
+//!   barrier interval, quads must stay in range with a uniform
+//!   direction bit, and the concatenated interval steps must equal the
+//!   canonical [`Network::step_schedule`]. This is the proof the
+//!   `SAFETY` comments in `sort/bitonic_parallel.rs` cite.
+//! * **Interleaved tile dispatch** ([`check_tile_dispatch`]): replays
+//!   [`dispatch_geometry`] — the partition `execute_batch` cuts a
+//!   `(B, N)` buffer into — and verifies jobs and tiles are row-aligned,
+//!   cover the buffer exactly once, never exceed the effective
+//!   interleave width (ragged tails included), and yield enough tiles
+//!   to feed the pool whenever the pooled path engages.
+//!
+//! [`check_intervals`] takes an arbitrary interval list, so the mutation
+//! suite can feed it *racy* schedules (e.g. two unpaired global strides
+//! in one barrier interval) and assert the race is detected.
+
+use super::{Report, Verdict};
+use crate::sort::bitonic_parallel::{barrier_intervals, effective_workers, IntervalOp};
+use crate::sort::network::{Network, Step};
+use crate::runtime::executor::dispatch_geometry;
+
+/// Evidence from a clean schedule check.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleStats {
+    /// Barrier intervals emulated.
+    pub intervals: usize,
+    /// Total index writes marked (each verified singly-owned).
+    pub writes: u64,
+    /// Register quads verified (range + minimum ownership + uniform
+    /// direction).
+    pub quads: u64,
+}
+
+/// Emulate an arbitrary barrier-interval schedule for `workers` equal
+/// chunks of `n` and verify write-disjointness. Each inner `Vec` is one
+/// barrier interval (the canonical schedule has one op per interval;
+/// mutants may pack several). Returns the first violation as `Err`.
+pub fn check_intervals(
+    n: usize,
+    workers: usize,
+    intervals: &[Vec<IntervalOp>],
+) -> Result<ScheduleStats, String> {
+    if !n.is_power_of_two() || n < 4 {
+        return Err(format!("row length {n} is not a power of two >= 4"));
+    }
+    if !workers.is_power_of_two() || workers < 2 || n / workers < 2 {
+        return Err(format!("worker count {workers} invalid for n={n}"));
+    }
+    let chunk = n / workers;
+    // Generation-stamped ownership: owner_gen[i] == current generation
+    // means index i was already written this interval, by owner[i].
+    let mut owner_gen = vec![0u32; n];
+    let mut owner = vec![0u32; n];
+    let mut stats = ScheduleStats { intervals: 0, writes: 0, quads: 0 };
+    for (iv, ops) in intervals.iter().enumerate() {
+        stats.intervals += 1;
+        let gen = stats.intervals as u32;
+        let mut mark = |i: usize, t: usize| -> Result<(), String> {
+            if owner_gen[i] == gen && owner[i] != t as u32 {
+                return Err(format!(
+                    "interval #{iv}: index {i} written by workers {} and {t}",
+                    owner[i]
+                ));
+            }
+            owner_gen[i] = gen;
+            owner[i] = t as u32;
+            Ok(())
+        };
+        for op in ops {
+            for t in 0..workers {
+                let (lo, hi) = (t * chunk, (t + 1) * chunk);
+                match *op {
+                    IntervalOp::LocalTail { stride_hi, .. } => {
+                        // Closure: every pair (a, a^j) with j <= stride_hi
+                        // < chunk stays inside the aligned chunk.
+                        if stride_hi >= chunk {
+                            return Err(format!(
+                                "interval #{iv}: local tail stride {stride_hi} escapes chunk {chunk}"
+                            ));
+                        }
+                        for a in lo..hi {
+                            mark(a, t)?;
+                            stats.writes += 1;
+                        }
+                    }
+                    IntervalOp::GlobalLows { phase_len: _, stride } => {
+                        if !stride.is_power_of_two() || stride == 0 {
+                            return Err(format!(
+                                "interval #{iv}: global stride {stride} is not a power of two"
+                            ));
+                        }
+                        for a in lo..hi {
+                            if a & stride == 0 {
+                                let p = a ^ stride;
+                                if p >= n {
+                                    return Err(format!(
+                                        "interval #{iv}: pair ({a}, {p}) escapes the row"
+                                    ));
+                                }
+                                mark(a, t)?;
+                                mark(p, t)?;
+                                stats.writes += 2;
+                            }
+                        }
+                    }
+                    IntervalOp::PairedGlobal { phase_len, stride_hi } => {
+                        if !stride_hi.is_power_of_two() || stride_hi < 2 {
+                            return Err(format!(
+                                "interval #{iv}: paired stride {stride_hi} is not a power of two >= 2"
+                            ));
+                        }
+                        let j_lo = stride_hi / 2;
+                        let quad_bits = stride_hi | j_lo;
+                        for a in lo..hi {
+                            if a & quad_bits == 0 {
+                                let d = a + stride_hi + j_lo;
+                                if d >= n {
+                                    return Err(format!(
+                                        "interval #{iv}: quad at {a} escapes the row (max index {d})"
+                                    ));
+                                }
+                                if d & phase_len != a & phase_len {
+                                    return Err(format!(
+                                        "interval #{iv}: quad at {a} spans a direction boundary (phase {phase_len})"
+                                    ));
+                                }
+                                for i in [a, a + j_lo, a + stride_hi, d] {
+                                    mark(i, t)?;
+                                }
+                                stats.writes += 4;
+                                stats.quads += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Coverage: every canonical op touches the whole index space; a
+        // skipped index means the interval did less work than the step
+        // semantics require.
+        if let Some(i) = owner_gen.iter().position(|&g| g != gen) {
+            return Err(format!("interval #{iv}: index {i} written by no worker"));
+        }
+    }
+    Ok(stats)
+}
+
+/// Check the **canonical** chunked schedule for `(n, workers)`: interval
+/// steps must reproduce [`Network::step_schedule`] exactly, then every
+/// interval must partition the index space across workers
+/// ([`check_intervals`]).
+pub fn check_parallel_schedule(n: usize, workers: usize) -> Result<ScheduleStats, String> {
+    if !n.is_power_of_two() || n < 4 {
+        return Err(format!("row length {n} is not a power of two >= 4"));
+    }
+    let chunk = n / workers;
+    if !workers.is_power_of_two() || workers < 2 || chunk < 2 {
+        return Err(format!("worker count {workers} invalid for n={n}"));
+    }
+    let intervals = barrier_intervals(n, chunk);
+    let flat: Vec<Step> = intervals.iter().flat_map(|op| op.steps()).collect();
+    if flat != Network::new(n).step_schedule() {
+        return Err("interval expansion deviates from step_schedule()".into());
+    }
+    let grouped: Vec<Vec<IntervalOp>> = intervals.into_iter().map(|op| vec![op]).collect();
+    check_intervals(n, workers, &grouped)
+}
+
+/// Report-producing wrapper for one `(n, threads)` request — the
+/// `analyze` hook of `sort::bitonic_parallel` and the orchestrator's
+/// pass-2a entry.
+pub fn analyze_parallel_schedule(n: usize, threads: usize) -> Report {
+    let mut report = Report::new();
+    let workers = effective_workers(n, threads);
+    let target = format!("parallel sort n={n} threads={threads} (workers={workers})");
+    if workers <= 1 {
+        report.push(
+            "disjoint.schedule",
+            target,
+            Verdict::Pass,
+            "serial fallback engages; no shared-slice concurrency",
+        );
+        return report;
+    }
+    match check_parallel_schedule(n, workers) {
+        Ok(stats) => report.push(
+            "disjoint.schedule",
+            target,
+            Verdict::Pass,
+            format!(
+                "{} barrier intervals == step_schedule(); {} writes each owned by exactly one worker ({} register quads verified)",
+                stats.intervals, stats.writes, stats.quads
+            ),
+        ),
+        Err(e) => report.push("disjoint.schedule", target, Verdict::Fail, e),
+    }
+    report
+}
+
+/// Evidence from a clean tile-dispatch check.
+#[derive(Clone, Copy, Debug)]
+pub struct TileStats {
+    /// Pool jobs the buffer splits into.
+    pub jobs: usize,
+    /// Tiles across all jobs (last one possibly ragged).
+    pub tiles: usize,
+    /// Effective interleave width.
+    pub r: usize,
+    /// Whether the pooled path engages.
+    pub pooled: bool,
+}
+
+/// Replay the exact job/tile partition [`dispatch_geometry`] hands to
+/// `execute_batch` for a `(b, n)` batch at configured interleave `want`
+/// on `threads` workers, and verify it partitions the row space:
+/// row-aligned boundaries, exact single coverage, tile width `<= r`
+/// rows (ragged tail included), and enough tiles to feed the pool when
+/// the pooled path engages.
+pub fn check_tile_dispatch(b: usize, n: usize, want: usize, threads: usize) -> Result<TileStats, String> {
+    let geo = dispatch_geometry(want, n, b, threads);
+    let n = n.max(1);
+    if geo.r < 1 || geo.r > b.max(1) {
+        return Err(format!("effective interleave {} outside [1, {b}]", geo.r));
+    }
+    if geo.tile_len != geo.r * n {
+        return Err(format!("tile_len {} != r*n = {}", geo.tile_len, geo.r * n));
+    }
+    // Interior job boundaries must be row-aligned; the pooled partition
+    // additionally hands whole tiles to each job (the unpooled path is a
+    // single job spanning the buffer, so its length is just `b * n`).
+    if geo.job_len == 0 || geo.job_len % n != 0 {
+        return Err(format!(
+            "job_len {} is not a positive multiple of the row length {n}",
+            geo.job_len
+        ));
+    }
+    if geo.pooled && geo.job_len % geo.tile_len != 0 {
+        return Err(format!(
+            "pooled job_len {} is not a multiple of tile_len {}",
+            geo.job_len, geo.tile_len
+        ));
+    }
+    let total = b * n;
+    let mut stats = TileStats { jobs: 0, tiles: 0, r: geo.r, pooled: geo.pooled };
+    let mut covered = 0usize;
+    let mut start = 0usize;
+    while start < total {
+        // `chunks_mut(job_len)`: consecutive, last one ragged.
+        let end = (start + geo.job_len).min(total);
+        stats.jobs += 1;
+        if start % n != 0 {
+            return Err(format!("job boundary {start} splits a row (n={n})"));
+        }
+        let mut ts = start;
+        while ts < end {
+            let te = (ts + geo.tile_len).min(end);
+            stats.tiles += 1;
+            let len = te - ts;
+            if len % n != 0 {
+                return Err(format!("tile [{ts}, {te}) splits a row (n={n})"));
+            }
+            let rows = len / n;
+            if rows == 0 || rows > geo.r {
+                return Err(format!("tile [{ts}, {te}) holds {rows} rows, want 1..={}", geo.r));
+            }
+            covered += len;
+            ts = te;
+        }
+        start = end;
+    }
+    if covered != total {
+        return Err(format!("tiles cover {covered} of {total} elements"));
+    }
+    if geo.pooled && stats.tiles < threads.min(b) {
+        return Err(format!(
+            "pooled dispatch yields {} tiles for {threads} workers",
+            stats.tiles
+        ));
+    }
+    Ok(stats)
+}
+
+/// Sweep the tile-dispatch check over a geometry grid: every batch size
+/// in `batches` (the orchestrator passes 1..=64 plus the manifest's own
+/// batches) × interleave requests × worker counts × a small/large row
+/// split (either side of the pooled cutover). Findings are aggregated
+/// per `(want, threads)` so the report stays readable.
+pub fn analyze_tile_dispatch(batches: &[usize]) -> Report {
+    let mut report = Report::new();
+    let ns = [32usize, 256];
+    for &want in &[1usize, 3, 4, 8, 16] {
+        for &threads in &[1usize, 2, 4, 8] {
+            let target = format!("tile dispatch want={want} threads={threads}");
+            let mut checked = 0usize;
+            let mut ragged = 0usize;
+            let mut failure: Option<String> = None;
+            'grid: for &b in batches {
+                for &n in &ns {
+                    match check_tile_dispatch(b, n, want, threads) {
+                        Ok(stats) => {
+                            checked += 1;
+                            if b % stats.r != 0 {
+                                ragged += 1;
+                            }
+                        }
+                        Err(e) => {
+                            failure = Some(format!("b={b} n={n}: {e}"));
+                            break 'grid;
+                        }
+                    }
+                }
+            }
+            match failure {
+                None => report.push(
+                    "disjoint.tiles",
+                    target,
+                    Verdict::Pass,
+                    format!(
+                        "{checked} geometries partition the row space exactly once ({ragged} with ragged tails)"
+                    ),
+                ),
+                Some(e) => report.push("disjoint.tiles", target, Verdict::Fail, e),
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_schedules_are_disjoint() {
+        for n in [4096usize, 8192, 65536] {
+            for workers in [2usize, 4, 8, 32] {
+                let stats = check_parallel_schedule(n, workers)
+                    .unwrap_or_else(|e| panic!("n={n} workers={workers}: {e}"));
+                assert!(stats.intervals > 0 && stats.writes >= (n as u64));
+                // Pairing engages whenever two global strides exist.
+                if n >= 4 * (n / workers) {
+                    assert!(stats.quads > 0, "n={n} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_n_below_cutover_still_checkable() {
+        // The checker covers geometries the runtime would refuse (serial
+        // fallback) — more coverage, same invariant.
+        assert!(check_parallel_schedule(16, 4).is_ok());
+        assert!(check_parallel_schedule(64, 2).is_ok());
+    }
+
+    #[test]
+    fn racy_interval_is_detected() {
+        // Two unpaired global strides in ONE barrier interval: worker 0's
+        // stride-j partner writes collide with worker owning those lows
+        // at stride j/2 — the race quad pairing exists to prevent.
+        let (n, workers) = (16usize, 4usize);
+        let racy = vec![vec![
+            IntervalOp::GlobalLows { phase_len: 16, stride: 8 },
+            IntervalOp::GlobalLows { phase_len: 16, stride: 4 },
+        ]];
+        let err = check_intervals(n, workers, &racy).unwrap_err();
+        assert!(err.contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn escaping_local_tail_is_detected() {
+        let bad = vec![vec![IntervalOp::LocalTail { phase_len: 8, stride_hi: 8 }]];
+        let err = check_intervals(32, 4, &bad).unwrap_err();
+        assert!(err.contains("escapes"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_quad_is_detected() {
+        // A paired stride too large for the row: the quad's max index
+        // escapes.
+        let bad = vec![vec![IntervalOp::PairedGlobal { phase_len: 32, stride_hi: 16 }]];
+        let err = check_intervals(16, 4, &bad).unwrap_err();
+        assert!(err.contains("escapes"), "{err}");
+    }
+
+    #[test]
+    fn direction_splitting_quad_is_detected() {
+        // 2 * stride_hi > phase_len: the quad spans bit `phase_len`.
+        let bad = vec![vec![IntervalOp::PairedGlobal { phase_len: 4, stride_hi: 4 }]];
+        let err = check_intervals(16, 2, &bad).unwrap_err();
+        assert!(err.contains("direction"), "{err}");
+    }
+
+    #[test]
+    fn tile_dispatch_grid_is_disjoint() {
+        let batches: Vec<usize> = (1..=64).collect();
+        let report = analyze_tile_dispatch(&batches);
+        assert!(!report.has_fail(), "{}", report.render_markdown());
+        // Ragged tails were actually exercised.
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.detail.contains("ragged") && !f.detail.contains("(0 with")));
+    }
+
+    #[test]
+    fn tile_dispatch_matches_execute_batch_row_count() {
+        // Spot-check the emulated tile count against first principles.
+        let stats = check_tile_dispatch(13, 256, 4, 4).unwrap();
+        assert!(stats.pooled);
+        assert_eq!(stats.r, 3); // capped at b/threads = 3
+        assert_eq!(stats.tiles, 5); // ceil(13/3)
+    }
+}

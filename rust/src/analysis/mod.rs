@@ -1,0 +1,413 @@
+//! Static analysis: prove plans sort and schedules don't race, **before
+//! anything executes**.
+//!
+//! The repo's correctness story so far was dynamic — bit-exactness
+//! property tests on sampled inputs. This subsystem adds the static
+//! layer the survey literature treats as table stakes for fused or
+//! hierarchical sorting kernels (see PAPERS.md): every claim the
+//! runtime's `unsafe` blocks and launch programs rest on is checked
+//! symbolically, for *all* inputs of the covered sizes, not samples.
+//!
+//! Three passes, surfaced by `bitonic-tpu verify-plans` and run in CI
+//! over the checked-in artifact fixture:
+//!
+//! 1. **Network verifier** ([`network_check`]): each
+//!    [`crate::runtime::ExecutionPlan`]'s launch program is statically
+//!    expanded and proven equal to
+//!    [`crate::sort::network::Network::step_schedule`] (the fusion
+//!    algebra), then the schedule itself is proven to *sort* via the
+//!    0–1 principle — exhaustively (full enumeration for tiny rows, a
+//!    complete per-phase induction up to
+//!    [`VerifyOptions::exhaustive_cap`]), with a monotone-sampling
+//!    fallback and an explicit "not exhaustively proven" [`Verdict::Warn`]
+//!    above the cap.
+//! 2. **Disjointness checker** ([`disjoint`]): the chunked
+//!    `bitonic_parallel` barrier schedule (quad ownership included) and
+//!    the executor's interleaved tile dispatch are emulated symbolically
+//!    and every index is shown to be written by exactly one worker per
+//!    barrier interval — the invariant the `unsafe` SAFETY comments in
+//!    `sort/bitonic_parallel.rs` and `util/threadpool.rs` cite.
+//! 3. **Artifact auditor** ([`artifact_check`]): `manifest.tsv` + HLO
+//!    texts are linted for dtype/shape/order drift, dangling files and
+//!    malformed shapes; a stale `autotune.tsv` is a warning, never a
+//!    panic.
+//!
+//! Everything lands in a [`Report`]: machine-readable JSON (via
+//! [`crate::util::json`]) plus a markdown rendering (`ANALYSIS.md`),
+//! written by the CLI and gated in CI (any [`Verdict::Fail`] fails the
+//! build). The verifier is deliberately paranoid about *itself* too:
+//! `rust/tests/analysis_mutations.rs` feeds it corrupted launch
+//! programs, racy schedules and broken manifests and asserts each one
+//! is rejected.
+
+pub mod artifact_check;
+pub mod disjoint;
+pub mod network_check;
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::{Manifest, Registry, TuningProfile};
+use crate::sort::network::Variant;
+use crate::util::json::Json;
+
+/// Largest row length / phase length the 0–1 sort proof enumerates
+/// exhaustively by default. The per-phase induction costs
+/// `O((k/2+1)^2 · log k · k/64)` word operations at phase length `k`,
+/// so 1024 keeps `cargo test` (debug profile) comfortable; release
+/// drivers (verify.sh, CI) raise it via `--exhaustive-cap` to also
+/// prove the smallest merge class.
+pub const DEFAULT_EXHAUSTIVE_CAP: usize = 1024;
+
+/// Outcome of one check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    /// The property holds (proven or audited clean).
+    Pass,
+    /// Nothing wrong found, but the check is not a proof (e.g. the 0–1
+    /// enumeration was sampled because `n` exceeds the exhaustive cap).
+    Warn,
+    /// The property is violated — a counterexample or a broken artifact.
+    Fail,
+}
+
+impl Verdict {
+    /// Stable token used in the markdown/JSON reports. `FAIL` appears in
+    /// report text **only** as a verdict token — verify.sh greps for it.
+    pub fn name(self) -> &'static str {
+        match self {
+            Verdict::Pass => "PASS",
+            Verdict::Warn => "WARN",
+            Verdict::Fail => "FAIL",
+        }
+    }
+}
+
+/// One check result: which pass ran, on what target, and what it found.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Check identifier, dotted (`network.structural`,
+    /// `disjoint.schedule`, `artifact.hlo`, …).
+    pub check: String,
+    /// What was checked (artifact name, plan geometry, schedule shape).
+    pub target: String,
+    /// Outcome.
+    pub verdict: Verdict,
+    /// Human-readable evidence: proof size, counterexample, or drift.
+    pub detail: String,
+}
+
+/// An ordered collection of [`Finding`]s with renderers — what every
+/// `analyze()` hook returns and what `verify-plans` writes to disk.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// All findings, check order.
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one finding.
+    pub fn push(&mut self, check: &str, target: impl Into<String>, verdict: Verdict, detail: impl Into<String>) {
+        self.findings.push(Finding {
+            check: check.to_string(),
+            target: target.into(),
+            verdict,
+            detail: detail.into(),
+        });
+    }
+
+    /// Append every finding of `other`.
+    pub fn merge(&mut self, other: Report) {
+        self.findings.extend(other.findings);
+    }
+
+    /// `(pass, warn, fail)` counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for f in &self.findings {
+            match f.verdict {
+                Verdict::Pass => c.0 += 1,
+                Verdict::Warn => c.1 += 1,
+                Verdict::Fail => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// True iff any finding failed — the CI gate.
+    pub fn has_fail(&self) -> bool {
+        self.findings.iter().any(|f| f.verdict == Verdict::Fail)
+    }
+
+    /// Worst verdict in the report (`Pass` when empty).
+    pub fn worst(&self) -> Verdict {
+        self.findings
+            .iter()
+            .map(|f| f.verdict)
+            .max()
+            .unwrap_or(Verdict::Pass)
+    }
+
+    /// Render the report as markdown (`ANALYSIS.md`).
+    pub fn render_markdown(&self) -> String {
+        let (pass, warn, fail) = self.counts();
+        let mut out = String::new();
+        out.push_str("# Static analysis report\n\n");
+        out.push_str(
+            "Generated by `bitonic-tpu verify-plans` — the static plan verifier,\n\
+             concurrency-disjointness checker and artifact auditor (see\n\
+             `rust/src/analysis/`). Regenerate with\n\
+             `cargo run --release --bin bitonic-tpu -- verify-plans`.\n\n",
+        );
+        out.push_str(&format!(
+            "**Verdict: {}** — {} findings: {pass} passed, {warn} warned, {fail} failed.\n\n",
+            self.worst().name(),
+            self.findings.len(),
+        ));
+        out.push_str(
+            "A WARN marks a property that was *checked but not exhaustively\n\
+             proven* (sampled 0–1 enumeration above the exhaustive cap) or a\n\
+             non-breaking audit wrinkle (e.g. a stale autotune class). Any\n\
+             failing finding fails CI.\n\n",
+        );
+        out.push_str("| check | target | verdict | detail |\n|---|---|---|---|\n");
+        for f in &self.findings {
+            out.push_str(&format!(
+                "| `{}` | {} | {} | {} |\n",
+                f.check,
+                f.target.replace('|', "\\|"),
+                f.verdict.name(),
+                f.detail.replace('|', "\\|"),
+            ));
+        }
+        out
+    }
+
+    /// Serialize the report (`ANALYSIS.json`).
+    pub fn to_json(&self) -> Json {
+        let (pass, warn, fail) = self.counts();
+        let mut summary = Json::obj();
+        summary.set("pass", pass).set("warn", warn).set("fail", fail);
+        let mut findings = Json::arr();
+        for f in &self.findings {
+            let mut o = Json::obj();
+            o.set("check", f.check.as_str())
+                .set("target", f.target.as_str())
+                .set("verdict", f.verdict.name())
+                .set("detail", f.detail.as_str());
+            findings.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("schema", "bitonic-tpu-analysis")
+            .set("version", 1usize)
+            .set("verdict", self.worst().name())
+            .set("summary", summary)
+            .set("findings", findings);
+        root
+    }
+
+    /// Default markdown report path: `$ANALYSIS_MD` if set, else
+    /// `ANALYSIS.md` at the workspace root (compile-time anchored, like
+    /// the bench trajectory — producers run with different cwds).
+    pub fn default_md_path() -> PathBuf {
+        if let Ok(path) = std::env::var("ANALYSIS_MD") {
+            return PathBuf::from(path);
+        }
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        manifest.parent().unwrap_or(manifest).join("ANALYSIS.md")
+    }
+}
+
+/// Knobs for [`verify_plans`].
+#[derive(Clone, Debug)]
+pub struct VerifyOptions {
+    /// Largest `n` (row or phase length) proven exhaustively by the 0–1
+    /// induction; larger targets get the sampled fallback + `Warn`.
+    pub exhaustive_cap: usize,
+    /// Random 0–1 vectors per sampled-fallback target (on top of the
+    /// deterministic structured family).
+    pub samples: usize,
+    /// Worker counts the parallel-schedule disjointness check emulates.
+    pub threads_menu: Vec<usize>,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        Self {
+            exhaustive_cap: DEFAULT_EXHAUSTIVE_CAP,
+            samples: 96,
+            threads_menu: vec![2, 4, 8],
+        }
+    }
+}
+
+/// Run all three static-analysis passes over an artifacts directory —
+/// the engine behind `bitonic-tpu verify-plans`.
+///
+/// Never panics on bad inputs: a missing manifest, malformed row, or
+/// stale autotune profile becomes a `Fail`/`Warn` finding in the report
+/// (the regression tests pin the stale-profile case specifically).
+pub fn verify_plans(dir: &Path, opts: &VerifyOptions) -> crate::Result<Report> {
+    let mut report = Report::new();
+
+    // Pass 3 first: the artifact audit decides whether there is anything
+    // coherent to verify plans against.
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            report.push(
+                "artifact.manifest",
+                dir.display().to_string(),
+                Verdict::Fail,
+                format!("manifest unreadable: {e:#}"),
+            );
+            return Ok(report);
+        }
+    };
+    report.merge(manifest.analyze());
+
+    // Autotune profile audit: stale classes warn-and-continue; a file
+    // that cannot even be parsed is a real failure.
+    let profile_path = TuningProfile::default_path(dir);
+    if profile_path.exists() {
+        match TuningProfile::load(&profile_path) {
+            Ok(profile) => report.merge(profile.analyze(&manifest)),
+            Err(e) => report.push(
+                "artifact.autotune",
+                profile_path.display().to_string(),
+                Verdict::Fail,
+                format!("profile unreadable: {e:#}"),
+            ),
+        }
+    }
+
+    // Pass 1a: every plan the registry actually produces for this menu
+    // (real HLO load + policy resolution), structural + 0–1 semantic.
+    let mut proofs = network_check::ProofCache::new();
+    match Registry::open(dir) {
+        Ok(registry) => report.merge(registry.analyze_with(&mut proofs, opts)),
+        Err(e) => report.push(
+            "network.registry",
+            dir.display().to_string(),
+            Verdict::Fail,
+            format!("registry unopenable: {e:#}"),
+        ),
+    }
+
+    // Pass 1b: the wider geometry sweep — every variant × block ×
+    // interleave the registry *could* be steered to (via profile or
+    // --plan-* flags) for each (kind, n) in the menu. Structural checks
+    // are per-geometry; the 0–1 proof is shared per (kind, n) through
+    // the cache (the expansions are proven identical first).
+    let mut shapes: Vec<(crate::runtime::ArtifactKind, usize)> =
+        manifest.entries.iter().map(|m| (m.kind, m.n)).collect();
+    shapes.sort_by_key(|&(k, n)| (n, k == crate::runtime::ArtifactKind::Merge));
+    shapes.dedup();
+    for &(kind, n) in &shapes {
+        if !n.is_power_of_two() {
+            continue; // already a Fail finding from the audit
+        }
+        report.merge(network_check::check_geometry_sweep(kind, n, opts, &mut proofs));
+    }
+
+    // Pass 2a: chunked parallel-schedule disjointness for every sort row
+    // length in the menu × the worker menu.
+    let mut sort_ns: Vec<usize> = manifest
+        .entries
+        .iter()
+        .filter(|m| m.kind == crate::runtime::ArtifactKind::Sort && m.n.is_power_of_two())
+        .map(|m| m.n)
+        .collect();
+    sort_ns.sort_unstable();
+    sort_ns.dedup();
+    for &n in &sort_ns {
+        for &threads in &opts.threads_menu {
+            report.merge(disjoint::analyze_parallel_schedule(n, threads));
+        }
+    }
+
+    // Pass 2b: interleaved tile dispatch partitions the row space for a
+    // dense geometry grid (ragged tails included) plus the exact batch
+    // shapes the menu ships.
+    let mut batches: Vec<usize> = manifest.entries.iter().map(|m| m.batch).collect();
+    batches.extend(1..=64);
+    batches.sort_unstable();
+    batches.dedup();
+    report.merge(disjoint::analyze_tile_dispatch(&batches));
+
+    Ok(report)
+}
+
+/// Memoized per-`(variant, block)` structural sweep menu used by the
+/// orchestrator and the `Network::analyze` hook — a spread of blocks
+/// below, at and above typical row lengths.
+pub(crate) fn block_menu(n: usize) -> Vec<usize> {
+    let mut blocks = vec![64, 256, 1024, 4096];
+    blocks.retain(|&b| b <= n.max(2));
+    if blocks.is_empty() {
+        blocks.push(2);
+    }
+    blocks.push(2 * n); // clamps to n inside launches(): the degenerate all-fused case
+    blocks
+}
+
+/// All `(variant, block, interleave)` geometries swept per shape.
+pub(crate) fn geometry_menu(n: usize) -> Vec<(Variant, usize, usize)> {
+    let mut out = Vec::new();
+    for variant in Variant::ALL {
+        for &block in &block_menu(n) {
+            for interleave in [1usize, 8] {
+                out.push((variant, block, interleave));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdict_ordering_and_names() {
+        assert!(Verdict::Pass < Verdict::Warn && Verdict::Warn < Verdict::Fail);
+        assert_eq!(Verdict::Fail.name(), "FAIL");
+    }
+
+    #[test]
+    fn report_counts_and_gate() {
+        let mut r = Report::new();
+        assert_eq!(r.worst(), Verdict::Pass);
+        r.push("a.b", "t", Verdict::Pass, "ok");
+        r.push("a.c", "t", Verdict::Warn, "sampled only");
+        assert!(!r.has_fail());
+        assert_eq!(r.worst(), Verdict::Warn);
+        r.push("a.d", "t", Verdict::Fail, "counterexample");
+        assert!(r.has_fail());
+        assert_eq!(r.counts(), (1, 1, 1));
+        let md = r.render_markdown();
+        assert!(md.contains("FAIL") && md.contains("| `a.c` |"));
+        let json = r.to_json();
+        assert_eq!(json.get("verdict").and_then(Json::as_str), Some("FAIL"));
+        assert_eq!(
+            json.get("summary").and_then(|s| s.get("warn")).and_then(Json::as_usize),
+            Some(1)
+        );
+        // Round-trips through the strict parser.
+        assert!(Json::parse(&json.render()).is_ok());
+    }
+
+    #[test]
+    fn fail_token_never_leaks_into_clean_reports() {
+        // verify.sh greps ANALYSIS.md for "FAIL"; a clean report must not
+        // contain the token anywhere (headers, prose, details).
+        let mut r = Report::new();
+        r.push("x.y", "target", Verdict::Pass, "proven over 81 vectors");
+        r.push("x.z", "target", Verdict::Warn, "sampled; not exhaustively proven");
+        assert!(!r.render_markdown().contains("FAIL"));
+    }
+}

@@ -1,0 +1,831 @@
+//! Pass 1: the network verifier — prove a launch program **sorts**.
+//!
+//! Two layers, composed:
+//!
+//! 1. **Structural** — statically expand a plan's launch program via
+//!    [`Launch::steps`] and require it to equal the canonical
+//!    [`Network::step_schedule`] (sorts) or the final phase's steps
+//!    (merges), with the `reverse_tail` wiring matching the kind. This
+//!    ties *every* geometry (variant × block × interleave) to one
+//!    canonical step schedule.
+//! 2. **Semantic** — prove the canonical schedule sorts, via the 0–1
+//!    principle (a data-oblivious compare-exchange network sorts all
+//!    inputs iff it sorts all 0–1 inputs):
+//!
+//!    * `n ≤ 16`: brute force, all `2^n` 0–1 vectors at once in a
+//!      transposed bit-parallel simulation (one `u64` lane per 64
+//!      candidate inputs). Handles *arbitrary* step lists, so it also
+//!      refutes mutants with non-power-of-two strides.
+//!    * `n ≤ exhaustive_cap`: a complete per-phase induction. After
+//!      phase `k`, the aligned `k`-block at base `B` is sorted
+//!      ascending iff `B & k == 0`, so every 0–1 state a `2k`-block can
+//!      be in when phase `2k` starts is `asc-sorted half ++ desc-sorted
+//!      half` — exactly `(k+1)^2` states per direction. The lemma
+//!      enumerates them all, runs the phase's strides, and requires a
+//!      fully sorted block; composing the lemmas over all phases is an
+//!      exhaustive 0–1 proof at a cost quadratic in `n` instead of
+//!      `2^n`. Merges are the single phase-`n` lemma: `reverse_tail`
+//!      maps "both halves ascending" onto the lemma's precondition.
+//!    * above the cap: a structured + seeded-random 0–1 sampling
+//!      fallback — counterexamples still refute, but a clean run is
+//!      reported as [`Verdict::Warn`] ("not exhaustively proven").
+//!
+//! Non-canonical step lists (seeded mutants, future generated plans)
+//! skip the induction — it is only sound for the canonical grouping —
+//! and go straight to exhaustive brute force (small `n`) or sampling.
+
+use std::collections::HashMap;
+
+use super::{Report, Verdict, VerifyOptions};
+use crate::runtime::{ArtifactKind, ExecutionPlan};
+use crate::sort::network::{Launch, Network, Phase, Step, Variant};
+use crate::workload::rng::Pcg32;
+
+/// Row lengths up to this get the full `2^n` brute-force enumeration.
+pub const FULL_ENUM_MAX_N: usize = 16;
+
+/// Result of a semantic (0–1) check of one step schedule.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Sorts **all** inputs — the 0–1 enumeration was complete.
+    Proven {
+        /// Number of 0–1 vectors simulated.
+        vectors: u64,
+        /// Which proof produced it (`brute-force` or `induction`).
+        method: &'static str,
+    },
+    /// No counterexample found, but the enumeration was sampled.
+    NotProven {
+        /// Number of 0–1 vectors simulated.
+        vectors: u64,
+        /// Why this is not a proof.
+        reason: String,
+    },
+    /// A 0–1 input the schedule fails to sort.
+    Refuted {
+        /// Counterexample description.
+        detail: String,
+    },
+}
+
+impl Outcome {
+    /// Map onto a report verdict.
+    pub fn verdict(&self) -> Verdict {
+        match self {
+            Outcome::Proven { .. } => Verdict::Pass,
+            Outcome::NotProven { .. } => Verdict::Warn,
+            Outcome::Refuted { .. } => Verdict::Fail,
+        }
+    }
+
+    /// Human-readable evidence line.
+    pub fn detail(&self) -> String {
+        match self {
+            Outcome::Proven { vectors, method } => {
+                format!("proven by {method} over {vectors} 0-1 vectors (0-1 principle)")
+            }
+            Outcome::NotProven { vectors, reason } => {
+                format!("not exhaustively proven: {reason} ({vectors} sampled 0-1 vectors, no counterexample)")
+            }
+            Outcome::Refuted { detail } => format!("counterexample: {detail}"),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// 0–1 vectors as bit vectors (bit i = value at index i), `u64` words.
+// ----------------------------------------------------------------------
+
+fn words_for(nbits: usize) -> usize {
+    nbits.div_ceil(64)
+}
+
+fn set_bit(v: &mut [u64], i: usize) {
+    v[i / 64] |= 1u64 << (i % 64);
+}
+
+fn get_bit(v: &[u64], i: usize) -> bool {
+    v[i / 64] >> (i % 64) & 1 == 1
+}
+
+/// Bits `[lo, hi)` set, rest clear — built word-wise, not per-bit.
+fn ones_block(nbits: usize, lo: usize, hi: usize) -> Vec<u64> {
+    let mut v = vec![0u64; words_for(nbits)];
+    if lo >= hi {
+        return v;
+    }
+    let (wl, wh) = (lo / 64, (hi - 1) / 64);
+    for (w, word) in v.iter_mut().enumerate().take(wh + 1).skip(wl) {
+        let base = w * 64;
+        let l = lo.max(base) - base;
+        let h = hi.min(base + 64) - base;
+        let mask = if h - l == 64 { !0u64 } else { ((1u64 << (h - l)) - 1) << l };
+        *word |= mask;
+    }
+    v
+}
+
+/// The fully sorted 0–1 vector of `nbits` bits with `ones` ones.
+fn sorted_vec(nbits: usize, ones: usize, ascending: bool) -> Vec<u64> {
+    if ascending {
+        ones_block(nbits, nbits - ones, nbits)
+    } else {
+        ones_block(nbits, 0, ones)
+    }
+}
+
+fn popcount(v: &[u64]) -> usize {
+    v.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// First index at which two equal-length bit vectors differ.
+fn first_diff(a: &[u64], b: &[u64]) -> Option<usize> {
+    for (w, (x, y)) in a.iter().zip(b).enumerate() {
+        if x != y {
+            return Some(w * 64 + (x ^ y).trailing_zeros() as usize);
+        }
+    }
+    None
+}
+
+/// In-word mask of bit positions `b` (0..64) with `b & j == 0`, for
+/// power-of-two `j < 64` (the classic alternating magic masks).
+fn in_word_mask(j: usize) -> u64 {
+    let mut m = 0u64;
+    for b in 0..64 {
+        if b & j == 0 {
+            m |= 1u64 << b;
+        }
+    }
+    m
+}
+
+/// One compare-exchange step with a **uniform** direction over the whole
+/// vector (the per-block view used by the phase lemma). `j` must be a
+/// power of two `< nbits`.
+fn zo_step_uniform(v: &mut [u64], j: usize, ascending: bool) {
+    debug_assert!(j.is_power_of_two());
+    if j >= 64 {
+        let d = j / 64;
+        for w in 0..v.len() {
+            if w & d == 0 {
+                let (a, b) = (v[w], v[w | d]);
+                let (mn, mx) = (a & b, a | b);
+                if ascending {
+                    v[w] = mn;
+                    v[w | d] = mx;
+                } else {
+                    v[w] = mx;
+                    v[w | d] = mn;
+                }
+            }
+        }
+    } else {
+        let mj = in_word_mask(j);
+        for word in v.iter_mut() {
+            let a = *word & mj;
+            let b = (*word >> j) & mj;
+            let (mn, mx) = (a & b, a | b);
+            *word = if ascending { mn | (mx << j) } else { mx | (mn << j) };
+        }
+    }
+}
+
+/// One canonical step over a full row: direction of pair `(i, i^j)` is
+/// ascending iff `i & k == 0`. Fast word-parallel path for power-of-two
+/// `j < k`; generic per-pair fallback for anything else (mutants).
+fn zo_step(v: &mut [u64], nbits: usize, k: usize, j: usize) {
+    let fast = j.is_power_of_two() && k.is_power_of_two() && j < k && j < nbits && j >= 1;
+    if !fast {
+        zo_step_generic(v, nbits, k, j);
+        return;
+    }
+    if k >= nbits {
+        // i & k == 0 for every i < nbits: the whole row is ascending.
+        zo_step_uniform(v, j, true);
+    } else if j >= 64 {
+        // k > j >= 64: direction is constant per word pair.
+        let (d, dk) = (j / 64, k / 64);
+        for w in 0..v.len() {
+            if w & d == 0 {
+                let asc = w & dk == 0;
+                let (a, b) = (v[w], v[w | d]);
+                let (mn, mx) = (a & b, a | b);
+                if asc {
+                    v[w] = mn;
+                    v[w | d] = mx;
+                } else {
+                    v[w] = mx;
+                    v[w | d] = mn;
+                }
+            }
+        }
+    } else if k >= 64 {
+        // j < 64 <= k: pairs stay in-word, direction constant per word.
+        let (mj, dk) = (in_word_mask(j), k / 64);
+        for (w, word) in v.iter_mut().enumerate() {
+            let a = *word & mj;
+            let b = (*word >> j) & mj;
+            let (mn, mx) = (a & b, a | b);
+            *word = if w & dk == 0 { mn | (mx << j) } else { mx | (mn << j) };
+        }
+    } else {
+        // j < k < 64: both the pairing and the direction pattern repeat
+        // within every word.
+        let (mj, mk) = (in_word_mask(j), in_word_mask(k));
+        let (amask, dmask) = (mj & mk, mj & !mk);
+        for word in v.iter_mut() {
+            let a = *word & mj;
+            let b = (*word >> j) & mj;
+            let (mn, mx) = (a & b, a | b);
+            let low = (mn & amask) | (mx & dmask);
+            let high = (mx & amask) | (mn & dmask);
+            *word = low | (high << j);
+        }
+    }
+}
+
+/// Per-pair reference step: correct for arbitrary `(phase_len, stride)`,
+/// including the non-power-of-two strides mutants produce. Pairs whose
+/// partner falls outside the row are skipped (matching
+/// [`Network::step_pairs`]' `partner > i` + in-range enumeration).
+fn zo_step_generic(v: &mut [u64], nbits: usize, k: usize, j: usize) {
+    if j == 0 {
+        return;
+    }
+    for i in 0..nbits {
+        let p = i ^ j;
+        if p > i && p < nbits {
+            let (a, b) = (get_bit(v, i), get_bit(v, p));
+            if a != b {
+                let ascending = i & k == 0;
+                // Out of order iff (asc and a > b) or (desc and a < b).
+                if ascending == a {
+                    v[i / 64] ^= 1u64 << (i % 64);
+                    v[p / 64] ^= 1u64 << (p % 64);
+                }
+            }
+        }
+    }
+}
+
+fn sim_steps(v: &mut [u64], nbits: usize, steps: &[Step]) {
+    for s in steps {
+        zo_step(v, nbits, s.phase_len, s.stride);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Proof engines.
+// ----------------------------------------------------------------------
+
+/// Brute force for `n ≤ FULL_ENUM_MAX_N`: simulate **all** `2^n` 0–1
+/// inputs simultaneously. State is transposed — `pos[e]` is a bitset
+/// over candidate inputs holding input `t`'s value at index `e`, so one
+/// compare-exchange pair costs `O(2^n / 64)` word ops and handles
+/// arbitrary step lists. Input `t`'s vector is the binary encoding of
+/// `t` itself, which makes counterexample extraction exact.
+fn brute_force_sort(n: usize, steps: &[Step]) -> Result<u64, String> {
+    debug_assert!(n >= 1 && n <= FULL_ENUM_MAX_N);
+    let vectors = 1usize << n;
+    let words = words_for(vectors);
+    let tail_mask = if vectors >= 64 { !0u64 } else { (1u64 << vectors) - 1 };
+    let mut pos: Vec<Vec<u64>> = (0..n)
+        .map(|e| {
+            (0..words)
+                .map(|w| {
+                    if e < 6 {
+                        !in_word_mask(1 << e) // bit t set iff (t >> e) & 1
+                    } else if (w >> (e - 6)) & 1 == 1 {
+                        !0u64
+                    } else {
+                        0u64
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    for s in steps {
+        if s.stride == 0 {
+            continue;
+        }
+        for i in 0..n {
+            let p = i ^ s.stride;
+            if p > i && p < n {
+                let ascending = i & s.phase_len == 0;
+                for w in 0..words {
+                    let (a, b) = (pos[i][w], pos[p][w]);
+                    let (mn, mx) = (a & b, a | b);
+                    if ascending {
+                        pos[i][w] = mn;
+                        pos[p][w] = mx;
+                    } else {
+                        pos[i][w] = mx;
+                        pos[p][w] = mn;
+                    }
+                }
+            }
+        }
+    }
+    // Sorted ascending for every input: no input may have 1 at e, 0 at e+1.
+    for e in 0..n.saturating_sub(1) {
+        for w in 0..words {
+            let viol = pos[e][w] & !pos[e + 1][w] & tail_mask;
+            if viol != 0 {
+                let t = w * 64 + viol.trailing_zeros() as usize;
+                let bits: String = (0..n).map(|e| if (t >> e) & 1 == 1 { '1' } else { '0' }).collect();
+                return Err(format!(
+                    "0-1 input [{bits}] (lsb-first) leaves index {e} > index {}",
+                    e + 1
+                ));
+            }
+        }
+    }
+    Ok(vectors as u64)
+}
+
+/// The per-phase induction lemma at phase length `k`: for both
+/// directions, every reachable 0–1 state of one aligned `k`-block
+/// entering phase `k` — ascending-sorted first half (`x` ones) ++
+/// descending-sorted second half (`y` ones) — must leave the phase's
+/// strides `k/2 … 1` fully sorted in the phase direction.
+fn phase_lemma(k: usize) -> Result<u64, String> {
+    debug_assert!(k.is_power_of_two() && k >= 2);
+    let h = k / 2;
+    let mut vectors = 0u64;
+    for ascending in [true, false] {
+        for x in 0..=h {
+            for y in 0..=h {
+                // First half 0^(h-x) 1^x; second half 1^y 0^(h-y).
+                let mut v = ones_block(k, h - x, h);
+                let tail = ones_block(k, h, h + y);
+                for (w, t) in v.iter_mut().zip(tail) {
+                    *w |= t;
+                }
+                let mut j = h;
+                while j >= 1 {
+                    zo_step_uniform(&mut v, j, ascending);
+                    j /= 2;
+                }
+                if v != sorted_vec(k, x + y, ascending) {
+                    let dir = if ascending { "asc" } else { "desc" };
+                    return Err(format!(
+                        "phase k={k} lemma violated ({dir} block, asc half x={x} ones, desc half y={y} ones)"
+                    ));
+                }
+                vectors += 1;
+            }
+        }
+    }
+    Ok(vectors)
+}
+
+/// Structured + seeded-random 0–1 sampling of a full-row sort schedule.
+/// Returns `(vectors tried, first counterexample)`.
+fn sampled_sort(n: usize, steps: &[Step], samples: usize) -> (u64, Option<String>) {
+    let mut tried = 0u64;
+    let mut run = |input: Vec<u64>, label: &str| -> Option<String> {
+        let mut v = input;
+        let ones = popcount(&v);
+        sim_steps(&mut v, n, steps);
+        let want = sorted_vec(n, ones, true);
+        let bad = first_diff(&v, &want)?;
+        Some(format!("sampled 0-1 vector ({label}, {ones} ones) unsorted at index {bad}"))
+    };
+    let mut boundaries: Vec<usize> = Vec::new();
+    let mut t = 1usize;
+    while t <= n {
+        for p in [t.saturating_sub(1), t, t + 1] {
+            if p < n {
+                boundaries.push(p);
+            }
+        }
+        t *= 2;
+    }
+    boundaries.sort_unstable();
+    boundaries.dedup();
+
+    let mut family: Vec<(Vec<u64>, String)> = Vec::new();
+    family.push((ones_block(n, 0, 0), "all-zeros".into()));
+    family.push((ones_block(n, 0, n), "all-ones".into()));
+    for &p in &boundaries {
+        let mut one = vec![0u64; words_for(n)];
+        set_bit(&mut one, p);
+        family.push((one, format!("single-one@{p}")));
+        let mut zero = ones_block(n, 0, n);
+        zero[p / 64] ^= 1u64 << (p % 64);
+        family.push((zero, format!("single-zero@{p}")));
+        family.push((ones_block(n, 0, p), format!("prefix-ones@{p}")));
+    }
+    let mut rng = Pcg32::new(0x0501_C4EC, n as u64);
+    for s in 0..samples {
+        let mut v: Vec<u64> = (0..words_for(n)).map(|_| rng.next_u64()).collect();
+        if n % 64 != 0 {
+            let last = v.len() - 1;
+            v[last] &= (1u64 << (n % 64)) - 1;
+        }
+        family.push((v, format!("random#{s}")));
+    }
+    for (input, label) in family {
+        tried += 1;
+        if let Some(cex) = run(input, &label) {
+            return (tried, Some(cex));
+        }
+    }
+    (tried, None)
+}
+
+/// Enumerate / sample a merge schedule's **valid** 0–1 inputs: both
+/// halves ascending-sorted (`x`, `y` ones), the plan's `reverse_tail`
+/// applied (or not — broken wiring should be refutable), then the steps;
+/// the output must be fully sorted. When the full `(h+1)^2` grid fits
+/// the budget this is exhaustive over the merge's input contract.
+fn merge_enum(
+    n: usize,
+    steps: &[Step],
+    reverse_tail: bool,
+    samples: usize,
+    full_grid: bool,
+) -> (u64, bool, Option<String>) {
+    let h = n / 2;
+    let mut grid: Vec<(usize, usize)> = Vec::new();
+    if full_grid {
+        for x in 0..=h {
+            for y in 0..=h {
+                grid.push((x, y));
+            }
+        }
+    } else {
+        let mut spread: Vec<usize> = vec![0, 1, 2, h / 2, h.saturating_sub(2), h.saturating_sub(1), h];
+        spread.retain(|&v| v <= h);
+        spread.sort_unstable();
+        spread.dedup();
+        for &x in &spread {
+            for &y in &spread {
+                grid.push((x, y));
+            }
+        }
+        let mut rng = Pcg32::new(0x3E26_E001, n as u64);
+        for _ in 0..samples {
+            grid.push((rng.next_below(h as u32 + 1) as usize, rng.next_below(h as u32 + 1) as usize));
+        }
+    }
+    let mut tried = 0u64;
+    for (x, y) in grid {
+        tried += 1;
+        // First half asc: ones at [h-x, h). Second half holds y ones,
+        // asc before the plan runs; with reverse_tail they land at
+        // [h, h+y) (descending layout), without it at [n-y, n).
+        let mut v = ones_block(n, h - x, h);
+        let tail = if reverse_tail {
+            ones_block(n, h, h + y)
+        } else {
+            ones_block(n, n - y, n)
+        };
+        for (w, t) in v.iter_mut().zip(tail) {
+            *w |= t;
+        }
+        sim_steps(&mut v, n, steps);
+        if let Some(bad) = first_diff(&v, &sorted_vec(n, x + y, true)) {
+            return (
+                tried,
+                full_grid,
+                Some(format!(
+                    "merge input (asc half {x} ones, asc tail {y} ones) unsorted at index {bad}"
+                )),
+            );
+        }
+    }
+    (tried, full_grid, None)
+}
+
+// ----------------------------------------------------------------------
+// Public checks.
+// ----------------------------------------------------------------------
+
+/// The canonical step schedule of a shape.
+pub fn canonical_steps(kind: ArtifactKind, n: usize) -> Vec<Step> {
+    match kind {
+        ArtifactKind::Sort => Network::new(n).step_schedule(),
+        ArtifactKind::Merge => Phase { len: n }.steps().collect(),
+    }
+}
+
+/// Semantically check an arbitrary **sort** step schedule over row
+/// length `n` (power of two). Canonical schedules get a real proof up
+/// to `opts.exhaustive_cap`; deviant schedules are brute-forced
+/// (`n ≤ 16`) or sampled for a counterexample.
+pub fn check_sort_steps(n: usize, steps: &[Step], opts: &VerifyOptions) -> Outcome {
+    if n <= FULL_ENUM_MAX_N {
+        return match brute_force_sort(n, steps) {
+            Ok(vectors) => Outcome::Proven { vectors, method: "brute-force enumeration" },
+            Err(detail) => Outcome::Refuted { detail },
+        };
+    }
+    if steps == canonical_steps(ArtifactKind::Sort, n).as_slice() {
+        if n <= opts.exhaustive_cap {
+            let mut vectors = 0u64;
+            let mut k = 2usize;
+            while k <= n {
+                match phase_lemma(k) {
+                    Ok(v) => vectors += v,
+                    Err(detail) => return Outcome::Refuted { detail },
+                }
+                k *= 2;
+            }
+            return Outcome::Proven { vectors, method: "per-phase 0-1 induction" };
+        }
+        let (vectors, cex) = sampled_sort(n, steps, opts.samples);
+        return match cex {
+            Some(detail) => Outcome::Refuted { detail },
+            None => Outcome::NotProven {
+                vectors,
+                reason: format!("n={n} exceeds exhaustive cap {}", opts.exhaustive_cap),
+            },
+        };
+    }
+    let (vectors, cex) = sampled_sort(n, steps, opts.samples);
+    match cex {
+        Some(detail) => Outcome::Refuted { detail },
+        None => Outcome::NotProven {
+            vectors,
+            reason: "schedule deviates from the canonical step order (sampled refutation only)".into(),
+        },
+    }
+}
+
+/// Semantically check a **merge** step schedule (final phase only) with
+/// the plan's `reverse_tail` wiring. Canonical merges are the single
+/// phase-`n` lemma (exhaustive up to the cap); deviants are enumerated
+/// over the merge input grid, which is itself exhaustive when small.
+pub fn check_merge_steps(n: usize, steps: &[Step], reverse_tail: bool, opts: &VerifyOptions) -> Outcome {
+    let canonical = steps == canonical_steps(ArtifactKind::Merge, n).as_slice();
+    if canonical && reverse_tail && n <= opts.exhaustive_cap {
+        return match phase_lemma(n) {
+            Ok(vectors) => Outcome::Proven {
+                vectors,
+                method: "phase-n 0-1 lemma (reverse_tail maps sorted halves onto its precondition)",
+            },
+            Err(detail) => Outcome::Refuted { detail },
+        };
+    }
+    let h = n / 2;
+    let full_grid = (h + 1).pow(2) <= 4096;
+    let (vectors, exhaustive, cex) = merge_enum(n, steps, reverse_tail, opts.samples, full_grid);
+    match cex {
+        Some(detail) => Outcome::Refuted { detail },
+        None if exhaustive => Outcome::Proven {
+            vectors,
+            method: "exhaustive merge-input grid",
+        },
+        None => Outcome::NotProven {
+            vectors,
+            reason: if canonical && reverse_tail {
+                format!("n={n} exceeds exhaustive cap {}", opts.exhaustive_cap)
+            } else {
+                "schedule deviates from the canonical merge (sampled refutation only)".into()
+            },
+        },
+    }
+}
+
+/// Memoizes the expensive semantic proofs across plans: phase lemmas by
+/// `k` and whole-shape verdicts by `(kind, n)` — every geometry of a
+/// shape shares one proof once its expansion is proven canonical.
+#[derive(Default)]
+pub struct ProofCache {
+    shapes: HashMap<(ArtifactKind, usize), (Verdict, String)>,
+}
+
+impl ProofCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Verdict + evidence for the canonical schedule of `(kind, n)`.
+    pub fn prove_canonical(&mut self, kind: ArtifactKind, n: usize, opts: &VerifyOptions) -> (Verdict, String) {
+        if let Some(hit) = self.shapes.get(&(kind, n)) {
+            return hit.clone();
+        }
+        let steps = canonical_steps(kind, n);
+        let outcome = match kind {
+            ArtifactKind::Sort => check_sort_steps(n, &steps, opts),
+            ArtifactKind::Merge => check_merge_steps(n, &steps, true, opts),
+        };
+        let entry = (outcome.verdict(), outcome.detail());
+        self.shapes.insert((kind, n), entry.clone());
+        entry
+    }
+}
+
+/// Check one compiled [`ExecutionPlan`]: structural expansion equality
+/// plus the (cached) semantic proof. `target` labels the findings —
+/// artifact name or geometry string.
+pub fn check_plan(plan: &ExecutionPlan, target: &str, opts: &VerifyOptions, cache: &mut ProofCache) -> Report {
+    let mut report = Report::new();
+    let n = plan.n();
+    let kind = plan.kind();
+    if n < 2 {
+        report.push("network.structural", target, Verdict::Pass, "degenerate plan (n < 2), no steps");
+        return report;
+    }
+    let expansion: Vec<Step> = plan.launches().iter().flat_map(Launch::steps).collect();
+    let canonical = canonical_steps(kind, n);
+    let wiring_ok = plan.reverse_tail() == (kind == ArtifactKind::Merge);
+    let steps_ok = expansion == canonical;
+    if steps_ok && wiring_ok {
+        report.push(
+            "network.structural",
+            target,
+            Verdict::Pass,
+            format!(
+                "{} launches expand to the canonical {} steps exactly; reverse_tail wired for {}",
+                plan.launches().len(),
+                canonical.len(),
+                kind.name(),
+            ),
+        );
+        let (verdict, detail) = cache.prove_canonical(kind, n, opts);
+        report.push("network.zero-one", target, verdict, detail);
+    } else {
+        let detail = if !wiring_ok {
+            format!("reverse_tail={} is wrong for a {} plan", plan.reverse_tail(), kind.name())
+        } else {
+            let at = expansion
+                .iter()
+                .zip(&canonical)
+                .position(|(a, b)| a != b)
+                .unwrap_or_else(|| expansion.len().min(canonical.len()));
+            format!(
+                "expansion ({} steps) diverges from canonical ({} steps) at step {at}",
+                expansion.len(),
+                canonical.len(),
+            )
+        };
+        report.push("network.structural", target, Verdict::Fail, detail);
+        // Independent semantic teeth: try to refute the actual expansion.
+        let outcome = match kind {
+            ArtifactKind::Sort => check_sort_steps(n, &expansion, opts),
+            ArtifactKind::Merge => check_merge_steps(n, &expansion, plan.reverse_tail(), opts),
+        };
+        report.push("network.zero-one", target, outcome.verdict(), outcome.detail());
+    }
+    report
+}
+
+/// Sweep every `(variant, block, interleave, descending)` geometry the
+/// registry could be steered to for one `(kind, n)` shape: structural
+/// equality per geometry (aggregated), then the shared semantic proof.
+pub fn check_geometry_sweep(
+    kind: ArtifactKind,
+    n: usize,
+    opts: &VerifyOptions,
+    cache: &mut ProofCache,
+) -> Report {
+    let mut report = Report::new();
+    let target = format!("{} n={n} (geometry sweep)", kind.name());
+    let canonical = canonical_steps(kind, n);
+    let mut checked = 0usize;
+    let mut first_bad: Option<String> = None;
+    for (variant, block, interleave) in super::geometry_menu(n) {
+        for descending in [false, true] {
+            let cfg = crate::runtime::PlanConfig { variant, block, interleave };
+            let plan = ExecutionPlan::with_config(kind, n, descending, cfg);
+            let expansion: Vec<Step> = plan.launches().iter().flat_map(Launch::steps).collect();
+            let ok = expansion == canonical
+                && plan.reverse_tail() == (kind == ArtifactKind::Merge)
+                && plan.reverse_output() == descending;
+            checked += 1;
+            if !ok && first_bad.is_none() {
+                first_bad = Some(format!(
+                    "{} block={block} r={interleave} desc={descending}",
+                    variant.name(),
+                ));
+            }
+        }
+    }
+    match first_bad {
+        None => report.push(
+            "network.structural-sweep",
+            target.clone(),
+            Verdict::Pass,
+            format!(
+                "{checked} geometries ({} variants x blocks x interleave x order) all expand to the canonical schedule",
+                Variant::ALL.len(),
+            ),
+        ),
+        Some(bad) => report.push(
+            "network.structural-sweep",
+            target.clone(),
+            Verdict::Fail,
+            format!("{bad} diverges from the canonical schedule"),
+        ),
+    }
+    let (verdict, detail) = cache.prove_canonical(kind, n, opts);
+    report.push("network.zero-one", target, verdict, detail);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> VerifyOptions {
+        VerifyOptions { exhaustive_cap: 1024, samples: 48, threads_menu: vec![2] }
+    }
+
+    #[test]
+    fn brute_force_proves_small_canonical_networks() {
+        for n in [2usize, 4, 8, 16] {
+            let steps = canonical_steps(ArtifactKind::Sort, n);
+            match check_sort_steps(n, &steps, &opts()) {
+                Outcome::Proven { vectors, .. } => assert_eq!(vectors, 1 << n),
+                other => panic!("n={n}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn induction_proves_midsize_canonical_networks() {
+        for n in [32usize, 128, 1024] {
+            let steps = canonical_steps(ArtifactKind::Sort, n);
+            match check_sort_steps(n, &steps, &opts()) {
+                Outcome::Proven { method, .. } => assert_eq!(method, "per-phase 0-1 induction"),
+                other => panic!("n={n}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn induction_agrees_with_brute_force_on_overlap() {
+        // Sanity for the lemma composition: at n=16 both engines run;
+        // they must agree that the canonical schedule sorts.
+        let steps = canonical_steps(ArtifactKind::Sort, 16);
+        assert!(brute_force_sort(16, &steps).is_ok());
+        let mut k = 2;
+        while k <= 16 {
+            assert!(phase_lemma(k).is_ok(), "k={k}");
+            k *= 2;
+        }
+    }
+
+    #[test]
+    fn above_cap_is_warn_not_pass() {
+        let o = VerifyOptions { exhaustive_cap: 512, ..opts() };
+        let steps = canonical_steps(ArtifactKind::Sort, 2048);
+        match check_sort_steps(2048, &steps, &o) {
+            Outcome::NotProven { reason, .. } => assert!(reason.contains("exhaustive cap")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_lemma_proves_canonical_merge() {
+        for n in [4usize, 64, 1024] {
+            let steps = canonical_steps(ArtifactKind::Merge, n);
+            match check_merge_steps(n, &steps, true, &opts()) {
+                Outcome::Proven { .. } => {}
+                other => panic!("n={n}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn merge_without_reverse_tail_is_refuted() {
+        // Dropping the reverse_tail wiring breaks the bitonic
+        // precondition; the grid enumeration must find a witness.
+        let steps = canonical_steps(ArtifactKind::Merge, 64);
+        match check_merge_steps(64, &steps, false, &opts()) {
+            Outcome::Refuted { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn zo_step_matches_generic_reference() {
+        // The word-parallel kernels must agree with the per-pair
+        // reference on random vectors for every canonical step.
+        let n = 256;
+        let mut rng = Pcg32::new(7, 7);
+        for s in canonical_steps(ArtifactKind::Sort, n) {
+            let mut v: Vec<u64> = (0..words_for(n)).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            zo_step(&mut v, n, s.phase_len, s.stride);
+            zo_step_generic(&mut w, n, s.phase_len, s.stride);
+            assert_eq!(v, w, "step {s:?}");
+        }
+    }
+
+    #[test]
+    fn ones_block_and_sorted_vec_are_wordwise_correct() {
+        for (lo, hi) in [(0usize, 0usize), (0, 1), (3, 70), (64, 128), (5, 200), (0, 256)] {
+            let v = ones_block(256, lo, hi);
+            for i in 0..256 {
+                assert_eq!(get_bit(&v, i), i >= lo && i < hi, "bit {i} of [{lo},{hi})");
+            }
+        }
+        assert_eq!(popcount(&sorted_vec(192, 77, true)), 77);
+        assert!(get_bit(&sorted_vec(192, 77, false), 0));
+    }
+}

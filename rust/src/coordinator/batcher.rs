@@ -160,7 +160,7 @@ impl Batcher {
         if self.queue.len() >= self.config.max_rows {
             return true;
         }
-        self.min_trigger.map_or(false, |t| now >= t)
+        self.min_trigger.is_some_and(|t| now >= t)
     }
 
     /// Time until the earliest flush trigger (for worker sleep): the
@@ -369,7 +369,7 @@ mod tests {
         }
         b.queue
             .iter()
-            .any(|p| p.deadline().map_or(false, |d| now + b.config.slo_margin >= d))
+            .any(|p| p.deadline().is_some_and(|d| now + b.config.slo_margin >= d))
     }
 
     fn oracle_next_deadline(b: &Batcher, now: Instant) -> Option<Duration> {

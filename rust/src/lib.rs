@@ -35,6 +35,11 @@
 //!   builder + parser ([`util::json`]), thread pool, metrics,
 //!   property-testing and table formatting substrates (their crates.io
 //!   equivalents are unavailable offline).
+//! * [`analysis`] — the static plan verifier (`bitonic-tpu
+//!   verify-plans`): proves every compiled launch program sorts (0–1
+//!   principle), proves parallel schedules write-disjoint, and audits
+//!   the artifact manifest — all before anything executes. See README
+//!   "Static guarantees".
 //!
 //! ## Where the numbers live
 //!
@@ -47,7 +52,13 @@
 // Public API is the reproduction's documentation of record; undocumented
 // items are a defect the build should flag.
 #![warn(missing_docs)]
+// Every unsafe operation must sit in its own `unsafe {}` block with a
+// SAFETY argument, even inside `unsafe fn` — the disjointness checker
+// (`analysis::disjoint`) proves those arguments; the blocks must stay
+// visible for the proofs to be auditable.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod runtime;

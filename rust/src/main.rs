@@ -10,6 +10,7 @@
 //! * `analyze`   — launch/pass counts per variant (structural perf model)
 //! * `bench`     — the survey benchmark matrix → `BENCH_trajectory.json`
 //! * `report`    — regenerate `RESULTS.md` from the trajectory
+//! * `verify-plans` — static plan verifier + disjointness checker → `ANALYSIS.md`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -41,6 +42,10 @@ fn main() -> bitonic_tpu::Result<()> {
         .command("tune", "sweep plan configs on this host; write a tuning profile")
         .command("bench", "survey matrix: substrates × dists × dtypes × sizes → trajectory JSON")
         .command("report", "regenerate RESULTS.md from the bench trajectory")
+        .command(
+            "verify-plans",
+            "statically prove plans sort + schedules are race-free; write ANALYSIS.md/.json",
+        )
         .command("gen-data", "write a workload dataset file (.btsd)")
         .opt("n", "array size (elements)", Some("65536"))
         .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
@@ -84,6 +89,18 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt("out", "report: output markdown path", Some("RESULTS.md"))
+        .opt(
+            "exhaustive-cap",
+            "verify-plans: largest n proven exhaustively by the 0-1 induction \
+             (default 1024; larger targets get sampled checks + WARN)",
+            None,
+        )
+        .opt(
+            "analysis-out",
+            "verify-plans: markdown report path (default: $ANALYSIS_MD or \
+             ANALYSIS.md at the workspace root; JSON lands beside it)",
+            None,
+        )
         .opt("seed", "workload seed", Some("42"))
         .flag("no-profile", "ignore any tuning profile")
         .flag("smoke", "tune/bench: tiny CI-sized sweep")
@@ -100,6 +117,7 @@ fn main() -> bitonic_tpu::Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("bench") => cmd_bench(&args),
         Some("report") => cmd_report(&args),
+        Some("verify-plans") => cmd_verify_plans(&args),
         Some("gen-data") => cmd_gen_data(&args),
         _ => {
             println!("{}", parser.usage());
@@ -650,6 +668,66 @@ fn cmd_report(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         trajectory.records.len(),
         text.len()
     );
+    Ok(())
+}
+
+/// `bitonic-tpu verify-plans`: run the static plan verifier, the
+/// concurrency-disjointness checker and the artifact auditor over the
+/// artifacts directory; write `ANALYSIS.md` + `ANALYSIS.json`; exit
+/// non-zero on any failing finding (the CI gate).
+fn cmd_verify_plans(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    use bitonic_tpu::analysis::{verify_plans, Report, Verdict, VerifyOptions};
+
+    let dir = artifacts_dir(args);
+    let mut opts = VerifyOptions::default();
+    if let Some(cap) = args.get_parsed::<usize>("exhaustive-cap")? {
+        bitonic_tpu::ensure!(cap >= 2, "--exhaustive-cap must be >= 2");
+        opts.exhaustive_cap = cap;
+    }
+    println!(
+        "verify-plans: {dir:?} (exhaustive 0-1 proofs up to n={}, sampled above)…",
+        opts.exhaustive_cap
+    );
+    let t0 = Instant::now();
+    let report = verify_plans(&dir, &opts)?;
+    let (pass, warn, fail) = report.counts();
+
+    let md_path = args
+        .get("analysis-out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Report::default_md_path);
+    std::fs::write(&md_path, report.render_markdown())
+        .map_err(|e| bitonic_tpu::err!("writing {md_path:?}: {e}"))?;
+    let json_path = md_path.with_extension("json");
+    std::fs::write(&json_path, format!("{}\n", report.to_json().render()))
+        .map_err(|e| bitonic_tpu::err!("writing {json_path:?}: {e}"))?;
+
+    let mut t = Table::new(vec!["check", "targets", "worst"]);
+    let mut checks: Vec<&str> = report.findings.iter().map(|f| f.check.as_str()).collect();
+    checks.sort_unstable();
+    checks.dedup();
+    for check in checks {
+        let of_check: Vec<_> = report.findings.iter().filter(|f| f.check == check).collect();
+        let worst = of_check.iter().map(|f| f.verdict).max().unwrap_or(Verdict::Pass);
+        t.row(vec![
+            check.to_string(),
+            of_check.len().to_string(),
+            worst.name().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "verdict {} — {} findings ({pass} passed, {warn} warned, {fail} failed) in {:.1}s — report at {md_path:?} (+ json)",
+        report.worst().name(),
+        report.findings.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if report.has_fail() {
+        for f in report.findings.iter().filter(|f| f.verdict == Verdict::Fail) {
+            eprintln!("  {}: {} — {}", f.check, f.target, f.detail);
+        }
+        bitonic_tpu::bail!("static analysis found {fail} failing finding(s); see {md_path:?}");
+    }
     Ok(())
 }
 

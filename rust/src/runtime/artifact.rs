@@ -75,6 +75,14 @@ impl ArtifactKind {
             other => crate::bail!("unknown artifact kind {other:?}"),
         })
     }
+
+    /// The manifest name (inverse of [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Sort => "sort",
+            ArtifactKind::Merge => "merge",
+        }
+    }
 }
 
 /// Metadata for one compiled-sort artifact.
@@ -232,6 +240,14 @@ impl Manifest {
     /// Absolute path of an artifact's HLO file.
     pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
         self.dir.join(&meta.file)
+    }
+
+    /// Statically audit this manifest and its HLO files for shape,
+    /// dtype and order drift, dangling files and duplicate classes —
+    /// pass 3 of the plan verifier. See
+    /// [`crate::analysis::artifact_check::audit_manifest`].
+    pub fn analyze(&self) -> crate::analysis::Report {
+        crate::analysis::artifact_check::audit_manifest(self)
     }
 }
 

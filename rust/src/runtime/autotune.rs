@@ -176,6 +176,45 @@ impl TuningProfile {
     pub fn tuned_threads(&self) -> Option<usize> {
         self.entries.iter().map(|e| e.threads).max()
     }
+
+    /// Audit this profile against a manifest: a tuned class no artifact
+    /// serves any more (the menu was regenerated since the sweep) is
+    /// **stale** — the policy's nearest-class fallback makes it harmless
+    /// at plan resolution, so it must warn-and-continue here, never
+    /// panic or fail the verifier. Pinned by the stale-profile
+    /// regression test in `rust/tests/analysis_mutations.rs`.
+    pub fn analyze(&self, manifest: &super::artifact::Manifest) -> crate::analysis::Report {
+        use crate::analysis::Verdict;
+        let mut report = crate::analysis::Report::new();
+        let mut stale = 0usize;
+        for e in &self.entries {
+            let served = manifest
+                .entries
+                .iter()
+                .any(|m| m.kind == ArtifactKind::Sort && m.n == e.n && m.dtype == e.dtype);
+            if !served {
+                stale += 1;
+                report.push(
+                    "artifact.autotune",
+                    format!("n={} dtype={}", e.n, e.dtype.name()),
+                    Verdict::Warn,
+                    "tuned class has no sort artifact in the manifest (stale profile); \
+                     plan resolution falls back to the nearest class",
+                );
+            }
+        }
+        report.push(
+            "artifact.autotune",
+            "autotune.tsv",
+            Verdict::Pass,
+            format!(
+                "{}/{} tuned classes match a manifest sort class ({stale} stale tolerated)",
+                self.entries.len() - stale,
+                self.entries.len()
+            ),
+        );
+        report
+    }
 }
 
 /// How the registry picks each artifact's effective [`PlanConfig`]: a
@@ -361,7 +400,7 @@ pub fn tune(req: &TuneRequest) -> TuneOutcome {
                         threads,
                         rows_per_sec,
                     };
-                    if best.as_ref().map_or(true, |b| entry.rows_per_sec > b.rows_per_sec) {
+                    if best.as_ref().is_none_or(|b| entry.rows_per_sec > b.rows_per_sec) {
                         best = Some(entry.clone());
                     }
                     measured.push(entry);

@@ -111,6 +111,8 @@ impl Default for PlanConfig {
 pub struct ExecutionPlan {
     /// Row length `n` the plan was built for.
     n: usize,
+    /// What the program computes: a full sort or the final merge phase.
+    kind: ArtifactKind,
     /// Reverse the row's second half before the launches (merge
     /// artifacts: two ascending halves form a bitonic sequence).
     reverse_tail: bool,
@@ -155,6 +157,7 @@ impl ExecutionPlan {
         };
         Self {
             n,
+            kind,
             reverse_tail,
             launches,
             reverse_output: descending,
@@ -167,9 +170,50 @@ impl ExecutionPlan {
         self.n
     }
 
+    /// The artifact kind the program was compiled for.
+    pub fn kind(&self) -> ArtifactKind {
+        self.kind
+    }
+
     /// The configuration the launch program was compiled at.
     pub fn config(&self) -> PlanConfig {
         self.config
+    }
+
+    /// The compiled launch program, execution order — what the static
+    /// network verifier expands and checks against the canonical
+    /// schedule ([`crate::analysis::network_check`]).
+    pub fn launches(&self) -> &[Launch] {
+        &self.launches
+    }
+
+    /// Whether the plan reverses the row's second half before the
+    /// launches (merge wiring).
+    pub fn reverse_tail(&self) -> bool {
+        self.reverse_tail
+    }
+
+    /// Whether the plan reverses the whole row after the launches
+    /// (descending artifacts).
+    pub fn reverse_output(&self) -> bool {
+        self.reverse_output
+    }
+
+    /// Statically verify this plan without executing it: launch-program
+    /// expansion vs the canonical schedule, then the 0–1 sorting proof.
+    /// See [`crate::analysis::network_check::check_plan`].
+    pub fn analyze(&self) -> crate::analysis::Report {
+        let opts = crate::analysis::VerifyOptions::default();
+        let mut cache = crate::analysis::network_check::ProofCache::new();
+        let target = format!(
+            "{} n={} {} block={} r={}",
+            self.kind.name(),
+            self.n,
+            self.config.variant.name(),
+            self.config.block,
+            self.config.interleave,
+        );
+        crate::analysis::network_check::check_plan(self, &target, &opts, &mut cache)
     }
 
     /// Number of compare-exchange steps the plan covers per row (the
@@ -293,6 +337,43 @@ pub fn effective_interleave(want: usize, b: usize, threads: usize) -> usize {
     want.max(1).min(cap.max(1)).min(b.max(1))
 }
 
+/// The tile/job partition [`execute_batch`] dispatches for a `(B, N)`
+/// batch — computed in one place so the dispatch loop and the static
+/// tile-disjointness checker ([`crate::analysis::disjoint`]) can never
+/// disagree about the geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchGeometry {
+    /// Effective interleave width (rows per tile; the final tile of a
+    /// ragged batch runs narrower).
+    pub r: usize,
+    /// Elements per full tile (`r * n`).
+    pub tile_len: usize,
+    /// Whether the pool path engages (`threads > 1 && b > r && n >= 64`).
+    pub pooled: bool,
+    /// Elements per pool job (`tiles_per_job * tile_len`; the whole
+    /// batch when unpooled). Jobs are consecutive `job_len` chunks of
+    /// the row buffer, the last one ragged.
+    pub job_len: usize,
+}
+
+/// Compute the dispatch geometry for a batch of `b` rows of length `n`
+/// with configured interleave `want` on `threads` pool workers.
+pub fn dispatch_geometry(want: usize, n: usize, b: usize, threads: usize) -> DispatchGeometry {
+    let r = effective_interleave(want, b, threads);
+    let n = n.max(1);
+    let tile_len = r * n;
+    let pooled = threads > 1 && b > r && n >= 64;
+    let job_len = if pooled {
+        let tiles = b.div_ceil(r);
+        // Oversubscribe 2× so uneven worker speeds load-balance.
+        let jobs = (threads * 2).min(tiles);
+        tiles.div_ceil(jobs) * tile_len
+    } else {
+        (b * n).max(tile_len)
+    };
+    DispatchGeometry { r, tile_len, pooled, job_len }
+}
+
 /// Drive `plan` over a row-major `(B, N)` buffer, honouring the plan's
 /// batch-interleave width and (when given) dispatching whole tiles onto
 /// the shared pool — the one batch-execution path shared by
@@ -307,26 +388,26 @@ pub(crate) fn execute_batch<T: SortKey>(
     let n = plan.n().max(1);
     debug_assert_eq!(rows.len() % n, 0);
     let b = rows.len() / n;
-    let r = effective_interleave(
+    let geo = dispatch_geometry(
         plan.config().interleave,
+        n,
         b,
         pool.map_or(1, |p| p.threads()),
     );
-    let tile_len = r * n;
     match pool {
         // Tile-parallel path: worth the dispatch only when several tiles
-        // can overlap and each row carries real work.
-        Some(pool) if pool.threads() > 1 && b > r && n >= 64 => {
-            let tiles = (b + r - 1) / r;
-            // Oversubscribe 2× so uneven worker speeds load-balance.
-            let jobs = (pool.threads() * 2).min(tiles);
-            let tiles_per_job = (tiles + jobs - 1) / jobs;
+        // can overlap and each row carries real work. The job/tile
+        // partition is row-aligned and covers the buffer exactly once —
+        // proven statically over the geometry grid by
+        // `analysis::disjoint::check_tile_dispatch` (the checker consumes
+        // the same `dispatch_geometry` this dispatch does).
+        Some(pool) if geo.pooled => {
             let tasks: Vec<ScopedJob> = rows
-                .chunks_mut(tiles_per_job * tile_len)
+                .chunks_mut(geo.job_len)
                 .map(|chunk| {
                     Box::new(move || {
                         let mut scratch = Vec::new();
-                        for tile in chunk.chunks_mut(tile_len) {
+                        for tile in chunk.chunks_mut(geo.tile_len) {
                             plan.run_tile(tile, &mut scratch);
                         }
                     }) as ScopedJob
@@ -338,7 +419,7 @@ pub(crate) fn execute_batch<T: SortKey>(
         }
         _ => {
             let mut scratch = Vec::new();
-            for tile in rows.chunks_mut(tile_len) {
+            for tile in rows.chunks_mut(geo.tile_len) {
                 plan.run_tile(tile, &mut scratch);
             }
         }
@@ -535,7 +616,7 @@ mod tests {
                     assert!(r >= 1 && r <= b.max(1));
                     if b > r {
                         // Pool dispatch engages: enough tiles for everyone.
-                        let tiles = (b + r - 1) / r;
+                        let tiles = b.div_ceil(r);
                         assert!(tiles >= threads.min(b), "b={b} want={want} t={threads}");
                     }
                 }

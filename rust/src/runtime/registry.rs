@@ -143,6 +143,42 @@ impl Registry {
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+
+    /// Statically verify every plan this registry actually produces:
+    /// load each manifest artifact through the normal [`Self::get`] path
+    /// (real HLO validation + per-class policy resolution) and run the
+    /// network verifier over the compiled [`super::ExecutionPlan`]. An
+    /// artifact that refuses to compile becomes a failing finding — it
+    /// does **not** abort the audit of the remaining entries.
+    pub fn analyze_with(
+        &self,
+        proofs: &mut crate::analysis::network_check::ProofCache,
+        opts: &crate::analysis::VerifyOptions,
+    ) -> crate::analysis::Report {
+        use crate::analysis::{network_check, Verdict};
+        let mut report = crate::analysis::Report::new();
+        for meta in &self.manifest.entries {
+            match self.get(Key::of(meta)) {
+                Ok(exe) => {
+                    report.merge(network_check::check_plan(exe.plan(), &meta.name, opts, proofs));
+                }
+                Err(e) => report.push(
+                    "network.compile",
+                    &meta.name,
+                    Verdict::Fail,
+                    format!("artifact did not compile into a plan: {e:#}"),
+                ),
+            }
+        }
+        report
+    }
+
+    /// [`Self::analyze_with`] with fresh default options and proof cache
+    /// — the registry's standalone `analyze` hook.
+    pub fn analyze(&self) -> crate::analysis::Report {
+        let mut proofs = crate::analysis::network_check::ProofCache::new();
+        self.analyze_with(&mut proofs, &crate::analysis::VerifyOptions::default())
+    }
 }
 
 #[cfg(test)]

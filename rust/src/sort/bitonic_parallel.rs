@@ -19,8 +19,114 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
 
-use super::network::{run_fused_tail_range, Network};
+use super::network::{run_fused_tail_range, Network, Phase, Step};
 use super::SortKey;
+
+/// One barrier interval of the chunked parallel schedule: the operation
+/// **every** worker executes (on its own index range) between two
+/// barriers. This is the single source of truth the worker loop in
+/// [`bitonic_sort_parallel`] walks and the static disjointness checker
+/// ([`crate::analysis::disjoint`]) verifies — the two can never drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntervalOp {
+    /// The whole `stride < chunk` tail of phase `phase_len`, run on the
+    /// worker's own chunk via [`run_fused_tail_range`] (no cross-chunk
+    /// pairs; the §4.1 shared-memory stage as cache locality).
+    LocalTail {
+        /// Phase length `k`.
+        phase_len: usize,
+        /// Largest stride of the fused tail (`< chunk`).
+        stride_hi: usize,
+    },
+    /// Strides `(stride_hi, stride_hi/2)` of phase `phase_len` executed
+    /// as register quads owned by their minimum index (the §4.2 pairing
+    /// across chunk boundaries) — see [`double_step_lows_in`].
+    PairedGlobal {
+        /// Phase length `k`.
+        phase_len: usize,
+        /// The larger stride of the fused pair (`stride_hi/2 >= chunk`).
+        stride_hi: usize,
+    },
+    /// One global step, pairs owned by their low index — see
+    /// [`step_lows_in`].
+    GlobalLows {
+        /// Phase length `k`.
+        phase_len: usize,
+        /// Compare-exchange stride (`>= chunk`).
+        stride: usize,
+    },
+}
+
+impl IntervalOp {
+    /// The network steps this interval covers, in execution order —
+    /// concatenating over [`barrier_intervals`] reproduces
+    /// [`Network::step_schedule`] exactly (checked statically by
+    /// `analysis::disjoint` and dynamically by the bit-exactness test
+    /// below).
+    pub fn steps(self) -> Vec<Step> {
+        match self {
+            IntervalOp::LocalTail { phase_len, stride_hi } => Phase { len: phase_len }
+                .steps()
+                .filter(|s| s.stride <= stride_hi)
+                .collect(),
+            IntervalOp::PairedGlobal { phase_len, stride_hi } => vec![
+                Step { phase_len, stride: stride_hi },
+                Step { phase_len, stride: stride_hi / 2 },
+            ],
+            IntervalOp::GlobalLows { phase_len, stride } => {
+                vec![Step { phase_len, stride }]
+            }
+        }
+    }
+}
+
+/// The chunked barrier schedule for row length `n` and per-worker chunk
+/// size `chunk` (both powers of two, `chunk >= 2`): each step of the
+/// network is assigned to a local-tail, paired-global or single-global
+/// interval by the same `j` vs `chunk` comparisons the workers used to
+/// make inline. One [`IntervalOp`] per barrier.
+pub fn barrier_intervals(n: usize, chunk: usize) -> Vec<IntervalOp> {
+    assert!(n.is_power_of_two() && chunk.is_power_of_two() && 2 <= chunk && chunk <= n);
+    let steps: Vec<Step> = Network::new(n).step_schedule();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < steps.len() {
+        let Step { phase_len: k, stride: j } = steps[i];
+        if j < chunk {
+            out.push(IntervalOp::LocalTail { phase_len: k, stride_hi: j });
+            i += j.trailing_zeros() as usize + 1;
+        } else if j / 2 >= chunk {
+            out.push(IntervalOp::PairedGlobal { phase_len: k, stride_hi: j });
+            i += 2;
+        } else {
+            out.push(IntervalOp::GlobalLows { phase_len: k, stride: j });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The worker count [`bitonic_sort_parallel`] actually uses for a given
+/// request: clamped to `n/2`, rounded **down** to a power of two, and 1
+/// when the serial fallback engages (`threads == 1 || n < 4096`). Shared
+/// with the static checker so it emulates the real geometry.
+pub fn effective_workers(n: usize, threads: usize) -> usize {
+    if n < 2 {
+        return 1;
+    }
+    let threads = threads.clamp(1, n / 2);
+    if threads == 1 || n < 4096 {
+        return 1;
+    }
+    threads.next_power_of_two() >> usize::from(!threads.is_power_of_two())
+}
+
+/// Statically verify this module's schedule for `(n, threads)` — step
+/// completeness and write-disjointness per barrier interval — without
+/// sorting anything. See [`crate::analysis::disjoint`].
+pub fn analyze(n: usize, threads: usize) -> crate::analysis::Report {
+    crate::analysis::disjoint::analyze_parallel_schedule(n, threads)
+}
 
 /// Sort `xs` ascending in place using `threads` OS threads.
 /// `xs.len()` must be a power of two.
@@ -30,30 +136,29 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
         return;
     }
     assert!(n.is_power_of_two(), "bitonic_sort_parallel requires n = 2^k, got {n}");
-    let threads = threads.clamp(1, n / 2);
-    if threads == 1 || n < 4096 {
-        // Thread overhead dominates below this; fall back to sequential.
+    let threads = effective_workers(n, threads);
+    if threads == 1 {
+        // Thread overhead dominates below the cutover; fall back.
         super::bitonic::bitonic_sort(xs);
         return;
     }
 
     // Each thread owns a contiguous chunk of size n/threads (power of two
-    // by construction when threads is a power of two; round down to one).
-    let threads = threads.next_power_of_two() >> usize::from(!threads.is_power_of_two());
+    // because effective_workers rounds down to one).
     let chunk = n / threads;
 
     let barrier = Arc::new(Barrier::new(threads));
     let ptr = SharedSlice(xs.as_mut_ptr(), n);
 
-    // The schedule every thread walks in lockstep.
-    let net = Network::new(n);
-    let steps: Vec<(usize, usize)> = net.steps().map(|s| (s.phase_len, s.stride)).collect();
+    // The schedule every thread walks in lockstep — the same interval
+    // list the static checker proves disjoint.
+    let intervals = barrier_intervals(n, chunk);
     let panics = Arc::new(AtomicUsize::new(0));
 
     std::thread::scope(|scope| {
         for t in 0..threads {
             let barrier = Arc::clone(&barrier);
-            let steps = &steps;
+            let intervals = &intervals;
             let panics = Arc::clone(&panics);
             let ptr = ptr;
             scope.spawn(move || {
@@ -70,45 +175,42 @@ pub fn bitonic_sort_parallel<T: SortKey>(xs: &mut [T], threads: usize) {
                 // chunks — see double_step_lows_in); (3) single global
                 // steps — pairs are owned by their low index, and lows
                 // are disjoint across threads. Barriers separate
-                // intervals, and every thread takes the same branch
-                // (conditions depend only on the shared j and chunk).
+                // intervals, and every thread executes the same shared
+                // interval list. These three arguments are PROVEN, not
+                // assumed: `analysis::disjoint::check_parallel_schedule`
+                // emulates this exact interval list symbolically (it is
+                // built by the same `barrier_intervals` call) and
+                // verifies every index is written by exactly one worker
+                // per interval — run by `bitonic-tpu verify-plans`, the
+                // in-module tests of `analysis::disjoint`, and the
+                // mutation suite in `rust/tests/analysis_mutations.rs`
+                // (which proves the checker rejects racy schedules). The
+                // debug asserts below restate the per-branch invariant.
                 let xs: &mut [T] = unsafe { ptr.slice() };
                 let lo = t * chunk;
                 let hi = lo + chunk;
-                let mut i = 0;
-                while i < steps.len() {
-                    let (k, j) = steps[i];
-                    if j < chunk {
-                        // Local tail: all remaining steps of this phase
-                        // touch only in-chunk pairs; run them through the
-                        // shared fused-tile kernel — the same kernel the
-                        // runtime's BlockFused launches execute — with no
-                        // barriers while the chunk stays cache-resident.
-                        run_fused_tail_range(xs, k, j, lo, hi, true);
-                        i += j.trailing_zeros() as usize + 1;
-                        barrier.wait();
-                    } else if j / 2 >= chunk {
-                        // Paired global steps (paper §4.2 applied across
-                        // chunk boundaries): the next stride j/2 is still
-                        // global, so run both through register quads in
-                        // ONE barrier interval — every thread takes this
-                        // branch in lockstep (the test depends only on
-                        // the shared j and chunk), halving the global
-                        // barrier count.
-                        double_step_lows_in(xs, k, j, lo, hi);
-                        i += 2;
-                        barrier.wait();
-                    } else {
-                        // Global step: split by pair-group. Thread t takes
-                        // lows in [t*chunk, (t+1)*chunk) — every low index
-                        // a has partner a^j outside every chunk, but lows
-                        // are disjoint across threads, and each (a, a^j)
-                        // pair is written by exactly the thread owning the
-                        // *low* index a (a < a^j since a & j == 0).
-                        step_lows_in(xs, k, j, lo, hi);
-                        i += 1;
-                        barrier.wait();
+                for op in intervals {
+                    match *op {
+                        IntervalOp::LocalTail { phase_len, stride_hi } => {
+                            // All pairs in-chunk: proven disjoint per
+                            // worker by analysis::disjoint (case 1).
+                            debug_assert!(stride_hi < chunk);
+                            run_fused_tail_range(xs, phase_len, stride_hi, lo, hi, true);
+                        }
+                        IntervalOp::PairedGlobal { phase_len, stride_hi } => {
+                            // Quad ownership by minimum index: proven
+                            // disjoint by analysis::disjoint (case 2).
+                            debug_assert!(stride_hi / 2 >= chunk);
+                            double_step_lows_in(xs, phase_len, stride_hi, lo, hi);
+                        }
+                        IntervalOp::GlobalLows { phase_len, stride } => {
+                            // Pair ownership by low index: proven
+                            // disjoint by analysis::disjoint (case 3).
+                            debug_assert!(stride >= chunk);
+                            step_lows_in(xs, phase_len, stride, lo, hi);
+                        }
                     }
+                    barrier.wait();
                 }
                 drop(guard);
             });
@@ -136,6 +238,9 @@ pub fn bitonic_sort_parallel_padded<T: SortKey>(xs: &mut Vec<T>, threads: usize)
 fn step_lows_in<T: SortKey>(xs: &mut [T], k: usize, j: usize, lo: usize, hi: usize) {
     for a in lo..hi {
         if a & j == 0 {
+            // Low-index ownership (a < a^j, in range): the invariant
+            // analysis::disjoint proves for GlobalLows intervals.
+            debug_assert!(a ^ j > a && a ^ j < xs.len());
             cx(xs, a, a ^ j, a & k == 0);
         }
     }
@@ -167,6 +272,12 @@ fn double_step_lows_in<T: SortKey>(xs: &mut [T], k: usize, j_hi: usize, lo: usiz
         if a & quad_bits == 0 {
             let (b, c) = (a + j_lo, a + j_hi);
             let d = c + j_lo;
+            // The quad invariants analysis::disjoint proves for
+            // PairedGlobal intervals: all four indices in range, and the
+            // direction bit never flips inside the quad (no carry into
+            // bit k, since a has zeros at both stride bits).
+            debug_assert!(d < xs.len());
+            debug_assert_eq!(d & k, a & k, "quad spans a direction boundary");
             let ascending = a & k == 0;
             cx(xs, a, c, ascending); // stride j_hi: (a, c)
             cx(xs, b, d, ascending); //              (b, d)
@@ -197,7 +308,11 @@ unsafe impl<T: Send> Send for SharedSlice<T> {}
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 impl<T> SharedSlice<T> {
     unsafe fn slice<'a>(&self) -> &'a mut [T] {
-        std::slice::from_raw_parts_mut(self.0, self.1)
+        // SAFETY: pointer and length come from the caller's exclusive
+        // `&mut [T]`, which outlives the thread scope; non-overlapping
+        // use across threads is the barrier-interval disjointness
+        // invariant proven by `analysis::disjoint` (see the use site).
+        unsafe { std::slice::from_raw_parts_mut(self.0, self.1) }
     }
 }
 
@@ -260,41 +375,43 @@ mod tests {
                 let data = gen.u32s(n, Distribution::DupHeavy);
                 let mut chunked = data.clone();
                 let mut serial = data;
-                let steps: Vec<(usize, usize)> =
-                    Network::new(n).steps().map(|s| (s.phase_len, s.stride)).collect();
                 let mut paired_intervals = 0usize;
-                let mut i = 0;
-                while i < steps.len() {
-                    let (k, j) = steps[i];
-                    if j < chunk {
-                        for t in 0..threads {
-                            run_fused_tail_range(&mut chunked, k, j, t * chunk, (t + 1) * chunk, true);
+                for op in barrier_intervals(n, chunk) {
+                    match op {
+                        IntervalOp::LocalTail { phase_len, stride_hi } => {
+                            for t in 0..threads {
+                                run_fused_tail_range(
+                                    &mut chunked,
+                                    phase_len,
+                                    stride_hi,
+                                    t * chunk,
+                                    (t + 1) * chunk,
+                                    true,
+                                );
+                            }
                         }
-                        for jj in
-                            std::iter::successors(Some(j), |&x| (x > 1).then_some(x / 2))
-                        {
-                            compare_exchange_step(&mut serial, k, jj);
+                        IntervalOp::PairedGlobal { phase_len, stride_hi } => {
+                            for t in 0..threads {
+                                double_step_lows_in(
+                                    &mut chunked,
+                                    phase_len,
+                                    stride_hi,
+                                    t * chunk,
+                                    (t + 1) * chunk,
+                                );
+                            }
+                            paired_intervals += 1;
                         }
-                        i += j.trailing_zeros() as usize + 1;
-                    } else if j / 2 >= chunk {
-                        for t in 0..threads {
-                            double_step_lows_in(&mut chunked, k, j, t * chunk, (t + 1) * chunk);
+                        IntervalOp::GlobalLows { phase_len, stride } => {
+                            for t in 0..threads {
+                                step_lows_in(&mut chunked, phase_len, stride, t * chunk, (t + 1) * chunk);
+                            }
                         }
-                        compare_exchange_step(&mut serial, k, j);
-                        compare_exchange_step(&mut serial, k, j / 2);
-                        i += 2;
-                        paired_intervals += 1;
-                    } else {
-                        for t in 0..threads {
-                            step_lows_in(&mut chunked, k, j, t * chunk, (t + 1) * chunk);
-                        }
-                        compare_exchange_step(&mut serial, k, j);
-                        i += 1;
                     }
-                    assert_eq!(
-                        chunked, serial,
-                        "diverged at n=2^{logn} threads={threads} step {i} (k={k}, j={j})"
-                    );
+                    for s in op.steps() {
+                        compare_exchange_step(&mut serial, s.phase_len, s.stride);
+                    }
+                    assert_eq!(chunked, serial, "diverged at n=2^{logn} threads={threads} {op:?}");
                 }
                 assert!(is_sorted(&chunked));
                 // The pairing must actually engage whenever at least two
@@ -312,21 +429,11 @@ mod tests {
     fn pairing_halves_global_barrier_count() {
         let n = 1 << 16;
         let chunk = n / 8; // 8 threads
-        let steps: Vec<(usize, usize)> =
-            Network::new(n).steps().map(|s| (s.phase_len, s.stride)).collect();
         let (mut paired_intervals, mut unpaired_intervals) = (0usize, 0usize);
-        let mut i = 0;
-        while i < steps.len() {
-            let (_, j) = steps[i];
-            if j < chunk {
-                i += j.trailing_zeros() as usize + 1;
-                unpaired_intervals += 1; // local tail: one barrier either way
-            } else if j / 2 >= chunk {
-                i += 2;
-                paired_intervals += 1;
-            } else {
-                i += 1;
-                unpaired_intervals += 1;
+        for op in barrier_intervals(n, chunk) {
+            match op {
+                IntervalOp::PairedGlobal { .. } => paired_intervals += 1,
+                _ => unpaired_intervals += 1,
             }
         }
         // Without pairing every global step is its own interval; with it,
@@ -360,6 +467,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The shared-schedule refactor invariant: concatenating every
+    /// interval's steps reproduces the flat network schedule exactly —
+    /// the same property the static checker re-verifies symbolically.
+    #[test]
+    fn barrier_intervals_cover_schedule_exactly() {
+        for logn in [12usize, 13, 16] {
+            let n = 1 << logn;
+            for threads in [2usize, 4, 8, 32] {
+                let chunk = n / threads;
+                let flat: Vec<Step> = barrier_intervals(n, chunk)
+                    .into_iter()
+                    .flat_map(IntervalOp::steps)
+                    .collect();
+                assert_eq!(flat, Network::new(n).step_schedule(), "n={n} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_workers_geometry() {
+        assert_eq!(effective_workers(1 << 13, 1), 1); // explicit serial
+        assert_eq!(effective_workers(2048, 8), 1); // below the cutover
+        assert_eq!(effective_workers(1 << 13, 3), 2); // rounds down to 2^k
+        assert_eq!(effective_workers(1 << 13, 8), 8);
+        assert_eq!(effective_workers(1 << 12, 1 << 13), 1 << 11); // clamp n/2
     }
 
     #[test]

@@ -316,6 +316,21 @@ impl Network {
         }
         pairs
     }
+
+    /// Statically verify this network: every `(variant, block,
+    /// interleave)` launch program the geometry menu produces for `n`
+    /// must expand to [`Self::step_schedule`], and the schedule itself
+    /// must sort by the 0–1 principle (exhaustive up to the default
+    /// cap). See [`crate::analysis::network_check`].
+    pub fn analyze(self) -> crate::analysis::Report {
+        let mut proofs = crate::analysis::network_check::ProofCache::new();
+        crate::analysis::network_check::check_geometry_sweep(
+            crate::runtime::ArtifactKind::Sort,
+            self.n,
+            &crate::analysis::VerifyOptions::default(),
+            &mut proofs,
+        )
+    }
 }
 
 /// The launch grouping of one post-presort phase `k` (Semi/Optimized):

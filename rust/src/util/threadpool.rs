@@ -207,7 +207,11 @@ impl ThreadPool {
             // SAFETY: extending 'env to 'static is sound because this
             // function blocks on `sync` until the wrapper below has run
             // the task (or runs it inline) — the task can never be alive
-            // after 'env ends.
+            // after 'env ends. The callers that exploit this to hand out
+            // `&mut` row chunks rely on those chunks being disjoint,
+            // which the static checker proves for the executor's tile
+            // dispatch (`analysis::disjoint::check_tile_dispatch`, see
+            // `rust/tests/analysis_mutations.rs`).
             let task: ScopedJob<'static> = unsafe {
                 std::mem::transmute::<ScopedJob<'env>, ScopedJob<'static>>(task)
             };
@@ -231,6 +235,10 @@ impl ThreadPool {
         while *left > 0 {
             left = sync.done.wait(left).unwrap();
         }
+        // Shadow of the soundness condition the SAFETY comment above
+        // rests on: no task wrapper can still be running once the wait
+        // releases, so the 'env-extended closures are all dead here.
+        debug_assert_eq!(*left, 0, "run_scoped returned with tasks still in flight");
         drop(left);
         match sync.panicked.load(Ordering::Acquire) {
             0 => Ok(()),

@@ -10,8 +10,38 @@ echo "== cargo build --release (incl. all bench binaries) =="
 # them — build them all.
 cargo build --release --all-targets
 
+# Lint gate: warnings are defects. Gated on availability like rustfmt
+# below (the offline toolchain image may lack the component); CI always
+# has it, so a finding cannot land through the gap.
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets (deny warnings) =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy unavailable; skipping lint =="
+fi
+
 echo "== cargo test -q =="
 cargo test -q
+
+# Static plan verifier: prove every registry-producible launch program
+# sorts (0-1 principle) and every parallel schedule is write-disjoint,
+# then gate on the report. The subcommand exits non-zero on any failing
+# finding; the grep is belt and braces on top of that (the report
+# renders failing verdicts as the bare token FAIL and nothing else).
+echo "== static plan verifier (verify-plans) =="
+rm -f ANALYSIS.md ANALYSIS.json
+cargo run --release --bin bitonic-tpu -- verify-plans --exhaustive-cap 2048
+for f in ANALYSIS.md ANALYSIS.json; do
+    if [ ! -f "$f" ]; then
+        echo "ERROR: verify-plans did not write $f" >&2
+        exit 1
+    fi
+done
+if grep -q "FAIL" ANALYSIS.md; then
+    echo "ERROR: ANALYSIS.md contains a failing verdict" >&2
+    exit 1
+fi
+echo "== ANALYSIS.md + ANALYSIS.json written, no failing verdicts =="
 
 # Bench smoke, time-bounded: the coordinator bench drives the real
 # work-stealing scheduler and the row-parallel executor end to end, so a
