@@ -1,0 +1,184 @@
+"""Native artifact synthesis — the jax-free mirror of
+``rust/src/runtime/genart.rs`` (``bitonic-tpu gen-artifacts``).
+
+The AOT pipeline in :mod:`compile.aot` needs JAX + XLA to lower real HLO,
+which tops the checked-in fixture out at n=64K. The rust executor only
+ever consumes the small HLO *text* subset below, so this module renders
+that exact format directly — byte-compatible with the fixture files —
+for any (op, batch, n, dtype, order) grid. It needs nothing beyond the
+standard library and is the oracle the rust implementation is tested
+against (``python/tests/test_genart.py`` asserts the rendered text
+equals the checked-in fixture bytes).
+
+Usage::
+
+    python -m compile.genart --out-dir ../rust/artifacts/generated [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from dataclasses import dataclass
+
+MANIFEST_HEADER = "name\tkind\tvariant\tbatch\tn\tdtype\tdescending\tblock\tgrid_cells\tfile"
+
+#: Block-size hint recorded in generated manifest rows (same value the
+#: fixture rows carry; the plan policy decides real execution geometry).
+GEN_BLOCK = 256
+
+#: manifest dtype name -> HLO shape token
+DTYPE_TOKENS = {"uint32": "u32", "int32": "s32", "float32": "f32"}
+
+_HLO_TEMPLATE = """HloModule jit_{name}, entry_computation_layout={{({tok}[{b},{n}]{{1,0}})->(({tok}[{b},{n}]{{1,0}}))}}
+
+%compare.1 (lhs.2: {tok}[], rhs.3: {tok}[]) -> pred[] {{
+  %lhs.2 = {tok}[] parameter(0)
+  %rhs.3 = {tok}[] parameter(1)
+  ROOT %compare.4 = pred[] compare({tok}[] %lhs.2, {tok}[] %rhs.3), direction={direction}
+}}
+
+ENTRY %main.8 (Arg_0.1: {tok}[{b},{n}]) -> ({tok}[{b},{n}]) {{
+  %Arg_0.1 = {tok}[{b},{n}]{{1,0}} parameter(0)
+  %sort.5 = {tok}[{b},{n}]{{1,0}} sort({tok}[{b},{n}]{{1,0}} %Arg_0.1), dimensions={{1}}, to_apply=%compare.1
+  ROOT %tuple.7 = ({tok}[{b},{n}]{{1,0}}) tuple({tok}[{b},{n}]{{1,0}} %sort.5)
+}}
+"""
+
+
+@dataclass(frozen=True)
+class GenSpec:
+    """One artifact class to synthesize (mirror of rust ``GenSpec``)."""
+
+    kind: str  # "sort" | "merge"
+    variant: str  # "basic" | "semi" | "optimized"
+    batch: int
+    n: int
+    dtype: str  # "uint32" | "int32" | "float32"
+    descending: bool
+
+    @staticmethod
+    def sort(n: int, batch: int = 1, dtype: str = "uint32",
+             descending: bool = False) -> "GenSpec":
+        return GenSpec("sort", "optimized", batch, n, dtype, descending)
+
+    @staticmethod
+    def merge(n: int, batch: int = 1) -> "GenSpec":
+        return GenSpec("merge", "optimized", batch, n, "uint32", False)
+
+    @property
+    def name(self) -> str:
+        order = "desc" if self.descending else "asc"
+        return f"{self.kind}_{self.variant}_b{self.batch}_n{self.n}_{self.dtype}_{order}"
+
+    @property
+    def file(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+    def validate(self) -> None:
+        if self.n < 2 or self.n & (self.n - 1):
+            raise ValueError(f"gen-artifacts: n={self.n} is not a power of two >= 2")
+        if self.batch < 1:
+            raise ValueError("gen-artifacts: batch must be >= 1")
+        if self.dtype not in DTYPE_TOKENS:
+            raise ValueError(f"gen-artifacts: unknown dtype {self.dtype!r}")
+
+    @property
+    def block(self) -> int:
+        return min(GEN_BLOCK, self.n)
+
+    @property
+    def grid_cells(self) -> int:
+        return max(self.n // self.block, 1)
+
+    def hlo_text(self) -> str:
+        return _HLO_TEMPLATE.format(
+            name=self.name,
+            tok=DTYPE_TOKENS[self.dtype],
+            b=self.batch,
+            n=self.n,
+            direction="GT" if self.descending else "LT",
+        )
+
+    def manifest_row(self) -> str:
+        return "\t".join(
+            str(x)
+            for x in (
+                self.name, self.kind, self.variant, self.batch, self.n,
+                self.dtype, int(self.descending), self.block,
+                self.grid_cells, self.file,
+            )
+        )
+
+
+def default_grid() -> list[GenSpec]:
+    """The full offline grid (mirror of rust ``default_grid``)."""
+    specs = [GenSpec.sort(1 << k) for k in range(17, 25)]
+    specs += [
+        GenSpec.sort(1 << 20, descending=True),
+        GenSpec.sort(1 << 20, dtype="int32"),
+        GenSpec.sort(1 << 20, dtype="float32"),
+        GenSpec.sort(1 << 16, batch=4),
+        GenSpec.sort(1 << 17, batch=2),
+    ]
+    specs += [GenSpec.merge(1 << k) for k in range(18, 22)]
+    return specs
+
+
+def smoke_grid() -> list[GenSpec]:
+    """CI-sized grid (mirror of rust ``smoke_grid``)."""
+    return [
+        GenSpec.sort(1 << 18),
+        GenSpec.sort(1 << 18, descending=True),
+        GenSpec.sort(1 << 18, dtype="int32"),
+        GenSpec.sort(1 << 18, dtype="float32"),
+        GenSpec.sort(1 << 20),  # the n >= 1M acceptance class
+        GenSpec.merge(1 << 19),
+    ]
+
+
+def generate(out_dir: str, specs: list[GenSpec]) -> dict:
+    """Write HLO texts + a manifest referencing exactly those files.
+
+    Returns a report dict mirroring rust ``GenReport``:
+    ``{"dir", "written", "rows", "max_sort_n"}``.
+    """
+    if not specs:
+        raise ValueError("gen-artifacts: empty grid")
+    os.makedirs(out_dir, exist_ok=True)
+    seen: set[str] = set()
+    rows = [MANIFEST_HEADER]
+    written = 0
+    max_sort_n = 0
+    for spec in specs:
+        spec.validate()
+        if spec.name in seen:
+            continue
+        seen.add(spec.name)
+        with open(os.path.join(out_dir, spec.file), "w") as f:
+            f.write(spec.hlo_text())
+        written += 1
+        if spec.kind == "sort":
+            max_sort_n = max(max_sort_n, spec.n)
+        rows.append(spec.manifest_row())
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+    return {"dir": out_dir, "written": written, "rows": len(rows) - 1,
+            "max_sort_n": max_sort_n}
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out-dir", default="../rust/artifacts/generated")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized grid instead of the full 16M ladder")
+    args = p.parse_args(argv)
+    report = generate(args.out_dir, smoke_grid() if args.smoke else default_grid())
+    print(
+        f"wrote {report['written']} HLO artifact(s) / {report['rows']} manifest "
+        f"row(s) to {report['dir']} — menu now reaches n={report['max_sort_n']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Hierarchical mega-sort reference — the jax-free mirror of
+``rust/src/sort/kmerge.rs`` (loser-tree k-way merge) and the tiling
+logic of ``rust/src/sort/hybrid.rs::HierarchicalSorter``, plus the
+autotune fallback-distance rule from ``rust/src/runtime/autotune.rs``.
+
+Pure standard library. Keys are plain ints in u32 range; the rust side
+carries the same algorithms over its ``SortKey`` trait (the f32 total
+order is exercised by the rust tests). These functions are the oracle
+``python/tests/test_hier.py`` checks the structure against, 1:1 with the
+rust unit tests so a divergence shows up in whichever side drifted.
+"""
+
+from __future__ import annotations
+
+MAX_KEY = 0xFFFF_FFFF
+
+#: Default upper bound on the device tile (mirror of
+#: ``sort::hybrid::DEFAULT_TILE_CAP``): the largest fixture class, i.e.
+#: a tile the executor is known to sort entirely in cache-resident
+#: batches.
+DEFAULT_TILE_CAP = 1 << 16
+
+
+class LoserTree:
+    """Tournament (loser) tree over ``k`` sorted runs: Knuth §5.4.1.
+
+    Layout mirror of the rust struct: conceptual leaves at ``k..2k``
+    (leaf ``k + j`` is run ``j``), internal nodes ``1..k`` each holding
+    the *loser* of the match below, the overall winner cached at
+    ``tree[0]``. Exhaustion is positional, so runs whose keys *are*
+    ``MAX_KEY`` still merge correctly.
+    """
+
+    def __init__(self, runs: list[list[int]]):
+        self.runs = runs
+        self.pos = [0] * len(runs)
+        self.k = max(len(runs), 1)
+        self.tree = [0] * self.k
+        winners = [0] * (2 * self.k)
+        for j in range(len(runs)):
+            winners[self.k + j] = j
+        for node in range(self.k - 1, 0, -1):
+            a, b = winners[2 * node], winners[2 * node + 1]
+            if self._leads(a, b):
+                winners[node], self.tree[node] = a, b
+            else:
+                winners[node], self.tree[node] = b, a
+        self.tree[0] = winners[1]
+
+    def _head(self, run: int):
+        if run < len(self.runs) and self.pos[run] < len(self.runs[run]):
+            return self.runs[run][self.pos[run]]
+        return None
+
+    def _leads(self, a: int, b: int) -> bool:
+        """Exhausted runs lose; ties break on run index (stable)."""
+        x, y = self._head(a), self._head(b)
+        if x is None:
+            return False
+        if y is None:
+            return True
+        if x != y:
+            return x < y
+        return a <= b
+
+    def pop(self):
+        winner = self.tree[0]
+        val = self._head(winner)
+        if val is None:
+            return None
+        self.pos[winner] += 1
+        cur = winner
+        node = (self.k + winner) // 2
+        while node >= 1:
+            if self._leads(self.tree[node], cur):
+                self.tree[node], cur = cur, self.tree[node]
+            node //= 2
+        self.tree[0] = cur
+        return val
+
+
+def kway_merge(runs: list[list[int]]) -> list[int]:
+    """Merge ``k`` sorted runs in one streaming pass (mirror of rust
+    ``kway_merge``: ``O(total * log k)`` comparisons)."""
+    if not runs:
+        return []
+    if len(runs) == 1:
+        return list(runs[0])
+    tree = LoserTree(runs)
+    out = []
+    while (v := tree.pop()) is not None:
+        out.append(v)
+    return out
+
+
+def pick_tile(class_ns: list[int], cap: int | None = None) -> int | None:
+    """Mirror of ``HierarchicalSorter::pick_tile``: the largest size
+    class ``<= cap`` (default :data:`DEFAULT_TILE_CAP`), else the
+    smallest class; ``None`` on an empty menu."""
+    cap = DEFAULT_TILE_CAP if cap is None else cap
+    under = [n for n in class_ns if n <= cap]
+    if under:
+        return max(under)
+    return min(class_ns) if class_ns else None
+
+
+def hierarchical_sort(keys: list[int], tile: int, batch: int = 1,
+                      device_sort=sorted) -> tuple[list[int], dict]:
+    """Mirror of ``HierarchicalSorter::sort``: MAX-pad to a tile
+    multiple, device-sort ``batch`` tiles per dispatch, one k-way merge,
+    truncate to the real length.
+
+    ``device_sort`` stands in for the executor (a whole dispatch group
+    is sorted per-tile through it). Returns ``(sorted, stats)`` with
+    ``stats`` mirroring ``HierarchicalStats``.
+    """
+    real_len = len(keys)
+    stats = {"tile": tile, "tiles": 0, "device_dispatches": 0}
+    if real_len <= 1:
+        return list(keys), stats
+    padded_len = -(-real_len // tile) * tile
+    padded = list(keys) + [MAX_KEY] * (padded_len - real_len)
+    group = batch * tile
+    sorted_tiles: list[int] = []
+    for start in range(0, padded_len, group):
+        chunk = padded[start:start + group]
+        chunk += [MAX_KEY] * (group - len(chunk))
+        for t in range(0, group, tile):
+            sorted_tiles.extend(device_sort(chunk[t:t + tile]))
+        stats["device_dispatches"] += 1
+    sorted_tiles = sorted_tiles[:padded_len]
+    stats["tiles"] = padded_len // tile
+    if stats["tiles"] == 1:
+        return sorted_tiles[:real_len], stats
+    runs = [sorted_tiles[i:i + tile] for i in range(0, padded_len, tile)]
+    return kway_merge(runs)[:real_len], stats
+
+
+def fallback_shortfall(entry_n: int, n: int) -> int | None:
+    """Mirror of ``autotune::fallback_shortfall``: when the nearest
+    tuned class is more than 4x smaller than the requested ``n``, return
+    the distance factor ``n // entry_n`` (the WARN the CLI logs);
+    ``None`` when the fallback is close enough."""
+    if entry_n * 4 < n:
+        return n // entry_n
+    return None

@@ -1,0 +1,136 @@
+"""Cross-language pin for native artifact synthesis.
+
+``compile.genart`` is a 1:1 mirror of ``rust/src/runtime/genart.rs``
+(``bitonic-tpu gen-artifacts``). The strongest check here renders a
+class that also exists in the checked-in fixture and asserts **byte
+equality** with the fixture file — proving both generators (and the JAX
+AOT pipeline that produced the fixture) emit the same HLO text format.
+"""
+
+import os
+
+import pytest
+
+from compile import genart
+
+FIXTURE_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "artifacts"
+)
+
+
+# ----------------------------------------------------------------------
+# Template fidelity
+# ----------------------------------------------------------------------
+
+
+def test_rendered_hlo_is_byte_identical_to_the_fixture():
+    spec = genart.GenSpec.sort(65536)
+    path = os.path.join(FIXTURE_DIR, spec.file)
+    assert os.path.exists(path), f"fixture missing: {path}"
+    with open(path) as f:
+        assert spec.hlo_text() == f.read()
+
+
+def test_rendered_manifest_row_matches_the_fixture_row():
+    spec = genart.GenSpec.sort(65536)
+    with open(os.path.join(FIXTURE_DIR, "manifest.tsv")) as f:
+        lines = f.read().splitlines()
+    assert lines[0] == genart.MANIFEST_HEADER
+    fixture_row = next(l for l in lines if l.startswith(spec.name + "\t"))
+    # grid_cells is a hint column: the fixture derived it from its own
+    # lowering geometry, so compare every other field exactly.
+    ours = spec.manifest_row().split("\t")
+    theirs = fixture_row.split("\t")
+    assert len(ours) == len(theirs) == 10
+    for i, (a, b) in enumerate(zip(ours, theirs)):
+        if i not in (7, 8):  # block / grid_cells hints
+            assert a == b, f"column {i}: {a!r} != {b!r}"
+
+
+@pytest.mark.parametrize(
+    "dtype,tok", [("uint32", "u32"), ("int32", "s32"), ("float32", "f32")]
+)
+def test_dtype_tokens_and_order_direction(dtype, tok):
+    asc = genart.GenSpec.sort(1024, batch=2, dtype=dtype)
+    text = asc.hlo_text()
+    assert f"{tok}[2,1024]" in text
+    assert "direction=LT" in text and "direction=GT" not in text
+    desc = genart.GenSpec.sort(1024, batch=2, dtype=dtype, descending=True)
+    assert "direction=GT" in desc.hlo_text()
+
+
+def test_names_match_the_fixture_convention():
+    s = genart.GenSpec.sort(1 << 20)
+    assert s.name == "sort_optimized_b1_n1048576_uint32_asc"
+    assert s.file == "sort_optimized_b1_n1048576_uint32_asc.hlo.txt"
+    assert genart.GenSpec.sort(1 << 10, batch=8, dtype="int32",
+                               descending=True).name == \
+        "sort_optimized_b8_n1024_int32_desc"
+    assert genart.GenSpec.merge(1 << 12).name == \
+        "merge_optimized_b1_n4096_uint32_asc"
+
+
+# ----------------------------------------------------------------------
+# Generation
+# ----------------------------------------------------------------------
+
+
+def test_generate_writes_manifest_referencing_exactly_the_files(tmp_path):
+    specs = [
+        genart.GenSpec.sort(1 << 17),
+        genart.GenSpec.sort(1 << 10, batch=4, dtype="float32",
+                            descending=True),
+        genart.GenSpec.merge(1 << 12, batch=2),
+    ]
+    report = genart.generate(str(tmp_path), specs)
+    assert report["written"] == 3
+    assert report["rows"] == 3
+    assert report["max_sort_n"] == 1 << 17
+
+    with open(tmp_path / "manifest.tsv") as f:
+        lines = f.read().splitlines()
+    assert lines[0] == genart.MANIFEST_HEADER
+    files_on_disk = {p.name for p in tmp_path.iterdir()} - {"manifest.tsv"}
+    files_in_rows = {line.split("\t")[-1] for line in lines[1:]}
+    assert files_on_disk == files_in_rows  # no dangling texts either way
+
+
+def test_duplicate_specs_collapse(tmp_path):
+    s = genart.GenSpec.sort(1 << 10)
+    report = genart.generate(str(tmp_path), [s, s])
+    assert report["rows"] == 1 and report["written"] == 1
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(ValueError):
+        genart.GenSpec.sort(1000).validate()  # not a power of two
+    with pytest.raises(ValueError):
+        genart.GenSpec.sort(1024, batch=0).validate()
+    with pytest.raises(ValueError):
+        genart.GenSpec.sort(1024, dtype="uint64").validate()
+    with pytest.raises(ValueError):
+        genart.generate("/nonexistent-never-created", [])
+
+
+# ----------------------------------------------------------------------
+# Grids (mirror the rust grid pins)
+# ----------------------------------------------------------------------
+
+
+def test_default_grid_reaches_16m_duplicate_free():
+    grid = genart.default_grid()
+    assert len({s.name for s in grid}) == len(grid)
+    for s in grid:
+        s.validate()
+    assert max(s.n for s in grid if s.kind == "sort") == 1 << 24
+    assert any(s.kind == "merge" for s in grid)
+
+
+def test_smoke_grid_crosses_the_old_ceiling_and_the_1m_line():
+    grid = genart.smoke_grid()
+    assert all(s.n > 1 << 16 for s in grid if s.kind == "sort")
+    assert any(s.kind == "sort" and s.n >= 1 << 20 for s in grid)
+    dtypes = {s.dtype for s in grid}
+    assert {"uint32", "int32", "float32"} <= dtypes
+    assert any(s.descending for s in grid)
+    assert any(s.kind == "merge" for s in grid)

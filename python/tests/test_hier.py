@@ -1,0 +1,117 @@
+"""Cross-language regression net for the hierarchical mega-sort.
+
+``compile.hier`` mirrors ``rust/src/sort/kmerge.rs`` (loser-tree k-way
+merge), the tiling loop of ``HierarchicalSorter::sort``, and the
+autotune fallback-distance rule — the same cases the rust unit tests
+pin, so a divergence fails on CI's numpy+pytest floor without cargo.
+"""
+
+import random
+
+import pytest
+
+from compile.hier import (
+    DEFAULT_TILE_CAP,
+    MAX_KEY,
+    LoserTree,
+    fallback_shortfall,
+    hierarchical_sort,
+    kway_merge,
+    pick_tile,
+)
+
+
+# ----------------------------------------------------------------------
+# Loser-tree k-way merge (mirror of the rust kmerge tests)
+# ----------------------------------------------------------------------
+
+
+def test_merges_edge_shapes():
+    assert kway_merge([]) == []
+    assert kway_merge([[3, 7, 9]]) == [3, 7, 9]
+    assert kway_merge([[], [1], []]) == [1]
+    assert kway_merge([[1, 3], [2, 4]]) == [1, 2, 3, 4]
+
+
+def test_max_key_runs_merge_positionally():
+    # Pads equal to MAX_KEY must not be confused with exhaustion.
+    out = kway_merge([[5, MAX_KEY, MAX_KEY], [1, MAX_KEY]])
+    assert out == [1, 5, MAX_KEY, MAX_KEY, MAX_KEY]
+
+
+@pytest.mark.parametrize("k", [2, 3, 5, 8, 16, 33, 64])
+def test_random_runs_match_oracle_for_many_fanins(k):
+    rng = random.Random(0xFEED_F00D ^ k)
+    runs = [
+        sorted(rng.randrange(1000) for _ in range(rng.randrange(200)))
+        for _ in range(k)
+    ]
+    assert kway_merge(runs) == sorted(x for r in runs for x in r)
+
+
+def test_merge_is_stable_in_run_order():
+    # Equal keys must come out in ascending run order: pop one key per
+    # tie and check the tree always prefers the lower-indexed run.
+    tree = LoserTree([[7, 7], [7], [7, 7]])
+    order = []
+    while (v := tree.pop()) is not None:
+        order.append(v)
+    assert order == [7] * 5
+
+
+# ----------------------------------------------------------------------
+# Hierarchical tiling (mirror of HierarchicalSorter::sort)
+# ----------------------------------------------------------------------
+
+
+def test_hierarchical_matches_oracle_on_ragged_mega_rows():
+    rng = random.Random(0x64_000)
+    for n in [0, 1, 2, 1023, 1024, 1025, 3 * 1024 + 917]:
+        keys = [rng.randrange(2 ** 32) for _ in range(n)]
+        # Salt real MAX keys: they must survive the MAX padding.
+        for i in range(0, n, 131):
+            keys[i] = MAX_KEY
+        got, stats = hierarchical_sort(keys, tile=1024)
+        assert got == sorted(keys), f"n={n}"
+        if n > 1:
+            assert stats["tiles"] == -(-n // 1024)
+            assert stats["device_dispatches"] >= 1
+
+
+def test_hierarchical_batched_dispatch_groups():
+    rng = random.Random(7)
+    keys = [rng.randrange(2 ** 32) for _ in range(10 * 256 + 13)]
+    got, stats = hierarchical_sort(keys, tile=256, batch=4)
+    assert got == sorted(keys)
+    assert stats["tiles"] == 11
+    # 11 tiles in groups of 4 -> 3 dispatches (mirror of chunks(b*n)).
+    assert stats["device_dispatches"] == 3
+
+
+def test_single_tile_passthrough_shortcut():
+    keys = [5, 3, 1]
+    got, stats = hierarchical_sort(keys, tile=1024)
+    assert got == [1, 3, 5]
+    assert stats["tiles"] == 1
+
+
+def test_pick_tile_ladder():
+    menu = [1024, 4096, 65536, 1 << 20]
+    assert pick_tile(menu) == 65536  # largest class under the cap
+    assert pick_tile(menu, cap=4096) == 4096
+    assert pick_tile([1 << 20, 1 << 22]) == 1 << 20  # only mega: smallest
+    assert pick_tile([]) is None
+    assert DEFAULT_TILE_CAP == 1 << 16
+
+
+# ----------------------------------------------------------------------
+# Autotune fallback distance (mirror of autotune::fallback_shortfall)
+# ----------------------------------------------------------------------
+
+
+def test_fallback_shortfall_warns_only_beyond_4x():
+    assert fallback_shortfall(1024, 1 << 20) == 1024
+    assert fallback_shortfall(1024, 4096) is None  # exactly 4x: fine
+    assert fallback_shortfall(1024, 8192) == 8
+    assert fallback_shortfall(65536, 65536) is None
+    assert fallback_shortfall(1 << 20, 65536) is None  # upward is never far

@@ -89,15 +89,20 @@ pub enum Substrate {
     Heap,
     /// Odd-even transposition network (O(n²) comparators — size-capped).
     OddEven,
+    /// The hierarchical mega-sort: device-sorted cache-sized tiles +
+    /// one loser-tree k-way merge ([`crate::sort::HierarchicalSorter`])
+    /// — the large-n path past the fixture ceiling.
+    Hierarchical,
 }
 
 impl Substrate {
     /// Canonical sweep/report order.
-    pub const ALL: [Substrate; 8] = [
+    pub const ALL: [Substrate; 9] = [
         Substrate::Quicksort,
         Substrate::BitonicScalar,
         Substrate::BitonicParallel,
         Substrate::BitonicExecutor,
+        Substrate::Hierarchical,
         Substrate::Radix,
         Substrate::Merge,
         Substrate::Heap,
@@ -111,6 +116,7 @@ impl Substrate {
             Substrate::BitonicScalar => "bitonic-scalar",
             Substrate::BitonicParallel => "bitonic-parallel",
             Substrate::BitonicExecutor => "bitonic-executor",
+            Substrate::Hierarchical => "hierarchical",
             Substrate::Radix => "radix",
             Substrate::Merge => "merge",
             Substrate::Heap => "heap",
@@ -119,10 +125,10 @@ impl Substrate {
     }
 
     /// Whether the substrate can sort this key type (LSD radix digits
-    /// are u32-only here).
+    /// are u32-only here, as is the hierarchical driver).
     pub fn supports(self, dtype: MatrixDtype) -> bool {
         match self {
-            Substrate::Radix => dtype == MatrixDtype::U32,
+            Substrate::Radix | Substrate::Hierarchical => dtype == MatrixDtype::U32,
             _ => true,
         }
     }
@@ -137,9 +143,9 @@ impl Substrate {
         }
     }
 
-    /// True for the substrate that needs a device host.
+    /// True for the substrates that need a device host.
     pub fn is_device(self) -> bool {
-        self == Substrate::BitonicExecutor
+        matches!(self, Substrate::BitonicExecutor | Substrate::Hierarchical)
     }
 }
 
@@ -238,7 +244,12 @@ pub fn run_matrix(
                     }
                     let record = if sub.is_device() {
                         let Some(ctx) = device else { continue };
-                        match measure_device(ctx, dtype, dist, n, &cfg.bench, seed)? {
+                        let cell = if sub == Substrate::Hierarchical {
+                            measure_hierarchical(ctx, dist, n, &cfg.bench, seed)?
+                        } else {
+                            measure_device(ctx, dtype, dist, n, &cfg.bench, seed)?
+                        };
+                        match cell {
                             Some(r) => r,
                             None => continue, // no artifact for (n, dtype)
                         }
@@ -315,7 +326,9 @@ fn measure_cpu(
             Substrate::Heap => Box::new(|v| heapsort(v)),
             Substrate::OddEven => Box::new(|v| oddeven_sort(v)),
             Substrate::Radix => radix.expect("radix gated to u32 by Substrate::supports"),
-            Substrate::BitonicExecutor => unreachable!("device cells use measure_device"),
+            Substrate::BitonicExecutor | Substrate::Hierarchical => {
+                unreachable!("device cells use measure_device / measure_hierarchical")
+            }
         };
         bench.run_with_setup(sub.name(), &mut make, move |mut v| {
             f(&mut v);
@@ -430,6 +443,108 @@ fn measure_device(
     ))
 }
 
+/// Measure one hierarchical cell: cache-sized device-sorted tiles + a
+/// loser-tree k-way merge, through the same device host the executor
+/// substrate uses. Returns `None` when no sort class fits inside `n`
+/// (the hierarchical path needs at least one whole tile).
+fn measure_hierarchical(
+    ctx: &DeviceCtx,
+    dist: Distribution,
+    n: usize,
+    bench: &Bench,
+    seed: u64,
+) -> crate::Result<Option<BenchRecord>> {
+    use crate::sort::hybrid::{HierarchicalSorter, DEFAULT_TILE_CAP};
+    let variant = Variant::Optimized;
+    // Tile never exceeds n: padding a 64K tile to sort 1K keys would
+    // measure the padding, not the algorithm.
+    let Some(tile) = HierarchicalSorter::pick_tile(
+        &ctx.manifest,
+        variant,
+        Some(n.min(DEFAULT_TILE_CAP)),
+    )
+    .filter(|&t| t <= n) else {
+        return Ok(None);
+    };
+    let sorter =
+        HierarchicalSorter::with_tile(ctx.handle.clone(), &ctx.manifest, variant, tile)?;
+    let mut gen = Generator::new(seed);
+    // One checked execution first, mirroring measure_device's probe.
+    let mut probe = gen.u32s(n, dist);
+    let stats = sorter
+        .sort(&mut probe)
+        .map_err(|e| e.context(format!("hierarchical probe at n={n} tile={tile}")))?;
+    let m = bench.run_with_setup(
+        Substrate::Hierarchical.name(),
+        || gen.u32s(n, dist),
+        |mut keys| {
+            sorter.sort(&mut keys).expect("probed hierarchical path");
+            black_box(&keys);
+        },
+    );
+    Ok(Some(
+        BenchRecord::new(
+            "matrix",
+            Substrate::Hierarchical.name(),
+            dist.name(),
+            MatrixDtype::U32.name(),
+            n,
+        )
+        .with_timing(&m)
+        .with_extra("tile", tile)
+        .with_extra("tiles", stats.tiles)
+        .with_extra("threads", ctx.threads),
+    ))
+}
+
+/// The above-ceiling cells the paper's peak-speedup claim needs: for
+/// each size (2^17–2^20, through the paper's 2^18 peak), a quicksort
+/// baseline, the hierarchical substrate, and — when the generated menu
+/// has a matching mega-artifact — the flat executor, so the
+/// bitonic-vs-hierarchical crossover is measured, not extrapolated.
+/// All records are `speedup_vs_quicksort`-annotated and land in the
+/// same trajectory as the matrix.
+pub fn run_mega_cells(
+    device: &DeviceCtx,
+    sizes: &[usize],
+    bench: &Bench,
+    seed: u64,
+) -> crate::Result<Vec<BenchRecord>> {
+    let mut records = Vec::new();
+    let mut seed = seed;
+    for &n in sizes {
+        crate::ensure!(
+            n.is_power_of_two() && n >= 2,
+            "mega cells: size {n} is not a power of two >= 2"
+        );
+        seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        let dist = Distribution::Uniform;
+        let m = measure_cpu(
+            Substrate::Quicksort,
+            MatrixDtype::U32,
+            dist,
+            n,
+            1,
+            bench,
+            seed,
+        );
+        records.push(
+            BenchRecord::new("matrix", Substrate::Quicksort.name(), dist.name(), "u32", n)
+                .with_timing(&m),
+        );
+        if let Some(r) = measure_hierarchical(device, dist, n, bench, seed)? {
+            records.push(r);
+        }
+        // The flat device path only exists where the (generated) menu
+        // reaches; its absence is the menu's message, not an error.
+        if let Some(r) = measure_device(device, MatrixDtype::U32, dist, n, bench, seed)? {
+            records.push(r);
+        }
+    }
+    annotate_speedups(&mut records);
+    Ok(records)
+}
+
 /// The paper's §4 ablation as trajectory records: for each size, compile
 /// the Basic / Semi / Optimized launch programs and record the measured
 /// per-row time plus the **static full-row memory-pass count** — the
@@ -498,6 +613,11 @@ mod tests {
         assert!(Substrate::OddEven.size_cap() < usize::MAX);
         assert!(Substrate::BitonicExecutor.is_device());
         assert!(!Substrate::Quicksort.is_device());
+        // The hierarchical substrate is device-gated and u32-only — both
+        // gates keep the CPU-only matrix (and its cell count) unchanged.
+        assert!(Substrate::Hierarchical.is_device());
+        assert!(Substrate::Hierarchical.supports(MatrixDtype::U32));
+        assert!(!Substrate::Hierarchical.supports(MatrixDtype::F32));
     }
 
     #[test]
@@ -555,6 +675,7 @@ mod tests {
             }
         }
         assert!(!records.iter().any(|r| r.substrate == "bitonic-executor"));
+        assert!(!records.iter().any(|r| r.substrate == "hierarchical"));
         assert!(!records
             .iter()
             .any(|r| r.substrate == "radix" && r.dtype == "f32"));

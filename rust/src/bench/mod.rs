@@ -42,5 +42,6 @@ pub mod report;
 pub use env::EnvStamp;
 pub use harness::{black_box, Bench, Measurement};
 pub use matrix::{MatrixConfig, MatrixDtype, Substrate};
+pub use matrix::{run_matrix, run_mega_cells, run_pass_ablation, DeviceCtx};
 pub use record::{BenchRecord, Trajectory, SCHEMA_NAME, SCHEMA_VERSION};
 pub use report::render_results;

@@ -11,18 +11,19 @@
 //! * `bench`     — the survey benchmark matrix → `BENCH_trajectory.json`
 //! * `report`    — regenerate `RESULTS.md` from the trajectory
 //! * `verify-plans` — static plan verifier + disjointness checker → `ANALYSIS.md`
+//! * `gen-artifacts` — synthesize HLO artifact grids beyond the 64K fixture
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use bitonic_tpu::bench::{
-    matrix::{run_matrix, run_pass_ablation, DeviceCtx},
+    matrix::{run_matrix, run_mega_cells, run_pass_ablation, DeviceCtx},
     render_results, MatrixConfig, Substrate, Trajectory,
 };
 use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
 use bitonic_tpu::runtime::{
-    spawn_device_host_with, tune, ArtifactKind, HostConfig, Key, Manifest, PlanConfig, PlanPolicy,
-    TuneRequest, TuningProfile,
+    genart, spawn_device_host_discovered, tune, tune_tiles, ArtifactKind, HostConfig, Key,
+    Manifest, PlanConfig, PlanPolicy, TileProfile, TuneRequest, TuningProfile,
 };
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
@@ -47,8 +48,16 @@ fn main() -> bitonic_tpu::Result<()> {
             "statically prove plans sort + schedules are race-free; write ANALYSIS.md/.json",
         )
         .command("gen-data", "write a workload dataset file (.btsd)")
+        .command(
+            "gen-artifacts",
+            "synthesize HLO artifact grids beyond the 64K fixture ceiling",
+        )
         .opt("n", "array size (elements)", Some("65536"))
-        .opt("algo", "algorithm: quick|bitonic|bitonic-par|device|hybrid", Some("device"))
+        .opt(
+            "algo",
+            "algorithm: quick|bitonic|bitonic-par|device|hybrid|hier",
+            Some("device"),
+        )
         .opt("variant", "device variant: basic|semi|optimized", Some("optimized"))
         .opt("dist", "workload distribution", Some("uniform"))
         .opt("artifacts", "artifacts directory (default: auto-discover)", None)
@@ -101,9 +110,19 @@ fn main() -> bitonic_tpu::Result<()> {
              ANALYSIS.md at the workspace root; JSON lands beside it)",
             None,
         )
+        .opt(
+            "gen-dir",
+            "gen-artifacts: output directory (default <artifacts>/generated; \
+             smoke: <artifacts>/generated-smoke)",
+            None,
+        )
         .opt("seed", "workload seed", Some("42"))
         .flag("no-profile", "ignore any tuning profile")
-        .flag("smoke", "tune/bench: tiny CI-sized sweep")
+        .flag("smoke", "tune/bench/gen-artifacts: tiny CI-sized sweep")
+        .flag(
+            "hier",
+            "tune: sweep the hierarchical tile axis instead (writes autotune_hier.tsv)",
+        )
         .flag("verbose", "more output");
     let args = parser.parse_env()?;
 
@@ -119,6 +138,7 @@ fn main() -> bitonic_tpu::Result<()> {
         Some("report") => cmd_report(&args),
         Some("verify-plans") => cmd_verify_plans(&args),
         Some("gen-data") => cmd_gen_data(&args),
+        Some("gen-artifacts") => cmd_gen_artifacts(&args),
         _ => {
             println!("{}", parser.usage());
             Ok(())
@@ -223,13 +243,56 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             let plan = plan_policy(args, &dir)?;
             let threads = pick_threads(args, &plan)?;
             let (handle, manifest) =
-                spawn_device_host_with(&dir, HostConfig { threads, plan })?;
-            let sorter =
-                bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?;
+                spawn_device_host_discovered(&dir, HostConfig { threads, plan })?;
+            // A merged menu can reach 16M-row classes; cap the chunk at
+            // the input's padded size so a small sort never round-trips
+            // through a mega artifact.
+            let chunk = manifest
+                .size_classes(variant)
+                .into_iter()
+                .map(|m| m.n)
+                .filter(|&c| c <= n.next_power_of_two().max(2))
+                .max();
+            let sorter = match chunk {
+                Some(c) => bitonic_tpu::sort::HybridSorter::with_chunk(
+                    handle, &manifest, variant, c,
+                )?,
+                None => bitonic_tpu::sort::HybridSorter::new(handle, &manifest, variant)?,
+            };
             let stats = sorter.sort(&mut keys)?;
             eprintln!(
                 "hybrid: chunk={} device_sorts={} device_merges={} cpu_merges={}",
                 stats.chunk, stats.device_sorts, stats.device_merges, stats.cpu_merges
+            );
+        }
+        "hier" => {
+            let variant = Variant::parse(&args.get_or("variant", "optimized"))
+                .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
+            let dir = artifacts_dir(args);
+            let plan = plan_policy(args, &dir)?;
+            let threads = pick_threads(args, &plan)?;
+            let (handle, manifest) =
+                spawn_device_host_discovered(&dir, HostConfig { threads, plan })?;
+            // Tile: the tuned tile profile when one exists (same
+            // --no-profile suppression as the plan profile), else the
+            // cache-sized default pick.
+            let tile_path = TileProfile::default_path(&dir);
+            let tuned = if !args.flag("no-profile") && tile_path.exists() {
+                eprintln!("using tile profile {tile_path:?} (suppress with --no-profile)");
+                TileProfile::load(&tile_path)?.lookup(n)
+            } else {
+                None
+            };
+            let sorter = match tuned {
+                Some(tile) => bitonic_tpu::sort::HierarchicalSorter::with_tile(
+                    handle, &manifest, variant, tile,
+                )?,
+                None => bitonic_tpu::sort::HierarchicalSorter::new(handle, &manifest, variant)?,
+            };
+            let stats = sorter.sort(&mut keys)?;
+            eprintln!(
+                "hier: tile={} tiles={} device_dispatches={}",
+                stats.tile, stats.tiles, stats.device_dispatches
             );
         }
         "device" => {
@@ -239,7 +302,7 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             let plan = plan_policy(args, &dir)?;
             let threads = pick_threads(args, &plan)?;
             let (handle, manifest) =
-                spawn_device_host_with(&dir, HostConfig { threads, plan })?;
+                spawn_device_host_discovered(&dir, HostConfig { threads, plan })?;
             let padded = n.next_power_of_two();
             let meta = manifest
                 .size_classes(variant)
@@ -279,7 +342,7 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let host_threads = pick_threads(args, &plan)?;
     let service_threads: usize = args.parsed_or("threads", 8)?;
     let (handle, manifest) =
-        spawn_device_host_with(&dir, HostConfig { threads: host_threads, plan })?;
+        spawn_device_host_discovered(&dir, HostConfig { threads: host_threads, plan })?;
     println!(
         "warming {} artifacts… ({host_threads} executor / {service_threads} service threads)",
         manifest.size_classes(variant).len()
@@ -450,6 +513,9 @@ fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
 /// profile `sort`/`serve` consult on start-up.
 fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let dir = artifacts_dir(args);
+    if args.flag("hier") {
+        return cmd_tune_hier(args, &dir);
+    }
     let manifest = Manifest::load(&dir)?;
     let smoke = args.flag("smoke");
 
@@ -564,6 +630,83 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     Ok(())
 }
 
+/// `bitonic-tpu tune --hier`: sweep the hierarchical sorter's tile axis
+/// over every mega size class the (merged) menu reaches, persisting the
+/// fastest tile per n as `autotune_hier.tsv` — the profile
+/// `sort --algo hier` consults.
+fn cmd_tune_hier(
+    args: &bitonic_tpu::util::cli::Args,
+    dir: &std::path::Path,
+) -> bitonic_tpu::Result<()> {
+    let smoke = args.flag("smoke");
+    let plan = plan_policy(args, dir)?;
+    let threads = pick_threads(args, &plan)?;
+    let (handle, manifest) = spawn_device_host_discovered(dir, HostConfig { threads, plan })?;
+
+    // Target sizes: every u32-asc class above the default tile cap —
+    // below it the flat device path wins by construction; smoke keeps
+    // the two smallest mega targets so CI stays in seconds.
+    let mut targets: Vec<usize> = manifest
+        .size_classes(Variant::Optimized)
+        .into_iter()
+        .map(|m| m.n)
+        .filter(|&n| n > bitonic_tpu::sort::hybrid::DEFAULT_TILE_CAP)
+        .collect();
+    targets.sort_unstable();
+    targets.dedup();
+    if smoke {
+        targets.truncate(2);
+    }
+    bitonic_tpu::ensure!(
+        !targets.is_empty(),
+        "no size class above the {} tile cap — run `bitonic-tpu gen-artifacts` first",
+        fmt_size(bitonic_tpu::sort::hybrid::DEFAULT_TILE_CAP)
+    );
+
+    let bench = if smoke {
+        bitonic_tpu::bench::Bench {
+            warmup: 1,
+            min_iters: 2,
+            max_iters: 5,
+            target: std::time::Duration::from_millis(400),
+        }
+    } else {
+        bitonic_tpu::bench::Bench::quick()
+    };
+    let seed: u64 = args.parsed_or("seed", 42)?;
+    println!(
+        "tuning hierarchical tiles for {} target size(s) {:?}{}…",
+        targets.len(),
+        targets,
+        if smoke { " (smoke grid)" } else { "" }
+    );
+    let t0 = Instant::now();
+    let profile = tune_tiles(&handle, &manifest, &targets, &bench, seed)?;
+    handle.shutdown();
+
+    let mut t = Table::new(vec!["n", "chosen tile", "keys/sec"]);
+    for e in &profile.entries {
+        t.row(vec![
+            fmt_size(e.n),
+            fmt_size(e.tile),
+            format!("{:.0}", e.keys_per_sec),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let path = match args.get("profile") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => TileProfile::default_path(dir),
+    };
+    profile.save(&path)?;
+    println!(
+        "wrote {} tiled class(es) to {path:?} in {:.1}s — `sort --algo hier` picks it up automatically",
+        profile.entries.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 /// `--trajectory PATH` if given, else the library default
 /// (`$BENCH_TRAJECTORY_JSON`, or `BENCH_trajectory.json` at the
 /// workspace root — producers run with different cwds, see
@@ -596,7 +739,8 @@ fn cmd_bench(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let device = (|| -> bitonic_tpu::Result<DeviceCtx> {
         let plan = plan_policy(args, &dir)?;
         let threads = pick_threads(args, &plan)?;
-        let (handle, manifest) = spawn_device_host_with(&dir, HostConfig { threads, plan })?;
+        let (handle, manifest) =
+            spawn_device_host_discovered(&dir, HostConfig { threads, plan })?;
         Ok(DeviceCtx { handle, manifest, threads })
     })();
     let device = match device {
@@ -619,6 +763,17 @@ fn cmd_bench(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let t0 = Instant::now();
     let mut records = run_matrix(&cfg, device.as_ref())?;
     records.extend(run_pass_ablation(&cfg.sizes, &cfg.bench, cfg.seed));
+    // Mega cells: the hierarchical substrate above the flat-artifact
+    // ceiling, each paired with a quicksort baseline (and, when the
+    // merged menu reaches, a flat-device crossover point).
+    if let Some(ctx) = &device {
+        let mega_sizes: &[usize] = if smoke {
+            &[1 << 18]
+        } else {
+            &[1 << 17, 1 << 18, 1 << 20]
+        };
+        records.extend(run_mega_cells(ctx, mega_sizes, &cfg.bench, cfg.seed)?);
+    }
     if let Some(ctx) = device {
         ctx.handle.shutdown();
     }
@@ -643,6 +798,28 @@ fn cmd_bench(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         ]);
     }
     println!("{}", t.render());
+
+    // The mega-sort headline: hierarchical substrate vs quicksort.
+    let hier: Vec<_> = records
+        .iter()
+        .filter(|r| r.substrate == "hierarchical")
+        .collect();
+    if !hier.is_empty() {
+        let mut t = Table::new(vec!["n", "hier ms/row", "tile", "speedup vs quick"]);
+        for r in hier {
+            t.row(vec![
+                fmt_size(r.n),
+                fmt_ms(r.ms_per_row()),
+                r.extra_f64("tile")
+                    .map(|v| fmt_size(v as usize))
+                    .unwrap_or("—".into()),
+                r.extra_f64("speedup_vs_quicksort")
+                    .map(|s| format!("{s:.2}x"))
+                    .unwrap_or("—".into()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
 
     let path = trajectory_path(args);
     let appended = records.len();
@@ -744,6 +921,45 @@ fn cmd_gen_data(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> 
     let keys = Generator::new(seed).u32s(n, dist);
     bitonic_tpu::workload::datasets::save_u32(&path, &keys)?;
     println!("wrote {n} {} u32 keys to {path}", dist.name());
+    Ok(())
+}
+
+/// `bitonic-tpu gen-artifacts [--smoke]`: synthesize the default (or
+/// smoke) grid of HLO sort/merge artifacts natively — no Python, no jax
+/// — into `<artifacts>/generated` (smoke: `generated-smoke`), where the
+/// drivers' merged discovery picks them up. Validate the result with
+/// `verify-plans --artifacts <gen dir>`.
+fn cmd_gen_artifacts(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let dir = artifacts_dir(args);
+    let smoke = args.flag("smoke");
+    let out = match args.get("gen-dir") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => dir.join(if smoke { "generated-smoke" } else { "generated" }),
+    };
+    let specs = if smoke {
+        genart::smoke_grid()
+    } else {
+        genart::default_grid()
+    };
+    let t0 = Instant::now();
+    let report = bitonic_tpu::runtime::generate_artifacts(&out, &specs)?;
+    println!(
+        "wrote {} HLO artifact(s) / {} manifest row(s) to {:?} in {:.1}s — menu now reaches n={}{}",
+        report.written,
+        report.rows,
+        report.dir,
+        t0.elapsed().as_secs_f64(),
+        fmt_size(report.max_sort_n),
+        if smoke { " (smoke grid)" } else { "" },
+    );
+    if out == dir.join("generated") {
+        println!("sort/serve/bench auto-merge this dir into the fixture menu");
+    } else {
+        println!(
+            "serve it via --artifacts {:?} or BITONIC_GEN_ARTIFACTS={:?}",
+            report.dir, report.dir
+        );
+    }
     Ok(())
 }
 

@@ -129,6 +129,33 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Load `<primary>/manifest.tsv` and merge `<extra>/manifest.tsv`
+    /// on top of it: the union of both menus, with *primary* rows
+    /// winning on size-class collisions (so a generated grid can never
+    /// shadow the audited fixture). Merged-in entries carry an
+    /// *absolute* `file` path — [`Manifest::path_of`] joins against
+    /// `self.dir`, and joining an absolute path is the identity, so
+    /// every existing consumer resolves both dirs unchanged.
+    pub fn load_merged(
+        primary: impl AsRef<Path>,
+        extra: impl AsRef<Path>,
+    ) -> crate::Result<Self> {
+        let mut base = Self::load(primary)?;
+        let extra_dir = extra.as_ref();
+        let added = Self::load(extra_dir)
+            .with_context(|| format!("merging generated artifacts from {extra_dir:?}"))?;
+        let taken: std::collections::HashSet<crate::runtime::registry::Key> =
+            base.entries.iter().map(crate::runtime::registry::Key::of).collect();
+        for mut meta in added.entries {
+            if taken.contains(&crate::runtime::registry::Key::of(&meta)) {
+                continue;
+            }
+            meta.file = added.dir.join(&meta.file);
+            base.entries.push(meta);
+        }
+        Ok(base)
+    }
+
     /// Parse manifest text (exposed for tests).
     pub fn parse(dir: PathBuf, text: &str) -> crate::Result<Self> {
         let mut lines = text.lines();
@@ -273,6 +300,50 @@ mod tests {
         assert!(m.entries[3].descending);
         assert_eq!(m.entries[4].kind, ArtifactKind::Merge);
         assert_eq!(m.path_of(&m.entries[1]), PathBuf::from("/x/b.hlo.txt"));
+    }
+
+    #[test]
+    fn load_merged_unions_menus_with_primary_winning() {
+        let base = std::env::temp_dir().join(format!(
+            "bitonic-manifest-merge-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let (primary, extra) = (base.join("fixture"), base.join("generated"));
+        std::fs::create_dir_all(&primary).unwrap();
+        std::fs::create_dir_all(&extra).unwrap();
+        const HEADER: &str =
+            "name\tkind\tvariant\tbatch\tn\tdtype\tdescending\tblock\tgrid_cells\tfile\n";
+        std::fs::write(
+            primary.join("manifest.tsv"),
+            format!("{HEADER}sort_optimized_b1_n1024_uint32_asc\tsort\toptimized\t1\t1024\tuint32\t0\t256\t4\tfix.hlo.txt\n"),
+        )
+        .unwrap();
+        // The generated dir re-lists the fixture's class (must lose)
+        // plus a genuinely new 1M class (must join the menu).
+        std::fs::write(
+            extra.join("manifest.tsv"),
+            format!(
+                "{HEADER}sort_optimized_b1_n1024_uint32_asc\tsort\toptimized\t1\t1024\tuint32\t0\t256\t4\tdup.hlo.txt\n\
+                 sort_optimized_b1_n1048576_uint32_asc\tsort\toptimized\t1\t1048576\tuint32\t0\t256\t4096\tbig.hlo.txt\n"
+            ),
+        )
+        .unwrap();
+        let m = Manifest::load_merged(&primary, &extra).unwrap();
+        assert_eq!(m.dir, primary);
+        assert_eq!(m.entries.len(), 2);
+        // Collision resolved in the fixture's favour.
+        let small = m
+            .find(Variant::Optimized, 1, 1024, Dtype::U32, false)
+            .unwrap();
+        assert_eq!(m.path_of(small), primary.join("fix.hlo.txt"));
+        // Merged-in entry resolves into the generated dir even though
+        // path_of joins against the primary dir (absolute file path).
+        let big = m
+            .find(Variant::Optimized, 1, 1 << 20, Dtype::U32, false)
+            .unwrap();
+        assert_eq!(m.path_of(big), extra.join("big.hlo.txt"));
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -44,14 +44,16 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use crate::bench::{black_box, Bench};
+use crate::sort::hybrid::HierarchicalSorter;
 use crate::sort::network::Variant;
 use crate::sort::SortKey;
 use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::{Distribution, Generator};
 
-use super::artifact::{ArtifactKind, Dtype};
+use super::artifact::{ArtifactKind, Dtype, Manifest};
 use super::executor::{effective_interleave, execute_batch, ExecutionPlan, PlanConfig};
+use super::host::DeviceHandle;
 
 /// One measured (or chosen) tuning point: the fastest known executor
 /// configuration for a `(n, dtype)` size class on this host.
@@ -162,13 +164,42 @@ impl TuningProfile {
     /// The tuned entry for a size class: an exact `(n, dtype)` match,
     /// else the nearest same-dtype class with `entry.n >= n` (its cache
     /// trade-offs dominate ours), else the largest same-dtype class.
+    ///
+    /// When the final fallback reaches *down* more than 4× (a generated
+    /// mega-class served off a profile tuned only up to the fixture
+    /// ceiling, say), the choice is logged with its distance — the
+    /// silent version of this stranded exactly that case before the
+    /// menu could outgrow the profile.
     pub fn lookup(&self, n: usize, dtype: Dtype) -> Option<&TunedEntry> {
+        let e = self.lookup_quiet(n, dtype)?;
+        if let Some(factor) = Self::fallback_shortfall(e, n) {
+            eprintln!(
+                "WARN autotune: no tuned class for n={n} dtype={}; \
+                 falling back to n={} — {factor}x smaller (re-run `bitonic-tpu tune` \
+                 after extending the artifact menu)",
+                dtype.name(),
+                e.n,
+            );
+        }
+        Some(e)
+    }
+
+    /// [`TuningProfile::lookup`] without the distance WARN (tests and
+    /// callers that report the shortfall themselves).
+    pub fn lookup_quiet(&self, n: usize, dtype: Dtype) -> Option<&TunedEntry> {
         let same: Vec<&TunedEntry> = self.entries.iter().filter(|e| e.dtype == dtype).collect();
         same.iter()
             .find(|e| e.n == n)
             .copied()
             .or_else(|| same.iter().filter(|e| e.n >= n).min_by_key(|e| e.n).copied())
             .or_else(|| same.iter().max_by_key(|e| e.n).copied())
+    }
+
+    /// `Some(n / entry.n)` when the class `lookup` settled on is more
+    /// than 4× smaller than the requested `n` — the fallback distance
+    /// worth warning about. `None` for exact, larger, or near misses.
+    pub fn fallback_shortfall(entry: &TunedEntry, n: usize) -> Option<usize> {
+        (entry.n.saturating_mul(4) < n).then(|| n / entry.n)
     }
 
     /// The pool size the profile recommends for a host serving every
@@ -282,6 +313,160 @@ impl From<PlanConfig> for PlanPolicy {
     fn from(base: PlanConfig) -> Self {
         Self::fixed(base)
     }
+}
+
+/// One measured tile-size candidate for the hierarchical mega-sort path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileEntry {
+    /// Total input length the measurement sorted.
+    pub n: usize,
+    /// Tile size chosen (device-sorted run length; a menu sort class).
+    pub tile: usize,
+    /// Measured throughput, keys per second.
+    pub keys_per_sec: f64,
+}
+
+/// The autotuner's **tile axis**: persisted tile-size choices for
+/// [`crate::sort::HierarchicalSorter`], one line per mega-sort length.
+/// Lives in its own TSV (`autotune_hier.tsv`) so the strict 7-field
+/// plan-profile format stays byte-stable for existing tooling.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TileProfile {
+    /// One chosen entry per measured total length.
+    pub entries: Vec<TileEntry>,
+}
+
+const TILE_HEADER: &str = "n\ttile\tkeys_per_sec";
+
+impl TileProfile {
+    /// Canonical location next to the plan profile: `<artifacts>/autotune_hier.tsv`.
+    pub fn default_path(artifacts_dir: impl AsRef<Path>) -> PathBuf {
+        artifacts_dir.as_ref().join("autotune_hier.tsv")
+    }
+
+    /// Load and validate a tile profile TSV.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading tile profile {path:?} — generate one with `bitonic-tpu tune --hier`")
+        })?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line == TILE_HEADER {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            crate::ensure!(
+                f.len() == 3,
+                "tile profile {path:?} line {}: want 3 tab-separated fields, got {}",
+                lineno + 1,
+                f.len()
+            );
+            let entry = TileEntry {
+                n: f[0].parse().with_context(|| format!("line {}: n", lineno + 1))?,
+                tile: f[1].parse().with_context(|| format!("line {}: tile", lineno + 1))?,
+                keys_per_sec: f[2]
+                    .parse()
+                    .with_context(|| format!("line {}: keys_per_sec", lineno + 1))?,
+            };
+            crate::ensure!(
+                entry.n.is_power_of_two()
+                    && entry.tile.is_power_of_two()
+                    && entry.tile >= 2
+                    && entry.tile <= entry.n,
+                "tile profile {path:?} line {}: malformed entry {entry:?}",
+                lineno + 1
+            );
+            entries.push(entry);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Write the tile profile TSV.
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        let mut out =
+            String::from("# bitonic-tpu tile profile — written by `bitonic-tpu tune --hier`\n");
+        out.push_str(TILE_HEADER);
+        out.push('\n');
+        for e in &self.entries {
+            out.push_str(&format!("{}\t{}\t{:.1}\n", e.n, e.tile, e.keys_per_sec));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing tile profile {path:?}"))
+    }
+
+    /// The tuned tile for a mega-sort of `n` keys: exact match, else the
+    /// nearest measured length above `n`, else the largest measured
+    /// length — the same fallback ladder as [`TuningProfile::lookup`].
+    pub fn lookup(&self, n: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|e| e.n == n)
+            .or_else(|| self.entries.iter().filter(|e| e.n >= n).min_by_key(|e| e.n))
+            .or_else(|| self.entries.iter().max_by_key(|e| e.n))
+            .map(|e| e.tile)
+    }
+}
+
+/// Sweep the tile axis: for every requested total length, sort a fresh
+/// uniform input through a [`HierarchicalSorter`] per candidate tile
+/// class (every ascending-u32 sort class that fits) and keep the
+/// fastest. The measurement runs the real device-host dispatch path —
+/// batched tile sorts plus the loser-tree merge — so the persisted
+/// choice reflects the whole pipeline, not just the kernel.
+pub fn tune_tiles(
+    handle: &DeviceHandle,
+    manifest: &Manifest,
+    ns: &[usize],
+    bench: &Bench,
+    seed: u64,
+) -> crate::Result<TileProfile> {
+    let mut menu: Vec<usize> = manifest
+        .size_classes(Variant::Optimized)
+        .into_iter()
+        .map(|m| m.n)
+        .collect();
+    menu.sort_unstable();
+    menu.dedup();
+    let mut entries = Vec::new();
+    for &n in ns {
+        let candidates: Vec<usize> = menu.iter().copied().filter(|&t| t <= n).collect();
+        crate::ensure!(
+            !candidates.is_empty(),
+            "tune-tiles: no sort class fits inside n={n}"
+        );
+        let mut best: Option<TileEntry> = None;
+        for tile in candidates {
+            let sorter = HierarchicalSorter::with_tile(
+                handle.clone(),
+                manifest,
+                Variant::Optimized,
+                tile,
+            )?;
+            let mut gen = Generator::new(seed);
+            let label = format!("tune-tiles n={n} tile={tile}");
+            let meas = bench.run_with_setup(
+                &label,
+                &mut || gen.u32s(n, Distribution::Uniform),
+                |mut data| {
+                    sorter.sort(&mut data).expect("tile sweep sort must execute");
+                    black_box(&data);
+                },
+            );
+            let secs = meas.median_ns() as f64 / 1e9;
+            let keys_per_sec = if secs > 0.0 { n as f64 / secs } else { f64::MAX };
+            let entry = TileEntry { n, tile, keys_per_sec };
+            if best
+                .as_ref()
+                .is_none_or(|b| entry.keys_per_sec > b.keys_per_sec)
+            {
+                best = Some(entry.clone());
+            }
+        }
+        entries.push(best.expect("tune-tiles: empty candidate grid"));
+    }
+    Ok(TileProfile { entries })
 }
 
 /// One sweep request: which classes to tune and the candidate grid.
@@ -533,6 +718,52 @@ mod tests {
         // Dtypes never cross.
         assert_eq!(p.lookup(1024, Dtype::F32).unwrap().block, 512);
         assert!(p.lookup(1024, Dtype::I32).is_none());
+    }
+
+    #[test]
+    fn deep_fallback_reports_its_distance() {
+        let p = TuningProfile {
+            entries: vec![entry(1024, Dtype::U32, 256, 4, 1)],
+        };
+        // 1M served off a 1K-tuned profile: 1024x smaller — warn-worthy.
+        let e = p.lookup_quiet(1 << 20, Dtype::U32).unwrap();
+        assert_eq!(e.n, 1024);
+        assert_eq!(TuningProfile::fallback_shortfall(e, 1 << 20), Some(1024));
+        // Exactly 4x smaller is a near miss, not a warning.
+        assert_eq!(TuningProfile::fallback_shortfall(e, 4096), None);
+        assert_eq!(TuningProfile::fallback_shortfall(e, 8192), Some(8));
+        // Exact and upward fallbacks never report a shortfall.
+        assert_eq!(TuningProfile::fallback_shortfall(e, 1024), None);
+        assert_eq!(TuningProfile::fallback_shortfall(e, 64), None);
+        // The warning path returns the same entry as the quiet path.
+        assert_eq!(p.lookup(1 << 20, Dtype::U32).unwrap().n, 1024);
+    }
+
+    #[test]
+    fn tile_profile_roundtrip_and_lookup_ladder() {
+        let dir = std::env::temp_dir().join("bitonic-tpu-autotune-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiles.tsv");
+        let profile = TileProfile {
+            entries: vec![
+                TileEntry { n: 1 << 18, tile: 1 << 14, keys_per_sec: 5e6 },
+                TileEntry { n: 1 << 20, tile: 1 << 16, keys_per_sec: 4e6 },
+            ],
+        };
+        profile.save(&path).unwrap();
+        let loaded = TileProfile::load(&path).unwrap();
+        assert_eq!(loaded, profile);
+        // Exact, next-larger, and beyond-the-top fallbacks.
+        assert_eq!(loaded.lookup(1 << 18), Some(1 << 14));
+        assert_eq!(loaded.lookup(1 << 19), Some(1 << 16));
+        assert_eq!(loaded.lookup(1 << 24), Some(1 << 16));
+        assert_eq!(TileProfile::default().lookup(1 << 18), None);
+        // tile > n is malformed.
+        std::fs::write(&path, format!("{TILE_HEADER}\n1024\t4096\t1.0\n")).unwrap();
+        assert!(TileProfile::load(&path).is_err());
+        // The missing-file error names the CLI that generates one.
+        let err = TileProfile::load(dir.join("no-tiles.tsv")).unwrap_err();
+        assert!(format!("{err:#}").contains("tune --hier"));
     }
 
     #[test]

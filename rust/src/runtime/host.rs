@@ -142,10 +142,37 @@ pub fn spawn_with(
     dir: impl AsRef<std::path::Path>,
     config: HostConfig,
 ) -> crate::Result<(DeviceHandle, Manifest)> {
-    let dir = dir.as_ref().to_path_buf();
     // Parse the manifest on the caller thread first: fail fast, and give
     // the caller its snapshot without a channel round-trip.
-    let manifest = Manifest::load(&dir)?;
+    spawn_manifest(Manifest::load(dir)?, config)
+}
+
+/// [`spawn_with`] plus merged artifact discovery: the menu is the union
+/// of `dir`'s manifest and the generated-artifacts dir resolved by
+/// [`super::generated_artifacts_dir`] (`$BITONIC_GEN_ARTIFACTS`, else
+/// `<dir>/generated`) when one exists — fixture rows win on collisions.
+/// This is what the CLI drivers use, so a `bitonic-tpu gen-artifacts`
+/// run extends every subsequent sort/serve/bench menu without flags.
+pub fn spawn_discovered(
+    dir: impl AsRef<std::path::Path>,
+    config: HostConfig,
+) -> crate::Result<(DeviceHandle, Manifest)> {
+    let dir = dir.as_ref();
+    let manifest = match super::generated_artifacts_dir(dir) {
+        Some(generated) => Manifest::load_merged(dir, &generated)?,
+        None => Manifest::load(dir)?,
+    };
+    spawn_manifest(manifest, config)
+}
+
+/// Spawn the host thread over an already-loaded manifest snapshot; the
+/// registry the host serves is built from the same snapshot, so caller
+/// and host can never disagree about the menu.
+pub fn spawn_manifest(
+    manifest: Manifest,
+    config: HostConfig,
+) -> crate::Result<(DeviceHandle, Manifest)> {
+    let host_manifest = manifest.clone();
     let (tx, rx) = channel::<Request>();
     let (ready_tx, ready_rx) = channel::<crate::Result<()>>();
     std::thread::Builder::new()
@@ -153,16 +180,8 @@ pub fn spawn_with(
         .spawn(move || {
             let pool = (config.threads > 1)
                 .then(|| Arc::new(ThreadPool::new(config.threads, 2 * config.threads)));
-            let registry = match Registry::open_with_pool(&dir, pool, config.plan) {
-                Ok(r) => {
-                    let _ = ready_tx.send(Ok(()));
-                    r
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
+            let registry = Registry::from_manifest(host_manifest, pool, config.plan);
+            let _ = ready_tx.send(Ok(()));
             while let Ok(req) = rx.recv() {
                 match req {
                     Request::SortU32 { key, rows, reply } => {

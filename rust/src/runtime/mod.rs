@@ -27,19 +27,23 @@
 pub mod artifact;
 pub mod autotune;
 pub mod executor;
+pub mod genart;
 pub mod host;
 pub mod registry;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Dtype, Manifest};
+pub use genart::{generate as generate_artifacts, GenReport, GenSpec};
 pub use autotune::{
-    tune, PlanPolicy, TuneOutcome, TuneRequest, TunedEntry, TuningProfile,
+    tune, tune_tiles, PlanPolicy, TileEntry, TileProfile, TuneOutcome, TuneRequest, TunedEntry,
+    TuningProfile,
 };
 pub use executor::{
     effective_interleave, ExecutionPlan, PlanConfig, SortExecutor, DEFAULT_PLAN_BLOCK,
     DEFAULT_PLAN_INTERLEAVE,
 };
 pub use host::{
-    spawn as spawn_device_host, spawn_with as spawn_device_host_with, DeviceHandle, HostConfig,
+    spawn as spawn_device_host, spawn_discovered as spawn_device_host_discovered,
+    spawn_with as spawn_device_host_with, DeviceHandle, HostConfig,
 };
 pub use registry::{Key, Registry};
 
@@ -57,4 +61,17 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
         return local;
     }
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+/// Resolve the *generated* artifacts directory merged on top of the
+/// checked-in fixture menu: `$BITONIC_GEN_ARTIFACTS` if set, else
+/// `<primary>/generated` (gitignored; written by
+/// `bitonic-tpu gen-artifacts`). Returns `None` when no generated
+/// manifest exists — discovery then falls back to the single-dir path.
+pub fn generated_artifacts_dir(primary: &std::path::Path) -> Option<std::path::PathBuf> {
+    let dir = match std::env::var("BITONIC_GEN_ARTIFACTS") {
+        Ok(d) if !d.is_empty() => std::path::PathBuf::from(d),
+        _ => primary.join("generated"),
+    };
+    dir.join("manifest.tsv").exists().then_some(dir)
 }

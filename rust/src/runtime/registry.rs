@@ -84,12 +84,24 @@ impl Registry {
         policy: impl Into<PlanPolicy>,
     ) -> crate::Result<Self> {
         let manifest = Manifest::load(dir)?;
-        Ok(Self {
+        Ok(Self::from_manifest(manifest, pool, policy))
+    }
+
+    /// Build a registry over an already-loaded manifest — the seam the
+    /// merged fixture+generated discovery uses so the device host and
+    /// its caller share one snapshot instead of re-reading (and
+    /// possibly re-merging) the directory twice.
+    pub fn from_manifest(
+        manifest: Manifest,
+        pool: Option<Arc<ThreadPool>>,
+        policy: impl Into<PlanPolicy>,
+    ) -> Self {
+        Self {
             manifest,
             cache: Mutex::new(HashMap::new()),
             pool,
             policy: policy.into(),
-        })
+        }
     }
 
     /// The manifest the registry serves.

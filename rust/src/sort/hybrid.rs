@@ -194,6 +194,147 @@ impl HybridSorter {
     }
 }
 
+/// Largest tile the hierarchical sorter picks by default: the fixture's
+/// top sort class, which is also roughly L2-sized for 4-byte keys —
+/// tiles above this stop fitting cache and the k-way merge's streaming
+/// advantage evaporates.
+pub const DEFAULT_TILE_CAP: usize = 1 << 16;
+
+/// Statistics of one hierarchical sort.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HierarchicalStats {
+    /// Tile size used (keys per device-sorted run).
+    pub tile: usize,
+    /// Number of tiles the input split into (= fan-in of the k-way merge).
+    pub tiles: usize,
+    /// Device sort executions (each sorts up to B tiles).
+    pub device_dispatches: usize,
+}
+
+/// Hierarchical mega-sort: the large-n path past the merge-artifact
+/// ladder (GPU Sample Sort's shape — Leischner et al., PAPERS.md).
+///
+/// Where [`HybridSorter`] climbs a pairwise device merge *tree*
+/// (re-touching every key per level), this sorter does exactly two
+/// passes over the data:
+///
+/// 1. **Tile sort** — split the mega-row into cache-sized tiles and
+///    device-sort them with the fused launch programs, up to `B` tiles
+///    per dispatch (batch-interleaved across tiles by the executor).
+/// 2. **k-way merge** — one streaming [`crate::sort::kmerge`] pass over
+///    all tiles (`O(n log k)` comparisons, each key read/written once).
+///
+/// Exact for any input length: the tail tile is MAX-padded, and the
+/// loser tree tracks run exhaustion positionally, so real `MAX` keys
+/// survive.
+pub struct HierarchicalSorter {
+    handle: DeviceHandle,
+    /// Tile-sized ascending-u32 sort artifact.
+    tile_meta: ArtifactMeta,
+}
+
+impl HierarchicalSorter {
+    /// Build with the default tile class: the largest ascending-u32 sort
+    /// artifact no bigger than [`DEFAULT_TILE_CAP`] (falling back to the
+    /// smallest class if the menu only has mega-artifacts).
+    pub fn new(
+        handle: DeviceHandle,
+        manifest: &Manifest,
+        variant: Variant,
+    ) -> crate::Result<Self> {
+        let tile = Self::pick_tile(manifest, variant, None)
+            .context("no sort artifacts in manifest")?;
+        Self::with_tile(handle, manifest, variant, tile)
+    }
+
+    /// [`HierarchicalSorter::new`] with an explicit tile size (must match
+    /// a sort artifact's row length) — the autotuner's tile axis and the
+    /// ablation benches use this.
+    pub fn with_tile(
+        handle: DeviceHandle,
+        manifest: &Manifest,
+        variant: Variant,
+        tile: usize,
+    ) -> crate::Result<Self> {
+        let tile_meta = manifest
+            .size_classes(variant)
+            .into_iter()
+            .filter(|m| m.n == tile)
+            .max_by_key(|m| m.batch)
+            .with_context(|| format!("no sort artifact with rows of {tile}"))?
+            .clone();
+        Ok(Self { handle, tile_meta })
+    }
+
+    /// Choose a tile size from the menu: the largest class `<= cap`
+    /// (default [`DEFAULT_TILE_CAP`]), else the smallest class. `None`
+    /// when the menu has no sort artifacts at all.
+    pub fn pick_tile(
+        manifest: &Manifest,
+        variant: Variant,
+        cap: Option<usize>,
+    ) -> Option<usize> {
+        let cap = cap.unwrap_or(DEFAULT_TILE_CAP);
+        let ns: Vec<usize> = manifest
+            .size_classes(variant)
+            .into_iter()
+            .map(|m| m.n)
+            .collect();
+        ns.iter()
+            .filter(|&&n| n <= cap)
+            .max()
+            .or_else(|| ns.iter().min())
+            .copied()
+    }
+
+    /// Tile size (keys per device-sorted run).
+    pub fn tile(&self) -> usize {
+        self.tile_meta.n
+    }
+
+    /// Sort `keys` ascending, any length. Returns execution statistics.
+    pub fn sort(&self, keys: &mut Vec<u32>) -> crate::Result<HierarchicalStats> {
+        let real_len = keys.len();
+        let tile = self.tile();
+        let mut stats = HierarchicalStats {
+            tile,
+            ..Default::default()
+        };
+        if real_len <= 1 {
+            return Ok(stats);
+        }
+
+        // ---- pass 1: device-sort tiles, B at a time --------------------
+        let padded_len = real_len.div_ceil(tile) * tile;
+        keys.resize(padded_len, u32::MAX);
+        let (b, n) = (self.tile_meta.batch, self.tile_meta.n);
+        let sort_key = Key::of(&self.tile_meta);
+        let mut sorted = Vec::with_capacity(padded_len);
+        for group in keys.chunks(b * n) {
+            let mut buf = group.to_vec();
+            buf.resize(b * n, u32::MAX);
+            let out = self.handle.sort_u32(sort_key, buf)?;
+            stats.device_dispatches += 1;
+            sorted.extend_from_slice(&out[..group.len()]);
+        }
+        debug_assert_eq!(sorted.len(), padded_len);
+        stats.tiles = padded_len / tile;
+
+        // ---- pass 2: one streaming k-way merge over all tiles ----------
+        if stats.tiles == 1 {
+            sorted.truncate(real_len);
+            *keys = sorted;
+            return Ok(stats);
+        }
+        let runs: Vec<&[u32]> = sorted.chunks(tile).collect();
+        let mut merged = Vec::new();
+        crate::sort::kmerge::kway_merge(&runs, &mut merged);
+        merged.truncate(real_len);
+        *keys = merged;
+        Ok(stats)
+    }
+}
+
 /// Streaming two-way merge of sorted `a` and `b` onto the end of `out`.
 fn merge_two(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
     let (mut i, mut j) = (0, 0);

@@ -1,0 +1,206 @@
+//! Loser-tree k-way merge: the CPU half of the hierarchical mega-sort.
+//!
+//! The hierarchical path (see [`crate::sort::hybrid`]) device-sorts a
+//! mega-row as cache-sized tiles and then needs the tiles merged in one
+//! streaming pass. A pairwise merge tree re-reads every key `log2(k)`
+//! times; a tournament (loser) tree reads each key once and decides the
+//! next output in exactly `ceil(log2(k))` comparisons — the classic
+//! external-merge kernel (Knuth TAOCP §5.4.1), and the same shape GPU
+//! Sample Sort uses for its bucket recombination.
+//!
+//! Keys compare with [`SortKey::total_lt`], so f32 merges agree with the
+//! network kernels' total order (NaN sorts high) and exhausted runs are
+//! tracked positionally — a run whose keys *are* `MAX_KEY` still merges
+//! correctly, which the MAX-padded ragged-tail tests rely on.
+
+use crate::sort::SortKey;
+
+/// Tournament tree over `k` sorted runs; yields the global minimum on
+/// every [`LoserTree::pop`] in `ceil(log2 k)` comparisons.
+///
+/// Layout: conceptual leaves at `k..2k` (leaf `k + j` is run `j`),
+/// internal nodes at `1..k` each holding the *loser* of the match below
+/// it, and the overall winner cached at `tree[0]`. Works for any `k >= 1`
+/// (the tree just becomes ragged, parent links `node/2` still hold).
+pub struct LoserTree<'a, T: SortKey> {
+    runs: Vec<&'a [T]>,
+    /// Next unconsumed index in each run.
+    pos: Vec<usize>,
+    /// `tree[0]` = current winner run; `tree[1..k]` = losers.
+    tree: Vec<usize>,
+    k: usize,
+}
+
+impl<'a, T: SortKey> LoserTree<'a, T> {
+    /// Build the tournament over `runs` (each individually sorted
+    /// ascending under `total_lt`; empty runs are fine).
+    pub fn new(runs: Vec<&'a [T]>) -> Self {
+        let k = runs.len().max(1);
+        let mut t = LoserTree {
+            pos: vec![0; runs.len()],
+            runs,
+            tree: vec![0; k],
+            k,
+        };
+        // Seed every leaf, then play matches bottom-up; each internal
+        // node keeps its loser and forwards its winner.
+        let mut winners = vec![0usize; 2 * k];
+        for j in 0..t.runs.len() {
+            winners[k + j] = j;
+        }
+        for j in t.runs.len()..k {
+            winners[k + j] = 0; // k = 0 guard: single virtual leaf
+        }
+        for node in (1..k).rev() {
+            let (a, b) = (winners[2 * node], winners[2 * node + 1]);
+            if t.leads(a, b) {
+                winners[node] = a;
+                t.tree[node] = b;
+            } else {
+                winners[node] = b;
+                t.tree[node] = a;
+            }
+        }
+        t.tree[0] = winners[1];
+        t
+    }
+
+    fn head(&self, run: usize) -> Option<T> {
+        self.runs
+            .get(run)
+            .and_then(|r| r.get(self.pos[run]))
+            .copied()
+    }
+
+    /// Does `a`'s head beat `b`'s? Exhausted runs lose to everything;
+    /// ties break on run index, making the merge stable in run order.
+    fn leads(&self, a: usize, b: usize) -> bool {
+        match (self.head(a), self.head(b)) {
+            (None, _) => false,
+            (Some(_), None) => true,
+            (Some(x), Some(y)) => {
+                if x.total_lt(&y) {
+                    true
+                } else if y.total_lt(&x) {
+                    false
+                } else {
+                    a <= b
+                }
+            }
+        }
+    }
+
+    /// Remove and return the smallest remaining key, or `None` once all
+    /// runs are exhausted.
+    pub fn pop(&mut self) -> Option<T> {
+        let winner = self.tree[0];
+        let val = self.head(winner)?;
+        self.pos[winner] += 1;
+        // Replay the winner's path: at each ancestor the stored loser
+        // challenges the ascending run; the better one keeps climbing.
+        let mut cur = winner;
+        let mut node = (self.k + winner) / 2;
+        while node >= 1 {
+            let loser = self.tree[node];
+            if self.leads(loser, cur) {
+                self.tree[node] = cur;
+                cur = loser;
+            }
+            node /= 2;
+        }
+        self.tree[0] = cur;
+        Some(val)
+    }
+}
+
+/// Merge `k` sorted runs into `out` (appended) in one streaming pass.
+/// Total work is `O(total_keys * log k)` comparisons, one read and one
+/// write per key.
+pub fn kway_merge<T: SortKey>(runs: &[&[T]], out: &mut Vec<T>) {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    out.reserve(total);
+    match runs.len() {
+        0 => {}
+        1 => out.extend_from_slice(runs[0]),
+        _ => {
+            let mut tree = LoserTree::new(runs.to_vec());
+            while let Some(v) = tree.pop() {
+                out.push(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::rng::Pcg32;
+
+    fn oracle_u32(runs: &[&[u32]]) -> Vec<u32> {
+        let mut all: Vec<u32> = runs.iter().flat_map(|r| r.iter().copied()).collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn merges_edge_shapes() {
+        let mut out = Vec::new();
+        kway_merge::<u32>(&[], &mut out);
+        assert!(out.is_empty());
+
+        kway_merge(&[&[3u32, 7, 9][..]], &mut out);
+        assert_eq!(out, vec![3, 7, 9]);
+
+        out.clear();
+        kway_merge(&[&[][..], &[1u32][..], &[][..]], &mut out);
+        assert_eq!(out, vec![1]);
+
+        out.clear();
+        kway_merge(&[&[1u32, 3][..], &[2u32, 4][..]], &mut out);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn max_key_runs_merge_positionally() {
+        // Pads equal to MAX_KEY must not be confused with exhaustion.
+        let mut out = Vec::new();
+        kway_merge(
+            &[&[5u32, u32::MAX, u32::MAX][..], &[1u32, u32::MAX][..]],
+            &mut out,
+        );
+        assert_eq!(out, vec![1, 5, u32::MAX, u32::MAX, u32::MAX]);
+    }
+
+    #[test]
+    fn random_runs_match_oracle_for_many_fanins() {
+        let mut rng = Pcg32::new(0xFEED_F00D, 42);
+        for k in [2usize, 3, 5, 8, 16, 33, 64] {
+            let runs: Vec<Vec<u32>> = (0..k)
+                .map(|_| {
+                    let len = (rng.next_u32() % 200) as usize;
+                    let mut v: Vec<u32> =
+                        (0..len).map(|_| rng.next_u32() % 1000).collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut out = Vec::new();
+            kway_merge(&refs, &mut out);
+            assert_eq!(out, oracle_u32(&refs), "fan-in {k}");
+        }
+    }
+
+    #[test]
+    fn float_merge_uses_the_total_order() {
+        let a = [-1.5f32, 0.0, 2.0, f32::NAN];
+        let b = [f32::NEG_INFINITY, -1.0f32, 3.0];
+        let mut out = Vec::new();
+        kway_merge(&[&a[..], &b[..]], &mut out);
+        assert!(out[0] == f32::NEG_INFINITY);
+        assert!(out.last().unwrap().is_nan(), "NaN sorts high");
+        for w in out.windows(2) {
+            assert!(!w[1].total_lt(&w[0]), "out of order: {w:?}");
+        }
+    }
+}

@@ -16,6 +16,7 @@ pub mod bitonic;
 pub mod bitonic_parallel;
 pub mod heapsort;
 pub mod hybrid;
+pub mod kmerge;
 pub mod mergesort;
 pub mod network;
 pub mod oddeven;
@@ -26,7 +27,8 @@ pub mod verify;
 pub use bitonic::{bitonic_sort, bitonic_sort_desc, bitonic_sort_padded};
 pub use bitonic_parallel::{bitonic_sort_parallel, bitonic_sort_parallel_padded};
 pub use heapsort::heapsort;
-pub use hybrid::{HybridSorter, HybridStats};
+pub use hybrid::{HierarchicalSorter, HierarchicalStats, HybridSorter, HybridStats};
+pub use kmerge::{kway_merge, LoserTree};
 pub use mergesort::mergesort;
 pub use network::{Network, Phase, Step, Variant};
 pub use oddeven::oddeven_sort;

@@ -1,0 +1,213 @@
+//! Integration tests above the old 64K fixture ceiling: natively
+//! generated artifact grids (`runtime::genart`), merged menu discovery,
+//! and hybrid/hierarchical-vs-device bit-exactness on mega rows — the
+//! carried-over PR 1 follow-up the ceiling blocked.
+//!
+//! The generated classes are synthesized into per-test temp dirs, so
+//! these tests run anywhere the crate builds (no fixture beyond the
+//! checked-in `rust/artifacts/` menu, which some tests also merge in).
+
+use bitonic_tpu::runtime::host::spawn_manifest;
+use bitonic_tpu::runtime::{
+    generate_artifacts, spawn_device_host, spawn_device_host_discovered, Dtype, GenSpec,
+    HostConfig, Key, Manifest,
+};
+use bitonic_tpu::sort::network::Variant;
+use bitonic_tpu::sort::{is_sorted, quicksort, same_multiset, HierarchicalSorter, HybridSorter};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+fn fixture_dir() -> Option<std::path::PathBuf> {
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `bitonic-tpu gen-artifacts`");
+        None
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bitonic-mega-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Above-ceiling device classes, every dtype × order, against a CPU
+/// total-order oracle — bitwise.
+#[test]
+fn generated_device_classes_bit_exact_above_64k() {
+    let n = 1 << 17; // first class above the fixture's 64K ceiling
+    let dir = temp_dir("dtypes");
+    let specs: Vec<GenSpec> = [Dtype::U32, Dtype::I32, Dtype::F32]
+        .into_iter()
+        .flat_map(|d| [GenSpec::sort(n, 1, d, false), GenSpec::sort(n, 1, d, true)])
+        .collect();
+    generate_artifacts(&dir, &specs).unwrap();
+    let (handle, manifest) = spawn_device_host(&dir).unwrap();
+    let mut gen = Generator::new(0xBEEF_CAFE);
+
+    for descending in [false, true] {
+        // u32: uniform + MAX/MIN salt.
+        let mut input = gen.u32s(n, Distribution::Uniform);
+        input[0] = u32::MAX;
+        input[1] = 0;
+        let meta = manifest
+            .find(Variant::Optimized, 1, n, Dtype::U32, descending)
+            .unwrap();
+        let got = handle.sort_u32(Key::of(meta), input.clone()).unwrap();
+        let mut want = input;
+        want.sort_unstable();
+        if descending {
+            want.reverse();
+        }
+        assert_eq!(got, want, "u32 desc={descending}");
+
+        // i32: raw-cast signed keys, extremes included.
+        let mut input: Vec<i32> = gen.u32s(n, Distribution::Uniform).into_iter().map(|x| x as i32).collect();
+        input[0] = i32::MIN;
+        input[1] = i32::MAX;
+        let meta = manifest
+            .find(Variant::Optimized, 1, n, Dtype::I32, descending)
+            .unwrap();
+        let got = handle.sort_i32(Key::of(meta), input.clone()).unwrap();
+        let mut want = input;
+        want.sort_unstable();
+        if descending {
+            want.reverse();
+        }
+        assert_eq!(got, want, "i32 desc={descending}");
+
+        // f32: uniform + ±inf (+ canonical NaN on the ascending side);
+        // the oracle is the IEEE total order, compared bit-for-bit.
+        let mut input = gen.f32s(n, Distribution::Uniform);
+        input[0] = f32::INFINITY;
+        input[1] = f32::NEG_INFINITY;
+        if !descending {
+            input[2] = f32::NAN;
+        }
+        let meta = manifest
+            .find(Variant::Optimized, 1, n, Dtype::F32, descending)
+            .unwrap();
+        let got = handle.sort_f32(Key::of(meta), input.clone()).unwrap();
+        let mut want = input;
+        want.sort_by(f32::total_cmp);
+        if descending {
+            want.reverse();
+        }
+        let (got_bits, want_bits): (Vec<u32>, Vec<u32>) = (
+            got.iter().map(|x| x.to_bits()).collect(),
+            want.iter().map(|x| x.to_bits()).collect(),
+        );
+        assert_eq!(got_bits, want_bits, "f32 desc={descending}");
+    }
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The satellite's headline: hybrid, hierarchical, and the flat device
+/// path (via a generated 256K artifact) must agree bitwise on a
+/// MAX-salted ragged mega-row — the device path MAX-padded up to shape,
+/// the CPU-side drivers handling raggedness themselves.
+#[test]
+fn hybrid_and_hierarchical_match_device_above_the_ceiling() {
+    let Some(fixture) = fixture_dir() else { return };
+    let mega = 1 << 18;
+    let gen_dir = temp_dir("crosscheck");
+    generate_artifacts(&gen_dir, &[GenSpec::sort(mega, 1, Dtype::U32, false)]).unwrap();
+    let manifest = Manifest::load_merged(&fixture, &gen_dir).unwrap();
+    let (handle, manifest) = spawn_manifest(manifest, HostConfig::default()).unwrap();
+
+    let n = mega - 777; // ragged: forces MAX padding everywhere
+    let mut gen = Generator::new(0x64_000);
+    let mut input = gen.u32s(n, Distribution::Uniform);
+    for i in (0..n).step_by(131) {
+        input[i] = u32::MAX; // real MAX keys must survive the padding
+    }
+
+    let mut oracle = input.clone();
+    quicksort(&mut oracle);
+
+    // Flat device path over the generated 256K artifact.
+    let meta = manifest
+        .find(Variant::Optimized, 1, mega, Dtype::U32, false)
+        .expect("merged menu must contain the generated mega class");
+    let mut padded = input.clone();
+    padded.resize(mega, u32::MAX);
+    let device = handle.sort_u32(Key::of(meta), padded).unwrap();
+    assert_eq!(&device[..n], &oracle[..], "device vs oracle");
+
+    // Hierarchical: fixture-sized tiles + loser-tree merge.
+    let hier = HierarchicalSorter::new(handle.clone(), &manifest, Variant::Optimized).unwrap();
+    assert!(hier.tile() <= 1 << 16, "tile must come from the fixture menu");
+    let mut ours = input.clone();
+    let stats = hier.sort(&mut ours).unwrap();
+    assert_eq!(ours, oracle, "hierarchical vs oracle");
+    assert!(stats.tiles >= 2, "{stats:?}");
+    assert!(stats.device_dispatches >= 1, "{stats:?}");
+
+    // Hybrid: device merge ladder + CPU tail.
+    let hybrid = HybridSorter::with_chunk(handle.clone(), &manifest, Variant::Optimized, 1 << 16)
+        .unwrap();
+    let mut ours = input.clone();
+    hybrid.sort(&mut ours).unwrap();
+    assert_eq!(ours, oracle, "hybrid vs oracle");
+
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&gen_dir);
+}
+
+/// Hierarchical correctness across every input distribution and awkward
+/// lengths (empty, single, tile-aligned, ragged).
+#[test]
+fn hierarchical_all_distributions_and_ragged_lengths() {
+    let Some(fixture) = fixture_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&fixture).unwrap();
+    let sorter = HierarchicalSorter::new(handle.clone(), &manifest, Variant::Optimized).unwrap();
+    let tile = sorter.tile();
+    let mut gen = Generator::new(0x7135);
+    for dist in Distribution::ALL {
+        let orig = gen.u32s(2 * tile + 5, dist);
+        let mut v = orig.clone();
+        sorter.sort(&mut v).unwrap();
+        assert!(is_sorted(&v), "{}", dist.name());
+        assert!(same_multiset(&orig, &v), "{}", dist.name());
+    }
+    for n in [0usize, 1, 2, tile - 1, tile, tile + 1, 3 * tile + 917] {
+        let orig = gen.u32s(n, Distribution::DupHeavy);
+        let mut ours = orig.clone();
+        sorter.sort(&mut ours).unwrap();
+        let mut want = orig;
+        quicksort(&mut want);
+        assert_eq!(ours, want, "n={n}");
+    }
+    handle.shutdown();
+}
+
+/// Merged discovery end to end: a primary dir plus its `generated/`
+/// subdir are served as one menu by `spawn_discovered`, and classes
+/// from both sides execute.
+#[test]
+fn discovery_merges_generated_dir_into_the_menu() {
+    let primary = temp_dir("discover");
+    generate_artifacts(&primary, &[GenSpec::sort(1 << 10, 2, Dtype::U32, false)]).unwrap();
+    generate_artifacts(
+        &primary.join("generated"),
+        &[GenSpec::sort(1 << 11, 1, Dtype::U32, false)],
+    )
+    .unwrap();
+    let (handle, manifest) =
+        spawn_device_host_discovered(&primary, HostConfig::default()).unwrap();
+    // Both menus present…
+    let small = manifest.find(Variant::Optimized, 2, 1 << 10, Dtype::U32, false);
+    let big = manifest.find(Variant::Optimized, 1, 1 << 11, Dtype::U32, false);
+    assert!(small.is_some() && big.is_some(), "merged menu incomplete");
+    // …and the merged-in class actually executes through the registry.
+    let mut gen = Generator::new(3);
+    let rows = gen.u32s(1 << 11, Distribution::Uniform);
+    let got = handle.sort_u32(Key::of(big.unwrap()), rows.clone()).unwrap();
+    let mut want = rows;
+    want.sort_unstable();
+    assert_eq!(got, want);
+    handle.shutdown();
+    let _ = std::fs::remove_dir_all(&primary);
+}

@@ -43,6 +43,39 @@ if grep -q "FAIL" ANALYSIS.md; then
 fi
 echo "== ANALYSIS.md + ANALYSIS.json written, no failing verdicts =="
 
+# Native artifact synthesis, time-bounded: generate the CI-sized grid
+# (crossing both the old 64K fixture ceiling and the 1M line) and run
+# the full static verifier over the generated directory before anything
+# serves it. Every class in the smoke grid sits above the exhaustive
+# cap, so the report MUST contain sampled-proof WARNs — their absence
+# means the above-cap path silently didn't run — and must contain no
+# failing verdict.
+echo "== gen-artifacts smoke + verify-plans over the generated grid =="
+GEN_DIR="rust/artifacts/generated-smoke"
+rm -rf "$GEN_DIR" ANALYSIS_generated.md ANALYSIS_generated.json
+if command -v timeout >/dev/null 2>&1; then
+    timeout --signal=KILL 300 cargo run --release --bin bitonic-tpu -- gen-artifacts --smoke
+    timeout --signal=KILL 600 cargo run --release --bin bitonic-tpu -- verify-plans \
+        --artifacts "$GEN_DIR" --analysis-out ANALYSIS_generated.md
+else
+    cargo run --release --bin bitonic-tpu -- gen-artifacts --smoke
+    cargo run --release --bin bitonic-tpu -- verify-plans \
+        --artifacts "$GEN_DIR" --analysis-out ANALYSIS_generated.md
+fi
+if [ ! -f "$GEN_DIR/manifest.tsv" ]; then
+    echo "ERROR: gen-artifacts did not write $GEN_DIR/manifest.tsv" >&2
+    exit 1
+fi
+if grep -q "FAIL" ANALYSIS_generated.md; then
+    echo "ERROR: ANALYSIS_generated.md contains a failing verdict" >&2
+    exit 1
+fi
+if ! grep -q "exceeds exhaustive cap" ANALYSIS_generated.md; then
+    echo "ERROR: generated grid produced no above-cap sampled-proof WARN" >&2
+    exit 1
+fi
+echo "== generated grid verified: FAIL-free, sampled-proof WARNs present =="
+
 # Bench smoke, time-bounded: the coordinator bench drives the real
 # work-stealing scheduler and the row-parallel executor end to end, so a
 # scheduler regression (deadlock, starvation, lost wakeup) fails here
