@@ -1,0 +1,137 @@
+"""Lane-model mirror of ``rust/src/sort/simd.rs`` — jax-free.
+
+The Rust side makes the batch-interleaved lane model *literal*: explicit
+SIMD kernels sweep an element-major tile (``xs[e * lanes + l]`` is
+element ``e`` of row ``l``) with pointwise min/max lanes, mapping f32
+keys through an order-preserving bit trick so NaN/±inf/±0 behave exactly
+like the scalar total-order comparator. This module mirrors those
+semantics in numpy so the pytest suite can pin them without a Rust
+toolchain (and without jax): same layout, same direction rule (global
+element index ``& k``), same f32 bit mapping, same chunked sweep
+decomposition, same fused double-step operation order.
+
+Everything here is an oracle, not a fast path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Mirror of ``simd::CHUNK`` — the portable kernels' sweep width. The
+# decomposition is observationally identity (pointwise compare-exchange
+# commutes with chunking); it is mirrored anyway so this suite pins the
+# loop structure the Rust portable kernels actually run.
+CHUNK = 8
+
+
+def f32_ord_key(x):
+    """Order-preserving ``int32`` view of f32 bit patterns.
+
+    ``m(b) = b ^ (0x7FFF_FFFF if sign bit else 0)``, compared as signed —
+    the AVX2 kernel's ``xor(v, srli(srai(v, 31), 1))``. Monotone with
+    respect to IEEE total order (-NaN < -inf < ... < -0.0 < +0.0 < ... <
+    +inf < NaN) and involutive on bits (the sign bit is untouched).
+    """
+    b = np.asarray(x, dtype=np.float32).view(np.uint32)
+    neg = (b & np.uint32(0x8000_0000)) != 0
+    mask = np.where(neg, 0x7FFF_FFFF, 0).astype(np.uint32)
+    return (b ^ mask).view(np.int32)
+
+
+def order_key(x):
+    """Comparison key under the crate's total order: identity for the
+    integer dtypes, the order-preserving bit map for f32."""
+    x = np.asarray(x)
+    if x.dtype == np.float32:
+        return f32_ord_key(x)
+    return x
+
+
+def interleave(rows):
+    """``(lanes, n)`` row-major rows → element-major 1-D tile
+    (``tile[e * lanes + l] == rows[l, e]``)."""
+    return np.ascontiguousarray(np.asarray(rows).T).reshape(-1)
+
+
+def deinterleave(tile, lanes):
+    """Inverse of :func:`interleave`: 1-D tile → ``(lanes, n)`` rows."""
+    return np.ascontiguousarray(tile.reshape(-1, lanes).T)
+
+
+def _sweep(lows, highs, *, descending):
+    """Pointwise compare-exchange of two equal-length blocks, in
+    CHUNK-sized pieces plus a tail. Swaps whole bit patterns (never
+    arithmetic min/max on floats), exactly like the Rust kernels."""
+    for s in range(0, lows.shape[0], CHUNK):
+        a = lows[s : s + CHUNK].copy()
+        b = highs[s : s + CHUNK].copy()
+        ka, kb = order_key(a), order_key(b)
+        swap = (ka < kb) if descending else (kb < ka)
+        lows[s : s + CHUNK] = np.where(swap, b, a)
+        highs[s : s + CHUNK] = np.where(swap, a, b)
+
+
+def step_interleaved(xs, k, j, lanes, lo=0, hi=None, *, flip=False):
+    """One compare-exchange step (stride ``j``, direction bit ``k``) over
+    an element-major interleaved tile: within each ``2j``-aligned run the
+    low partners are one contiguous block of ``j * lanes`` keys and the
+    high partners the next, so the step is a single pointwise sweep —
+    the layout fact the explicit SIMD kernels are built on."""
+    n = xs.shape[0] // lanes
+    if hi is None:
+        hi = n
+    i = lo
+    while i < hi:
+        lows = xs[i * lanes : (i + j) * lanes]
+        highs = xs[(i + j) * lanes : (i + 2 * j) * lanes]
+        _sweep(lows, highs, descending=((i & k) != 0) ^ flip)
+        i += 2 * j
+
+
+def double_step_interleaved(xs, k, j_hi, lanes, lo=0, hi=None, *, flip=False):
+    """The fused stride pair ``(j_hi, j_hi // 2)`` in one pass: each
+    ``2 * j_hi``-aligned run is four adjacent blocks A B C D of
+    ``j_lo * lanes`` keys, swept (A,C), (B,D) then (A,B), (C,D) — the
+    register-paired Rust kernel's operation order."""
+    n = xs.shape[0] // lanes
+    if hi is None:
+        hi = n
+    j_lo = j_hi // 2
+    blk = j_lo * lanes
+    i = lo
+    while i < hi:
+        desc = ((i & k) != 0) ^ flip
+        base = i * lanes
+        a = xs[base : base + blk]
+        b = xs[base + blk : base + 2 * blk]
+        c = xs[base + 2 * blk : base + 3 * blk]
+        d = xs[base + 3 * blk : base + 4 * blk]
+        _sweep(a, c, descending=desc)
+        _sweep(b, d, descending=desc)
+        _sweep(a, b, descending=desc)
+        _sweep(c, d, descending=desc)
+        i += 2 * j_hi
+
+
+def sort_interleaved(xs, lanes, *, descending=False, paired=False):
+    """Full bitonic sort of every lane of an element-major tile, in
+    place. ``paired=True`` walks the double-step schedule (strides two
+    at a time plus the stride-1 leftover), mirroring the fused plans;
+    both walks must be bit-identical at every lane width."""
+    n = xs.shape[0] // lanes
+    k = 2
+    while k <= n:
+        flip = descending and k == n
+        j = k // 2
+        if paired:
+            while j >= 2:
+                double_step_interleaved(xs, k, j, lanes, flip=flip)
+                j //= 4
+            if j == 1:
+                step_interleaved(xs, k, 1, lanes, flip=flip)
+        else:
+            while j >= 1:
+                step_interleaved(xs, k, j, lanes, flip=flip)
+                j //= 2
+        k *= 2
+    return xs

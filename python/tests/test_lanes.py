@@ -1,0 +1,167 @@
+"""Bit-exactness pins for the lane-model mirror (``compile.lanes``).
+
+The mirror is deliberately jax-free, so this suite runs in the
+numpy+pytest-only CI environment too (no skips). It pins the same
+properties the Rust suite (``rust/tests/simd_props.rs``) proves about
+the explicit SIMD kernels: the f32 order-preserving bit map, the
+interleaved-layout step semantics, the fused double-step operation
+order, and full-network agreement with an independent total-order
+oracle — everything compared as bits, never with float ``==``.
+"""
+
+import numpy as np
+
+from compile import lanes
+from conftest import random_rows
+
+LANE_WIDTHS = [1, 3, 4, 8, 16]
+DTYPES = [np.uint32, np.int32, np.float32]
+
+# Total-order ladder as bit patterns: -NaN < -inf < -1 < -0 < +0 < 1 <
+# +inf < +NaN. Strictly increasing under the order key, and every rung
+# has a distinct bit pattern the sorts must preserve verbatim.
+F32_LADDER_BITS = np.array(
+    [
+        0xFFC0_0000,  # -NaN
+        0xFF80_0000,  # -inf
+        0xBF80_0000,  # -1.0
+        0x8000_0000,  # -0.0
+        0x0000_0000,  # +0.0
+        0x3F80_0000,  # +1.0
+        0x7F80_0000,  # +inf
+        0x7FC0_0000,  # +NaN
+    ],
+    dtype=np.uint32,
+)
+
+
+def bits(a):
+    """uint32 view of any 32-bit row — the only equality we trust."""
+    return np.asarray(a).view(np.uint32)
+
+
+def salted(rows):
+    """Plant the full special-value ladder in every f32 row."""
+    rows = rows.copy()
+    if rows.dtype == np.float32:
+        rows[:, : F32_LADDER_BITS.size] = F32_LADDER_BITS.view(np.float32)
+    return rows
+
+
+def oracle_sorted(row, descending=False):
+    """Total-order sort of one row, preserving bit patterns."""
+    out = row[np.argsort(lanes.order_key(row), kind="stable")]
+    return out[::-1] if descending else out
+
+
+def scalar_step(rows, k, j, flip=False):
+    """Per-row (lane-oblivious) reference step in ref.py's conventions:
+    partners (i, i ^ j), ascending iff ``i & k == 0``, xor ``flip``."""
+    n = rows.shape[1]
+    for i in range(0, n, 2 * j):
+        lo = rows[:, i : i + j].copy()
+        hi = rows[:, i + j : i + 2 * j].copy()
+        ka, kb = lanes.order_key(lo), lanes.order_key(hi)
+        if ((i & k) != 0) ^ flip:
+            swap = ka < kb
+        else:
+            swap = kb < ka
+        rows[:, i : i + j] = np.where(swap, hi, lo)
+        rows[:, i + j : i + 2 * j] = np.where(swap, lo, hi)
+
+
+def test_f32_ord_key_is_total_order_monotone():
+    vals = F32_LADDER_BITS.view(np.float32)
+    key = lanes.f32_ord_key(vals).astype(np.int64)
+    assert (np.diff(key) > 0).all(), key
+
+
+def test_f32_ord_key_is_an_involution(rng):
+    b = rng.integers(0, 2 ** 32, size=4096, dtype=np.uint32)
+    once = lanes.f32_ord_key(b.view(np.float32)).view(np.uint32)
+    twice = lanes.f32_ord_key(once.view(np.float32)).view(np.uint32)
+    assert (twice == b).all()
+
+
+def test_interleave_roundtrip(rng):
+    for width in LANE_WIDTHS:
+        rows = random_rows(rng, width, 32, np.uint32)
+        tile = lanes.interleave(rows)
+        # tile[e * lanes + l] == rows[l, e] — the layout contract.
+        assert tile[5 * width + (width - 1)] == rows[width - 1, 5]
+        assert (lanes.deinterleave(tile, width) == rows).all()
+
+
+def test_interleaved_steps_match_per_lane_scalar_steps(rng):
+    """Lanes must be invisible: every step of the interleaved walk is
+    bit-identical to the same step applied to each lane separately."""
+    n = 64
+    for dtype in DTYPES:
+        for width in LANE_WIDTHS:
+            rows = salted(random_rows(rng, width, n, dtype))
+            tile = lanes.interleave(rows)
+            ref = rows.copy()
+            k = 2
+            while k <= n:
+                j = k // 2
+                while j >= 1:
+                    lanes.step_interleaved(tile, k, j, width)
+                    scalar_step(ref, k, j)
+                    got = lanes.deinterleave(tile, width)
+                    label = f"{np.dtype(dtype)} lanes={width} k={k} j={j}"
+                    assert (bits(got) == bits(ref)).all(), label
+                    j //= 2
+                k *= 2
+
+
+def test_double_step_equals_two_single_steps(rng):
+    for dtype in DTYPES:
+        for width in [1, 3, 8]:
+            for n, k, j_hi in [(64, 64, 32), (64, 16, 8), (256, 256, 4)]:
+                rows = salted(random_rows(rng, width, n, dtype))
+                fused = lanes.interleave(rows)
+                split = fused.copy()
+                lanes.double_step_interleaved(fused, k, j_hi, width)
+                lanes.step_interleaved(split, k, j_hi, width)
+                lanes.step_interleaved(split, k, j_hi // 2, width)
+                label = f"{np.dtype(dtype)} lanes={width} n={n} k={k} j_hi={j_hi}"
+                assert (bits(fused) == bits(split)).all(), label
+
+
+def test_full_network_sorts_every_lane(rng):
+    """Both walks (single-step and the paired double-step schedule) of
+    the full network must equal the total-order oracle per lane, as
+    bits, ascending and descending."""
+    n = 128
+    for dtype in DTYPES:
+        for width in LANE_WIDTHS:
+            for descending in [False, True]:
+                rows = salted(random_rows(rng, width, n, dtype))
+                want = np.stack([oracle_sorted(r, descending) for r in rows])
+                for paired in [False, True]:
+                    tile = lanes.interleave(rows)
+                    lanes.sort_interleaved(
+                        tile, width, descending=descending, paired=paired
+                    )
+                    got = lanes.deinterleave(tile, width)
+                    label = (
+                        f"{np.dtype(dtype)} lanes={width} "
+                        f"desc={descending} paired={paired}"
+                    )
+                    assert (bits(got) == bits(want)).all(), label
+
+
+def test_chunked_sweep_is_observationally_identity(rng):
+    """CHUNK only decomposes the sweep loop; results must not depend on
+    it. Pin by re-running a full sort with a pathological chunk width."""
+    rows = salted(random_rows(rng, 3, 64, np.float32))
+    a = lanes.interleave(rows)
+    b = a.copy()
+    lanes.sort_interleaved(a, 3)
+    original = lanes.CHUNK
+    try:
+        lanes.CHUNK = 1
+        lanes.sort_interleaved(b, 3)
+    finally:
+        lanes.CHUNK = original
+    assert (bits(a) == bits(b)).all()

@@ -690,7 +690,15 @@ pub fn check_geometry_sweep(
     let mut first_bad: Option<String> = None;
     for (variant, block, interleave) in super::geometry_menu(n) {
         for descending in [false, true] {
-            let cfg = crate::runtime::PlanConfig { variant, block, interleave };
+            // The proofs are ISA-independent: the default `Auto` kernel
+            // never changes the expanded schedule, only the comparator
+            // instructions each step executes with.
+            let cfg = crate::runtime::PlanConfig {
+                variant,
+                block,
+                interleave,
+                ..Default::default()
+            };
             let plan = ExecutionPlan::with_config(kind, n, descending, cfg);
             let expansion: Vec<Step> = plan.launches().iter().flat_map(Launch::steps).collect();
             let ok = expansion == canonical

@@ -1,0 +1,332 @@
+//! Trajectory regression diffing: compare two bench trajectories
+//! cell-by-cell and flag slowdowns — the CI slice of ROADMAP's
+//! "trajectory-aware regression gate" item.
+//!
+//! A **cell** is the scenario key `(bench, substrate, dist, dtype, n,
+//! batch)`. Both files may contain a key several times (trajectories are
+//! append-only across runs); the diff takes the *last* record per key —
+//! the most recent measurement on each side.
+//!
+//! Comparability first: timings from different hosts or build modes are
+//! noise, so [`diff_trajectories`] only compares cells when the two env
+//! stamps agree on everything that shapes throughput (`os`, `arch`,
+//! `cpus`, `crate_version`, `debug_assertions` — **not** `unix_secs`,
+//! which merely dates the file). On a stamp mismatch the diff carries
+//! zero compared cells and says why; the `--gate` exit stays clean
+//! because there is nothing sound to gate on.
+//!
+//! Thresholds: a cell is **reported** when its ratio leaves the
+//! [`DIFF_TOLERANCE`] band (bench timings on shared CI hosts jitter; a
+//! few percent is not signal) and **gated** when it slows past
+//! [`DIFF_SLOWDOWN_GATE`] — deliberately loose, catching "the kernel
+//! fell off a cliff", not "the machine was busy".
+//!
+//! Driven by `bitonic-tpu report --diff <old> [--gate]`; wired into
+//! verify.sh against the smoke bench run.
+
+use super::record::Trajectory;
+use crate::util::table::Table;
+
+/// Ratios inside `[1/DIFF_TOLERANCE, DIFF_TOLERANCE]` are considered
+/// noise and left out of the rendered cell table.
+pub const DIFF_TOLERANCE: f64 = 1.25;
+
+/// `new_ms / old_ms` above this fails `report --diff --gate`.
+pub const DIFF_SLOWDOWN_GATE: f64 = 2.0;
+
+/// One scenario measured in both trajectories.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffCell {
+    /// Producer bench name.
+    pub bench: String,
+    /// Sorting substrate.
+    pub substrate: String,
+    /// Input distribution.
+    pub dist: String,
+    /// Key dtype.
+    pub dtype: String,
+    /// Keys per row.
+    pub n: usize,
+    /// Rows per batch.
+    pub batch: usize,
+    /// Median ms in the old trajectory (last record for the key).
+    pub old_ms: f64,
+    /// Median ms in the new trajectory (last record for the key).
+    pub new_ms: f64,
+}
+
+impl DiffCell {
+    /// Slowdown factor: `new_ms / old_ms` (> 1 ⇒ the new run is slower).
+    pub fn ratio(&self) -> f64 {
+        self.new_ms / self.old_ms
+    }
+
+    /// True when the cell fails the regression gate.
+    pub fn regressed(&self) -> bool {
+        self.ratio() > DIFF_SLOWDOWN_GATE
+    }
+
+    /// Human key, e.g. `matrix/bitonic-executor uniform u32 n=65536 b=16`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} {} {} n={} b={}",
+            self.bench, self.substrate, self.dist, self.dtype, self.n, self.batch
+        )
+    }
+}
+
+/// The outcome of comparing two trajectories.
+#[derive(Clone, Debug)]
+pub struct TrajectoryDiff {
+    /// Env stamps agreed on every throughput-shaping field.
+    pub env_comparable: bool,
+    /// One-line explanation of the env verdict.
+    pub env_note: String,
+    /// Cells present (with `ms > 0`) in both files, old-file order.
+    pub compared: Vec<DiffCell>,
+    /// Scenario keys only the old trajectory has.
+    pub only_old: usize,
+    /// Scenario keys only the new trajectory has.
+    pub only_new: usize,
+}
+
+impl TrajectoryDiff {
+    /// The cells that fail the gate, worst first.
+    pub fn regressions(&self) -> Vec<&DiffCell> {
+        let mut bad: Vec<&DiffCell> = self.compared.iter().filter(|c| c.regressed()).collect();
+        bad.sort_by(|a, b| b.ratio().total_cmp(&a.ratio()));
+        bad
+    }
+
+    /// Render the diff as text: env verdict, a table of the cells
+    /// outside the tolerance band (worst first), and a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("env: {}\n", self.env_note));
+        if !self.env_comparable {
+            out.push_str("no cells compared — timings across different environments are noise\n");
+            return out;
+        }
+        let mut outliers: Vec<&DiffCell> = self
+            .compared
+            .iter()
+            .filter(|c| {
+                let r = c.ratio();
+                !(1.0 / DIFF_TOLERANCE..=DIFF_TOLERANCE).contains(&r)
+            })
+            .collect();
+        outliers.sort_by(|a, b| b.ratio().total_cmp(&a.ratio()));
+        if outliers.is_empty() {
+            out.push_str(&format!(
+                "all {} comparable cell(s) within {DIFF_TOLERANCE}x tolerance\n",
+                self.compared.len()
+            ));
+        } else {
+            let mut t = Table::new(vec!["cell", "old ms", "new ms", "ratio", "verdict"]);
+            for c in &outliers {
+                t.row(vec![
+                    c.label(),
+                    format!("{:.3}", c.old_ms),
+                    format!("{:.3}", c.new_ms),
+                    format!("{:.2}x", c.ratio()),
+                    if c.regressed() {
+                        "REGRESSED".to_string()
+                    } else if c.ratio() > 1.0 {
+                        "slower".to_string()
+                    } else {
+                        "faster".to_string()
+                    },
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} compared, {} outside {DIFF_TOLERANCE}x tolerance, {} regressed \
+             (> {DIFF_SLOWDOWN_GATE}x), {} only-old, {} only-new\n",
+            self.compared.len(),
+            outliers.len(),
+            self.regressions().len(),
+            self.only_old,
+            self.only_new,
+        ));
+        out
+    }
+}
+
+/// Compare `old` against `new` per scenario cell (see module docs for
+/// keying, dedup, and the env-stamp precondition).
+pub fn diff_trajectories(old: &Trajectory, new: &Trajectory) -> TrajectoryDiff {
+    let (oe, ne) = (&old.env, &new.env);
+    let env_comparable = oe.os == ne.os
+        && oe.arch == ne.arch
+        && oe.cpus == ne.cpus
+        && oe.crate_version == ne.crate_version
+        && oe.debug_assertions == ne.debug_assertions;
+    let env_note = if env_comparable {
+        format!("comparable ({})", ne.summary())
+    } else {
+        format!("NOT comparable — old [{}] vs new [{}]", oe.summary(), ne.summary())
+    };
+    if !env_comparable {
+        return TrajectoryDiff {
+            env_comparable,
+            env_note,
+            compared: Vec::new(),
+            only_old: 0,
+            only_new: 0,
+        };
+    }
+
+    // Last record per key wins on each side; unmeasured (ms <= 0) cells
+    // can't produce a meaningful ratio and are dropped.
+    type Key = (String, String, String, String, usize, usize);
+    let index = |t: &Trajectory| -> Vec<(Key, f64)> {
+        let mut keys: Vec<(Key, f64)> = Vec::new();
+        for r in &t.records {
+            if r.ms <= 0.0 {
+                continue;
+            }
+            let key: Key = (
+                r.bench.clone(),
+                r.substrate.clone(),
+                r.dist.clone(),
+                r.dtype.clone(),
+                r.n,
+                r.batch,
+            );
+            match keys.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, ms)) => *ms = r.ms,
+                None => keys.push((key, r.ms)),
+            }
+        }
+        keys
+    };
+    let old_cells = index(old);
+    let new_cells = index(new);
+
+    let mut compared = Vec::new();
+    let mut only_old = 0usize;
+    for (key, old_ms) in &old_cells {
+        match new_cells.iter().find(|(k, _)| k == key) {
+            Some((_, new_ms)) => compared.push(DiffCell {
+                bench: key.0.clone(),
+                substrate: key.1.clone(),
+                dist: key.2.clone(),
+                dtype: key.3.clone(),
+                n: key.4,
+                batch: key.5,
+                old_ms: *old_ms,
+                new_ms: *new_ms,
+            }),
+            None => only_old += 1,
+        }
+    }
+    let only_new = new_cells
+        .iter()
+        .filter(|(k, _)| old_cells.iter().all(|(ok, _)| ok != k))
+        .count();
+
+    TrajectoryDiff {
+        env_comparable,
+        env_note,
+        compared,
+        only_old,
+        only_new,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::BenchRecord;
+
+    fn rec(substrate: &str, n: usize, ms: f64) -> BenchRecord {
+        BenchRecord::new("matrix", substrate, "uniform", "u32", n)
+            .with_batch(4)
+            .with_ms(ms)
+    }
+
+    fn trajectory(records: Vec<BenchRecord>) -> Trajectory {
+        let mut t = Trajectory::new();
+        for r in records {
+            t.push(r);
+        }
+        t
+    }
+
+    #[test]
+    fn matches_cells_and_flags_regressions() {
+        let old = trajectory(vec![
+            rec("quicksort", 1024, 10.0),
+            rec("bitonic-executor", 1024, 4.0),
+            rec("only-old", 64, 1.0),
+        ]);
+        let new = trajectory(vec![
+            rec("quicksort", 1024, 10.5),       // within tolerance
+            rec("bitonic-executor", 1024, 9.0), // 2.25x — regressed
+            rec("only-new", 64, 1.0),
+        ]);
+        let d = diff_trajectories(&old, &new);
+        assert!(d.env_comparable, "{}", d.env_note);
+        assert_eq!(d.compared.len(), 2);
+        assert_eq!((d.only_old, d.only_new), (1, 1));
+        let bad = d.regressions();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].substrate, "bitonic-executor");
+        assert!(bad[0].ratio() > DIFF_SLOWDOWN_GATE);
+        let rendered = d.render();
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("1 regressed"), "{rendered}");
+    }
+
+    #[test]
+    fn improvements_and_noise_are_not_regressions() {
+        let old = trajectory(vec![rec("a", 64, 10.0), rec("b", 64, 10.0)]);
+        let new = trajectory(vec![rec("a", 64, 2.0), rec("b", 64, 11.0)]);
+        let d = diff_trajectories(&old, &new);
+        assert!(d.regressions().is_empty());
+        // The 5x speedup is an outlier worth showing; the 1.1x is noise.
+        let rendered = d.render();
+        assert!(rendered.contains("faster"), "{rendered}");
+        assert!(rendered.contains("1 outside"), "{rendered}");
+    }
+
+    #[test]
+    fn last_record_per_key_wins() {
+        // The same cell re-measured later in the same file: only the
+        // most recent measurement counts on each side.
+        let old = trajectory(vec![rec("a", 64, 50.0), rec("a", 64, 10.0)]);
+        let new = trajectory(vec![rec("a", 64, 300.0), rec("a", 64, 11.0)]);
+        let d = diff_trajectories(&old, &new);
+        assert_eq!(d.compared.len(), 1);
+        assert!((d.compared[0].ratio() - 1.1).abs() < 1e-9);
+        assert!(d.regressions().is_empty());
+    }
+
+    #[test]
+    fn different_env_stamps_compare_nothing() {
+        let old = trajectory(vec![rec("a", 64, 1.0)]);
+        let mut new = trajectory(vec![rec("a", 64, 100.0)]);
+        new.env.cpus = old.env.cpus + 8;
+        let d = diff_trajectories(&old, &new);
+        assert!(!d.env_comparable);
+        assert!(d.compared.is_empty());
+        assert!(d.regressions().is_empty(), "nothing sound to gate on");
+        assert!(d.render().contains("NOT comparable"));
+        // unix_secs differing alone must NOT break comparability.
+        let mut new2 = trajectory(vec![rec("a", 64, 1.0)]);
+        new2.env = old.env.clone();
+        new2.env.unix_secs += 3600;
+        assert!(diff_trajectories(&old, &new2).env_comparable);
+    }
+
+    #[test]
+    fn unmeasured_cells_are_skipped() {
+        let old = trajectory(vec![rec("a", 64, 0.0), rec("b", 64, 1.0)]);
+        let new = trajectory(vec![rec("a", 64, 5.0), rec("b", 64, 1.0)]);
+        let d = diff_trajectories(&old, &new);
+        assert_eq!(d.compared.len(), 1);
+        assert_eq!(d.compared[0].substrate, "b");
+    }
+}

@@ -565,6 +565,7 @@ pub fn run_pass_ablation(sizes: &[usize], bench: &Bench, seed: u64) -> Vec<Bench
                     variant,
                     block: DEFAULT_PLAN_BLOCK.min(n),
                     interleave: 1,
+                    ..Default::default()
                 },
             );
             let m = bench.run_with_setup(

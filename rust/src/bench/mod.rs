@@ -25,6 +25,9 @@
 //!   (Table-1 matrix, pass-count ablation, speedup-vs-quicksort
 //!   headline). Pure function of the JSON: regeneration is
 //!   deterministic. Drives the `bitonic-tpu report` subcommand.
+//! * [`diff`] — per-cell tolerance comparison of two trajectories at
+//!   equal env stamps, with a >2× slowdown gate. Drives
+//!   `bitonic-tpu report --diff <old> [--gate]`.
 //!
 //! ```text
 //! benches/* ─┐
@@ -33,12 +36,14 @@
 //!                              bitonic-tpu report ──┴──> RESULTS.md
 //! ```
 
+pub mod diff;
 pub mod env;
 pub mod harness;
 pub mod matrix;
 pub mod record;
 pub mod report;
 
+pub use diff::{diff_trajectories, TrajectoryDiff, DIFF_SLOWDOWN_GATE, DIFF_TOLERANCE};
 pub use env::EnvStamp;
 pub use harness::{black_box, Bench, Measurement};
 pub use matrix::{MatrixConfig, MatrixDtype, Substrate};

@@ -27,7 +27,7 @@ use bitonic_tpu::runtime::{
 };
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
-use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort};
+use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort, KernelChoice};
 use bitonic_tpu::util::cli::Parser;
 use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
 use bitonic_tpu::workload::{Distribution, Generator};
@@ -86,6 +86,12 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt(
+            "kernel",
+            "comparator ISA: auto|scalar|portable|avx2 (default auto = explicit SIMD when \
+             built+detected; explicit value pins it over the tuning profile)",
+            None,
+        )
+        .opt(
             "profile",
             "tuning profile TSV (default: <artifacts>/autotune.tsv when present)",
             None,
@@ -98,6 +104,12 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt("out", "report: output markdown path", Some("RESULTS.md"))
+        .opt(
+            "diff",
+            "report: older trajectory JSON to diff against instead of rendering \
+             (per-cell tolerance compare at equal env stamps)",
+            None,
+        )
         .opt(
             "exhaustive-cap",
             "verify-plans: largest n proven exhaustively by the 0-1 induction \
@@ -118,6 +130,7 @@ fn main() -> bitonic_tpu::Result<()> {
         )
         .opt("seed", "workload seed", Some("42"))
         .flag("no-profile", "ignore any tuning profile")
+        .flag("gate", "report --diff: exit non-zero when any cell slowed down more than 2x")
         .flag("smoke", "tune/bench/gen-artifacts: tiny CI-sized sweep")
         .flag(
             "hier",
@@ -154,10 +167,11 @@ fn artifacts_dir(args: &bitonic_tpu::util::cli::Args) -> std::path::PathBuf {
         .unwrap_or_else(bitonic_tpu::runtime::default_artifacts_dir)
 }
 
-/// `--plan-variant`/`--plan-block`/`--plan-interleave`: the base launch
-/// program + execution geometry configuration (which of the paper's §4
-/// optimizations run, and how wide the batch-interleaved tiles are).
-/// Fields not given fall back to the defaults.
+/// `--plan-variant`/`--plan-block`/`--plan-interleave`/`--kernel`: the
+/// base launch program + execution geometry configuration (which of the
+/// paper's §4 optimizations run, how wide the batch-interleaved tiles
+/// are, and which comparator ISA executes the sweeps). Fields not given
+/// fall back to the defaults.
 fn plan_base(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<PlanConfig> {
     let defaults = PlanConfig::default();
     let variant = match args.get("plan-variant") {
@@ -175,7 +189,18 @@ fn plan_base(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<PlanCon
         interleave >= 1,
         "--plan-interleave must be >= 1 (1 = scalar execution)"
     );
-    Ok(PlanConfig { variant, block, interleave })
+    let kernel = match args.get("kernel") {
+        Some(s) => {
+            let choice = KernelChoice::parse(s)
+                .ok_or_else(|| bitonic_tpu::err!("bad --kernel (auto|scalar|portable|avx2)"))?;
+            // Reject an unavailable fixed ISA here, with the flag named,
+            // instead of deep inside executor compilation.
+            choice.validate()?;
+            choice
+        }
+        None => defaults.kernel,
+    };
+    Ok(PlanConfig { variant, block, interleave, kernel })
 }
 
 /// The full plan policy the device host runs: the base config, refined
@@ -206,6 +231,7 @@ fn plan_policy(
         profile,
         pin_block: args.get("plan-block").is_some(),
         pin_interleave: args.get("plan-interleave").is_some(),
+        pin_kernel: args.get("kernel").is_some(),
     })
 }
 
@@ -322,7 +348,19 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         bitonic_tpu::sort::is_sorted(&keys),
         "output not sorted — bug"
     );
-    println!("sorted {} keys ({}) via {algo} in {} ms", n, dist.name(), fmt_ms(ms));
+    // FNV-1a over the sorted keys: two runs over the same (seed, dist,
+    // n) must print the same digest whatever --kernel/--algo produced
+    // them — the ISA equality smoke in scripts/verify.sh greps this.
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for k in &keys {
+        digest = (digest ^ u64::from(*k)).wrapping_mul(0x100_0000_01b3);
+    }
+    println!(
+        "sorted {} keys ({}) via {algo} in {} ms [digest {digest:016x}]",
+        n,
+        dist.name(),
+        fmt_ms(ms)
+    );
     Ok(())
 }
 
@@ -507,10 +545,10 @@ fn cmd_network(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     Ok(())
 }
 
-/// `bitonic-tpu tune`: sweep `block × interleave × threads` on the real
-/// executor over the manifest's `(n, dtype)` size classes, print every
-/// measurement, and persist the fastest config per class as the tuning
-/// profile `sort`/`serve` consult on start-up.
+/// `bitonic-tpu tune`: sweep `block × interleave × threads × isa` on the
+/// real executor over the manifest's `(n, dtype)` size classes, print
+/// every measurement, and persist the fastest config per class as the
+/// tuning profile `sort`/`serve` consult on start-up.
 fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let dir = artifacts_dir(args);
     if args.flag("hier") {
@@ -558,12 +596,30 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         request.rows = rows;
     }
     request.seed = args.parsed_or("seed", request.seed)?;
+    // An explicit --kernel narrows the sweep to that ISA (`auto` keeps
+    // the full axis — the point of tuning is to measure all of them).
+    if let Some(s) = args.get("kernel") {
+        match KernelChoice::parse(s) {
+            Some(KernelChoice::Fixed(isa)) => {
+                bitonic_tpu::ensure!(
+                    isa.available(),
+                    "--kernel {s} is not available on this host/build"
+                );
+                request.isas = vec![isa];
+            }
+            Some(KernelChoice::Auto) => {}
+            None => bitonic_tpu::bail!("bad --kernel (auto|scalar|portable|avx2)"),
+        }
+    }
+    let isa_names: Vec<&str> = request.isas.iter().map(|i| i.name()).collect();
     println!(
-        "tuning {} class(es) × blocks {:?} × interleave {:?} × threads {:?} ({} rows/batch{})…",
+        "tuning {} class(es) × blocks {:?} × interleave {:?} × threads {:?} × isa {:?} \
+         ({} rows/batch{})…",
         request.classes.len(),
         request.blocks,
         request.interleaves,
         request.threads,
+        isa_names,
         request.rows,
         if smoke { ", smoke grid" } else { "" },
     );
@@ -572,7 +628,7 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let outcome = tune(&request);
 
     let mut measured = Table::new(vec![
-        "n", "dtype", "block", "interleave", "threads", "rows/sec",
+        "n", "dtype", "block", "interleave", "threads", "isa", "rows/sec",
     ]);
     for e in &outcome.measured {
         measured.row(vec![
@@ -581,13 +637,14 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             e.block.to_string(),
             e.interleave.to_string(),
             e.threads.to_string(),
+            e.isa.name().to_string(),
             format!("{:.0}", e.rows_per_sec),
         ]);
     }
     println!("{}", measured.render());
 
     let mut chosen = Table::new(vec![
-        "class", "chosen block", "interleave", "threads", "rows/sec",
+        "class", "chosen block", "interleave", "threads", "isa", "rows/sec",
     ]);
     for e in &outcome.profile.entries {
         chosen.row(vec![
@@ -595,6 +652,7 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             e.block.to_string(),
             e.interleave.to_string(),
             e.threads.to_string(),
+            e.isa.name().to_string(),
             format!("{:.0}", e.rows_per_sec),
         ]);
     }
@@ -833,9 +891,37 @@ fn cmd_bench(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
 
 /// `bitonic-tpu report`: regenerate `RESULTS.md` from the trajectory.
 /// Pure function of the JSON — same trajectory, byte-identical output.
+///
+/// With `--diff OLD`, render a per-cell tolerance comparison against an
+/// older trajectory instead (keyed on bench/substrate/dist/dtype/n/batch,
+/// only at equal env stamps); `--gate` additionally exits non-zero when
+/// any cell slowed down past the regression threshold — the CI slice of
+/// ROADMAP's trajectory-regression item.
 fn cmd_report(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     let path = trajectory_path(args);
     let trajectory = Trajectory::load(&path)?;
+    if let Some(old_path) = args.get("diff") {
+        let old = Trajectory::load(old_path)?;
+        let diff = bitonic_tpu::bench::diff_trajectories(&old, &trajectory);
+        print!("{}", diff.render());
+        if args.flag("gate") {
+            let bad = diff.regressions();
+            bitonic_tpu::ensure!(
+                bad.is_empty(),
+                "report --diff --gate: {} cell(s) slowed down more than {:.1}x vs {old_path} \
+                 (worst: {})",
+                bad.len(),
+                bitonic_tpu::bench::DIFF_SLOWDOWN_GATE,
+                bad[0].label()
+            );
+            println!(
+                "gate clean: {} comparable cell(s), none slower than {:.1}x",
+                diff.compared.len(),
+                bitonic_tpu::bench::DIFF_SLOWDOWN_GATE
+            );
+        }
+        return Ok(());
+    }
     let out = args.get_or("out", "RESULTS.md");
     let text = render_results(&trajectory);
     std::fs::write(&out, &text)

@@ -1,6 +1,7 @@
 //! Per-host plan autotuning: sweep `PlanConfig { block, interleave }` ×
-//! worker threads on the **real executor** and persist the fastest
-//! configuration per `(n, dtype)` size class.
+//! worker threads × comparator ISA ([`crate::sort::simd::KernelIsa`]) on
+//! the **real executor** and persist the fastest configuration per
+//! `(n, dtype)` size class.
 //!
 //! The paper tunes its kernels to one fixed device (a K10's 48 KiB of
 //! shared memory fixes `block`); this crate runs on whatever CPU hosts
@@ -46,6 +47,7 @@ use std::time::Duration;
 use crate::bench::{black_box, Bench};
 use crate::sort::hybrid::HierarchicalSorter;
 use crate::sort::network::Variant;
+use crate::sort::simd::{KernelChoice, KernelIsa};
 use crate::sort::SortKey;
 use crate::util::error::Context;
 use crate::util::threadpool::ThreadPool;
@@ -72,6 +74,10 @@ pub struct TunedEntry {
     pub interleave: usize,
     /// Executor pool threads the measurement used (1 = serial).
     pub threads: usize,
+    /// Comparator ISA the measurement ran (`scalar` for profiles written
+    /// before the axis existed — their sweeps only ran the scalar
+    /// kernels).
+    pub isa: KernelIsa,
     /// Measured throughput, rows per second.
     pub rows_per_sec: f64,
 }
@@ -83,7 +89,7 @@ pub struct TuningProfile {
     pub entries: Vec<TunedEntry>,
 }
 
-const PROFILE_HEADER: &str = "n\tdtype\tvariant\tblock\tinterleave\tthreads\trows_per_sec";
+const PROFILE_HEADER: &str = "n\tdtype\tvariant\tblock\tinterleave\tthreads\tisa\trows_per_sec";
 
 impl TuningProfile {
     /// Canonical profile location for an artifacts directory: the sweep
@@ -95,23 +101,44 @@ impl TuningProfile {
 
     /// Load a profile TSV, validating every row (a hand-edited file must
     /// fail loudly here, not deep inside plan compilation).
+    ///
+    /// Both schema generations load: the original 7-field format (no
+    /// `isa` column — those sweeps only ran the scalar kernels, so the
+    /// column defaults to `scalar`) and the current 8-field one. An
+    /// upgrade must never silently invalidate an existing profile.
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading tuning profile {path:?} — generate one with `bitonic-tpu tune`"))?;
+        const LEGACY_HEADER: &str = "n\tdtype\tvariant\tblock\tinterleave\tthreads\trows_per_sec";
         let mut entries = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
-            if line.is_empty() || line.starts_with('#') || line == PROFILE_HEADER {
+            if line.is_empty()
+                || line.starts_with('#')
+                || line == PROFILE_HEADER
+                || line == LEGACY_HEADER
+            {
                 continue;
             }
             let f: Vec<&str> = line.split('\t').collect();
             crate::ensure!(
-                f.len() == 7,
-                "tuning profile {path:?} line {}: want 7 tab-separated fields, got {}",
+                f.len() == 7 || f.len() == 8,
+                "tuning profile {path:?} line {}: want 7 (pre-isa) or 8 tab-separated fields, \
+                 got {}",
                 lineno + 1,
                 f.len()
             );
+            // In the 8-field format the isa column sits before
+            // rows_per_sec; in the legacy one rows_per_sec is field 6.
+            let (isa, rps) = if f.len() == 8 {
+                let isa = KernelIsa::parse(f[6]).with_context(|| {
+                    format!("tuning profile {path:?} line {}: bad isa {:?}", lineno + 1, f[6])
+                })?;
+                (isa, f[7])
+            } else {
+                (KernelIsa::Scalar, f[6])
+            };
             let entry = TunedEntry {
                 n: f[0].parse().with_context(|| format!("line {}: n", lineno + 1))?,
                 dtype: Dtype::parse(f[1])?,
@@ -122,7 +149,8 @@ impl TuningProfile {
                     .parse()
                     .with_context(|| format!("line {}: interleave", lineno + 1))?,
                 threads: f[5].parse().with_context(|| format!("line {}: threads", lineno + 1))?,
-                rows_per_sec: f[6]
+                isa,
+                rows_per_sec: rps
                     .parse()
                     .with_context(|| format!("line {}: rows_per_sec", lineno + 1))?,
             };
@@ -148,13 +176,14 @@ impl TuningProfile {
         out.push('\n');
         for e in &self.entries {
             out.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{:.1}\n",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.1}\n",
                 e.n,
                 e.dtype.name(),
                 e.variant.name(),
                 e.block,
                 e.interleave,
                 e.threads,
+                e.isa.name(),
                 e.rows_per_sec
             ));
         }
@@ -264,6 +293,8 @@ pub struct PlanPolicy {
     pub pin_block: bool,
     /// `--plan-interleave` was given explicitly: ditto.
     pub pin_interleave: bool,
+    /// `--kernel` was given explicitly: ditto.
+    pub pin_kernel: bool,
 }
 
 impl PlanPolicy {
@@ -274,6 +305,7 @@ impl PlanPolicy {
             profile: None,
             pin_block: true,
             pin_interleave: true,
+            pin_kernel: true,
         }
     }
 
@@ -284,6 +316,7 @@ impl PlanPolicy {
             profile: Some(profile),
             pin_block: false,
             pin_interleave: false,
+            pin_kernel: false,
         }
     }
 
@@ -297,6 +330,13 @@ impl PlanPolicy {
                 }
                 if !self.pin_interleave {
                     cfg.interleave = e.interleave;
+                }
+                // A tuned ISA this host can't run (profile copied from
+                // another machine, or the `simd` feature toggled off) is
+                // ignored rather than failing plan compilation — the
+                // base choice stands.
+                if !self.pin_kernel && e.isa.available() {
+                    cfg.kernel = KernelChoice::Fixed(e.isa);
                 }
             }
         }
@@ -480,6 +520,9 @@ pub struct TuneRequest {
     pub interleaves: Vec<usize>,
     /// Candidate executor pool sizes (1 = serial).
     pub threads: Vec<usize>,
+    /// Candidate comparator ISAs (unavailable ones are skipped, so a
+    /// request built on one host replays safely on another).
+    pub isas: Vec<KernelIsa>,
     /// Rows per measured batch.
     pub rows: usize,
     /// Measurement harness preset.
@@ -497,6 +540,7 @@ impl TuneRequest {
             blocks: vec![1024],
             interleaves: vec![1, 8],
             threads: vec![1],
+            isas: vec![KernelIsa::Scalar],
             rows: 8,
             bench: Bench {
                 warmup: 1,
@@ -510,7 +554,9 @@ impl TuneRequest {
 
     /// The real per-host grid: L2-to-L1 block range × the interleave
     /// widths a 128/256/512-bit SIMD unit can saturate × serial vs one
-    /// pool sized to the machine.
+    /// pool sized to the machine × every comparator ISA this host can
+    /// execute (so the profile can record that autovectorized scalar
+    /// beats the explicit kernels for a class, where it does).
     pub fn full(classes: Vec<(usize, Dtype)>) -> Self {
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
         Self {
@@ -518,6 +564,7 @@ impl TuneRequest {
             blocks: vec![256, 1024, 4096],
             interleaves: vec![1, 4, 8, 16],
             threads: if avail > 1 { vec![1, avail] } else { vec![1] },
+            isas: KernelIsa::available_isas(),
             rows: 32,
             bench: Bench {
                 warmup: 1,
@@ -541,11 +588,14 @@ pub struct TuneOutcome {
 }
 
 /// Run the sweep: for every class, measure every candidate
-/// `(block, interleave, threads)` on the real executor dispatch path and
-/// keep the fastest.
+/// `(block, interleave, threads, isa)` on the real executor dispatch
+/// path and keep the fastest.
 pub fn tune(req: &TuneRequest) -> TuneOutcome {
     let mut measured = Vec::new();
     let mut chosen = Vec::new();
+    // Unavailable ISAs are dropped, not errors: a request literal with
+    // `avx2` must replay on a host without it (it measures what it can).
+    let isas: Vec<KernelIsa> = req.isas.iter().copied().filter(|i| i.available()).collect();
     for &(n, dtype) in &req.classes {
         let mut best: Option<TunedEntry> = None;
         for &threads in &req.threads {
@@ -568,27 +618,41 @@ pub fn tune(req: &TuneRequest) -> TuneOutcome {
             widths.dedup();
             for &block in &blocks {
                 for &interleave in &widths {
-                    let plan = ExecutionPlan::with_config(
-                        ArtifactKind::Sort,
-                        n,
-                        false,
-                        PlanConfig { variant: Variant::Optimized, block, interleave },
-                    );
-                    let rows_per_sec =
-                        measure_rows_per_sec(&plan, pool.as_ref(), dtype, req.rows, &req.bench, req.seed);
-                    let entry = TunedEntry {
-                        n,
-                        dtype,
-                        variant: Variant::Optimized,
-                        block,
-                        interleave,
-                        threads,
-                        rows_per_sec,
-                    };
-                    if best.as_ref().is_none_or(|b| entry.rows_per_sec > b.rows_per_sec) {
-                        best = Some(entry.clone());
+                    for &isa in &isas {
+                        let plan = ExecutionPlan::with_config(
+                            ArtifactKind::Sort,
+                            n,
+                            false,
+                            PlanConfig {
+                                variant: Variant::Optimized,
+                                block,
+                                interleave,
+                                kernel: KernelChoice::Fixed(isa),
+                            },
+                        );
+                        let rows_per_sec = measure_rows_per_sec(
+                            &plan,
+                            pool.as_ref(),
+                            dtype,
+                            req.rows,
+                            &req.bench,
+                            req.seed,
+                        );
+                        let entry = TunedEntry {
+                            n,
+                            dtype,
+                            variant: Variant::Optimized,
+                            block,
+                            interleave,
+                            threads,
+                            isa,
+                            rows_per_sec,
+                        };
+                        if best.as_ref().is_none_or(|b| entry.rows_per_sec > b.rows_per_sec) {
+                            best = Some(entry.clone());
+                        }
+                        measured.push(entry);
                     }
-                    measured.push(entry);
                 }
             }
         }
@@ -619,7 +683,13 @@ fn measure_rows_per_sec(
         mut make: impl FnMut() -> Vec<T>,
     ) -> f64 {
         let cfg = plan.config();
-        let label = format!("tune n={} b={} r={}", plan.n(), cfg.block, cfg.interleave);
+        let label = format!(
+            "tune n={} b={} r={} isa={}",
+            plan.n(),
+            cfg.block,
+            cfg.interleave,
+            plan.isa().name()
+        );
         let meas = bench.run_with_setup(&label, &mut make, |mut data| {
             execute_batch(plan, pool, &mut data).expect("tune batch must execute");
             black_box(&data);
@@ -657,6 +727,7 @@ mod tests {
             block,
             interleave,
             threads,
+            isa: KernelIsa::Scalar,
             rows_per_sec: 1000.0,
         }
     }
@@ -670,17 +741,51 @@ mod tests {
             entries: vec![
                 entry(1024, Dtype::U32, 256, 8, 1),
                 entry(65536, Dtype::U32, 4096, 16, 4),
-                entry(1024, Dtype::F32, 1024, 4, 2),
+                TunedEntry { isa: KernelIsa::Portable, ..entry(1024, Dtype::F32, 1024, 4, 2) },
             ],
         };
         profile.save(&path).unwrap();
         let loaded = TuningProfile::load(&path).unwrap();
         assert_eq!(loaded.entries.len(), 3);
         for (a, b) in loaded.entries.iter().zip(&profile.entries) {
-            assert_eq!((a.n, a.dtype, a.block, a.interleave, a.threads),
-                       (b.n, b.dtype, b.block, b.interleave, b.threads));
+            assert_eq!((a.n, a.dtype, a.block, a.interleave, a.threads, a.isa),
+                       (b.n, b.dtype, b.block, b.interleave, b.threads, b.isa));
         }
         assert_eq!(loaded.tuned_threads(), Some(4));
+    }
+
+    /// Satellite regression: a 7-field profile written before the `isa`
+    /// column existed must still load (defaulting to `scalar` — what
+    /// those sweeps measured) and round-trip through the 8-field writer
+    /// without changing any choice. No silent profile invalidation.
+    #[test]
+    fn legacy_seven_field_profiles_still_load() {
+        let dir = std::env::temp_dir().join("bitonic-tpu-autotune-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.tsv");
+        std::fs::write(
+            &path,
+            "# bitonic-tpu tuning profile — written by `bitonic-tpu tune`\n\
+             n\tdtype\tvariant\tblock\tinterleave\tthreads\trows_per_sec\n\
+             1024\tuint32\toptimized\t256\t8\t1\t1234.5\n\
+             65536\tfloat32\toptimized\t4096\t16\t4\t99.0\n",
+        )
+        .unwrap();
+        let loaded = TuningProfile::load(&path).unwrap();
+        assert_eq!(loaded.entries.len(), 2);
+        for e in &loaded.entries {
+            assert_eq!(e.isa, KernelIsa::Scalar, "pre-isa rows measured the scalar kernels");
+        }
+        assert_eq!(
+            (loaded.entries[0].n, loaded.entries[0].block, loaded.entries[0].rows_per_sec),
+            (1024, 256, 1234.5)
+        );
+        // Saving upgrades the schema in place; the reload is identical.
+        let upgraded = dir.join("legacy-upgraded.tsv");
+        loaded.save(&upgraded).unwrap();
+        let text = std::fs::read_to_string(&upgraded).unwrap();
+        assert!(text.contains(PROFILE_HEADER), "save writes the 8-field header");
+        assert_eq!(TuningProfile::load(&upgraded).unwrap(), loaded);
     }
 
     #[test]
@@ -696,6 +801,14 @@ mod tests {
         std::fs::write(&bad, format!("{PROFILE_HEADER}\n1024\tuint32\toptimized\t256\t0\t1\t10.0\n"))
             .unwrap();
         assert!(TuningProfile::load(&bad).is_err());
+        // An unknown isa token is rejected with the column named.
+        std::fs::write(
+            &bad,
+            format!("{PROFILE_HEADER}\n1024\tuint32\toptimized\t256\t8\t1\tneon\t10.0\n"),
+        )
+        .unwrap();
+        let err = TuningProfile::load(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("bad isa"), "{err:#}");
         // Missing file names the tune command.
         let err = TuningProfile::load(dir.join("nope.tsv")).unwrap_err();
         assert!(format!("{err:#}").contains("bitonic-tpu tune"));
@@ -768,27 +881,50 @@ mod tests {
 
     #[test]
     fn policy_resolves_profile_but_respects_pins() {
-        let base = PlanConfig { variant: Variant::Optimized, block: 4096, interleave: 1 };
+        let base = PlanConfig { block: 4096, interleave: 1, ..Default::default() };
         let profile = TuningProfile {
-            entries: vec![entry(1024, Dtype::U32, 256, 16, 1)],
+            entries: vec![TunedEntry {
+                isa: KernelIsa::Portable,
+                ..entry(1024, Dtype::U32, 256, 16, 1)
+            }],
         };
-        // Tuned policy: profile refines both fields.
+        // Tuned policy: profile refines block, interleave and kernel.
         let tuned = PlanPolicy::tuned(base, profile.clone());
         let cfg = tuned.resolve(1024, Dtype::U32);
         assert_eq!((cfg.block, cfg.interleave), (256, 16));
+        assert_eq!(cfg.kernel, KernelChoice::Fixed(KernelIsa::Portable));
         assert_eq!(cfg.variant, Variant::Optimized, "profile never flips the variant");
         // No matching class ⇒ base untouched.
         let cfg = tuned.resolve(1024, Dtype::I32);
-        assert_eq!((cfg.block, cfg.interleave), (4096, 1));
+        assert_eq!((cfg.block, cfg.interleave, cfg.kernel), (4096, 1, KernelChoice::Auto));
         // Pinned fields win over the profile.
         let pinned = PlanPolicy {
             base,
-            profile: Some(profile),
+            profile: Some(profile.clone()),
             pin_block: true,
             pin_interleave: false,
+            pin_kernel: true,
         };
         let cfg = pinned.resolve(1024, Dtype::U32);
-        assert_eq!((cfg.block, cfg.interleave), (4096, 16));
+        assert_eq!((cfg.block, cfg.interleave, cfg.kernel), (4096, 16, KernelChoice::Auto));
+        // A tuned ISA this host can't execute is skipped, not adopted:
+        // the resulting config must still pass plan validation.
+        let foreign = PlanPolicy::tuned(
+            base,
+            TuningProfile {
+                entries: vec![TunedEntry {
+                    isa: KernelIsa::Avx2,
+                    ..entry(1024, Dtype::U32, 256, 16, 1)
+                }],
+            },
+        );
+        let cfg = foreign.resolve(1024, Dtype::U32);
+        if KernelIsa::Avx2.available() {
+            assert_eq!(cfg.kernel, KernelChoice::Fixed(KernelIsa::Avx2));
+        } else {
+            assert_eq!(cfg.kernel, KernelChoice::Auto);
+        }
+        assert!(cfg.kernel.validate().is_ok());
         // Fixed policy ignores any profile by construction.
         let fixed = PlanPolicy::fixed(base);
         assert_eq!(fixed.resolve(1024, Dtype::U32), base);
@@ -804,6 +940,9 @@ mod tests {
             blocks: vec![16, 64],
             interleaves: vec![1, 4],
             threads: vec![1],
+            // Scalar and Portable are available on every host/build, so
+            // the grid size below is deterministic.
+            isas: vec![KernelIsa::Scalar, KernelIsa::Portable],
             rows: 4,
             bench: Bench {
                 warmup: 0,
@@ -814,12 +953,13 @@ mod tests {
             seed: 1,
         };
         let out = tune(&req);
-        assert_eq!(out.measured.len(), 2 * 2 * 2);
+        assert_eq!(out.measured.len(), 2 * 2 * 2 * 2);
         assert_eq!(out.profile.entries.len(), 2);
         for (chosen, &(n, dtype)) in out.profile.entries.iter().zip(&req.classes) {
             assert_eq!((chosen.n, chosen.dtype), (n, dtype));
             assert!(req.blocks.contains(&chosen.block));
             assert!(req.interleaves.contains(&chosen.interleave));
+            assert!(req.isas.contains(&chosen.isa));
             assert!(chosen.rows_per_sec > 0.0);
             assert!(out
                 .measured
@@ -838,6 +978,7 @@ mod tests {
             blocks: vec![64, 4096, 65536],
             interleaves: vec![1],
             threads: vec![1],
+            isas: vec![KernelIsa::Scalar],
             rows: 2,
             bench: Bench {
                 warmup: 0,

@@ -46,7 +46,10 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::sort::network::{run_launch_counting, run_launch_interleaved, Launch, Network, Variant};
+use crate::sort::network::{
+    run_launch_counting_isa, run_launch_interleaved_isa, Launch, Network, Variant,
+};
+use crate::sort::simd::{KernelChoice, KernelIsa};
 use crate::sort::SortKey;
 use crate::util::error::Context;
 use crate::util::threadpool::{ScopedJob, ThreadPool};
@@ -89,6 +92,13 @@ pub struct PlanConfig {
     /// an execution pool is attached, narrowed so the batch still yields
     /// at least one tile per worker (threads scale better than lanes).
     pub interleave: usize,
+    /// Comparator instruction set ([`crate::sort::simd`]): `Auto`
+    /// resolves once at plan-compile time (AVX2 when the `simd` feature
+    /// is built and the host supports it, else the scalar kernels); a
+    /// fixed ISA pins the sweeps for ablations and autotuned profiles.
+    /// The launch structure, pass counts and disjointness proofs are
+    /// identical for every ISA — only instruction selection changes.
+    pub kernel: KernelChoice,
 }
 
 impl Default for PlanConfig {
@@ -97,6 +107,7 @@ impl Default for PlanConfig {
             variant: Variant::Optimized,
             block: DEFAULT_PLAN_BLOCK,
             interleave: DEFAULT_PLAN_INTERLEAVE,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -124,6 +135,10 @@ pub struct ExecutionPlan {
     reverse_output: bool,
     /// The configuration the program was compiled at.
     config: PlanConfig,
+    /// The comparator ISA [`PlanConfig::kernel`] resolved to on this
+    /// host, fixed at compile time so every row/tile of the plan runs
+    /// the same kernels.
+    isa: KernelIsa,
 }
 
 impl ExecutionPlan {
@@ -162,6 +177,7 @@ impl ExecutionPlan {
             launches,
             reverse_output: descending,
             config,
+            isa: config.kernel.resolve(),
         }
     }
 
@@ -178,6 +194,13 @@ impl ExecutionPlan {
     /// The configuration the launch program was compiled at.
     pub fn config(&self) -> PlanConfig {
         self.config
+    }
+
+    /// The comparator ISA this plan executes with —
+    /// [`PlanConfig::kernel`] resolved against this host at compile
+    /// time.
+    pub fn isa(&self) -> KernelIsa {
+        self.isa
     }
 
     /// The compiled launch program, execution order — what the static
@@ -252,7 +275,7 @@ impl ExecutionPlan {
         }
         let mut streamed = 0;
         for l in &self.launches {
-            streamed += run_launch_counting(row, l);
+            streamed += run_launch_counting_isa(row, l, self.isa);
         }
         if self.reverse_output {
             row.reverse();
@@ -303,7 +326,7 @@ impl ExecutionPlan {
             }
         }
         for launch in &self.launches {
-            run_launch_interleaved(scratch, launch, r);
+            run_launch_interleaved_isa(scratch, launch, r, self.isa);
         }
         for (l, row) in tile.chunks_mut(n).enumerate() {
             for (e, x) in row.iter_mut().enumerate() {
@@ -477,6 +500,12 @@ impl SortExecutor {
             plan.interleave >= 1,
             "plan interleave must be >= 1 (1 = scalar execution), got 0"
         );
+        // Same rationale for the comparator ISA: `--kernel avx2` on a
+        // host (or build) without AVX2 must fail the compile, not
+        // silently degrade to scalar inside the device-host thread.
+        plan.kernel
+            .validate()
+            .with_context(|| format!("compiling artifact {}", meta.name))?;
         let text = std::fs::read_to_string(hlo_text_path)
             .with_context(|| format!("reading {hlo_text_path:?} — generate artifacts with `python -m compile.aot` (see README)"))?;
         crate::ensure!(
@@ -664,7 +693,12 @@ mod tests {
                 ArtifactKind::Sort,
                 n,
                 false,
-                PlanConfig { variant, block: DEFAULT_PLAN_BLOCK, interleave: 1 },
+                PlanConfig {
+                    variant,
+                    block: DEFAULT_PLAN_BLOCK,
+                    interleave: 1,
+                    ..Default::default()
+                },
             )
         };
         for logn in [14usize, 16] {
@@ -731,6 +765,7 @@ mod tests {
                                     variant: Variant::Basic,
                                     block: DEFAULT_PLAN_BLOCK,
                                     interleave: 1,
+                                    ..Default::default()
                                 },
                             );
                             let mut want = rows.clone();
@@ -743,7 +778,12 @@ mod tests {
                                         kind,
                                         n,
                                         descending,
-                                        PlanConfig { variant, block, interleave: 1 },
+                                        PlanConfig {
+                                            variant,
+                                            block,
+                                            interleave: 1,
+                                            ..Default::default()
+                                        },
                                     );
                                     let mut got = rows.clone();
                                     for row in got.chunks_mut(n) {
@@ -814,6 +854,7 @@ mod tests {
                                     variant: Variant::Optimized,
                                     block: 64,
                                     interleave,
+                                    ..Default::default()
                                 },
                             )
                         };
@@ -869,7 +910,12 @@ mod tests {
                 ArtifactKind::Sort,
                 n,
                 false,
-                PlanConfig { variant: Variant::Optimized, block: 256, interleave },
+                PlanConfig {
+                    variant: Variant::Optimized,
+                    block: 256,
+                    interleave,
+                    ..Default::default()
+                },
             ),
             pool,
         };
@@ -897,7 +943,7 @@ mod tests {
                 ArtifactKind::Sort,
                 n,
                 false,
-                PlanConfig { variant, block, interleave: 1 },
+                PlanConfig { variant, block, interleave: 1, ..Default::default() },
             ),
             pool,
         };
@@ -1002,7 +1048,7 @@ mod tests {
             meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
             &good,
             None,
-            PlanConfig { variant: Variant::Optimized, block: 3, interleave: 1 },
+            PlanConfig { block: 3, interleave: 1, ..Default::default() },
         );
         assert!(format!("{:#}", bad_plan.unwrap_err()).contains("power of two"));
 
@@ -1011,9 +1057,36 @@ mod tests {
             meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
             &good,
             None,
-            PlanConfig { variant: Variant::Optimized, block: 4, interleave: 0 },
+            PlanConfig { block: 4, interleave: 0, ..Default::default() },
         );
         assert!(format!("{:#}", bad_interleave.unwrap_err()).contains("interleave"));
+
+        // A fixed comparator ISA this host can't execute is rejected on
+        // the same Result path (`Auto` never errors — it resolves to a
+        // supported ISA). Every available ISA compiles and is the one
+        // the plan reports.
+        if !KernelIsa::Avx2.available() {
+            let bad_kernel = SortExecutor::compile_with_pool(
+                meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
+                &good,
+                None,
+                PlanConfig {
+                    kernel: KernelChoice::Fixed(KernelIsa::Avx2),
+                    ..Default::default()
+                },
+            );
+            assert!(format!("{:#}", bad_kernel.unwrap_err()).contains("not available"));
+        }
+        for isa in KernelIsa::available_isas() {
+            let exe = SortExecutor::compile_with_pool(
+                meta(ArtifactKind::Sort, 2, 8, Dtype::U32, false),
+                &good,
+                None,
+                PlanConfig { kernel: KernelChoice::Fixed(isa), ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(exe.plan().isa(), isa, "fixed {} must stay pinned", isa.name());
+        }
     }
 
     #[test]

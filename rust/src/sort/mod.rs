@@ -22,6 +22,7 @@ pub mod network;
 pub mod oddeven;
 pub mod quicksort;
 pub mod radix;
+pub mod simd;
 pub mod verify;
 
 pub use bitonic::{bitonic_sort, bitonic_sort_desc, bitonic_sort_padded};
@@ -34,6 +35,7 @@ pub use network::{Network, Phase, Step, Variant};
 pub use oddeven::oddeven_sort;
 pub use quicksort::quicksort;
 pub use radix::radix_sort_u32;
+pub use simd::{KernelChoice, KernelIsa, LaneKind};
 pub use verify::{is_sorted, is_sorted_desc, same_multiset};
 
 /// Keys sortable by every substrate in this module.
@@ -50,6 +52,11 @@ pub trait SortKey: Copy + Send + Sync + 'static {
     const MAX_KEY: Self;
     /// Minimum value (used for descending padding).
     const MIN_KEY: Self;
+    /// Explicit-SIMD lane classification (see [`simd`]). A non-`Other`
+    /// value declares that `Self` is bit-identical to the named
+    /// primitive and that [`Self::total_lt`] matches its total order —
+    /// the SIMD dispatcher reinterprets key slices based on it.
+    const LANE_KIND: simd::LaneKind = simd::LaneKind::Other;
     /// Total-order minimum of two keys.
     #[inline]
     fn key_min(a: Self, b: Self) -> Self {
@@ -71,16 +78,27 @@ pub trait SortKey: Copy + Send + Sync + 'static {
 }
 
 macro_rules! int_key {
-    ($($t:ty),*) => {$(
+    ($($t:ty => $kind:ident),* $(,)?) => {$(
         impl SortKey for $t {
             #[inline]
             fn total_lt(&self, other: &Self) -> bool { self < other }
             const MAX_KEY: Self = <$t>::MAX;
             const MIN_KEY: Self = <$t>::MIN;
+            const LANE_KIND: simd::LaneKind = simd::LaneKind::$kind;
         }
     )*};
 }
-int_key!(u8, u16, u32, u64, i8, i16, i32, i64, usize);
+int_key!(
+    u8 => Other,
+    u16 => Other,
+    u32 => U32,
+    u64 => Other,
+    i8 => Other,
+    i16 => Other,
+    i32 => I32,
+    i64 => Other,
+    usize => Other,
+);
 
 impl SortKey for f32 {
     #[inline]
@@ -89,6 +107,7 @@ impl SortKey for f32 {
     }
     const MAX_KEY: Self = f32::INFINITY;
     const MIN_KEY: Self = f32::NEG_INFINITY;
+    const LANE_KIND: simd::LaneKind = simd::LaneKind::F32;
 }
 
 impl SortKey for f64 {

@@ -20,11 +20,8 @@
 //! cache-resident, double steps pair strides in registers — and is what
 //! the runtime's [`crate::runtime::ExecutionPlan`] walks per row.
 
-use super::bitonic::{
-    compare_exchange_double_step, compare_exchange_double_step_interleaved,
-    compare_exchange_double_step_range, compare_exchange_step, compare_exchange_step_interleaved,
-    compare_exchange_step_range,
-};
+use super::bitonic::{compare_exchange_double_step_range, compare_exchange_step_range};
+use super::simd::{self, KernelIsa};
 use super::SortKey;
 
 /// One compare-exchange step: all pairs `(i, i ^ stride)` with direction
@@ -374,9 +371,10 @@ fn phase_tail_launches(k: usize, block: usize, paired: bool, out: &mut Vec<Launc
 /// row's memory** — the property the paper's two optimizations buy:
 ///
 /// * [`Launch::GlobalStep`] — one branchless compare-exchange sweep
-///   ([`compare_exchange_step`]).
+///   ([`crate::sort::bitonic::compare_exchange_step`]).
 /// * [`Launch::GlobalDoubleStep`] — both strides in registers per quad,
-///   one read+write of the row ([`compare_exchange_double_step`], the
+///   one read+write of the row
+///   ([`crate::sort::bitonic::compare_exchange_double_step`], the
 ///   paper §4.2).
 /// * [`Launch::BlockFused`] — the row is cut into aligned tiles of
 ///   `2 * stride_max` keys and *all* fused steps run per tile while it is
@@ -391,6 +389,15 @@ pub fn run_launch<T: SortKey>(xs: &mut [T], launch: &Launch) {
     run_launch_counting(xs, launch);
 }
 
+/// [`run_launch`] under an explicit comparator ISA (see
+/// [`crate::sort::simd`]): the pass structure is identical for every ISA
+/// — only the inner compare-exchange sweeps change instruction selection
+/// — so pass counting, disjointness proofs and launch algebra are all
+/// ISA-independent.
+pub fn run_launch_isa<T: SortKey>(xs: &mut [T], launch: &Launch, isa: KernelIsa) {
+    run_launch_counting_isa(xs, launch, isa);
+}
+
 /// [`run_launch`], returning the number of row elements this launch
 /// streamed from row-level ("global") memory: the whole row for a global
 /// launch, and **one tile per outer tile iteration** for `BlockFused` —
@@ -402,17 +409,29 @@ pub fn run_launch<T: SortKey>(xs: &mut [T], launch: &Launch) {
 /// fails the `run_row_counting == global_passes` assertions in the
 /// runtime tests and the ablation bench.
 pub fn run_launch_counting<T: SortKey>(xs: &mut [T], launch: &Launch) -> usize {
+    run_launch_counting_isa(xs, launch, KernelIsa::Scalar)
+}
+
+/// [`run_launch_counting`] under an explicit comparator ISA. The
+/// streamed count is a property of the launch structure alone, so it is
+/// identical for every ISA.
+pub fn run_launch_counting_isa<T: SortKey>(
+    xs: &mut [T],
+    launch: &Launch,
+    isa: KernelIsa,
+) -> usize {
+    let n = xs.len();
     match *launch {
         Launch::GlobalStep(s) => {
-            compare_exchange_step(xs, s.phase_len, s.stride);
-            xs.len()
+            simd::step_interleaved(isa, xs, s.phase_len, s.stride, 1, 0, n);
+            n
         }
         Launch::GlobalDoubleStep {
             phase_len,
             stride_hi,
         } => {
-            compare_exchange_double_step(xs, phase_len, stride_hi);
-            xs.len()
+            simd::double_step_interleaved(isa, xs, phase_len, stride_hi, 1, 0, n);
+            n
         }
         Launch::BlockFused {
             phase_lo,
@@ -420,7 +439,6 @@ pub fn run_launch_counting<T: SortKey>(xs: &mut [T], launch: &Launch) -> usize {
             stride_max,
             register_paired,
         } => {
-            let n = xs.len();
             let tile = 2 * stride_max;
             debug_assert!(tile >= 2 && n % tile == 0, "tile {tile} must divide n {n}");
             let mut streamed = 0;
@@ -430,7 +448,15 @@ pub fn run_launch_counting<T: SortKey>(xs: &mut [T], launch: &Launch) -> usize {
                 streamed += tile;
                 let mut k = phase_lo;
                 while k <= phase_hi {
-                    run_fused_tail_range(xs, k, (k / 2).min(stride_max), off, end, register_paired);
+                    run_fused_tail_range_isa(
+                        xs,
+                        k,
+                        (k / 2).min(stride_max),
+                        off,
+                        end,
+                        register_paired,
+                        isa,
+                    );
                     k *= 2;
                 }
                 off = end;
@@ -472,6 +498,30 @@ pub fn run_fused_tail_range<T: SortKey>(
     }
 }
 
+/// [`run_fused_tail_range`] under an explicit comparator ISA — same
+/// stride pairing, sweeps routed through [`crate::sort::simd`].
+pub fn run_fused_tail_range_isa<T: SortKey>(
+    xs: &mut [T],
+    phase_len: usize,
+    stride_hi: usize,
+    lo: usize,
+    hi: usize,
+    paired: bool,
+    isa: KernelIsa,
+) {
+    let mut j = stride_hi;
+    if paired {
+        while j >= 2 {
+            simd::double_step_interleaved(isa, xs, phase_len, j, 1, lo, hi);
+            j /= 4;
+        }
+    }
+    while j >= 1 {
+        simd::step_interleaved(isa, xs, phase_len, j, 1, lo, hi);
+        j /= 2;
+    }
+}
+
 /// [`run_launch`] over a **lane-interleaved tile** of `lanes` rows —
 /// the batch-interleaved execution mode: `xs.len() = n * lanes` holds
 /// `lanes` independent rows element-major (`xs[e * lanes + l]`), and one
@@ -491,17 +541,29 @@ pub fn run_fused_tail_range<T: SortKey>(
 /// element index, never on its lane — pinned by
 /// `interleaved_launch_bit_exact_with_per_lane_scalar_walk`.
 pub fn run_launch_interleaved<T: SortKey>(xs: &mut [T], launch: &Launch, lanes: usize) {
+    run_launch_interleaved_isa(xs, launch, lanes, KernelIsa::Scalar);
+}
+
+/// [`run_launch_interleaved`] under an explicit comparator ISA — the
+/// batch-interleaved sweeps are where the explicit vector kernels earn
+/// their keep (long stride-1 spans of `j * lanes` keys per direction).
+pub fn run_launch_interleaved_isa<T: SortKey>(
+    xs: &mut [T],
+    launch: &Launch,
+    lanes: usize,
+    isa: KernelIsa,
+) {
     debug_assert!(lanes >= 1 && xs.len() % lanes == 0);
     let n = xs.len() / lanes;
     match *launch {
         Launch::GlobalStep(s) => {
-            compare_exchange_step_interleaved(xs, s.phase_len, s.stride, lanes, 0, n);
+            simd::step_interleaved(isa, xs, s.phase_len, s.stride, lanes, 0, n);
         }
         Launch::GlobalDoubleStep {
             phase_len,
             stride_hi,
         } => {
-            compare_exchange_double_step_interleaved(xs, phase_len, stride_hi, lanes, 0, n);
+            simd::double_step_interleaved(isa, xs, phase_len, stride_hi, lanes, 0, n);
         }
         Launch::BlockFused {
             phase_lo,
@@ -516,7 +578,7 @@ pub fn run_launch_interleaved<T: SortKey>(xs: &mut [T], launch: &Launch, lanes: 
                 let end = off + tile;
                 let mut k = phase_lo;
                 while k <= phase_hi {
-                    run_fused_tail_range_interleaved(
+                    run_fused_tail_range_interleaved_isa(
                         xs,
                         k,
                         (k / 2).min(stride_max),
@@ -524,6 +586,7 @@ pub fn run_launch_interleaved<T: SortKey>(xs: &mut [T], launch: &Launch, lanes: 
                         end,
                         register_paired,
                         lanes,
+                        isa,
                     );
                     k *= 2;
                 }
@@ -547,15 +610,39 @@ pub fn run_fused_tail_range_interleaved<T: SortKey>(
     paired: bool,
     lanes: usize,
 ) {
+    run_fused_tail_range_interleaved_isa(
+        xs,
+        phase_len,
+        stride_hi,
+        lo,
+        hi,
+        paired,
+        lanes,
+        KernelIsa::Scalar,
+    )
+}
+
+/// [`run_fused_tail_range_interleaved`] under an explicit comparator ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fused_tail_range_interleaved_isa<T: SortKey>(
+    xs: &mut [T],
+    phase_len: usize,
+    stride_hi: usize,
+    lo: usize,
+    hi: usize,
+    paired: bool,
+    lanes: usize,
+    isa: KernelIsa,
+) {
     let mut j = stride_hi;
     if paired {
         while j >= 2 {
-            compare_exchange_double_step_interleaved(xs, phase_len, j, lanes, lo, hi);
+            simd::double_step_interleaved(isa, xs, phase_len, j, lanes, lo, hi);
             j /= 4;
         }
     }
     while j >= 1 {
-        compare_exchange_step_interleaved(xs, phase_len, j, lanes, lo, hi);
+        simd::step_interleaved(isa, xs, phase_len, j, lanes, lo, hi);
         j /= 2;
     }
 }
@@ -710,6 +797,7 @@ mod tests {
         // interpreter vs its own step expansion through the plain sweep.
         // Every intermediate state (after each launch) must agree
         // bit-for-bit, and the result must be sorted.
+        use crate::sort::bitonic::compare_exchange_step;
         use crate::workload::{Distribution, Generator};
         let mut gen = Generator::new(0xF0);
         for (n, blocks) in [(64usize, vec![4usize, 16, 64]), (1024, vec![4, 64, 256, 4096])] {
@@ -769,6 +857,43 @@ mod tests {
                     }
                     for (l, row) in scalar.iter().enumerate() {
                         assert!(row.windows(2).all(|w| w[0] <= w[1]), "lane {l} unsorted");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isa_interpreters_bit_exact_with_scalar_launch_walk() {
+        // Every available comparator ISA must produce bit-identical
+        // state after every launch of every program, scalar rows and
+        // interleaved tiles alike — the interpreter-level half of the
+        // SIMD bit-exactness contract (the kernel-level half lives in
+        // sort::simd, the plan/executor halves in tests/simd_props.rs).
+        use crate::workload::{Distribution, Generator};
+        let mut gen = Generator::new(0x15A);
+        let n = 256;
+        let net = Network::new(n);
+        for isa in KernelIsa::available_isas() {
+            for variant in Variant::ALL {
+                for lanes in [1usize, 5, 8] {
+                    let data = gen.u32s(lanes * n, Distribution::DupHeavy);
+                    let mut tile = data.clone();
+                    let mut want = data;
+                    for launch in net.launches(variant, 64) {
+                        if lanes == 1 {
+                            let streamed = run_launch_counting_isa(&mut tile, &launch, isa);
+                            assert_eq!(streamed, run_launch_counting(&mut want, &launch));
+                        } else {
+                            run_launch_interleaved_isa(&mut tile, &launch, lanes, isa);
+                            run_launch_interleaved(&mut want, &launch, lanes);
+                        }
+                        assert_eq!(
+                            tile,
+                            want,
+                            "{} {variant:?} lanes={lanes} {launch:?}",
+                            isa.name()
+                        );
                     }
                 }
             }

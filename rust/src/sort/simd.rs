@@ -1,0 +1,858 @@
+//! Explicit SIMD comparator kernels with runtime ISA dispatch.
+//!
+//! The batch-interleaved kernels in [`crate::sort::bitonic`] are written
+//! so the autovectorizer *can* turn their branchless element-major sweeps
+//! into vector code — but nothing in the repo proved that it *does*, per
+//! dtype. This module makes the lane model literal: the same
+//! compare-exchange sweeps implemented three ways, selectable at runtime
+//! per [`crate::runtime::ExecutionPlan`]:
+//!
+//! * [`KernelIsa::Scalar`] — exactly today's kernels in
+//!   [`crate::sort::bitonic`]; the autovec baseline and the universal
+//!   fallback.
+//! * [`KernelIsa::Portable`] — a chunked-scalar variant (fixed
+//!   [`CHUNK`]-wide inner blocks) that compiles on every architecture; it
+//!   restructures the sweep the way an explicit vector kernel would,
+//!   without intrinsics, so the ablation can separate "shape of the loop"
+//!   from "instruction selection".
+//! * [`KernelIsa::Avx2`] — `core::arch::x86_64` AVX2 intrinsics for
+//!   u32 / i32 / f32 keys, 8 lanes per vector, behind the `simd` cargo
+//!   feature and an `is_x86_feature_detected!("avx2")` runtime check.
+//!   Other key types fall back to the scalar sweep.
+//!
+//! Every path is **bit-exact** with the scalar kernels: the sweeps apply
+//! `key_min`/`key_max` pointwise over disjoint index pairs, so chunking or
+//! vectorizing the traversal cannot change any result. For `f32` the AVX2
+//! kernel maps IEEE-754 bit patterns through the order-preserving
+//! involution used by `f32::total_cmp` (flip the low 31 bits of negative
+//! values, compare as signed i32), takes signed integer min/max, and maps
+//! back — NaN and ±inf order exactly as the scalar total-order path, and
+//! ties recover identical bit patterns because the map is injective.
+//!
+//! This dispatch seam (resolve a [`KernelChoice`] once per plan, route
+//! every inner sweep through it) is where a future wgpu/ISPC backend
+//! plugs in (ROADMAP item 5).
+
+use super::bitonic::{
+    compare_exchange_double_step_interleaved, compare_exchange_double_step_range,
+    compare_exchange_step_interleaved, compare_exchange_step_range,
+};
+use super::SortKey;
+
+/// Chunk width (keys) of the [`KernelIsa::Portable`] kernels, and the
+/// vector width (32-bit lanes) of the AVX2 kernels.
+pub const CHUNK: usize = 8;
+
+/// Which key types have an explicit vector lowering. Declared by
+/// [`SortKey::LANE_KIND`]; the dispatcher reinterprets key slices as the
+/// named primitive, so a non-[`LaneKind::Other`] value asserts that
+/// `Self` has exactly that primitive's size, alignment and bit layout.
+/// The dispatcher additionally checks size/align at runtime and falls
+/// back to the scalar sweep on mismatch — a lying `LANE_KIND` degrades to
+/// scalar, it cannot corrupt memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneKind {
+    /// `u32` keys: unsigned integer min/max lanes.
+    U32,
+    /// `i32` keys: signed integer min/max lanes.
+    I32,
+    /// `f32` keys: total-order bit mapping + signed integer min/max.
+    F32,
+    /// No explicit lowering; the scalar sweep runs instead.
+    Other,
+}
+
+/// The comparator instruction sets a plan can execute with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// The autovec-reliant scalar kernels (today's default path).
+    Scalar,
+    /// Chunked-scalar kernels: explicit-SIMD loop shape, no intrinsics,
+    /// available on every architecture.
+    Portable,
+    /// AVX2 intrinsics (x86_64, `simd` feature, runtime-detected).
+    Avx2,
+}
+
+impl KernelIsa {
+    /// Every ISA, dispatch-preference order (later = more specialized).
+    pub const ALL: [KernelIsa; 3] = [KernelIsa::Scalar, KernelIsa::Portable, KernelIsa::Avx2];
+
+    /// Stable lowercase name (CLI values, autotune TSV column).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Portable => "portable",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|isa| isa.name() == s)
+    }
+
+    /// Can this ISA execute on the current host *and* build? `Scalar`
+    /// and `Portable` always can; `Avx2` needs the `simd` feature, an
+    /// x86_64 target, and runtime AVX2 support.
+    pub fn available(self) -> bool {
+        match self {
+            KernelIsa::Scalar | KernelIsa::Portable => true,
+            KernelIsa::Avx2 => avx2_available(),
+        }
+    }
+
+    /// The ISAs available on this host, in [`Self::ALL`] order — the
+    /// autotuner's sweep axis.
+    pub fn available_isas() -> Vec<KernelIsa> {
+        Self::ALL.into_iter().filter(|isa| isa.available()).collect()
+    }
+}
+
+/// True when the AVX2 kernels are compiled in *and* the host supports
+/// them. Always false without the `simd` feature or off x86_64.
+pub fn avx2_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// What the user / profile *asked for*; resolved to a concrete
+/// [`KernelIsa`] once per plan. `Auto` is the default: best available
+/// ISA (AVX2 when compiled in and detected, else the scalar kernels —
+/// so a feature-disabled or non-AVX2 build behaves byte-identically to
+/// the pre-SIMD tree).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Pick the best available ISA at plan-compile time.
+    #[default]
+    Auto,
+    /// Force one ISA (validated against availability on the CLI path).
+    Fixed(KernelIsa),
+}
+
+impl KernelChoice {
+    /// Stable name (CLI `--kernel` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Fixed(isa) => isa.name(),
+        }
+    }
+
+    /// Parse a CLI `--kernel` value: `auto` or any [`KernelIsa::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "auto" {
+            return Some(KernelChoice::Auto);
+        }
+        KernelIsa::parse(s).map(KernelChoice::Fixed)
+    }
+
+    /// Resolve to a concrete ISA for this host. `Auto` prefers AVX2 when
+    /// available, else scalar (Portable is never picked implicitly — it
+    /// exists for the ablation and for profiles that measured it faster).
+    /// A `Fixed` ISA that is unavailable resolves to `Scalar` so that
+    /// infallible plan construction stays infallible; fallible entry
+    /// points reject it first via [`Self::validate`].
+    pub fn resolve(self) -> KernelIsa {
+        match self {
+            KernelChoice::Auto => {
+                if avx2_available() {
+                    KernelIsa::Avx2
+                } else {
+                    KernelIsa::Scalar
+                }
+            }
+            KernelChoice::Fixed(isa) => {
+                if isa.available() {
+                    isa
+                } else {
+                    KernelIsa::Scalar
+                }
+            }
+        }
+    }
+
+    /// Error when a fixed ISA cannot run here — the executor's compile
+    /// path calls this so `--kernel avx2` on a non-AVX2 host (or a build
+    /// without the `simd` feature) fails loudly instead of silently
+    /// degrading.
+    pub fn validate(self) -> crate::Result<()> {
+        if let KernelChoice::Fixed(isa) = self {
+            crate::ensure!(
+                isa.available(),
+                "kernel isa {:?} is not available on this host (built with `simd` feature: {}; \
+                 pick `auto`, `scalar` or `portable`)",
+                isa.name(),
+                cfg!(feature = "simd"),
+            );
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------------
+// Dispatching sweep entry points.
+// ----------------------------------------------------------------------
+
+/// [`compare_exchange_step_interleaved`] under `isa`. `lanes == 1`
+/// degenerates to the scalar-row range kernel, so this single entry point
+/// serves both the per-row and the batch-interleaved interpreters. Same
+/// preconditions as the scalar kernel.
+#[inline]
+pub fn step_interleaved<T: SortKey>(
+    isa: KernelIsa,
+    xs: &mut [T],
+    k: usize,
+    j: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    match isa {
+        KernelIsa::Scalar => {
+            if lanes == 1 {
+                compare_exchange_step_range(xs, k, j, lo, hi);
+            } else {
+                compare_exchange_step_interleaved(xs, k, j, lanes, lo, hi);
+            }
+        }
+        KernelIsa::Portable => portable_step_interleaved(xs, k, j, lanes, lo, hi),
+        KernelIsa::Avx2 => {
+            if !avx2_step_interleaved(xs, k, j, lanes, lo, hi) {
+                compare_exchange_step_interleaved(xs, k, j, lanes, lo, hi);
+            }
+        }
+    }
+}
+
+/// [`compare_exchange_double_step_interleaved`] under `isa` — the
+/// register-paired quad sweep. Same dispatch contract as
+/// [`step_interleaved`].
+#[inline]
+pub fn double_step_interleaved<T: SortKey>(
+    isa: KernelIsa,
+    xs: &mut [T],
+    k: usize,
+    j_hi: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    match isa {
+        KernelIsa::Scalar => {
+            if lanes == 1 {
+                compare_exchange_double_step_range(xs, k, j_hi, lo, hi);
+            } else {
+                compare_exchange_double_step_interleaved(xs, k, j_hi, lanes, lo, hi);
+            }
+        }
+        KernelIsa::Portable => portable_double_step_interleaved(xs, k, j_hi, lanes, lo, hi),
+        KernelIsa::Avx2 => {
+            if !avx2_double_step_interleaved(xs, k, j_hi, lanes, lo, hi) {
+                compare_exchange_double_step_interleaved(xs, k, j_hi, lanes, lo, hi);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Portable chunked-scalar kernels.
+// ----------------------------------------------------------------------
+
+/// One low/high block sweep in [`CHUNK`]-wide pieces. `DESC` hoists the
+/// direction out of the hot loop at compile time.
+#[inline]
+fn sweep_chunks<T: SortKey, const DESC: bool>(lows: &mut [T], highs: &mut [T]) {
+    let mut lc = lows.chunks_exact_mut(CHUNK);
+    let mut hc = highs.chunks_exact_mut(CHUNK);
+    for (cl, ch) in lc.by_ref().zip(hc.by_ref()) {
+        for (x, y) in cl.iter_mut().zip(ch.iter_mut()) {
+            let (a, b) = (*x, *y);
+            if DESC {
+                *x = T::key_max(a, b);
+                *y = T::key_min(a, b);
+            } else {
+                *x = T::key_min(a, b);
+                *y = T::key_max(a, b);
+            }
+        }
+    }
+    for (x, y) in lc.into_remainder().iter_mut().zip(hc.into_remainder().iter_mut()) {
+        let (a, b) = (*x, *y);
+        if DESC {
+            *x = T::key_max(a, b);
+            *y = T::key_min(a, b);
+        } else {
+            *x = T::key_min(a, b);
+            *y = T::key_max(a, b);
+        }
+    }
+}
+
+fn portable_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(lanes >= 1 && j >= 1);
+    debug_assert!(lo % (2 * j) == 0 && (hi - lo) % (2 * j) == 0 && hi * lanes <= xs.len());
+    let w = j * lanes;
+    let mut i = lo;
+    while i < hi {
+        let base = i * lanes;
+        let (lows, highs) = xs[base..base + 2 * w].split_at_mut(w);
+        if i & k == 0 {
+            sweep_chunks::<T, false>(lows, highs);
+        } else {
+            sweep_chunks::<T, true>(lows, highs);
+        }
+        i += 2 * j;
+    }
+}
+
+/// One quad sweep (blocks A B C D of `w` keys) in [`CHUNK`]-wide pieces;
+/// the compare-exchange order per index is the scalar quad order
+/// `(a,c) (b,d) (a,b) (c,d)`.
+#[inline]
+fn sweep_quad_chunks<T: SortKey, const DESC: bool>(
+    blk_a: &mut [T],
+    blk_b: &mut [T],
+    blk_c: &mut [T],
+    blk_d: &mut [T],
+) {
+    let w = blk_a.len();
+    let mut t0 = 0;
+    while t0 < w {
+        let t1 = (t0 + CHUNK).min(w);
+        for t in t0..t1 {
+            let (mut va, mut vb, mut vc, mut vd) = (blk_a[t], blk_b[t], blk_c[t], blk_d[t]);
+            let cx = |lo: &mut T, hi: &mut T| {
+                let (a, b) = (*lo, *hi);
+                if DESC {
+                    *lo = T::key_max(a, b);
+                    *hi = T::key_min(a, b);
+                } else {
+                    *lo = T::key_min(a, b);
+                    *hi = T::key_max(a, b);
+                }
+            };
+            cx(&mut va, &mut vc); // stride j_hi: (a, c)
+            cx(&mut vb, &mut vd); //              (b, d)
+            cx(&mut va, &mut vb); // stride j_lo: (a, b)
+            cx(&mut vc, &mut vd); //              (c, d)
+            blk_a[t] = va;
+            blk_b[t] = vb;
+            blk_c[t] = vc;
+            blk_d[t] = vd;
+        }
+        t0 = t1;
+    }
+}
+
+fn portable_double_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j_hi: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert!(j_hi >= 2 && 2 * j_hi <= k, "double step needs j_hi >= 2 and 2*j_hi <= k");
+    debug_assert!(lanes >= 1);
+    debug_assert!(lo % (2 * j_hi) == 0 && (hi - lo) % (2 * j_hi) == 0 && hi * lanes <= xs.len());
+    let j_lo = j_hi / 2;
+    let w = j_lo * lanes;
+    let mut i = lo;
+    while i < hi {
+        let base = i * lanes;
+        let (ab, cd) = xs[base..base + 4 * w].split_at_mut(2 * w);
+        let (blk_a, blk_b) = ab.split_at_mut(w);
+        let (blk_c, blk_d) = cd.split_at_mut(w);
+        if i & k == 0 {
+            sweep_quad_chunks::<T, false>(blk_a, blk_b, blk_c, blk_d);
+        } else {
+            sweep_quad_chunks::<T, true>(blk_a, blk_b, blk_c, blk_d);
+        }
+        i += 2 * j_hi;
+    }
+}
+
+// ----------------------------------------------------------------------
+// AVX2 dispatch (generic → concrete lane type).
+// ----------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn lanes_match<T, U>() -> bool {
+    std::mem::size_of::<T>() == std::mem::size_of::<U>()
+        && std::mem::align_of::<T>() == std::mem::align_of::<U>()
+}
+
+/// Reinterpret a key slice as its declared lane primitive. Caller has
+/// checked [`lanes_match`]; `LANE_KIND`'s contract makes the bit layouts
+/// identical.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+unsafe fn cast_mut<T, U>(xs: &mut [T]) -> &mut [U] {
+    // SAFETY: caller checked size_of::<T>() == size_of::<U>() and equal
+    // alignment (lanes_match), so the same region holds xs.len() valid
+    // U values; the &mut borrow keeps the region exclusive.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut U, xs.len()) }
+}
+
+/// Route one step sweep to the AVX2 kernel for `T`'s lane kind. Returns
+/// false (caller falls back to scalar) when AVX2 is not detected at
+/// runtime or `T` has no vector lowering.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) -> bool {
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        return false;
+    }
+    // SAFETY: AVX2 verified above; slice casts guarded by lanes_match.
+    unsafe {
+        match T::LANE_KIND {
+            LaneKind::U32 if lanes_match::<T, u32>() => {
+                avx2::step_u32(cast_mut::<T, u32>(xs), k, j, lanes, lo, hi);
+            }
+            LaneKind::I32 if lanes_match::<T, i32>() => {
+                avx2::step_i32(cast_mut::<T, i32>(xs), k, j, lanes, lo, hi);
+            }
+            LaneKind::F32 if lanes_match::<T, f32>() => {
+                avx2::step_f32(cast_mut::<T, f32>(xs), k, j, lanes, lo, hi);
+            }
+            _ => return false,
+        }
+    }
+    true
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn avx2_step_interleaved<T: SortKey>(
+    _xs: &mut [T],
+    _k: usize,
+    _j: usize,
+    _lanes: usize,
+    _lo: usize,
+    _hi: usize,
+) -> bool {
+    false
+}
+
+/// Double-step twin of [`avx2_step_interleaved`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_double_step_interleaved<T: SortKey>(
+    xs: &mut [T],
+    k: usize,
+    j_hi: usize,
+    lanes: usize,
+    lo: usize,
+    hi: usize,
+) -> bool {
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        return false;
+    }
+    // SAFETY: AVX2 verified above; slice casts guarded by lanes_match.
+    unsafe {
+        match T::LANE_KIND {
+            LaneKind::U32 if lanes_match::<T, u32>() => {
+                avx2::double_step_u32(cast_mut::<T, u32>(xs), k, j_hi, lanes, lo, hi);
+            }
+            LaneKind::I32 if lanes_match::<T, i32>() => {
+                avx2::double_step_i32(cast_mut::<T, i32>(xs), k, j_hi, lanes, lo, hi);
+            }
+            LaneKind::F32 if lanes_match::<T, f32>() => {
+                avx2::double_step_f32(cast_mut::<T, f32>(xs), k, j_hi, lanes, lo, hi);
+            }
+            _ => return false,
+        }
+    }
+    true
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn avx2_double_step_interleaved<T: SortKey>(
+    _xs: &mut [T],
+    _k: usize,
+    _j_hi: usize,
+    _lanes: usize,
+    _lo: usize,
+    _hi: usize,
+) -> bool {
+    false
+}
+
+// ----------------------------------------------------------------------
+// The AVX2 kernels themselves.
+// ----------------------------------------------------------------------
+
+/// `core::arch::x86_64` lowerings of the interleaved sweeps, 8 × 32-bit
+/// lanes per `__m256i`. Each kernel mirrors its scalar twin exactly: the
+/// same aligned-run walk, the same per-run direction bit, `key_min` /
+/// `key_max` replaced by one vector min/max per 8 keys, and a scalar tail
+/// for the final `w % 8` keys of each block (w is `j * lanes`, which need
+/// not be a multiple of 8 when `lanes` is small or odd).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::super::SortKey;
+    use core::arch::x86_64::{
+        __m256i, _mm256_loadu_si256, _mm256_max_epi32, _mm256_max_epu32, _mm256_min_epi32,
+        _mm256_min_epu32, _mm256_srai_epi32, _mm256_srli_epi32, _mm256_storeu_si256,
+        _mm256_xor_si256,
+    };
+
+    const W: usize = super::CHUNK; // 8 × 32-bit lanes per __m256i
+
+    /// Identity bit map for integer lanes (already totally ordered by
+    /// the matching min/max instruction).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn ord_id(v: __m256i) -> __m256i {
+        v
+    }
+
+    /// The `f32::total_cmp` bit map, vectorized: XOR each lane with
+    /// `0x7FFF_FFFF` when its sign bit is set (arithmetic shift right 31
+    /// gives the all-ones mask, logical shift right 1 clears the sign
+    /// bit), then compare as signed i32. The sign bit is preserved, so
+    /// the map is its own inverse — applied after min/max it recovers
+    /// the original IEEE-754 bit patterns exactly, NaN payloads included.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn ord_f32(v: __m256i) -> __m256i {
+        _mm256_xor_si256(v, _mm256_srli_epi32::<1>(_mm256_srai_epi32::<31>(v)))
+    }
+
+    macro_rules! avx2_kernels {
+        ($step:ident, $dstep:ident, $ty:ty, $map:ident, $vmin:ident, $vmax:ident) => {
+            /// AVX2 lowering of `compare_exchange_step_interleaved` for
+            /// this lane type (see module docs; scalar preconditions
+            /// apply).
+            ///
+            /// # Safety
+            /// Requires AVX2 (caller runtime-checks).
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $step(
+                xs: &mut [$ty],
+                k: usize,
+                j: usize,
+                lanes: usize,
+                lo: usize,
+                hi: usize,
+            ) {
+                debug_assert!(lanes >= 1 && j >= 1);
+                debug_assert!(
+                    lo % (2 * j) == 0 && (hi - lo) % (2 * j) == 0 && hi * lanes <= xs.len()
+                );
+                let w = j * lanes;
+                let vec_w = w - w % W;
+                let ptr = xs.as_mut_ptr();
+                let mut i = lo;
+                // SAFETY: the 2j-alignment/bounds preconditions asserted
+                // above keep every offset below `hi * lanes <= xs.len()`,
+                // so all `ptr.add`s and unaligned loads/stores stay inside
+                // `xs`; low and high blocks of a run never overlap.
+                unsafe {
+                    while i < hi {
+                        let lows = ptr.add(i * lanes);
+                        let highs = lows.add(w);
+                        let asc = i & k == 0;
+                        let mut t = 0;
+                        while t < vec_w {
+                            let pa = lows.add(t) as *mut __m256i;
+                            let pb = highs.add(t) as *mut __m256i;
+                            let a = $map(_mm256_loadu_si256(pa));
+                            let b = $map(_mm256_loadu_si256(pb));
+                            let mn = $map($vmin(a, b));
+                            let mx = $map($vmax(a, b));
+                            if asc {
+                                _mm256_storeu_si256(pa, mn);
+                                _mm256_storeu_si256(pb, mx);
+                            } else {
+                                _mm256_storeu_si256(pa, mx);
+                                _mm256_storeu_si256(pb, mn);
+                            }
+                            t += W;
+                        }
+                        while t < w {
+                            let (a, b) = (*lows.add(t), *highs.add(t));
+                            if asc {
+                                *lows.add(t) = <$ty as SortKey>::key_min(a, b);
+                                *highs.add(t) = <$ty as SortKey>::key_max(a, b);
+                            } else {
+                                *lows.add(t) = <$ty as SortKey>::key_max(a, b);
+                                *highs.add(t) = <$ty as SortKey>::key_min(a, b);
+                            }
+                            t += 1;
+                        }
+                        i += 2 * j;
+                    }
+                }
+            }
+
+            /// AVX2 lowering of `compare_exchange_double_step_interleaved`
+            /// for this lane type: the four blocks A B C D of the aligned
+            /// run, quad compare-exchange order `(a,c) (b,d) (a,b) (c,d)`
+            /// per vector index — the register pairing of the paper §4.2
+            /// with 8 quads in flight per iteration.
+            ///
+            /// # Safety
+            /// Requires AVX2 (caller runtime-checks).
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $dstep(
+                xs: &mut [$ty],
+                k: usize,
+                j_hi: usize,
+                lanes: usize,
+                lo: usize,
+                hi: usize,
+            ) {
+                debug_assert!(j_hi >= 2 && 2 * j_hi <= k);
+                debug_assert!(lanes >= 1);
+                debug_assert!(
+                    lo % (2 * j_hi) == 0 && (hi - lo) % (2 * j_hi) == 0 && hi * lanes <= xs.len()
+                );
+                let j_lo = j_hi / 2;
+                let w = j_lo * lanes;
+                let vec_w = w - w % W;
+                let ptr = xs.as_mut_ptr();
+                let mut i = lo;
+                // SAFETY: as in the single-step kernel — the asserted
+                // run alignment and `hi * lanes <= xs.len()` bound keep
+                // every quad-block offset in range, and the four blocks
+                // of a run are pairwise disjoint.
+                unsafe {
+                    while i < hi {
+                        let base = ptr.add(i * lanes);
+                        let asc = i & k == 0;
+                        let mut t = 0;
+                        while t < vec_w {
+                            let pa = base.add(t) as *mut __m256i;
+                            let pb = base.add(w + t) as *mut __m256i;
+                            let pc = base.add(2 * w + t) as *mut __m256i;
+                            let pd = base.add(3 * w + t) as *mut __m256i;
+                            let mut va = $map(_mm256_loadu_si256(pa));
+                            let mut vb = $map(_mm256_loadu_si256(pb));
+                            let mut vc = $map(_mm256_loadu_si256(pc));
+                            let mut vd = $map(_mm256_loadu_si256(pd));
+                            if asc {
+                                let (na, nc) = ($vmin(va, vc), $vmax(va, vc));
+                                let (nb, nd) = ($vmin(vb, vd), $vmax(vb, vd));
+                                (va, vc) = (na, nc);
+                                (vb, vd) = (nb, nd);
+                                let (na, nb) = ($vmin(va, vb), $vmax(va, vb));
+                                let (nc, nd) = ($vmin(vc, vd), $vmax(vc, vd));
+                                (va, vb) = (na, nb);
+                                (vc, vd) = (nc, nd);
+                            } else {
+                                let (na, nc) = ($vmax(va, vc), $vmin(va, vc));
+                                let (nb, nd) = ($vmax(vb, vd), $vmin(vb, vd));
+                                (va, vc) = (na, nc);
+                                (vb, vd) = (nb, nd);
+                                let (na, nb) = ($vmax(va, vb), $vmin(va, vb));
+                                let (nc, nd) = ($vmax(vc, vd), $vmin(vc, vd));
+                                (va, vb) = (na, nb);
+                                (vc, vd) = (nc, nd);
+                            }
+                            _mm256_storeu_si256(pa, $map(va));
+                            _mm256_storeu_si256(pb, $map(vb));
+                            _mm256_storeu_si256(pc, $map(vc));
+                            _mm256_storeu_si256(pd, $map(vd));
+                            t += W;
+                        }
+                        while t < w {
+                            let cx = |lo: &mut $ty, hi: &mut $ty| {
+                                let (a, b) = (*lo, *hi);
+                                if asc {
+                                    *lo = <$ty as SortKey>::key_min(a, b);
+                                    *hi = <$ty as SortKey>::key_max(a, b);
+                                } else {
+                                    *lo = <$ty as SortKey>::key_max(a, b);
+                                    *hi = <$ty as SortKey>::key_min(a, b);
+                                }
+                            };
+                            let mut va = *base.add(t);
+                            let mut vb = *base.add(w + t);
+                            let mut vc = *base.add(2 * w + t);
+                            let mut vd = *base.add(3 * w + t);
+                            cx(&mut va, &mut vc);
+                            cx(&mut vb, &mut vd);
+                            cx(&mut va, &mut vb);
+                            cx(&mut vc, &mut vd);
+                            *base.add(t) = va;
+                            *base.add(w + t) = vb;
+                            *base.add(2 * w + t) = vc;
+                            *base.add(3 * w + t) = vd;
+                            t += 1;
+                        }
+                        i += 2 * j_hi;
+                    }
+                }
+            }
+        };
+    }
+
+    avx2_kernels!(step_u32, double_step_u32, u32, ord_id, _mm256_min_epu32, _mm256_max_epu32);
+    avx2_kernels!(step_i32, double_step_i32, i32, ord_id, _mm256_min_epi32, _mm256_max_epi32);
+    avx2_kernels!(step_f32, double_step_f32, f32, ord_f32, _mm256_min_epi32, _mm256_max_epi32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::network::Network;
+
+    fn interleave(rows: &[Vec<u32>]) -> Vec<u32> {
+        let lanes = rows.len();
+        let n = rows[0].len();
+        let mut out = vec![0u32; lanes * n];
+        for (l, row) in rows.iter().enumerate() {
+            for (e, &x) in row.iter().enumerate() {
+                out[e * lanes + l] = x;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in KernelIsa::ALL {
+            assert_eq!(KernelIsa::parse(isa.name()), Some(isa));
+            assert_eq!(KernelChoice::parse(isa.name()), Some(KernelChoice::Fixed(isa)));
+        }
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("avx512"), None);
+        assert_eq!(KernelIsa::parse("auto"), None);
+    }
+
+    #[test]
+    fn scalar_and_portable_always_available() {
+        assert!(KernelIsa::Scalar.available());
+        assert!(KernelIsa::Portable.available());
+        let avail = KernelIsa::available_isas();
+        assert!(avail.contains(&KernelIsa::Scalar) && avail.contains(&KernelIsa::Portable));
+        assert_eq!(avail.contains(&KernelIsa::Avx2), avx2_available());
+    }
+
+    #[test]
+    fn choice_resolution_and_validation() {
+        assert_eq!(KernelChoice::Fixed(KernelIsa::Portable).resolve(), KernelIsa::Portable);
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+        let auto = KernelChoice::Auto.resolve();
+        assert!(auto == KernelIsa::Avx2 || auto == KernelIsa::Scalar);
+        assert_eq!(auto == KernelIsa::Avx2, avx2_available());
+        assert!(KernelChoice::Auto.validate().is_ok());
+        assert!(KernelChoice::Fixed(KernelIsa::Scalar).validate().is_ok());
+        if !avx2_available() {
+            assert_eq!(KernelChoice::Fixed(KernelIsa::Avx2).resolve(), KernelIsa::Scalar);
+            assert!(KernelChoice::Fixed(KernelIsa::Avx2).validate().is_err());
+        } else {
+            assert!(KernelChoice::Fixed(KernelIsa::Avx2).validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_step_sweeps() {
+        // Kernel-level bit-exactness on u32 across strides, directions
+        // and ragged lane counts (the property suite in
+        // tests/simd_props.rs extends this to i32/f32/NaN and whole
+        // plans).
+        let mut gen = crate::workload::Generator::new(0x51D1);
+        let n = 256;
+        for isa in KernelIsa::available_isas() {
+            for lanes in [1usize, 3, 4, 8, 16] {
+                for ph in Network::new(n).phases() {
+                    let k = ph.len;
+                    for step in ph.steps() {
+                        let j = step.stride;
+                        let rows: Vec<Vec<u32>> = (0..lanes)
+                            .map(|_| gen.u32s(n, crate::workload::Distribution::DupHeavy))
+                            .collect();
+                        let mut tile = interleave(&rows);
+                        let mut want = tile.clone();
+                        step_interleaved(isa, &mut tile, k, j, lanes, 0, n);
+                        step_interleaved(KernelIsa::Scalar, &mut want, k, j, lanes, 0, n);
+                        assert_eq!(tile, want, "{} lanes={lanes} k={k} j={j}", isa.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_double_step_sweeps() {
+        let mut gen = crate::workload::Generator::new(0x51D2);
+        let n = 256;
+        for isa in KernelIsa::available_isas() {
+            for lanes in [1usize, 3, 8] {
+                for ph in Network::new(n).phases() {
+                    let k = ph.len;
+                    let mut j = k / 2;
+                    while j >= 2 {
+                        let rows: Vec<Vec<u32>> = (0..lanes)
+                            .map(|_| gen.u32s(n, crate::workload::Distribution::DupHeavy))
+                            .collect();
+                        let mut tile = interleave(&rows);
+                        let mut want = tile.clone();
+                        double_step_interleaved(isa, &mut tile, k, j, lanes, 0, n);
+                        double_step_interleaved(KernelIsa::Scalar, &mut want, k, j, lanes, 0, n);
+                        assert_eq!(tile, want, "{} lanes={lanes} k={k} j_hi={j}", isa.name());
+                        j /= 2;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_total_order_bit_map_is_involutive_and_monotone() {
+        // The scalar model of the AVX2 f32 map: proves the mapped signed
+        // comparison equals total_cmp and the map is its own inverse —
+        // the two facts the vector kernel's bit-exactness rests on.
+        let map = |x: f32| -> i32 {
+            let b = x.to_bits() as i32;
+            b ^ (((b >> 31) as u32) >> 1) as i32
+        };
+        let unmap = |m: i32| -> f32 {
+            f32::from_bits((m ^ (((m >> 31) as u32) >> 1) as i32) as u32)
+        };
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.5,
+            -1.5,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            f32::MIN_POSITIVE,
+            f32::from_bits(0x7FC0_1234), // NaN with payload
+            f32::from_bits(0xFFC0_5678), // negative NaN with payload
+        ];
+        for &a in &specials {
+            assert_eq!(unmap(map(a)).to_bits(), a.to_bits(), "involution on {:#x}", a.to_bits());
+            for &b in &specials {
+                assert_eq!(
+                    map(a) < map(b),
+                    a.total_cmp(&b) == std::cmp::Ordering::Less,
+                    "order of {:#x} vs {:#x}",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+        }
+    }
+}

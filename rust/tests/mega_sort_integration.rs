@@ -183,6 +183,38 @@ fn hierarchical_all_distributions_and_ragged_lengths() {
     handle.shutdown();
 }
 
+/// The hierarchical mega-sort with the comparator ISA pinned to the
+/// portable chunked kernels (always available, never the implicit
+/// `Auto` choice): the ISA must be invisible in the output — bit-exact
+/// with the quicksort oracle through tiling, device dispatch, and the
+/// loser-tree merge.
+#[test]
+fn hierarchical_mega_sort_with_portable_kernels() {
+    let Some(fixture) = fixture_dir() else { return };
+    use bitonic_tpu::runtime::{spawn_device_host_with, PlanConfig};
+    use bitonic_tpu::sort::{KernelChoice, KernelIsa};
+    let portable = PlanConfig {
+        kernel: KernelChoice::Fixed(KernelIsa::Portable),
+        ..Default::default()
+    };
+    let (handle, manifest) = spawn_device_host_with(
+        &fixture,
+        HostConfig { plan: portable.into(), ..Default::default() },
+    )
+    .unwrap();
+    let sorter = HierarchicalSorter::new(handle.clone(), &manifest, Variant::Optimized).unwrap();
+    let tile = sorter.tile();
+    let mut gen = Generator::new(0x51D);
+    let orig = gen.u32s(2 * tile + 13, Distribution::DupHeavy);
+    let mut ours = orig.clone();
+    let stats = sorter.sort(&mut ours).unwrap();
+    assert!(stats.device_dispatches >= 1, "{stats:?}");
+    let mut want = orig;
+    quicksort(&mut want);
+    assert_eq!(ours, want, "portable-ISA hierarchical vs oracle");
+    handle.shutdown();
+}
+
 /// Merged discovery end to end: a primary dir plus its `generated/`
 /// subdir are served as one menu by `spawn_discovered`, and classes
 /// from both sides execute.

@@ -186,7 +186,13 @@ fn plan_variants_bit_exact_end_to_end() {
     let (walk, manifest) = spawn_device_host_with(
         &dir,
         HostConfig {
-            plan: PlanConfig { variant: Variant::Basic, block: 256, interleave: 1 }.into(),
+            plan: PlanConfig {
+                variant: Variant::Basic,
+                block: 256,
+                interleave: 1,
+                ..Default::default()
+            }
+            .into(),
             ..Default::default()
         },
     )
@@ -197,7 +203,7 @@ fn plan_variants_bit_exact_end_to_end() {
             &dir,
             HostConfig {
                 threads: 4,
-                plan: PlanConfig { variant, block, interleave: 1 }.into(),
+                plan: PlanConfig { variant, block, interleave: 1, ..Default::default() }.into(),
             },
         )
         .unwrap();
@@ -221,7 +227,7 @@ fn plan_variants_bit_exact_end_to_end() {
 fn interleaved_host_bit_exact_with_scalar_host() {
     let Some(dir) = artifacts_dir() else { return };
     use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, PlanConfig};
-    let scalar_plan = PlanConfig { variant: Variant::Optimized, block: 4096, interleave: 1 };
+    let scalar_plan = PlanConfig { block: 4096, interleave: 1, ..Default::default() };
     let (scalar, manifest) = spawn_device_host_with(
         &dir,
         HostConfig {

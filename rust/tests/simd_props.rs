@@ -1,0 +1,264 @@
+//! SIMD-vs-scalar bit-exactness property suite: every available
+//! comparator ISA must be bit-identical to the scalar kernels at three
+//! levels — the raw interleaved sweep kernels, whole `ExecutionPlan`s
+//! with the ISA pinned, and the pooled device host — across u32/i32/f32
+//! × sort/merge × ascending/descending × lane widths {1, 3, 4, 8, 16}
+//! (3 exercises the vector-plus-ragged-tail split), with MAX-padded
+//! rows and f32 NaN/±inf/±0 compared **as bits**, not by `==`.
+//!
+//! On a default build (or a non-AVX2 host) `available_isas()` is
+//! `[scalar, portable]`, so the suite still proves the portable chunked
+//! kernels; under `--features simd` on an AVX2 host it proves the
+//! explicit intrinsics too. Nothing here is feature-gated.
+
+use bitonic_tpu::runtime::{ArtifactKind, ExecutionPlan, PlanConfig};
+use bitonic_tpu::sort::simd::{double_step_interleaved, step_interleaved};
+use bitonic_tpu::sort::{bitonic_sort, KernelChoice, KernelIsa, SortKey};
+use bitonic_tpu::workload::{Distribution, Generator};
+
+/// Bit view of a key: the only equality the suite trusts (`==` on f32
+/// conflates -0.0 with 0.0 and rejects NaN entirely).
+trait Bits: SortKey + std::fmt::Debug {
+    fn bits(self) -> u32;
+}
+
+impl Bits for u32 {
+    fn bits(self) -> u32 {
+        self
+    }
+}
+
+impl Bits for i32 {
+    fn bits(self) -> u32 {
+        self as u32
+    }
+}
+
+impl Bits for f32 {
+    fn bits(self) -> u32 {
+        self.to_bits()
+    }
+}
+
+fn assert_bits_eq<T: Bits>(got: &[T], want: &[T], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.bits(), w.bits(), "{label}: divergence at {i} ({g:?} vs {w:?})");
+    }
+}
+
+fn keys_u32(gen: &mut Generator, len: usize) -> Vec<u32> {
+    let mut v = gen.u32s(len, Distribution::DupHeavy);
+    if len >= 2 {
+        v[0] = u32::MAX;
+        v[1] = 0;
+    }
+    v
+}
+
+fn keys_i32(gen: &mut Generator, len: usize) -> Vec<i32> {
+    let mut v: Vec<i32> = gen
+        .u32s(len, Distribution::DupHeavy)
+        .into_iter()
+        .map(|x| x as i32)
+        .collect();
+    if len >= 2 {
+        v[0] = i32::MIN;
+        v[1] = i32::MAX;
+    }
+    v
+}
+
+fn keys_f32(gen: &mut Generator, len: usize) -> Vec<f32> {
+    let mut v = gen.f32s(len, Distribution::Uniform);
+    // Adversarial salt: both NaN signs, ±inf, both zeros — exactly the
+    // values the AVX2 total-order bit mapping must keep where the
+    // scalar comparator puts them.
+    let salt = [f32::NAN, -f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+    for (i, s) in salt.into_iter().enumerate() {
+        if i < len {
+            v[i] = s;
+        }
+    }
+    v
+}
+
+/// Level 1 — the raw sweep kernels. Walks the full single-step network
+/// and the paired double-step schedule over an interleaved tile,
+/// comparing the ISA under test against the scalar kernel **after every
+/// step** (not just at the end), then checks the walk really sorted
+/// every lane.
+fn kernel_sweep<T: Bits>(make: fn(&mut Generator, usize) -> Vec<T>, dtype: &str) {
+    let mut gen = Generator::new(0x51AD);
+    for isa in KernelIsa::available_isas() {
+        for lanes in [1usize, 3, 4, 8, 16] {
+            for n in [64usize, 256] {
+                let ctx = format!("{dtype} isa={} lanes={lanes} n={n}", isa.name());
+                let fixture = make(&mut gen, n * lanes);
+
+                let (mut a, mut b) = (fixture.clone(), fixture.clone());
+                let mut k = 2;
+                while k <= n {
+                    let mut j = k / 2;
+                    while j >= 1 {
+                        step_interleaved(KernelIsa::Scalar, &mut a, k, j, lanes, 0, n);
+                        step_interleaved(isa, &mut b, k, j, lanes, 0, n);
+                        assert_bits_eq(&b, &a, &format!("{ctx} step k={k} j={j}"));
+                        j /= 2;
+                    }
+                    k *= 2;
+                }
+                for l in 0..lanes {
+                    let row: Vec<T> = (0..n).map(|e| b[e * lanes + l]).collect();
+                    for w in row.windows(2) {
+                        assert!(!w[1].total_lt(&w[0]), "{ctx}: lane {l} unsorted");
+                    }
+                }
+
+                // The register-paired quad sweep, same contract
+                // (j_hi >= 2, 2*j_hi <= k; leftover stride-1 single).
+                let (mut a, mut b) = (fixture.clone(), fixture);
+                let mut k = 2;
+                while k <= n {
+                    let mut j = k / 2;
+                    while j >= 2 {
+                        double_step_interleaved(KernelIsa::Scalar, &mut a, k, j, lanes, 0, n);
+                        double_step_interleaved(isa, &mut b, k, j, lanes, 0, n);
+                        assert_bits_eq(&b, &a, &format!("{ctx} double k={k} j={j}"));
+                        j /= 4;
+                    }
+                    if j == 1 {
+                        step_interleaved(KernelIsa::Scalar, &mut a, k, 1, lanes, 0, n);
+                        step_interleaved(isa, &mut b, k, 1, lanes, 0, n);
+                        assert_bits_eq(&b, &a, &format!("{ctx} leftover k={k}"));
+                    }
+                    k *= 2;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_sweeps_bit_exact_across_isas_u32() {
+    kernel_sweep(keys_u32, "u32");
+}
+
+#[test]
+fn kernel_sweeps_bit_exact_across_isas_i32() {
+    kernel_sweep(keys_i32, "i32");
+}
+
+#[test]
+fn kernel_sweeps_bit_exact_across_isas_f32() {
+    kernel_sweep(keys_f32, "f32");
+}
+
+/// Level 2 — whole execution plans with the ISA pinned via
+/// `PlanConfig::kernel`, across sort/merge × asc/desc × interleave
+/// widths, each row MAX-padded in its back third (the coordinator
+/// router's padding contract).
+fn plan_sweep<T: Bits>(make: fn(&mut Generator, usize) -> Vec<T>, dtype: &str) {
+    let n = 256usize;
+    let mut gen = Generator::new(0x51AE);
+    for isa in KernelIsa::available_isas() {
+        for kind in [ArtifactKind::Sort, ArtifactKind::Merge] {
+            for descending in [false, true] {
+                for r in [1usize, 4, 8, 16] {
+                    let ctx = format!(
+                        "{dtype} isa={} {kind:?} desc={descending} R={r}",
+                        isa.name()
+                    );
+                    let mut rows = make(&mut gen, r * n);
+                    for row in rows.chunks_mut(n) {
+                        for x in &mut row[n - n / 3..] {
+                            *x = T::MAX_KEY;
+                        }
+                        if kind == ArtifactKind::Merge {
+                            // Merge contract: halves sorted ascending.
+                            bitonic_sort(&mut row[..n / 2]);
+                            bitonic_sort(&mut row[n / 2..]);
+                        }
+                    }
+                    let mk = |isa| {
+                        ExecutionPlan::with_config(
+                            kind,
+                            n,
+                            descending,
+                            PlanConfig {
+                                interleave: r,
+                                kernel: KernelChoice::Fixed(isa),
+                                ..Default::default()
+                            },
+                        )
+                    };
+                    let mut scratch = Vec::new();
+                    let mut want = rows.clone();
+                    mk(KernelIsa::Scalar).run_tile(&mut want, &mut scratch);
+                    let mut got = rows;
+                    mk(isa).run_tile(&mut got, &mut scratch);
+                    assert_bits_eq(&got, &want, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plans_bit_exact_across_isas_u32() {
+    plan_sweep(keys_u32, "u32");
+}
+
+#[test]
+fn plans_bit_exact_across_isas_i32() {
+    plan_sweep(keys_i32, "i32");
+}
+
+#[test]
+fn plans_bit_exact_across_isas_f32() {
+    plan_sweep(keys_f32, "f32");
+}
+
+/// Level 3 — the pooled device host end to end: registry, host thread,
+/// tile pool. Every non-scalar ISA must return exactly what a
+/// scalar-pinned host returns, over every fixture artifact.
+#[test]
+fn pooled_host_bit_exact_across_isas() {
+    use bitonic_tpu::runtime::{spawn_device_host_with, HostConfig, Key};
+    use bitonic_tpu::sort::network::Variant;
+    let dir = bitonic_tpu::runtime::default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `bitonic-tpu gen-artifacts`");
+        return;
+    }
+    let host_with = |isa| {
+        spawn_device_host_with(
+            &dir,
+            HostConfig {
+                threads: 4,
+                plan: PlanConfig {
+                    interleave: 8,
+                    kernel: KernelChoice::Fixed(isa),
+                    ..Default::default()
+                }
+                .into(),
+            },
+        )
+    };
+    let (scalar, manifest) = host_with(KernelIsa::Scalar).unwrap();
+    let mut gen = Generator::new(0x51AF);
+    for isa in KernelIsa::available_isas() {
+        if isa == KernelIsa::Scalar {
+            continue;
+        }
+        let (host, _) = host_with(isa).unwrap();
+        for meta in manifest.size_classes(Variant::Optimized) {
+            let rows = gen.u32s(meta.batch * meta.n, Distribution::DupHeavy);
+            let a = scalar.sort_u32(Key::of(meta), rows.clone()).unwrap();
+            let b = host.sort_u32(Key::of(meta), rows).unwrap();
+            assert_eq!(a, b, "{} isa={}", meta.name, isa.name());
+        }
+        host.shutdown();
+    }
+    scalar.shutdown();
+}

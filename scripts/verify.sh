@@ -23,6 +23,15 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+# Feature matrix: the `simd` feature must build and pass the whole
+# suite too (on a non-AVX2 host its explicit kernels compile out /
+# dispatch away, so this is cheap insurance either way). The
+# bit-exactness properties in tests/simd_props.rs only cover the AVX2
+# kernels when this build runs on hardware that has them.
+echo "== cargo build/test --features simd (feature matrix) =="
+cargo build --release --all-targets --features simd
+cargo test -q --features simd
+
 # Static plan verifier: prove every registry-producible launch program
 # sorts (0-1 principle) and every parallel schedule is write-disjoint,
 # then gate on the report. The subcommand exits non-zero on any failing
@@ -75,6 +84,49 @@ if ! grep -q "exceeds exhaustive cap" ANALYSIS_generated.md; then
     exit 1
 fi
 echo "== generated grid verified: FAIL-free, sampled-proof WARNs present =="
+
+# The static proofs must be ISA-independent in fact, not just by
+# argument: re-run the plan verifier with the simd feature enabled and
+# gate on the same FAIL token.
+echo "== verify-plans with --features simd =="
+rm -f ANALYSIS_simd.md ANALYSIS_simd.json
+cargo run --release --features simd --bin bitonic-tpu -- verify-plans \
+    --exhaustive-cap 1024 --analysis-out ANALYSIS_simd.md
+if grep -q "FAIL" ANALYSIS_simd.md; then
+    echo "ERROR: ANALYSIS_simd.md contains a failing verdict" >&2
+    exit 1
+fi
+rm -f ANALYSIS_simd.md ANALYSIS_simd.json
+echo "== simd-feature plan proofs clean =="
+
+# Comparator-ISA equality smoke: the device path must produce the same
+# bytes whatever --kernel selects. The sorts share (seed, dist, n), so
+# the sorted-output digest cmd_sort prints must agree across scalar,
+# explicitly portable, auto, and auto under the simd feature (= avx2 on
+# hosts that have it).
+echo "== kernel ISA equality smoke (--kernel scalar vs auto) =="
+sort_digest() {
+    # $1: extra cargo flags (word-split on purpose), $2: --kernel value.
+    # shellcheck disable=SC2086
+    cargo run --release $1 --bin bitonic-tpu -- \
+        sort --algo device --n 4096 --kernel "$2" 2>/dev/null \
+        | grep -o 'digest [0-9a-f]*' || true
+}
+d_scalar=$(sort_digest "" scalar)
+d_portable=$(sort_digest "" portable)
+d_auto=$(sort_digest "" auto)
+d_simd=$(sort_digest "--features simd" auto)
+if [ -z "$d_scalar" ]; then
+    echo "ERROR: --kernel scalar sort printed no digest" >&2
+    exit 1
+fi
+for d in "$d_portable" "$d_auto" "$d_simd"; do
+    if [ "$d" != "$d_scalar" ]; then
+        echo "ERROR: kernel ISA digests diverge: scalar=$d_scalar got=$d" >&2
+        exit 1
+    fi
+done
+echo "== ISA digests agree: $d_scalar =="
 
 # Bench smoke, time-bounded: the coordinator bench drives the real
 # work-stealing scheduler and the row-parallel executor end to end, so a
@@ -133,6 +185,17 @@ if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
         fi
     done
     echo "== BENCH_trajectory.json + RESULTS.md written =="
+
+    # Regression gate plumbing: diff the trajectory against itself —
+    # every cell compares at ratio 1.0, so the gate must pass — proving
+    # the --diff/--gate path end to end (env stamp match, cell keying,
+    # exit code). Real use diffs against a baseline from an earlier run.
+    echo "== report --diff --gate (self-diff must be clean) =="
+    cp BENCH_trajectory.json BENCH_trajectory.baseline.json
+    cargo run --release --bin bitonic-tpu -- report \
+        --diff BENCH_trajectory.baseline.json --gate
+    rm -f BENCH_trajectory.baseline.json
+    echo "== trajectory diff gate clean =="
 else
     echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
 fi
