@@ -12,6 +12,8 @@ rust unit tests so a divergence shows up in whichever side drifted.
 
 from __future__ import annotations
 
+from bisect import bisect_left, bisect_right
+
 MAX_KEY = 0xFFFF_FFFF
 
 #: Default upper bound on the device tile (mirror of
@@ -134,6 +136,118 @@ def hierarchical_sort(keys: list[int], tile: int, batch: int = 1,
         return sorted_tiles[:real_len], stats
     runs = [sorted_tiles[i:i + tile] for i in range(0, padded_len, tile)]
     return kway_merge(runs)[:real_len], stats
+
+
+# ----------------------------------------------------------------------
+# Splitter-partitioned parallel merge (mirror of rust/src/sort/pmerge.rs)
+# ----------------------------------------------------------------------
+#
+# The geometry functions below are 1:1 with the rust module: the same
+# regular sampling, the same ``(key, run, index)`` rank tie-break, the
+# same binary-search cuts. ``pmerge`` executes the bucket merges
+# serially (the parallel dispatch itself is the rust ThreadPool's job);
+# what this mirror proves is that the *partition* is identical, which is
+# the part the static checker and the balance bound reason about.
+
+
+def _rank_key(key: int, q: int, i: int) -> tuple[int, int, int]:
+    """The ``(key, run, index)`` total rank order of ``rank_cmp``."""
+    return (key, q, i)
+
+
+def _cut_at(run: list[int], q: int, splitter: int, rs: int, is_: int) -> int:
+    """Keys of run ``q`` ranked at or below the splitter (key at index
+    ``is_`` of run ``rs``) — mirror of ``pmerge::cut_at``."""
+    lo = bisect_left(run, splitter)
+    hi = bisect_right(run, splitter)
+    if q < rs:
+        return hi
+    if q > rs:
+        return lo
+    return max(lo, min(is_ + 1, hi))
+
+
+def _select_splitters(runs: list[list[int]], parts: int) -> list[tuple[int, int]]:
+    """PSRS-style regular sampling — mirror of ``select_splitters``:
+    up to ``parts - 1`` evenly spaced positions per run, pooled, rank
+    sorted, then evenly spaced ranks picked as splitters."""
+    samples: list[tuple[int, int]] = []
+    for q, run in enumerate(runs):
+        last = None
+        for j in range(1, parts):
+            idx = j * len(run) // parts
+            if idx < len(run) and idx != last:
+                samples.append((q, idx))
+                last = idx
+    samples.sort(key=lambda s: _rank_key(runs[s[0]][s[1]], s[0], s[1]))
+    splitters: list[tuple[int, int]] = []
+    last_pick = None
+    for i in range(1, parts):
+        pick = i * len(samples) // parts
+        if pick < len(samples) and pick != last_pick:
+            splitters.append(samples[pick])
+            last_pick = pick
+    return splitters
+
+
+def plan_partition(runs: list[list[int]], parts: int) -> list[list[int]]:
+    """Mirror of ``pmerge::plan_partition``: the cut matrix with
+    ``parts + 1`` rows of ``len(runs)`` columns. Row 0 is zeros, the last
+    row is the run lengths, rows are elementwise non-decreasing, and
+    bucket ``b`` consumes ``runs[q][cuts[b][q]:cuts[b+1][q]]``."""
+    parts = max(parts, 1)
+    lens = [len(r) for r in runs]
+    cuts = [[0] * len(runs)]
+    for rs, is_ in _select_splitters(runs, parts):
+        splitter = runs[rs][is_]
+        row = [_cut_at(run, q, splitter, rs, is_) for q, run in enumerate(runs)]
+        assert all(a <= b for a, b in zip(cuts[-1], row)), \
+            "splitter cuts must be monotone"
+        cuts.append(row)
+    cuts.append(lens)
+    return cuts
+
+
+def bucket_sizes(cuts: list[list[int]]) -> list[int]:
+    """Keys per bucket (mirror of ``MergePlan::bucket_sizes``)."""
+    return [
+        sum(hi - lo for lo, hi in zip(cuts[b], cuts[b + 1]))
+        for b in range(len(cuts) - 1)
+    ]
+
+
+def balance_bound(lens: list[int], parts: int) -> int:
+    """Mirror of ``pmerge::balance_bound``: a provable, key-value-free
+    upper bound on the largest bucket ``plan_partition`` can produce."""
+    parts = max(parts, 1)
+    nonempty = sum(1 for m in lens if m > 0)
+    gap_max = max((-(-m // parts) + 1 for m in lens), default=1)
+    samples = 0
+    for m in lens:
+        last = None
+        for j in range(1, parts):
+            idx = j * m // parts
+            if idx < m and idx != last:
+                samples += 1
+                last = idx
+    return gap_max * (-(-samples // parts) + nonempty + 1)
+
+
+def pmerge(runs: list[list[int]], parts: int) -> list[int]:
+    """Mirror of ``pmerge::pmerge`` with the bucket merges run serially:
+    plan the partition, loser-tree merge each bucket's slices, and
+    concatenate in bucket order. Must be bit-exact with
+    :func:`kway_merge` — the tests assert exactly that."""
+    cuts = plan_partition(runs, parts)
+    out: list[int] = []
+    for b in range(len(cuts) - 1):
+        srcs = [
+            runs[q][cuts[b][q]:cuts[b + 1][q]]
+            for q in range(len(runs))
+            if cuts[b][q] < cuts[b + 1][q]
+        ]
+        out.extend(kway_merge(srcs))
+    return out
 
 
 def fallback_shortfall(entry_n: int, n: int) -> int | None:

@@ -14,10 +14,14 @@ from compile.hier import (
     DEFAULT_TILE_CAP,
     MAX_KEY,
     LoserTree,
+    balance_bound,
+    bucket_sizes,
     fallback_shortfall,
     hierarchical_sort,
     kway_merge,
     pick_tile,
+    plan_partition,
+    pmerge,
 )
 
 
@@ -102,6 +106,71 @@ def test_pick_tile_ladder():
     assert pick_tile([1 << 20, 1 << 22]) == 1 << 20  # only mega: smallest
     assert pick_tile([]) is None
     assert DEFAULT_TILE_CAP == 1 << 16
+
+
+# ----------------------------------------------------------------------
+# Splitter-partitioned parallel merge (mirror of sort::pmerge)
+# ----------------------------------------------------------------------
+
+
+def _random_runs(rng, k, max_len, modulo):
+    return [
+        sorted(rng.randrange(modulo) for _ in range(rng.randrange(max_len + 1)))
+        for _ in range(k)
+    ]
+
+
+@pytest.mark.parametrize("k,parts", [(2, 4), (3, 8), (16, 8), (5, 2)])
+def test_partition_covers_monotonically(k, parts):
+    rng = random.Random(0x5A_11 ^ (k << 8) ^ parts)
+    runs = _random_runs(rng, k, 300, 1000)
+    cuts = plan_partition(runs, parts)
+    lens = [len(r) for r in runs]
+    assert cuts[0] == [0] * k
+    assert cuts[-1] == lens
+    assert 2 <= len(cuts) <= parts + 1
+    for prev, nxt in zip(cuts, cuts[1:]):
+        assert all(a <= b for a, b in zip(prev, nxt))
+    assert sum(bucket_sizes(cuts)) == sum(lens)
+
+
+@pytest.mark.parametrize("parts", [2, 4, 8])
+def test_dup_heavy_partition_stays_under_the_balance_bound(parts):
+    # All keys equal: only the (key, run, index) rank tie-break keeps
+    # the buckets from collapsing into one.
+    runs = [[42] * 512 for _ in range(8)]
+    cuts = plan_partition(runs, parts)
+    assert len(cuts) - 1 > 1, "all-equal keys collapsed the partition"
+    lens = [len(r) for r in runs]
+    assert max(bucket_sizes(cuts)) <= balance_bound(lens, parts)
+
+
+@pytest.mark.parametrize("k", [2, 3, 16])
+@pytest.mark.parametrize("parts", [2, 4, 16])
+def test_pmerge_is_bit_exact_with_the_loser_tree(k, parts):
+    rng = random.Random(0xB17_E ^ (k << 4) ^ parts)
+    for modulo in (7, 10_000, 2 ** 32):
+        runs = _random_runs(rng, k, 400, modulo)
+        assert pmerge(runs, parts) == kway_merge(runs)
+
+
+def test_pmerge_handles_max_pads_and_empty_runs():
+    runs = [
+        [5, MAX_KEY, MAX_KEY],
+        [],
+        [1, MAX_KEY],
+        [MAX_KEY] * 4,
+    ]
+    got = pmerge(runs, 4)
+    assert got == kway_merge(runs)
+    assert got.count(MAX_KEY) == 7
+
+
+def test_pmerge_degenerate_shapes():
+    assert pmerge([], 4) == []
+    assert pmerge([[1, 2, 3]], 4) == [1, 2, 3]
+    assert pmerge([[], []], 4) == []
+    assert pmerge([[2], [1]], 1) == [1, 2]
 
 
 # ----------------------------------------------------------------------

@@ -21,14 +21,26 @@
 //!   cover the buffer exactly once, never exceed the effective
 //!   interleave width (ragged tails included), and yield enough tiles
 //!   to feed the pool whenever the pooled path engages.
+//! * **Splitter bucket partition** ([`check_bucket_plan`]): replays the
+//!   [`MergePlan`] [`crate::sort::pmerge::plan_partition`] computes —
+//!   the same geometry `pmerge` carves its output and dispatches bucket
+//!   merges from — and verifies every run element lands in exactly one
+//!   bucket, the bucket ranges tile the output exactly once, adjacent
+//!   buckets are rank-ordered (so concatenating their merges is sorted),
+//!   and no bucket exceeds the provable
+//!   [`crate::sort::pmerge::balance_bound`]. This is the proof the
+//!   `SAFETY` comment in `util/threadpool.rs` cites for the merge path.
 //!
 //! [`check_intervals`] takes an arbitrary interval list, so the mutation
 //! suite can feed it *racy* schedules (e.g. two unpaired global strides
-//! in one barrier interval) and assert the race is detected.
+//! in one barrier interval) and assert the race is detected; likewise
+//! [`check_bucket_plan`] takes an arbitrary plan (checked arithmetic
+//! throughout) so corrupted cut matrices are findings, not panics.
 
 use super::{Report, Verdict};
 use crate::sort::bitonic_parallel::{barrier_intervals, effective_workers, IntervalOp};
 use crate::sort::network::{Network, Step};
+use crate::sort::pmerge::{balance_bound, plan_partition, MergePlan};
 use crate::runtime::executor::dispatch_geometry;
 
 /// Evidence from a clean schedule check.
@@ -338,6 +350,254 @@ pub fn analyze_tile_dispatch(batches: &[usize]) -> Report {
     report
 }
 
+/// Evidence from a clean bucket-partition check.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketStats {
+    /// Buckets in the plan.
+    pub parts: usize,
+    /// Input runs.
+    pub runs: usize,
+    /// Output elements covered (== the summed run lengths).
+    pub total: usize,
+    /// Largest bucket (verified `<=` [`balance_bound`]).
+    pub largest_bucket: usize,
+}
+
+/// Verify an arbitrary [`MergePlan`] against the runs it claims to
+/// partition. Everything is checked arithmetic — the mutation suite
+/// feeds corrupted cut matrices and expects findings, not panics:
+///
+/// 1. shape: one cut row per bucket boundary (>= 2), one column per run;
+/// 2. frame: row 0 is all zeros, the last row is the run lengths;
+/// 3. monotone: cut columns never decrease (and never exceed the run);
+/// 4. coverage: marking every `(run, index)` each bucket's slices claim
+///    touches every element exactly once, and the bucket sizes prefix-sum
+///    to the total — so the output carving in `pmerge` tiles the output;
+/// 5. order: all ranks in bucket `b` precede all ranks in bucket `b+1`
+///    under the `(key, run, index)` total order — so concatenating the
+///    per-bucket merges yields the same sequence one global loser tree
+///    would (ties are bit-identical, hence bit-exactness);
+/// 6. balance: the largest bucket stays within the distribution-free
+///    [`balance_bound`] — dup-heavy keys cannot collapse the partition.
+pub fn check_bucket_plan(runs: &[&[u32]], plan: &MergePlan) -> Result<BucketStats, String> {
+    let k = runs.len();
+    if plan.cuts.len() < 2 {
+        return Err(format!("plan has {} cut rows, want >= 2", plan.cuts.len()));
+    }
+    let parts = plan.cuts.len() - 1;
+    for (b, row) in plan.cuts.iter().enumerate() {
+        if row.len() != k {
+            return Err(format!("cut row {b} has {} columns for {k} runs", row.len()));
+        }
+    }
+    if let Some(r) = plan.cuts[0].iter().position(|&c| c != 0) {
+        return Err(format!("cut row 0 is {} at run {r}, want 0", plan.cuts[0][r]));
+    }
+    for (r, run) in runs.iter().enumerate() {
+        let last = plan.cuts[parts][r];
+        if last != run.len() {
+            return Err(format!(
+                "final cut row ends run {r} at {last}, want its length {}",
+                run.len()
+            ));
+        }
+    }
+    for b in 0..parts {
+        for r in 0..k {
+            let (lo, hi) = (plan.cuts[b][r], plan.cuts[b + 1][r]);
+            if lo > hi {
+                return Err(format!("cuts for run {r} decrease across bucket {b}: {lo} > {hi}"));
+            }
+            if hi > runs[r].len() {
+                return Err(format!(
+                    "cut {hi} for run {r} exceeds its length {} (bucket {b})",
+                    runs[r].len()
+                ));
+            }
+        }
+    }
+    // Coverage: mark each (run, index) once; checked sums for the
+    // output carving.
+    let total: usize = runs
+        .iter()
+        .try_fold(0usize, |acc, r| acc.checked_add(r.len()))
+        .ok_or_else(|| "run lengths overflow usize".to_string())?;
+    let mut owned: Vec<Vec<bool>> = runs.iter().map(|r| vec![false; r.len()]).collect();
+    let mut covered = 0usize;
+    let mut largest = 0usize;
+    for b in 0..parts {
+        let mut size = 0usize;
+        for r in 0..k {
+            for i in plan.cuts[b][r]..plan.cuts[b + 1][r] {
+                if owned[r][i] {
+                    return Err(format!("run {r} index {i} claimed by two buckets"));
+                }
+                owned[r][i] = true;
+            }
+            size = size
+                .checked_add(plan.cuts[b + 1][r] - plan.cuts[b][r])
+                .ok_or_else(|| format!("bucket {b} size overflows usize"))?;
+        }
+        covered = covered
+            .checked_add(size)
+            .ok_or_else(|| "covered total overflows usize".to_string())?;
+        largest = largest.max(size);
+    }
+    if covered != total {
+        return Err(format!("buckets cover {covered} of {total} elements"));
+    }
+    // Order: the maximum (key, run, index) rank of bucket b must precede
+    // the minimum rank of bucket b+1 (ranks are distinct by (run, index)).
+    let mut prev_max: Option<(u32, usize, usize)> = None;
+    for b in 0..parts {
+        let mut lo_rank: Option<(u32, usize, usize)> = None;
+        let mut hi_rank: Option<(u32, usize, usize)> = None;
+        for r in 0..k {
+            let (lo, hi) = (plan.cuts[b][r], plan.cuts[b + 1][r]);
+            if lo < hi {
+                // Runs are sorted, so per run the extreme ranks sit at
+                // the slice ends.
+                let first = (runs[r][lo], r, lo);
+                let last = (runs[r][hi - 1], r, hi - 1);
+                if lo_rank.is_none_or(|m| first < m) {
+                    lo_rank = Some(first);
+                }
+                if hi_rank.is_none_or(|m| last > m) {
+                    hi_rank = Some(last);
+                }
+            }
+        }
+        if let (Some(pm), Some(lo)) = (prev_max, lo_rank) {
+            if pm >= lo {
+                return Err(format!(
+                    "bucket {b} starts at rank {lo:?} but an earlier bucket reaches {pm:?}"
+                ));
+            }
+        }
+        if hi_rank.is_some() {
+            prev_max = hi_rank;
+        }
+    }
+    // Balance: the provable distribution-free bound.
+    let lens: Vec<usize> = runs.iter().map(|r| r.len()).collect();
+    let bound = balance_bound(&lens, parts);
+    if largest > bound {
+        return Err(format!(
+            "largest bucket holds {largest} elements, above the provable bound {bound}"
+        ));
+    }
+    Ok(BucketStats { parts, runs: k, total, largest_bucket: largest })
+}
+
+/// Plan-then-check for the **canonical** partition: run
+/// [`plan_partition`] (the geometry `pmerge` dispatches from) over the
+/// runs and verify the result with [`check_bucket_plan`].
+pub fn check_bucket_partition(runs: &[&[u32]], parts: usize) -> Result<BucketStats, String> {
+    let plan = plan_partition(runs, parts);
+    check_bucket_plan(runs, &plan)
+}
+
+/// Sweep the bucket-partition check over a deterministic scenario grid:
+/// key shapes that stress each hazard (uniform, dup-heavy, all-equal,
+/// MAX-padded tails, an empty run) × fan-ins × bucket counts. Findings
+/// are aggregated per scenario so the report stays readable.
+pub fn analyze_bucket_partition() -> Report {
+    use crate::workload::rng::Pcg32;
+    let mut report = Report::new();
+    let scenarios: [(&str, fn(usize, usize, u64) -> Vec<Vec<u32>>); 5] = [
+        ("uniform", |k, len, seed| {
+            let mut rng = Pcg32::new(0x0DD5_EED5, seed);
+            (0..k)
+                .map(|i| {
+                    let mut run: Vec<u32> =
+                        (0..len + (i % 3)).map(|_| rng.next_u32()).collect();
+                    run.sort_unstable();
+                    run
+                })
+                .collect()
+        }),
+        ("dup-heavy", |k, len, seed| {
+            let mut rng = Pcg32::new(0xD00B_5EED, seed);
+            (0..k)
+                .map(|_| {
+                    let mut run: Vec<u32> =
+                        (0..len).map(|_| rng.next_u32() % 4).collect();
+                    run.sort_unstable();
+                    run
+                })
+                .collect()
+        }),
+        ("all-equal", |k, len, _| (0..k).map(|_| vec![42u32; len]).collect()),
+        ("max-padded", |k, len, seed| {
+            let mut rng = Pcg32::new(0x9AD5_EED5, seed);
+            (0..k)
+                .map(|_| {
+                    let real = len / 2;
+                    let mut run: Vec<u32> =
+                        (0..real).map(|_| rng.next_u32() >> 1).collect();
+                    run.sort_unstable();
+                    run.resize(len, u32::MAX);
+                    run
+                })
+                .collect()
+        }),
+        ("empty-run", |k, len, seed| {
+            let mut rng = Pcg32::new(0xE4B7_5EED, seed);
+            (0..k)
+                .map(|i| {
+                    if i == 0 {
+                        return Vec::new();
+                    }
+                    let mut run: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                    run.sort_unstable();
+                    run
+                })
+                .collect()
+        }),
+    ];
+    for (name, make) in scenarios {
+        let target = format!("bucket partition dist={name}");
+        let mut checked = 0usize;
+        let mut worst_fill = 0.0f64;
+        let mut failure: Option<String> = None;
+        'grid: for &k in &[2usize, 3, 8, 16] {
+            for &parts in &[2usize, 4, 8] {
+                let runs = make(k, 96, (k * 31 + parts) as u64);
+                let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+                match check_bucket_partition(&views, parts) {
+                    Ok(stats) => {
+                        checked += 1;
+                        if stats.total > 0 {
+                            let bound =
+                                balance_bound(&views.iter().map(|r| r.len()).collect::<Vec<_>>(), parts);
+                            worst_fill =
+                                worst_fill.max(stats.largest_bucket as f64 / bound as f64);
+                        }
+                    }
+                    Err(e) => {
+                        failure = Some(format!("k={k} parts={parts}: {e}"));
+                        break 'grid;
+                    }
+                }
+            }
+        }
+        match failure {
+            None => report.push(
+                "disjoint.buckets",
+                target,
+                Verdict::Pass,
+                format!(
+                    "{checked} plans cover the output exactly once, rank-ordered, \
+                     largest bucket at {:.0}% of the provable bound",
+                    worst_fill * 100.0
+                ),
+            ),
+            Some(e) => report.push("disjoint.buckets", target, Verdict::Fail, e),
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,5 +682,105 @@ mod tests {
         assert!(stats.pooled);
         assert_eq!(stats.r, 3); // capped at b/threads = 3
         assert_eq!(stats.tiles, 5); // ceil(13/3)
+    }
+
+    fn sorted_runs(k: usize, len: usize, modulo: u32) -> Vec<Vec<u32>> {
+        use crate::workload::rng::Pcg32;
+        let mut rng = Pcg32::new(0xB0CC_E77E, 7);
+        (0..k)
+            .map(|_| {
+                let mut run: Vec<u32> = (0..len).map(|_| rng.next_u32() % modulo).collect();
+                run.sort_unstable();
+                run
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bucket_partition_grid_is_clean() {
+        let report = analyze_bucket_partition();
+        assert!(!report.has_fail(), "{}", report.render_markdown());
+        assert!(report.findings.iter().any(|f| f.target.contains("dup-heavy")));
+    }
+
+    #[test]
+    fn honest_bucket_plan_passes() {
+        let runs = sorted_runs(4, 64, u32::MAX);
+        let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let stats = check_bucket_partition(&views, 4).unwrap();
+        assert_eq!(stats.parts, 4);
+        assert_eq!(stats.total, 4 * 64);
+        assert!(stats.largest_bucket >= 64); // pigeonhole: total / parts
+    }
+
+    #[test]
+    fn corrupted_bucket_plans_are_findings_not_panics() {
+        let runs = sorted_runs(3, 32, 64);
+        let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let honest = plan_partition(&views, 4);
+        assert!(check_bucket_plan(&views, &honest).is_ok());
+
+        // Non-monotone columns: a row that retreats to zero after a row
+        // at the run lengths must be caught before any size arithmetic.
+        let mut retreat = honest.clone();
+        retreat.cuts[1] = views.iter().map(|r| r.len()).collect();
+        retreat.cuts[2] = vec![0; views.len()];
+        let e = check_bucket_plan(&views, &retreat).unwrap_err();
+        assert!(e.contains("decrease"), "{e}");
+
+        // Wrong final row: the plan stops short of a run's length.
+        let mut short = honest.clone();
+        let parts = short.cuts.len() - 1;
+        short.cuts[parts][0] -= 1;
+        let e = check_bucket_plan(&views, &short).unwrap_err();
+        assert!(e.contains("final cut row"), "{e}");
+
+        // Out-of-bounds cut.
+        let mut oob = honest.clone();
+        oob.cuts[1][0] = 33;
+        let e = check_bucket_plan(&views, &oob).unwrap_err();
+        assert!(e.contains("exceeds") || e.contains("decrease"), "{e}");
+
+        // Non-zero row 0.
+        let mut nz = honest.clone();
+        nz.cuts[0][2] = 1;
+        let e = check_bucket_plan(&views, &nz).unwrap_err();
+        assert!(e.contains("row 0"), "{e}");
+
+        // Ragged row shape.
+        let mut ragged = honest;
+        ragged.cuts[1].pop();
+        let e = check_bucket_plan(&views, &ragged).unwrap_err();
+        assert!(e.contains("columns"), "{e}");
+    }
+
+    #[test]
+    fn bucket_rank_order_violation_is_detected() {
+        // A monotone, fully-covering plan that still merges wrong:
+        // bucket 0 takes all of run 0, bucket 1 all of run 1 — run 1's
+        // low keys sort *before* run 0's high keys, so concatenating the
+        // bucket merges is not sorted.
+        let a: Vec<u32> = vec![0, 1, 2, 3];
+        let b: Vec<u32> = vec![0, 1, 2, 3];
+        let views: Vec<&[u32]> = vec![&a, &b];
+        let plan = MergePlan { cuts: vec![vec![0, 0], vec![4, 0], vec![4, 4]] };
+        let e = check_bucket_plan(&views, &plan).unwrap_err();
+        assert!(e.contains("earlier bucket reaches"), "{e}");
+    }
+
+    #[test]
+    fn bucket_balance_violation_is_detected() {
+        // Monotone, covering, rank-ordered (one non-empty bucket) — but
+        // everything lands in bucket 0, far above the provable bound.
+        let a: Vec<u32> = (0..64).collect();
+        let b: Vec<u32> = (64..128).collect();
+        let views: Vec<&[u32]> = vec![&a, &b];
+        let all = vec![64usize, 64];
+        let plan = MergePlan {
+            cuts: vec![vec![0, 0], all.clone(), all.clone(), all.clone(), all],
+        };
+        assert!(128 > balance_bound(&[64, 64], 4), "bound should bite here");
+        let e = check_bucket_plan(&views, &plan).unwrap_err();
+        assert!(e.contains("provable bound"), "{e}");
     }
 }

@@ -339,6 +339,12 @@ pub fn verify_plans(dir: &Path, opts: &VerifyOptions) -> crate::Result<Report> {
     batches.dedup();
     report.merge(disjoint::analyze_tile_dispatch(&batches));
 
+    // Pass 2c: the hierarchical sorter's splitter bucket partition covers
+    // its merge output exactly once, rank-ordered and balance-bounded,
+    // for a scenario grid that stresses each documented hazard — the
+    // proof `sort::pmerge`'s scoped dispatch relies on.
+    report.merge(disjoint::analyze_bucket_partition());
+
     Ok(report)
 }
 

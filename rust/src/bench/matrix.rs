@@ -245,7 +245,7 @@ pub fn run_matrix(
                     let record = if sub.is_device() {
                         let Some(ctx) = device else { continue };
                         let cell = if sub == Substrate::Hierarchical {
-                            measure_hierarchical(ctx, dist, n, &cfg.bench, seed)?
+                            measure_hierarchical(ctx, dist, n, &cfg.bench, seed, cfg.threads)?
                         } else {
                             measure_device(ctx, dtype, dist, n, &cfg.bench, seed)?
                         };
@@ -444,15 +444,19 @@ fn measure_device(
 }
 
 /// Measure one hierarchical cell: cache-sized device-sorted tiles + a
-/// loser-tree k-way merge, through the same device host the executor
-/// substrate uses. Returns `None` when no sort class fits inside `n`
-/// (the hierarchical path needs at least one whole tile).
+/// k-way merge (serial loser tree when `merge_threads == 1`, the
+/// splitter-partitioned parallel merge otherwise), through the same
+/// device host the executor substrate uses. Returns `None` when no sort
+/// class fits inside `n` (the hierarchical path needs at least one whole
+/// tile). The probe run's per-phase timings (tile sort / partition /
+/// merge) land as extras so the report can show where the time goes.
 fn measure_hierarchical(
     ctx: &DeviceCtx,
     dist: Distribution,
     n: usize,
     bench: &Bench,
     seed: u64,
+    merge_threads: usize,
 ) -> crate::Result<Option<BenchRecord>> {
     use crate::sort::hybrid::{HierarchicalSorter, DEFAULT_TILE_CAP};
     let variant = Variant::Optimized;
@@ -467,7 +471,8 @@ fn measure_hierarchical(
         return Ok(None);
     };
     let sorter =
-        HierarchicalSorter::with_tile(ctx.handle.clone(), &ctx.manifest, variant, tile)?;
+        HierarchicalSorter::with_tile(ctx.handle.clone(), &ctx.manifest, variant, tile)?
+            .with_merge_threads(merge_threads);
     let mut gen = Generator::new(seed);
     // One checked execution first, mirroring measure_device's probe.
     let mut probe = gen.u32s(n, dist);
@@ -493,17 +498,31 @@ fn measure_hierarchical(
         .with_timing(&m)
         .with_extra("tile", tile)
         .with_extra("tiles", stats.tiles)
-        .with_extra("threads", ctx.threads),
+        .with_extra("threads", ctx.threads)
+        .with_extra("merge_threads", stats.merge_threads)
+        .with_extra("merge_parts", stats.merge_parts)
+        .with_extra("tile_sort_ms", stats.tile_sort_ms)
+        .with_extra("partition_ms", stats.partition_ms)
+        .with_extra("merge_ms", stats.merge_ms),
     ))
 }
 
+/// Merge workers the mega cells' parallel-merge ablation runs with —
+/// the ≥4-thread configuration the paper-claim gate in the report
+/// ([`super::report`]) judges `merge_speedup_vs_serial` under.
+pub const MEGA_MERGE_THREADS: usize = 4;
+
 /// The above-ceiling cells the paper's peak-speedup claim needs: for
 /// each size (2^17–2^20, through the paper's 2^18 peak), a quicksort
-/// baseline, the hierarchical substrate, and — when the generated menu
-/// has a matching mega-artifact — the flat executor, so the
+/// baseline, the hierarchical substrate — measured **twice**, serial
+/// loser-tree merge then the splitter-partitioned parallel merge with
+/// [`MEGA_MERGE_THREADS`] workers, the parallel record annotated with
+/// `merge_speedup_vs_serial` — and, when the generated menu has a
+/// matching mega-artifact, the flat executor, so the
 /// bitonic-vs-hierarchical crossover is measured, not extrapolated.
-/// All records are `speedup_vs_quicksort`-annotated and land in the
-/// same trajectory as the matrix.
+/// The serial record lands first so latest-wins cell lookups resolve to
+/// the parallel one. All records are `speedup_vs_quicksort`-annotated
+/// and land in the same trajectory as the matrix.
 pub fn run_mega_cells(
     device: &DeviceCtx,
     sizes: &[usize],
@@ -532,7 +551,19 @@ pub fn run_mega_cells(
             BenchRecord::new("matrix", Substrate::Quicksort.name(), dist.name(), "u32", n)
                 .with_timing(&m),
         );
-        if let Some(r) = measure_hierarchical(device, dist, n, bench, seed)? {
+        let serial = measure_hierarchical(device, dist, n, bench, seed, 1)?;
+        if let Some(r) = &serial {
+            records.push(r.clone());
+        }
+        if let Some(mut r) =
+            measure_hierarchical(device, dist, n, bench, seed, MEGA_MERGE_THREADS)?
+        {
+            if let Some(s) = &serial {
+                if r.ms > 0.0 && s.ms > 0.0 {
+                    r.extra
+                        .set("merge_speedup_vs_serial", s.ms_per_row() / r.ms_per_row());
+                }
+            }
             records.push(r);
         }
         // The flat device path only exists where the (generated) menu

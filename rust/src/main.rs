@@ -69,6 +69,12 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt(
+            "merge-threads",
+            "hier: merge-phase workers for the splitter-partitioned parallel merge \
+             (default: tile profile, else 1 = serial loser-tree merge)",
+            None,
+        )
+        .opt(
             "plan-variant",
             "executor launch fusion: basic|semi|optimized (default optimized)",
             None,
@@ -299,26 +305,48 @@ fn cmd_sort(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
             let threads = pick_threads(args, &plan)?;
             let (handle, manifest) =
                 spawn_device_host_discovered(&dir, HostConfig { threads, plan })?;
-            // Tile: the tuned tile profile when one exists (same
-            // --no-profile suppression as the plan profile), else the
-            // cache-sized default pick.
+            // Tile + merge parallelism: the tuned tile profile when one
+            // exists (same --no-profile suppression as the plan profile),
+            // else the cache-sized default pick. An explicit
+            // --merge-threads pins the merge axis over the profile.
             let tile_path = TileProfile::default_path(&dir);
             let tuned = if !args.flag("no-profile") && tile_path.exists() {
                 eprintln!("using tile profile {tile_path:?} (suppress with --no-profile)");
-                TileProfile::load(&tile_path)?.lookup(n)
+                TileProfile::load(&tile_path)?
+                    .lookup_entry(n)
+                    .map(|e| (e.tile, e.merge_threads))
             } else {
                 None
             };
+            let merge_threads = match args.get("merge-threads") {
+                Some(raw) => {
+                    let mt: usize = raw
+                        .parse()
+                        .map_err(|_| bitonic_tpu::err!("bad --merge-threads {raw}"))?;
+                    bitonic_tpu::ensure!(mt >= 1, "--merge-threads must be >= 1");
+                    mt
+                }
+                None => tuned.map_or(1, |(_, mt)| mt),
+            };
             let sorter = match tuned {
-                Some(tile) => bitonic_tpu::sort::HierarchicalSorter::with_tile(
+                Some((tile, _)) => bitonic_tpu::sort::HierarchicalSorter::with_tile(
                     handle, &manifest, variant, tile,
                 )?,
                 None => bitonic_tpu::sort::HierarchicalSorter::new(handle, &manifest, variant)?,
-            };
+            }
+            .with_merge_threads(merge_threads);
             let stats = sorter.sort(&mut keys)?;
             eprintln!(
-                "hier: tile={} tiles={} device_dispatches={}",
-                stats.tile, stats.tiles, stats.device_dispatches
+                "hier: tile={} tiles={} device_dispatches={} merge_threads={} merge_parts={} \
+                 phases tile_sort={} partition={} merge={}",
+                stats.tile,
+                stats.tiles,
+                stats.device_dispatches,
+                stats.merge_threads,
+                stats.merge_parts,
+                fmt_ms(stats.tile_sort_ms),
+                fmt_ms(stats.partition_ms),
+                fmt_ms(stats.merge_ms)
             );
         }
         "device" => {
@@ -688,10 +716,10 @@ fn cmd_tune(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
     Ok(())
 }
 
-/// `bitonic-tpu tune --hier`: sweep the hierarchical sorter's tile axis
-/// over every mega size class the (merged) menu reaches, persisting the
-/// fastest tile per n as `autotune_hier.tsv` — the profile
-/// `sort --algo hier` consults.
+/// `bitonic-tpu tune --hier`: sweep the hierarchical sorter's tile ×
+/// merge-parallelism grid over every mega size class the (merged) menu
+/// reaches, persisting the fastest (tile, merge_threads) per n as
+/// `autotune_hier.tsv` — the profile `sort --algo hier` consults.
 fn cmd_tune_hier(
     args: &bitonic_tpu::util::cli::Args,
     dir: &std::path::Path,
@@ -732,21 +760,39 @@ fn cmd_tune_hier(
         bitonic_tpu::bench::Bench::quick()
     };
     let seed: u64 = args.parsed_or("seed", 42)?;
+
+    // Merge-parallelism axis: an explicit --merge-threads pins a single
+    // candidate; otherwise sweep a small power-of-two grid capped by the
+    // host's parallelism (smoke keeps two points so CI stays in seconds).
+    // tune_tiles always re-adds 1, so the serial merge is never untested.
+    let merge_grid: Vec<usize> = match args.get_parsed::<usize>("merge-threads")? {
+        Some(mt) => {
+            bitonic_tpu::ensure!(mt >= 1, "--merge-threads must be >= 1");
+            vec![mt]
+        }
+        None if smoke => vec![1, 2],
+        None => {
+            let cap = std::thread::available_parallelism().map_or(4, |p| p.get());
+            [1usize, 2, 4, 8].iter().copied().filter(|&t| t <= cap.max(2)).collect()
+        }
+    };
     println!(
-        "tuning hierarchical tiles for {} target size(s) {:?}{}…",
+        "tuning hierarchical tiles for {} target size(s) {:?} × merge grid {:?}{}…",
         targets.len(),
         targets,
+        merge_grid,
         if smoke { " (smoke grid)" } else { "" }
     );
     let t0 = Instant::now();
-    let profile = tune_tiles(&handle, &manifest, &targets, &bench, seed)?;
+    let profile = tune_tiles(&handle, &manifest, &targets, &merge_grid, &bench, seed)?;
     handle.shutdown();
 
-    let mut t = Table::new(vec!["n", "chosen tile", "keys/sec"]);
+    let mut t = Table::new(vec!["n", "chosen tile", "merge", "keys/sec"]);
     for e in &profile.entries {
         t.row(vec![
             fmt_size(e.n),
             fmt_size(e.tile),
+            format!("{}", e.merge_threads),
             format!("{:.0}", e.keys_per_sec),
         ]);
     }

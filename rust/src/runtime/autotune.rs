@@ -362,21 +362,27 @@ pub struct TileEntry {
     pub n: usize,
     /// Tile size chosen (device-sorted run length; a menu sort class).
     pub tile: usize,
+    /// Merge workers the measurement used (1 = serial loser-tree merge;
+    /// more = the splitter-partitioned parallel merge of
+    /// [`crate::sort::pmerge`]).
+    pub merge_threads: usize,
     /// Measured throughput, keys per second.
     pub keys_per_sec: f64,
 }
 
-/// The autotuner's **tile axis**: persisted tile-size choices for
-/// [`crate::sort::HierarchicalSorter`], one line per mega-sort length.
-/// Lives in its own TSV (`autotune_hier.tsv`) so the strict 7-field
-/// plan-profile format stays byte-stable for existing tooling.
+/// The autotuner's **tile + merge axes**: persisted tile-size and
+/// merge-parallelism choices for [`crate::sort::HierarchicalSorter`],
+/// one line per mega-sort length. Lives in its own TSV
+/// (`autotune_hier.tsv`) so the strict plan-profile format stays
+/// byte-stable for existing tooling.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TileProfile {
     /// One chosen entry per measured total length.
     pub entries: Vec<TileEntry>,
 }
 
-const TILE_HEADER: &str = "n\ttile\tkeys_per_sec";
+const TILE_HEADER: &str = "n\ttile\tmerge_threads\tkeys_per_sec";
+const LEGACY_TILE_HEADER: &str = "n\ttile\tkeys_per_sec";
 
 impl TileProfile {
     /// Canonical location next to the plan profile: `<artifacts>/autotune_hier.tsv`.
@@ -385,6 +391,12 @@ impl TileProfile {
     }
 
     /// Load and validate a tile profile TSV.
+    ///
+    /// Both schema generations load: the original 3-field format (no
+    /// `merge_threads` column — those sweeps only ran the serial merge,
+    /// so the column defaults to 1) and the current 4-field one. An
+    /// upgrade must never silently invalidate an existing profile —
+    /// the same compatibility contract as [`TuningProfile::load`].
     pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path).with_context(|| {
@@ -393,20 +405,36 @@ impl TileProfile {
         let mut entries = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
-            if line.is_empty() || line.starts_with('#') || line == TILE_HEADER {
+            if line.is_empty()
+                || line.starts_with('#')
+                || line == TILE_HEADER
+                || line == LEGACY_TILE_HEADER
+            {
                 continue;
             }
             let f: Vec<&str> = line.split('\t').collect();
             crate::ensure!(
-                f.len() == 3,
-                "tile profile {path:?} line {}: want 3 tab-separated fields, got {}",
+                f.len() == 3 || f.len() == 4,
+                "tile profile {path:?} line {}: want 3 (pre-merge-axis) or 4 tab-separated \
+                 fields, got {}",
                 lineno + 1,
                 f.len()
             );
+            // In the 4-field format merge_threads sits before
+            // keys_per_sec; legacy rows measured the serial merge.
+            let (merge_threads, kps) = if f.len() == 4 {
+                let mt: usize = f[2]
+                    .parse()
+                    .with_context(|| format!("line {}: merge_threads", lineno + 1))?;
+                (mt, f[3])
+            } else {
+                (1, f[2])
+            };
             let entry = TileEntry {
                 n: f[0].parse().with_context(|| format!("line {}: n", lineno + 1))?,
                 tile: f[1].parse().with_context(|| format!("line {}: tile", lineno + 1))?,
-                keys_per_sec: f[2]
+                merge_threads,
+                keys_per_sec: kps
                     .parse()
                     .with_context(|| format!("line {}: keys_per_sec", lineno + 1))?,
             };
@@ -414,7 +442,8 @@ impl TileProfile {
                 entry.n.is_power_of_two()
                     && entry.tile.is_power_of_two()
                     && entry.tile >= 2
-                    && entry.tile <= entry.n,
+                    && entry.tile <= entry.n
+                    && entry.merge_threads >= 1,
                 "tile profile {path:?} line {}: malformed entry {entry:?}",
                 lineno + 1
             );
@@ -431,34 +460,46 @@ impl TileProfile {
         out.push_str(TILE_HEADER);
         out.push('\n');
         for e in &self.entries {
-            out.push_str(&format!("{}\t{}\t{:.1}\n", e.n, e.tile, e.keys_per_sec));
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{:.1}\n",
+                e.n, e.tile, e.merge_threads, e.keys_per_sec
+            ));
         }
         std::fs::write(path, out).with_context(|| format!("writing tile profile {path:?}"))
     }
 
-    /// The tuned tile for a mega-sort of `n` keys: exact match, else the
-    /// nearest measured length above `n`, else the largest measured
+    /// The tuned entry for a mega-sort of `n` keys: exact match, else
+    /// the nearest measured length above `n`, else the largest measured
     /// length — the same fallback ladder as [`TuningProfile::lookup`].
-    pub fn lookup(&self, n: usize) -> Option<usize> {
+    pub fn lookup_entry(&self, n: usize) -> Option<&TileEntry> {
         self.entries
             .iter()
             .find(|e| e.n == n)
             .or_else(|| self.entries.iter().filter(|e| e.n >= n).min_by_key(|e| e.n))
             .or_else(|| self.entries.iter().max_by_key(|e| e.n))
-            .map(|e| e.tile)
+    }
+
+    /// The tuned tile size alone (see [`TileProfile::lookup_entry`]).
+    pub fn lookup(&self, n: usize) -> Option<usize> {
+        self.lookup_entry(n).map(|e| e.tile)
     }
 }
 
-/// Sweep the tile axis: for every requested total length, sort a fresh
-/// uniform input through a [`HierarchicalSorter`] per candidate tile
-/// class (every ascending-u32 sort class that fits) and keep the
-/// fastest. The measurement runs the real device-host dispatch path —
-/// batched tile sorts plus the loser-tree merge — so the persisted
-/// choice reflects the whole pipeline, not just the kernel.
+/// Sweep the tile and merge axes: for every requested total length,
+/// sort a fresh uniform input through a [`HierarchicalSorter`] per
+/// candidate (tile class, merge-thread count) and keep the fastest. The
+/// measurement runs the real device-host dispatch path — batched tile
+/// sorts plus the (serial or splitter-partitioned parallel) merge — so
+/// the persisted choice reflects the whole pipeline, not just the
+/// kernel. `merge_grid` lists the merge-worker candidates (1 = the
+/// serial loser-tree merge; it is always measured even if absent from
+/// the grid, so the profile can never regress below the serial
+/// baseline).
 pub fn tune_tiles(
     handle: &DeviceHandle,
     manifest: &Manifest,
     ns: &[usize],
+    merge_grid: &[usize],
     bench: &Bench,
     seed: u64,
 ) -> crate::Result<TileProfile> {
@@ -469,6 +510,10 @@ pub fn tune_tiles(
         .collect();
     menu.sort_unstable();
     menu.dedup();
+    let mut merge_candidates: Vec<usize> =
+        merge_grid.iter().map(|&t| t.max(1)).chain([1]).collect();
+    merge_candidates.sort_unstable();
+    merge_candidates.dedup();
     let mut entries = Vec::new();
     for &n in ns {
         let candidates: Vec<usize> = menu.iter().copied().filter(|&t| t <= n).collect();
@@ -477,31 +522,34 @@ pub fn tune_tiles(
             "tune-tiles: no sort class fits inside n={n}"
         );
         let mut best: Option<TileEntry> = None;
-        for tile in candidates {
-            let sorter = HierarchicalSorter::with_tile(
-                handle.clone(),
-                manifest,
-                Variant::Optimized,
-                tile,
-            )?;
-            let mut gen = Generator::new(seed);
-            let label = format!("tune-tiles n={n} tile={tile}");
-            let meas = bench.run_with_setup(
-                &label,
-                &mut || gen.u32s(n, Distribution::Uniform),
-                |mut data| {
-                    sorter.sort(&mut data).expect("tile sweep sort must execute");
-                    black_box(&data);
-                },
-            );
-            let secs = meas.median_ns() as f64 / 1e9;
-            let keys_per_sec = if secs > 0.0 { n as f64 / secs } else { f64::MAX };
-            let entry = TileEntry { n, tile, keys_per_sec };
-            if best
-                .as_ref()
-                .is_none_or(|b| entry.keys_per_sec > b.keys_per_sec)
-            {
-                best = Some(entry.clone());
+        for &tile in &candidates {
+            for &merge_threads in &merge_candidates {
+                let sorter = HierarchicalSorter::with_tile(
+                    handle.clone(),
+                    manifest,
+                    Variant::Optimized,
+                    tile,
+                )?
+                .with_merge_threads(merge_threads);
+                let mut gen = Generator::new(seed);
+                let label = format!("tune-tiles n={n} tile={tile} merge={merge_threads}");
+                let meas = bench.run_with_setup(
+                    &label,
+                    &mut || gen.u32s(n, Distribution::Uniform),
+                    |mut data| {
+                        sorter.sort(&mut data).expect("tile sweep sort must execute");
+                        black_box(&data);
+                    },
+                );
+                let secs = meas.median_ns() as f64 / 1e9;
+                let keys_per_sec = if secs > 0.0 { n as f64 / secs } else { f64::MAX };
+                let entry = TileEntry { n, tile, merge_threads, keys_per_sec };
+                if best
+                    .as_ref()
+                    .is_none_or(|b| entry.keys_per_sec > b.keys_per_sec)
+                {
+                    best = Some(entry.clone());
+                }
             }
         }
         entries.push(best.expect("tune-tiles: empty candidate grid"));
@@ -859,8 +907,8 @@ mod tests {
         let path = dir.join("tiles.tsv");
         let profile = TileProfile {
             entries: vec![
-                TileEntry { n: 1 << 18, tile: 1 << 14, keys_per_sec: 5e6 },
-                TileEntry { n: 1 << 20, tile: 1 << 16, keys_per_sec: 4e6 },
+                TileEntry { n: 1 << 18, tile: 1 << 14, merge_threads: 1, keys_per_sec: 5e6 },
+                TileEntry { n: 1 << 20, tile: 1 << 16, merge_threads: 4, keys_per_sec: 4e6 },
             ],
         };
         profile.save(&path).unwrap();
@@ -870,13 +918,49 @@ mod tests {
         assert_eq!(loaded.lookup(1 << 18), Some(1 << 14));
         assert_eq!(loaded.lookup(1 << 19), Some(1 << 16));
         assert_eq!(loaded.lookup(1 << 24), Some(1 << 16));
+        // The full entry rides the same ladder (merge axis included).
+        assert_eq!(loaded.lookup_entry(1 << 19).unwrap().merge_threads, 4);
         assert_eq!(TileProfile::default().lookup(1 << 18), None);
         // tile > n is malformed.
-        std::fs::write(&path, format!("{TILE_HEADER}\n1024\t4096\t1.0\n")).unwrap();
+        std::fs::write(&path, format!("{TILE_HEADER}\n1024\t4096\t1\t1.0\n")).unwrap();
+        assert!(TileProfile::load(&path).is_err());
+        // merge_threads = 0 is malformed.
+        std::fs::write(&path, format!("{TILE_HEADER}\n4096\t1024\t0\t1.0\n")).unwrap();
         assert!(TileProfile::load(&path).is_err());
         // The missing-file error names the CLI that generates one.
         let err = TileProfile::load(dir.join("no-tiles.tsv")).unwrap_err();
         assert!(format!("{err:#}").contains("tune --hier"));
+    }
+
+    /// Satellite regression: a 3-field tile profile written before the
+    /// merge-parallelism axis existed must still load (defaulting to the
+    /// serial merge those sweeps measured) and round-trip through the
+    /// 4-field writer without changing any choice.
+    #[test]
+    fn legacy_three_field_tile_profiles_still_load() {
+        let dir = std::env::temp_dir().join("bitonic-tpu-autotune-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy-tiles.tsv");
+        std::fs::write(
+            &path,
+            "# bitonic-tpu tile profile — written by `bitonic-tpu tune --hier`\n\
+             n\ttile\tkeys_per_sec\n\
+             262144\t16384\t5000000.0\n\
+             1048576\t65536\t4000000.0\n",
+        )
+        .unwrap();
+        let loaded = TileProfile::load(&path).unwrap();
+        assert_eq!(loaded.entries.len(), 2);
+        for e in &loaded.entries {
+            assert_eq!(e.merge_threads, 1, "pre-axis rows measured the serial merge");
+        }
+        assert_eq!(loaded.lookup(1 << 18), Some(1 << 14));
+        // Saving upgrades the schema in place; the reload is identical.
+        let upgraded = dir.join("legacy-tiles-upgraded.tsv");
+        loaded.save(&upgraded).unwrap();
+        let text = std::fs::read_to_string(&upgraded).unwrap();
+        assert!(text.contains(TILE_HEADER), "save writes the 4-field header");
+        assert_eq!(TileProfile::load(&upgraded).unwrap(), loaded);
     }
 
     #[test]

@@ -201,7 +201,9 @@ impl HybridSorter {
 pub const DEFAULT_TILE_CAP: usize = 1 << 16;
 
 /// Statistics of one hierarchical sort.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+///
+/// (`PartialEq` only: the phase timings are `f64`.)
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct HierarchicalStats {
     /// Tile size used (keys per device-sorted run).
     pub tile: usize,
@@ -209,6 +211,19 @@ pub struct HierarchicalStats {
     pub tiles: usize,
     /// Device sort executions (each sorts up to B tiles).
     pub device_dispatches: usize,
+    /// Configured merge workers (1 = the serial loser-tree path).
+    pub merge_threads: usize,
+    /// Buckets the splitter partition produced; 0 when the merge ran
+    /// serially (one thread, a single tile, or a sub-threshold input).
+    pub merge_parts: usize,
+    /// Phase timing: device tile sorts (ms).
+    pub tile_sort_ms: f64,
+    /// Phase timing: splitter selection + binary-search partitioning
+    /// (ms; 0 on the serial path, which has no partition phase).
+    pub partition_ms: f64,
+    /// Phase timing: the merge itself — scoped bucket merges on the
+    /// parallel path, the single loser-tree pass on the serial one (ms).
+    pub merge_ms: f64,
 }
 
 /// Hierarchical mega-sort: the large-n path past the merge-artifact
@@ -222,7 +237,12 @@ pub struct HierarchicalStats {
 ///    device-sort them with the fused launch programs, up to `B` tiles
 ///    per dispatch (batch-interleaved across tiles by the executor).
 /// 2. **k-way merge** — one streaming [`crate::sort::kmerge`] pass over
-///    all tiles (`O(n log k)` comparisons, each key read/written once).
+///    all tiles (`O(n log k)` comparisons, each key read/written once),
+///    or — with [`HierarchicalSorter::with_merge_threads`] — the
+///    splitter-partitioned parallel merge of [`crate::sort::pmerge`]:
+///    buckets of disjoint key ranges merged concurrently into disjoint
+///    output slices. The serial merge stays as the 1-thread/small-n
+///    fallback and the bit-exactness oracle.
 ///
 /// Exact for any input length: the tail tile is MAX-padded, and the
 /// loser tree tracks run exhaustion positionally, so real `MAX` keys
@@ -231,6 +251,10 @@ pub struct HierarchicalSorter {
     handle: DeviceHandle,
     /// Tile-sized ascending-u32 sort artifact.
     tile_meta: ArtifactMeta,
+    /// Merge workers; > 1 engages the parallel bucket merge.
+    merge_threads: usize,
+    /// Owned pool for the bucket merges (None when `merge_threads` = 1).
+    merge_pool: Option<crate::util::threadpool::ThreadPool>,
 }
 
 impl HierarchicalSorter {
@@ -263,7 +287,30 @@ impl HierarchicalSorter {
             .max_by_key(|m| m.batch)
             .with_context(|| format!("no sort artifact with rows of {tile}"))?
             .clone();
-        Ok(Self { handle, tile_meta })
+        Ok(Self {
+            handle,
+            tile_meta,
+            merge_threads: 1,
+            merge_pool: None,
+        })
+    }
+
+    /// Configure the merge phase to run on `threads` workers (builder
+    /// style). `threads <= 1` keeps the serial loser-tree merge; more
+    /// spawn an owned pool and engage [`crate::sort::pmerge`] for
+    /// multi-tile inputs at or above
+    /// [`crate::sort::pmerge::PMERGE_MIN_TOTAL`] keys.
+    pub fn with_merge_threads(mut self, threads: usize) -> Self {
+        let threads = threads.max(1);
+        self.merge_threads = threads;
+        self.merge_pool = (threads > 1)
+            .then(|| crate::util::threadpool::ThreadPool::new(threads, 2 * threads));
+        self
+    }
+
+    /// Configured merge workers (1 = serial merge).
+    pub fn merge_threads(&self) -> usize {
+        self.merge_threads
     }
 
     /// Choose a tile size from the menu: the largest class `<= cap`
@@ -298,6 +345,7 @@ impl HierarchicalSorter {
         let tile = self.tile();
         let mut stats = HierarchicalStats {
             tile,
+            merge_threads: self.merge_threads,
             ..Default::default()
         };
         if real_len <= 1 {
@@ -305,6 +353,7 @@ impl HierarchicalSorter {
         }
 
         // ---- pass 1: device-sort tiles, B at a time --------------------
+        let t_tiles = std::time::Instant::now();
         let padded_len = real_len.div_ceil(tile) * tile;
         keys.resize(padded_len, u32::MAX);
         let (b, n) = (self.tile_meta.batch, self.tile_meta.n);
@@ -319,8 +368,9 @@ impl HierarchicalSorter {
         }
         debug_assert_eq!(sorted.len(), padded_len);
         stats.tiles = padded_len / tile;
+        stats.tile_sort_ms = t_tiles.elapsed().as_secs_f64() * 1e3;
 
-        // ---- pass 2: one streaming k-way merge over all tiles ----------
+        // ---- pass 2: merge the tiles -----------------------------------
         if stats.tiles == 1 {
             sorted.truncate(real_len);
             *keys = sorted;
@@ -328,7 +378,26 @@ impl HierarchicalSorter {
         }
         let runs: Vec<&[u32]> = sorted.chunks(tile).collect();
         let mut merged = Vec::new();
-        crate::sort::kmerge::kway_merge(&runs, &mut merged);
+        match &self.merge_pool {
+            // Splitter-partitioned parallel merge: disjoint key-range
+            // buckets into disjoint output slices (sort::pmerge).
+            Some(pool) if padded_len >= crate::sort::pmerge::PMERGE_MIN_TOTAL => {
+                let parts =
+                    self.merge_threads * crate::sort::pmerge::BUCKETS_PER_THREAD;
+                let ps =
+                    crate::sort::pmerge::pmerge(&runs, pool, parts, &mut merged)?;
+                stats.merge_parts = ps.parts;
+                stats.partition_ms = ps.partition_ms;
+                stats.merge_ms = ps.merge_ms;
+            }
+            // Serial fallback: one streaming loser-tree pass — also the
+            // bit-exactness oracle the parallel path is tested against.
+            _ => {
+                let t_merge = std::time::Instant::now();
+                crate::sort::kmerge::kway_merge(&runs, &mut merged);
+                stats.merge_ms = t_merge.elapsed().as_secs_f64() * 1e3;
+            }
+        }
         merged.truncate(real_len);
         *keys = merged;
         Ok(stats)

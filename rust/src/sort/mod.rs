@@ -20,6 +20,7 @@ pub mod kmerge;
 pub mod mergesort;
 pub mod network;
 pub mod oddeven;
+pub mod pmerge;
 pub mod quicksort;
 pub mod radix;
 pub mod simd;
@@ -33,6 +34,7 @@ pub use kmerge::{kway_merge, LoserTree};
 pub use mergesort::mergesort;
 pub use network::{Network, Phase, Step, Variant};
 pub use oddeven::oddeven_sort;
+pub use pmerge::{plan_partition, pmerge, MergePlan, PmergeStats};
 pub use quicksort::quicksort;
 pub use radix::radix_sort_u32;
 pub use simd::{KernelChoice, KernelIsa, LaneKind};

@@ -1,0 +1,493 @@
+//! Splitter-partitioned parallel multiway merge — the GPU Sample Sort
+//! decomposition (Leischner, Osipov & Sanders, PAPERS.md) applied to the
+//! hierarchical mega-sort's CPU merge tail.
+//!
+//! The serial [`crate::sort::kmerge`] pass is `O(n log k)` on one core;
+//! every other core idles through it. This module splits that pass by
+//! *keys* instead of by runs: pick `P-1` splitters, binary-search each
+//! splitter into every sorted run ([`plan_partition`]), and hand each of
+//! the resulting `P` buckets — a write-disjoint slice of the output at a
+//! prefix-sum offset — to its own loser-tree merge on the shared
+//! [`ThreadPool`]. Buckets touch disjoint key ranges and disjoint output
+//! ranges, so the workers need no synchronisation beyond the scoped join.
+//!
+//! Three hazards carried over from the serial merge, all covered by
+//! `rust/tests/pmerge_props.rs`:
+//!
+//! * **Positional exhaustion** — MAX-padded tails are real keys; the
+//!   partition counts them like any other key and the per-bucket loser
+//!   trees track exhaustion by position, so pads merge correctly.
+//! * **f32 total order** — all comparisons go through
+//!   [`SortKey::total_lt`] (NaN sorts high, `-0.0 < +0.0`), matching the
+//!   device kernels bit for bit.
+//! * **Splitter duplicates** — splitters are ranked by `(key, run,
+//!   index)`, a total order even when every key is equal, so dup-heavy
+//!   inputs cannot collapse into one bucket: bucket sizes are bounded by
+//!   [`balance_bound`], which depends only on run lengths, never on key
+//!   values.
+//!
+//! The bucket geometry lives in [`MergePlan`], produced by
+//! [`plan_partition`] — the *same* function the static checker
+//! (`analysis::disjoint::check_bucket_plan`) replays to prove the
+//! partition covers the output exactly once, which is what licenses the
+//! unsafe lifetime extension inside `ThreadPool::run_scoped`.
+
+use std::time::Instant;
+
+use crate::sort::kmerge::LoserTree;
+use crate::sort::SortKey;
+use crate::util::threadpool::{ScopedJob, ThreadPool};
+
+/// Below this many total keys the serial merge wins: the input is
+/// cache-resident and the partition + dispatch overhead exceeds the
+/// parallel payoff. [`crate::sort::hybrid::HierarchicalSorter`] falls
+/// back to [`crate::sort::kmerge::kway_merge`] under this line.
+pub const PMERGE_MIN_TOTAL: usize = 1 << 15;
+
+/// Buckets per merge worker: over-decomposing gives the pool slack to
+/// load-balance buckets the sampling left uneven.
+pub const BUCKETS_PER_THREAD: usize = 2;
+
+/// Bucket geometry of one planned parallel merge.
+///
+/// `cuts` has `parts + 1` rows of `runs` columns; `cuts[i][q]` is how
+/// many keys of run `q` feed buckets `0..i`. Row 0 is all zeros, the
+/// last row is the run lengths, and rows are elementwise non-decreasing
+/// — so bucket `b` consumes `runs[q][cuts[b][q]..cuts[b+1][q]]` from
+/// every run, each key belongs to exactly one bucket, and the bucket's
+/// output offset is the prefix sum of the bucket sizes before it.
+///
+/// The field is public so the mutation tests in
+/// `rust/tests/analysis_mutations.rs` can corrupt a plan and prove the
+/// static checker rejects it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergePlan {
+    /// `cuts[i][q]`: keys of run `q` assigned to buckets `0..i`.
+    pub cuts: Vec<Vec<usize>>,
+}
+
+impl MergePlan {
+    /// Number of buckets (`P`). At most the `parts` requested from
+    /// [`plan_partition`]; fewer when the input is too small to split.
+    pub fn parts(&self) -> usize {
+        self.cuts.len() - 1
+    }
+
+    /// Number of input runs.
+    pub fn runs(&self) -> usize {
+        self.cuts.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Total keys across all runs.
+    pub fn total(&self) -> usize {
+        self.cuts.last().map(|row| row.iter().sum()).unwrap_or(0)
+    }
+
+    /// Keys per bucket.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.cuts
+            .windows(2)
+            .map(|w| w[0].iter().zip(&w[1]).map(|(lo, hi)| hi - lo).sum())
+            .collect()
+    }
+
+    /// Output offsets: `offsets[b]..offsets[b+1]` is bucket `b`'s slice
+    /// of the output (`parts + 1` entries, last = total).
+    pub fn bucket_offsets(&self) -> Vec<usize> {
+        let mut offsets = Vec::with_capacity(self.cuts.len());
+        let mut acc = 0usize;
+        offsets.push(0);
+        for size in self.bucket_sizes() {
+            acc += size;
+            offsets.push(acc);
+        }
+        offsets
+    }
+
+    /// The non-empty `(run, lo, hi)` input slices feeding bucket `b`.
+    pub fn bucket_slices(&self, b: usize) -> Vec<(usize, usize, usize)> {
+        (0..self.runs())
+            .map(|q| (q, self.cuts[b][q], self.cuts[b + 1][q]))
+            .filter(|&(_, lo, hi)| lo < hi)
+            .collect()
+    }
+
+    /// Size of the largest bucket (the parallel merge's critical path).
+    pub fn largest_bucket(&self) -> usize {
+        self.bucket_sizes().into_iter().max().unwrap_or(0)
+    }
+}
+
+/// `(key, run, index)` rank order: key first under `total_lt`, ties by
+/// position. Total and strict for any key distribution — every element
+/// occupies a distinct rank, which is what keeps dup-heavy partitions
+/// balanced.
+fn rank_cmp<T: SortKey>(
+    a: T,
+    qa: usize,
+    ia: usize,
+    b: T,
+    qb: usize,
+    ib: usize,
+) -> std::cmp::Ordering {
+    if a.total_lt(&b) {
+        std::cmp::Ordering::Less
+    } else if b.total_lt(&a) {
+        std::cmp::Ordering::Greater
+    } else {
+        (qa, ia).cmp(&(qb, ib))
+    }
+}
+
+/// Keys of `run` (run index `q`) ranked at or below the splitter — the
+/// key at index `is` of run `rs`. Binary search finds the splitter
+/// key's tie range `[lo, hi)`; the `(run, index)` tie-break resolves how
+/// much of the tie range falls below the cut.
+fn cut_at<T: SortKey>(run: &[T], q: usize, splitter: T, rs: usize, is: usize) -> usize {
+    let lo = run.partition_point(|e| e.total_lt(&splitter));
+    let hi = run.partition_point(|e| !splitter.total_lt(e));
+    match q.cmp(&rs) {
+        std::cmp::Ordering::Less => hi,
+        std::cmp::Ordering::Greater => lo,
+        // The splitter itself lives at index `is` of this run, so
+        // lo <= is < hi; exactly the ties up to and including it count.
+        std::cmp::Ordering::Equal => (is + 1).clamp(lo, hi),
+    }
+}
+
+/// Regular sampling (PSRS-style): each run contributes up to `parts-1`
+/// evenly spaced positions; the splitters are evenly spaced ranks of the
+/// pooled sample under the `(key, run, index)` order. Returns splitter
+/// positions in strictly ascending rank order.
+fn select_splitters<T: SortKey>(runs: &[&[T]], parts: usize) -> Vec<(usize, usize)> {
+    let mut samples: Vec<(usize, usize)> = Vec::new();
+    for (q, run) in runs.iter().enumerate() {
+        let mut last = usize::MAX;
+        for j in 1..parts {
+            let idx = j * run.len() / parts;
+            if idx < run.len() && idx != last {
+                samples.push((q, idx));
+                last = idx;
+            }
+        }
+    }
+    samples.sort_by(|&(qa, ia), &(qb, ib)| {
+        rank_cmp(runs[qa][ia], qa, ia, runs[qb][ib], qb, ib)
+    });
+    let mut splitters = Vec::new();
+    let mut last_pick = usize::MAX;
+    for i in 1..parts {
+        let pick = i * samples.len() / parts;
+        if pick < samples.len() && pick != last_pick {
+            splitters.push(samples[pick]);
+            last_pick = pick;
+        }
+    }
+    splitters
+}
+
+/// Partition `runs` (each sorted ascending under `total_lt`) into at
+/// most `parts` buckets of contiguous `(key, run, index)` rank ranges.
+///
+/// This is the geometry the static checker replays: the runtime and
+/// `analysis::disjoint::check_bucket_plan` both consume the returned
+/// [`MergePlan`], so the proof and the dispatch cannot drift apart.
+pub fn plan_partition<T: SortKey>(runs: &[&[T]], parts: usize) -> MergePlan {
+    let parts = parts.max(1);
+    let lens: Vec<usize> = runs.iter().map(|r| r.len()).collect();
+    let mut cuts = Vec::with_capacity(parts + 1);
+    cuts.push(vec![0usize; runs.len()]);
+    for &(rs, is) in &select_splitters(runs, parts) {
+        let splitter = runs[rs][is];
+        let row: Vec<usize> = runs
+            .iter()
+            .enumerate()
+            .map(|(q, run)| cut_at(run, q, splitter, rs, is))
+            .collect();
+        debug_assert!(
+            cuts.last().is_some_and(|prev: &Vec<usize>| prev
+                .iter()
+                .zip(&row)
+                .all(|(a, b)| a <= b)),
+            "splitter cuts must be monotone"
+        );
+        cuts.push(row);
+    }
+    cuts.push(lens);
+    MergePlan { cuts }
+}
+
+/// Provable upper bound on any bucket [`plan_partition`] can produce,
+/// independent of key values (ranks are unique). With per-run sample
+/// gaps of at most `ceil(len/parts) + 1` keys and `S` pooled samples, a
+/// bucket spans at most `ceil(S/parts)` interior samples plus one
+/// boundary gap per non-empty run. The checker and the property tests
+/// both assert real plans against this.
+pub fn balance_bound(lens: &[usize], parts: usize) -> usize {
+    let parts = parts.max(1);
+    let nonempty = lens.iter().filter(|&&m| m > 0).count();
+    let gap_max = lens
+        .iter()
+        .map(|&m| m.div_ceil(parts) + 1)
+        .max()
+        .unwrap_or(1);
+    let samples: usize = lens
+        .iter()
+        .map(|&m| {
+            let mut count = 0;
+            let mut last = usize::MAX;
+            for j in 1..parts {
+                let idx = j * m / parts;
+                if idx < m && idx != last {
+                    count += 1;
+                    last = idx;
+                }
+            }
+            count
+        })
+        .sum();
+    gap_max * (samples.div_ceil(parts) + nonempty + 1)
+}
+
+/// One bucket's worker: loser-tree merge of its input slices into its
+/// output slice. `dst.len()` equals the summed slice lengths by
+/// construction of the plan.
+fn merge_bucket<T: SortKey>(srcs: Vec<&[T]>, dst: &mut [T]) {
+    match srcs.len() {
+        0 => debug_assert!(dst.is_empty()),
+        1 => dst.copy_from_slice(srcs[0]),
+        _ => {
+            let mut tree = LoserTree::new(srcs);
+            for slot in dst.iter_mut() {
+                *slot = tree.pop().expect("bucket size matches its plan");
+            }
+            debug_assert!(tree.pop().is_none(), "bucket left keys unmerged");
+        }
+    }
+}
+
+/// Statistics of one parallel merge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PmergeStats {
+    /// Buckets actually produced (≤ requested).
+    pub parts: usize,
+    /// Largest bucket (critical path of the scoped dispatch).
+    pub largest_bucket: usize,
+    /// Time spent planning the partition (splitters + binary searches).
+    pub partition_ms: f64,
+    /// Wall time of the scoped bucket merges.
+    pub merge_ms: f64,
+}
+
+/// Merge `runs` into `out` (replaced, not appended) using at most
+/// `parts` bucket workers on `pool`. Bit-exact with
+/// [`crate::sort::kmerge::kway_merge`] for any [`SortKey`] type: tied
+/// keys are bit-identical under `total_lt` (ints trivially, f32/f64 via
+/// `total_cmp`), so bucket boundaries cannot reorder observable bytes.
+pub fn pmerge<T: SortKey>(
+    runs: &[&[T]],
+    pool: &ThreadPool,
+    parts: usize,
+    out: &mut Vec<T>,
+) -> crate::Result<PmergeStats> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    out.clear();
+    let t_plan = Instant::now();
+    let plan = plan_partition(runs, parts);
+    let partition_ms = t_plan.elapsed().as_secs_f64() * 1e3;
+
+    let t_merge = Instant::now();
+    out.resize(total, T::MAX_KEY);
+    let sizes = plan.bucket_sizes();
+    let largest = sizes.iter().copied().max().unwrap_or(0);
+    {
+        let mut rest: &mut [T] = out.as_mut_slice();
+        let mut tasks: Vec<ScopedJob<'_>> = Vec::with_capacity(plan.parts());
+        for (b, &size) in sizes.iter().enumerate() {
+            // Carving the output by split_at_mut *is* the disjointness:
+            // each bucket owns `out[offsets[b]..offsets[b+1]]` and
+            // nothing else, per the checked plan geometry.
+            let (dst, tail) = rest.split_at_mut(size);
+            rest = tail;
+            if size == 0 {
+                continue;
+            }
+            let srcs: Vec<&[T]> = plan
+                .bucket_slices(b)
+                .into_iter()
+                .map(|(q, lo, hi)| &runs[q][lo..hi])
+                .collect();
+            tasks.push(Box::new(move || merge_bucket(srcs, dst)));
+        }
+        debug_assert!(rest.is_empty(), "plan did not cover the output");
+        if let Err(panics) = pool.run_scoped(tasks) {
+            crate::bail!("parallel merge: {panics} bucket task(s) panicked");
+        }
+    }
+    Ok(PmergeStats {
+        parts: plan.parts(),
+        largest_bucket: largest,
+        partition_ms,
+        merge_ms: t_merge.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::kmerge::kway_merge;
+    use crate::workload::rng::Pcg32;
+
+    fn pool() -> ThreadPool {
+        ThreadPool::new(4, 16)
+    }
+
+    fn random_runs(k: usize, max_len: usize, modulo: u32, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Pcg32::new(0xBEEF_CAFE, seed);
+        (0..k)
+            .map(|_| {
+                let len = (rng.next_u32() as usize) % (max_len + 1);
+                let mut v: Vec<u32> =
+                    (0..len).map(|_| rng.next_u32() % modulo).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_covers_and_stays_monotone() {
+        for (k, parts, modulo) in
+            [(2usize, 4usize, 1000u32), (3, 8, 7), (16, 8, 1), (5, 2, u32::MAX)]
+        {
+            let runs = random_runs(k, 300, modulo, (k + parts) as u64);
+            let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let plan = plan_partition(&refs, parts);
+            assert!(plan.parts() >= 1 && plan.parts() <= parts);
+            assert_eq!(plan.runs(), k);
+            assert_eq!(plan.cuts[0], vec![0; k]);
+            let lens: Vec<usize> = refs.iter().map(|r| r.len()).collect();
+            assert_eq!(*plan.cuts.last().unwrap(), lens);
+            for w in plan.cuts.windows(2) {
+                for q in 0..k {
+                    assert!(w[0][q] <= w[1][q], "non-monotone cut");
+                }
+            }
+            let total: usize = lens.iter().sum();
+            assert_eq!(plan.total(), total);
+            assert_eq!(*plan.bucket_offsets().last().unwrap(), total);
+        }
+    }
+
+    #[test]
+    fn dup_heavy_buckets_stay_bounded() {
+        // All keys equal: the value space has one point, the rank space
+        // has `total` — the tie-break must keep the buckets balanced.
+        let runs: Vec<Vec<u32>> = (0..8).map(|_| vec![42u32; 512]).collect();
+        let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let lens: Vec<usize> = refs.iter().map(|r| r.len()).collect();
+        for parts in [2usize, 4, 8] {
+            let plan = plan_partition(&refs, parts);
+            assert!(plan.parts() > 1, "all-equal input collapsed to one bucket");
+            assert!(
+                plan.largest_bucket() <= balance_bound(&lens, parts),
+                "parts={parts}: largest {} > bound {}",
+                plan.largest_bucket(),
+                balance_bound(&lens, parts)
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_boundaries_hold() {
+        let runs = random_runs(6, 400, 50, 99);
+        let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let plan = plan_partition(&refs, 4);
+        // Every key in bucket b must rank at or below every key in
+        // bucket b+1: check the boundary elements around each cut row.
+        for w in plan.cuts.windows(2) {
+            let hi_of_prev = (0..refs.len())
+                .filter(|&q| w[0][q] > 0)
+                .map(|q| (refs[q][w[0][q] - 1], q, w[0][q] - 1))
+                .max_by(|&(a, qa, ia), &(b, qb, ib)| rank_cmp(a, qa, ia, b, qb, ib));
+            let lo_of_next = (0..refs.len())
+                .filter(|&q| w[0][q] < refs[q].len())
+                .map(|q| (refs[q][w[0][q]], q, w[0][q]))
+                .min_by(|&(a, qa, ia), &(b, qb, ib)| rank_cmp(a, qa, ia, b, qb, ib));
+            if let (Some((a, qa, ia)), Some((b, qb, ib))) = (hi_of_prev, lo_of_next) {
+                assert_eq!(
+                    rank_cmp(a, qa, ia, b, qb, ib),
+                    std::cmp::Ordering::Less,
+                    "cut row is not a rank boundary"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_serial_merge_exactly() {
+        let pool = pool();
+        for seed in 0..6u64 {
+            let runs = random_runs(2 + (seed as usize % 7), 500, 10_000, seed);
+            let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut want = Vec::new();
+            kway_merge(&refs, &mut want);
+            let mut got = Vec::new();
+            pmerge(&refs, &pool, 8, &mut got).unwrap();
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn max_pads_and_empty_runs_merge_correctly() {
+        let pool = pool();
+        let runs: Vec<Vec<u32>> = vec![
+            vec![5, u32::MAX, u32::MAX],
+            vec![],
+            vec![1, u32::MAX],
+            vec![u32::MAX; 4],
+        ];
+        let refs: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut got = Vec::new();
+        pmerge(&refs, &pool, 4, &mut got).unwrap();
+        let mut want = Vec::new();
+        kway_merge(&refs, &mut want);
+        assert_eq!(got, want);
+        assert_eq!(got.iter().filter(|&&x| x == u32::MAX).count(), 7);
+    }
+
+    #[test]
+    fn f32_total_order_survives_partitioning() {
+        let pool = pool();
+        let mut a = vec![-0.0f32, 0.0, 1.5, f32::NAN];
+        let mut b = vec![f32::NEG_INFINITY, -1.0, 0.0, f32::INFINITY, f32::NAN];
+        a.sort_by(|x, y| x.total_cmp(y));
+        b.sort_by(|x, y| x.total_cmp(y));
+        let refs: Vec<&[f32]> = vec![&a, &b];
+        let mut want = Vec::new();
+        kway_merge(&refs, &mut want);
+        let mut got = Vec::new();
+        pmerge(&refs, &pool, 4, &mut got).unwrap();
+        let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "f32 merge must be bit-exact");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let pool = pool();
+        let mut out = vec![7u32];
+        pmerge::<u32>(&[], &pool, 4, &mut out).unwrap();
+        assert!(out.is_empty());
+
+        pmerge(&[&[1u32, 2, 3][..]], &pool, 4, &mut out).unwrap();
+        assert_eq!(out, vec![1, 2, 3]);
+
+        pmerge(&[&[][..], &[][..]], &pool, 4, &mut out).unwrap();
+        assert!(out.is_empty());
+
+        // parts = 1 degenerates to one serial bucket.
+        pmerge(&[&[2u32][..], &[1u32][..]], &pool, 1, &mut out).unwrap();
+        assert_eq!(out, vec![1, 2]);
+    }
+}

@@ -210,8 +210,11 @@ impl ThreadPool {
             // after 'env ends. The callers that exploit this to hand out
             // `&mut` row chunks rely on those chunks being disjoint,
             // which the static checker proves for the executor's tile
-            // dispatch (`analysis::disjoint::check_tile_dispatch`, see
-            // `rust/tests/analysis_mutations.rs`).
+            // dispatch (`analysis::disjoint::check_tile_dispatch`) and
+            // for the parallel merge's bucket partition
+            // (`analysis::disjoint::check_bucket_plan`, replaying the
+            // same `sort::pmerge::plan_partition` geometry the dispatch
+            // uses); see `rust/tests/analysis_mutations.rs`.
             let task: ScopedJob<'static> = unsafe {
                 std::mem::transmute::<ScopedJob<'env>, ScopedJob<'static>>(task)
             };

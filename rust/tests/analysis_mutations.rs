@@ -13,7 +13,9 @@
 
 use std::path::PathBuf;
 
-use bitonic_tpu::analysis::disjoint::{check_intervals, check_tile_dispatch};
+use bitonic_tpu::analysis::disjoint::{
+    check_bucket_partition, check_bucket_plan, check_intervals, check_tile_dispatch,
+};
 use bitonic_tpu::analysis::network_check::{
     canonical_steps, check_merge_steps, check_sort_steps, Outcome,
 };
@@ -106,6 +108,86 @@ fn mutant_racy_interval_is_rejected() {
     ]];
     let err = check_intervals(16, 4, &racy).unwrap_err();
     assert!(err.contains("workers"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Mutants 5b–5e: corrupted splitter bucket plans. `MergePlan.cuts` is a
+// public field exactly so this suite can hand the checker plans the
+// planner would never emit; each corruption must come back as a finding
+// (checked arithmetic — never a panic), while the honest plan passes.
+// ---------------------------------------------------------------------
+
+fn bucket_fixture() -> (Vec<Vec<u32>>, bitonic_tpu::sort::MergePlan) {
+    let runs: Vec<Vec<u32>> = vec![
+        (0..40).map(|i| i * 3).collect(),
+        (0..40).map(|i| i * 3 + 1).collect(),
+        (0..24).map(|i| i * 5).collect(),
+    ];
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let plan = bitonic_tpu::sort::plan_partition(&views, 4);
+    (runs, plan)
+}
+
+#[test]
+fn honest_bucket_plan_is_accepted() {
+    let (runs, plan) = bucket_fixture();
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let stats = check_bucket_plan(&views, &plan).expect("planner output must verify");
+    assert_eq!(stats.total, 40 + 40 + 24);
+    assert!(stats.parts >= 2);
+    // The plan-then-check wrapper agrees with checking the plan directly.
+    assert!(check_bucket_partition(&views, 4).is_ok());
+}
+
+#[test]
+fn mutant_non_monotone_bucket_plan_is_rejected() {
+    let (runs, mut plan) = bucket_fixture();
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    plan.cuts[1] = views.iter().map(|r| r.len()).collect();
+    plan.cuts[2] = vec![0; views.len()];
+    let err = check_bucket_plan(&views, &plan).unwrap_err();
+    assert!(err.contains("decrease"), "{err}");
+}
+
+#[test]
+fn mutant_short_bucket_plan_is_rejected() {
+    // Final row stops one key short of run 0: that key belongs to no
+    // bucket, so the output carving would leave a MAX-pad hole.
+    let (runs, mut plan) = bucket_fixture();
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let parts = plan.cuts.len() - 1;
+    plan.cuts[parts][0] -= 1;
+    let err = check_bucket_plan(&views, &plan).unwrap_err();
+    assert!(err.contains("final cut row"), "{err}");
+}
+
+#[test]
+fn mutant_rank_disordered_bucket_plan_is_rejected() {
+    // Monotone and fully covering, but bucket 0 takes all of run 0 and
+    // bucket 1 all of run 1 — concatenating the merges is unsorted.
+    let a: Vec<u32> = (0..16).collect();
+    let b: Vec<u32> = (0..16).collect();
+    let views: Vec<&[u32]> = vec![&a, &b];
+    let plan = bitonic_tpu::sort::MergePlan {
+        cuts: vec![vec![0, 0], vec![16, 0], vec![16, 16]],
+    };
+    let err = check_bucket_plan(&views, &plan).unwrap_err();
+    assert!(err.contains("earlier bucket reaches"), "{err}");
+}
+
+#[test]
+fn mutant_collapsed_bucket_plan_is_rejected() {
+    // Everything in one bucket: a valid order, but far beyond the
+    // provable balance bound — the dup-heavy collapse the (key, run,
+    // index) tie-break exists to prevent must never verify.
+    let runs: Vec<Vec<u32>> = vec![vec![7; 64], vec![7; 64]];
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let all: Vec<usize> = vec![64, 64];
+    let plan = bitonic_tpu::sort::MergePlan {
+        cuts: vec![vec![0, 0], all.clone(), all.clone(), all.clone(), all],
+    };
+    let err = check_bucket_plan(&views, &plan).unwrap_err();
+    assert!(err.contains("provable bound"), "{err}");
 }
 
 // ---------------------------------------------------------------------

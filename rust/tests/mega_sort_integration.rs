@@ -215,6 +215,36 @@ fn hierarchical_mega_sort_with_portable_kernels() {
     handle.shutdown();
 }
 
+/// The parallel splitter merge must be invisible at the sorter level:
+/// the same ragged mega input sorted with the serial loser tree
+/// (merge_threads = 1) and with the splitter-partitioned parallel merge
+/// (merge_threads = 4, `sort::pmerge`) yields identical bytes, and the
+/// stats say which merge actually ran.
+#[test]
+fn hierarchical_parallel_merge_matches_serial_bitwise() {
+    let Some(fixture) = fixture_dir() else { return };
+    let (handle, manifest) = spawn_device_host(&fixture).unwrap();
+    let serial =
+        HierarchicalSorter::new(handle.clone(), &manifest, Variant::Optimized).unwrap();
+    let parallel = HierarchicalSorter::new(handle.clone(), &manifest, Variant::Optimized)
+        .unwrap()
+        .with_merge_threads(4);
+    let tile = serial.tile();
+    let mut gen = Generator::new(0x9143);
+    for dist in [Distribution::Uniform, Distribution::DupHeavy, Distribution::Sorted] {
+        let orig = gen.u32s(3 * tile + 917, dist);
+        let mut a = orig.clone();
+        let sa = serial.sort(&mut a).unwrap();
+        let mut b = orig.clone();
+        let sb = parallel.sort(&mut b).unwrap();
+        assert_eq!(a, b, "parallel merge diverged on {}", dist.name());
+        assert_eq!(sa.merge_parts, 0, "serial path must not report buckets: {sa:?}");
+        assert!(sb.merge_parts > 1, "parallel path must bucket: {sb:?}");
+        assert_eq!(sb.merge_threads, 4, "{sb:?}");
+    }
+    handle.shutdown();
+}
+
 /// Merged discovery end to end: a primary dir plus its `generated/`
 /// subdir are served as one menu by `spawn_discovered`, and classes
 /// from both sides execute.

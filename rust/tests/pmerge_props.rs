@@ -1,0 +1,222 @@
+//! Property suite for the splitter-partitioned parallel merge
+//! (`sort::pmerge`): across dtypes × the survey distributions × fan-ins
+//! × worker counts, the parallel merge must be **bit-exact** with the
+//! serial loser-tree merge (`sort::kmerge::kway_merge`) — same bytes,
+//! not just the same multiset — plus the partition invariants the
+//! dispatch relies on (coverage, monotonicity, rank-ordered boundaries,
+//! the distribution-free balance bound).
+//!
+//! The hazards the ISSUE names are all salted in:
+//! * positional run exhaustion — runs are MAX-padded like the
+//!   hierarchical sorter's ragged tail, and the pads must merge to the
+//!   back, not truncate a run early;
+//! * f32 total order — NaN (both payload classes), ±inf and -0.0 are
+//!   injected and compared **as bits** (`to_bits`), so a NaN swallowed
+//!   by a `==` somewhere cannot hide;
+//! * splitter duplicates — the dup-heavy distribution drives the
+//!   tie-break, and bucket sizes are asserted against `balance_bound`.
+
+use bitonic_tpu::sort::pmerge::{balance_bound, BUCKETS_PER_THREAD};
+use bitonic_tpu::sort::{kway_merge, plan_partition, pmerge, SortKey};
+use bitonic_tpu::util::threadpool::ThreadPool;
+use bitonic_tpu::workload::{Distribution, Generator};
+
+const FAN_INS: [usize; 3] = [2, 3, 16];
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Split `keys` into `k` runs of deliberately uneven lengths (the last
+/// run takes the remainder), MAX-pad every run to its power-of-two
+/// ceiling the way the hierarchical sorter pads its ragged tail tile,
+/// and sort each under the total order.
+fn make_runs<T: SortKey>(mut keys: Vec<T>, k: usize, pad: bool) -> Vec<Vec<T>> {
+    let n = keys.len();
+    let mut runs: Vec<Vec<T>> = Vec::with_capacity(k);
+    for i in 0..k {
+        // Uneven cuts: run i gets a share growing with i.
+        let take = if i + 1 == k { keys.len() } else { (n / k / 2) * (1 + i % 3) };
+        let take = take.min(keys.len());
+        let rest = keys.split_off(take);
+        let mut run = std::mem::replace(&mut keys, rest);
+        // Pad BEFORE sorting, like the hierarchical sorter pads the
+        // ragged tail tile and then device-sorts it: NaN ranks above
+        // T::MAX_KEY (= +inf for floats), so padding after the sort
+        // would break the sorted-run precondition.
+        if pad && !run.is_empty() {
+            let ceil = run.len().next_power_of_two();
+            run.resize(ceil, T::MAX_KEY);
+        }
+        run.sort_unstable_by(|a, b| {
+            if a.total_lt(b) {
+                std::cmp::Ordering::Less
+            } else if b.total_lt(a) {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        });
+        runs.push(run);
+    }
+    runs
+}
+
+/// The serial oracle vs the parallel merge, compared via the caller's
+/// byte projection.
+fn assert_bit_exact<T: SortKey, B: PartialEq + std::fmt::Debug>(
+    runs: &[Vec<T>],
+    pool: &ThreadPool,
+    parts: usize,
+    bits: impl Fn(&T) -> B,
+    label: &str,
+) {
+    let views: Vec<&[T]> = runs.iter().map(|r| r.as_slice()).collect();
+    let mut want = Vec::new();
+    kway_merge(&views, &mut want);
+    let mut got = Vec::new();
+    pmerge(&views, pool, parts, &mut got).unwrap_or_else(|e| panic!("{label}: {e}"));
+    let want_bits: Vec<B> = want.iter().map(&bits).collect();
+    let got_bits: Vec<B> = got.iter().map(&bits).collect();
+    assert_eq!(got_bits, want_bits, "{label}: parallel merge is not bit-exact");
+}
+
+/// The partition invariants for one planned fan-in: every key in exactly
+/// one bucket, monotone cut columns, and no bucket above the provable
+/// balance bound.
+fn assert_partition_invariants<T: SortKey>(runs: &[Vec<T>], parts: usize, label: &str) {
+    let views: Vec<&[T]> = runs.iter().map(|r| r.as_slice()).collect();
+    let plan = plan_partition(&views, parts);
+    let lens: Vec<usize> = views.iter().map(|r| r.len()).collect();
+    assert_eq!(plan.cuts[0], vec![0; views.len()], "{label}: row 0 not zero");
+    assert_eq!(*plan.cuts.last().unwrap(), lens, "{label}: last row != lens");
+    for w in plan.cuts.windows(2) {
+        for q in 0..views.len() {
+            assert!(w[0][q] <= w[1][q], "{label}: non-monotone cut for run {q}");
+        }
+    }
+    let total: usize = lens.iter().sum();
+    let covered: usize = plan.bucket_sizes().iter().sum();
+    assert_eq!(covered, total, "{label}: buckets cover {covered} of {total}");
+    assert_eq!(*plan.bucket_offsets().last().unwrap(), total, "{label}: offsets");
+    let bound = balance_bound(&lens, parts);
+    assert!(
+        plan.largest_bucket() <= bound,
+        "{label}: largest bucket {} above the provable bound {bound}",
+        plan.largest_bucket()
+    );
+}
+
+#[test]
+fn u32_parallel_merge_is_bit_exact_across_grid() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads, 2 * threads);
+        for dist in Distribution::SURVEY {
+            for &k in &FAN_INS {
+                for pad in [false, true] {
+                    let mut gen =
+                        Generator::new(0xA11C_E5 ^ ((k as u64) << 8) ^ threads as u64);
+                    let keys = gen.u32s(4096, dist);
+                    let runs = make_runs(keys, k, pad);
+                    let label = format!(
+                        "u32 {} k={k} threads={threads} pad={pad}",
+                        dist.name()
+                    );
+                    assert_bit_exact(
+                        &runs,
+                        &pool,
+                        threads * BUCKETS_PER_THREAD,
+                        |&x| x,
+                        &label,
+                    );
+                    assert_partition_invariants(&runs, threads * BUCKETS_PER_THREAD, &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn i32_parallel_merge_is_bit_exact_across_grid() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads, 2 * threads);
+        for dist in Distribution::SURVEY {
+            for &k in &FAN_INS {
+                let mut gen =
+                    Generator::new(0x5133_D ^ ((k as u64) << 4) ^ threads as u64);
+                // Sign-flip cast: exercises negative keys and i32::MIN/MAX
+                // without needing a dedicated generator.
+                let keys: Vec<i32> =
+                    gen.u32s(4096, dist).into_iter().map(|x| x as i32).collect();
+                let runs = make_runs(keys, k, true);
+                let label = format!("i32 {} k={k} threads={threads}", dist.name());
+                assert_bit_exact(&runs, &pool, threads * BUCKETS_PER_THREAD, |&x| x, &label);
+                assert_partition_invariants(&runs, threads * BUCKETS_PER_THREAD, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_parallel_merge_is_bit_exact_with_salted_specials() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads, 2 * threads);
+        for dist in Distribution::SURVEY {
+            for &k in &FAN_INS {
+                let mut gen =
+                    Generator::new(0xF10A_7 ^ ((k as u64) << 4) ^ threads as u64);
+                let mut keys = gen.f32s(4096, dist);
+                // Salt every special the total order must keep distinct;
+                // two NaN payloads so bit-compare can see a swap.
+                let specials = [
+                    f32::NAN,
+                    f32::from_bits(0x7FC0_0001),
+                    f32::INFINITY,
+                    f32::NEG_INFINITY,
+                    -0.0f32,
+                    0.0f32,
+                ];
+                for (i, s) in specials.iter().enumerate() {
+                    let stride = keys.len() / specials.len();
+                    keys[i * stride] = *s;
+                }
+                let runs = make_runs(keys, k, true);
+                let label = format!("f32 {} k={k} threads={threads}", dist.name());
+                assert_bit_exact(
+                    &runs,
+                    &pool,
+                    threads * BUCKETS_PER_THREAD,
+                    |x| x.to_bits(),
+                    &label,
+                );
+                assert_partition_invariants(&runs, threads * BUCKETS_PER_THREAD, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn exhausted_and_empty_runs_merge_like_the_oracle() {
+    let pool = ThreadPool::new(4, 8);
+    // All-pad runs, an empty run, and one real run: positional
+    // exhaustion everywhere the loser tree can hit it.
+    let runs: Vec<Vec<u32>> = vec![
+        vec![u32::MAX; 8],
+        vec![],
+        vec![3, 9, 27, u32::MAX, u32::MAX],
+        vec![u32::MAX; 2],
+    ];
+    assert_bit_exact(&runs, &pool, 8, |&x| x, "max-padded fan-in");
+    assert_partition_invariants(&runs, 8, "max-padded fan-in");
+}
+
+#[test]
+fn dup_heavy_partition_never_collapses() {
+    // The adversarial case for value-ranked splitters: one key value.
+    // The (key, run, index) rank must still split near-evenly.
+    let pool = ThreadPool::new(8, 16);
+    let runs: Vec<Vec<u32>> = (0..16).map(|_| vec![99u32; 256]).collect();
+    let views: Vec<&[u32]> = runs.iter().map(|r| r.as_slice()).collect();
+    let parts = 8 * BUCKETS_PER_THREAD;
+    let plan = plan_partition(&views, parts);
+    assert!(plan.parts() > 1, "all-equal keys collapsed the partition");
+    assert_partition_invariants(&runs, parts, "dup-heavy");
+    assert_bit_exact(&runs, &pool, parts, |&x| x, "dup-heavy");
+}

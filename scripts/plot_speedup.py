@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Render speedup-vs-n curves from BENCH_trajectory.json.
+
+The paper's headline claim is a speedup ratio over CPU quicksort that
+grows with array size: "nearly 20 times" on average, "up to 30" around
+the peak. This script draws our measured analogue — one curve per
+non-quicksort substrate (the flat executor, the hierarchical mega-sort
+with its parallel merge, the CPU baselines) against those two reference
+lines — from the same trajectory file `bitonic-tpu report` consumes.
+
+matplotlib is optional: without it (or with --ascii) the curves render
+as an aligned text table, so CI and headless boxes still get the
+numbers. numpy is not required at all.
+
+Usage:
+    python3 scripts/plot_speedup.py                  # auto-locate, PNG or ASCII
+    python3 scripts/plot_speedup.py -t path.json -o speedup.png
+    python3 scripts/plot_speedup.py --ascii          # force the text table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# The paper's claims (abstract + Table 1), drawn as reference lines.
+PAPER_AVG = 20.0
+PAPER_PEAK = 30.0
+# Substrate whose records carry the merge ablation annotation.
+HIER = "hierarchical"
+
+
+def default_trajectory() -> str:
+    """Mirror Trajectory::default_path: env var, then repo root."""
+    env = os.environ.get("BENCH_TRAJECTORY_JSON")
+    if env:
+        return env
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.join(os.path.dirname(here), "BENCH_trajectory.json")
+
+
+def load_records(path: str) -> list[dict]:
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    records = doc.get("records")
+    if not isinstance(records, list):
+        raise SystemExit(f"{path}: no 'records' array — not a trajectory file")
+    return [r for r in records if isinstance(r, dict)]
+
+
+def ms_per_row(rec: dict) -> float:
+    batch = max(int(rec.get("batch", 1) or 1), 1)
+    return float(rec.get("ms", 0.0)) / batch
+
+
+def speedup_curves(records: list[dict]) -> tuple[dict[str, dict[int, float]], dict[int, float]]:
+    """Per-substrate {n: speedup} curves (uniform u32 matrix cells, the
+    paper's workload), plus the hierarchical cells' parallel-merge
+    annotation {n: merge_speedup_vs_serial} as its own curve source.
+
+    Latest record wins a cell, matching the report's convention.
+    """
+    quick: dict[int, float] = {}
+    for r in records:
+        if (
+            r.get("bench") == "matrix"
+            and r.get("substrate") == "quicksort"
+            and r.get("dist") == "uniform"
+            and r.get("dtype") == "u32"
+            and float(r.get("ms", 0.0)) > 0.0
+        ):
+            quick[int(r["n"])] = ms_per_row(r)
+
+    curves: dict[str, dict[int, float]] = {}
+    merge: dict[int, float] = {}
+    for r in records:
+        if r.get("bench") != "matrix" or r.get("dist") != "uniform" or r.get("dtype") != "u32":
+            continue
+        sub = str(r.get("substrate", ""))
+        n = int(r.get("n", 0))
+        if sub == "quicksort" or n not in quick or ms_per_row(r) <= 0.0:
+            continue
+        curves.setdefault(sub, {})[n] = quick[n] / ms_per_row(r)
+        if sub == HIER and "merge_speedup_vs_serial" in r:
+            merge[n] = float(r["merge_speedup_vs_serial"])
+    return curves, merge
+
+
+def fmt_n(n: int) -> str:
+    for shift, suffix in ((20, "M"), (10, "K")):
+        if n >= (1 << shift) and n % (1 << shift) == 0:
+            return f"{n >> shift}{suffix}"
+    return str(n)
+
+
+def render_ascii(curves: dict[str, dict[int, float]], merge: dict[int, float]) -> str:
+    sizes = sorted({n for c in curves.values() for n in c})
+    subs = sorted(curves, key=lambda s: (-max(curves[s].values()), s))
+    header = ["n"] + subs + ["hier merge vs serial"]
+    rows = []
+    for n in sizes:
+        row = [fmt_n(n)]
+        for s in subs:
+            v = curves[s].get(n)
+            row.append(f"{v:.2f}x" if v is not None else "-")
+        m = merge.get(n)
+        row.append(f"{m:.2f}x" if m is not None else "-")
+        rows.append(row)
+    widths = [max(len(r[i]) for r in [header] + rows) for i in range(len(header))]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths))]
+    lines.append("  ".join("-" * w for w in widths))
+    for row in rows:
+        lines.append("  ".join(c.rjust(w) if i else c.ljust(w) for i, (c, w) in enumerate(zip(row, widths))))
+    lines.append("")
+    lines.append(f"paper reference: ~{PAPER_AVG:.0f}x average, up to ~{PAPER_PEAK:.0f}x (GPU vs CPU quicksort)")
+    return "\n".join(lines)
+
+
+def render_png(curves: dict[str, dict[int, float]], merge: dict[int, float], out: str) -> None:
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(8, 5))
+    for sub in sorted(curves):
+        pts = sorted(curves[sub].items())
+        ax.plot(
+            [n for n, _ in pts],
+            [s for _, s in pts],
+            marker="o",
+            label=sub,
+            linewidth=1.6,
+        )
+    if merge:
+        pts = sorted(merge.items())
+        ax.plot(
+            [n for n, _ in pts],
+            [s for _, s in pts],
+            marker="s",
+            linestyle=":",
+            label="hier merge vs serial",
+            linewidth=1.4,
+        )
+    ax.axhline(PAPER_AVG, color="gray", linestyle="--", linewidth=1)
+    ax.axhline(PAPER_PEAK, color="gray", linestyle=":", linewidth=1)
+    ax.text(0.99, PAPER_AVG, "paper ~20x avg", ha="right", va="bottom", transform=ax.get_yaxis_transform(), fontsize=8, color="gray")
+    ax.text(0.99, PAPER_PEAK, "paper ~30x peak", ha="right", va="bottom", transform=ax.get_yaxis_transform(), fontsize=8, color="gray")
+    ax.set_xscale("log", base=2)
+    ax.set_xlabel("array size n")
+    ax.set_ylabel("speedup vs CPU quicksort (x)")
+    ax.set_title("Measured speedup vs quicksort (uniform u32)")
+    ax.grid(True, which="both", alpha=0.3)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(out, dpi=140)
+    print(f"wrote {out}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("-t", "--trajectory", default=default_trajectory(), help="trajectory JSON path (default: $BENCH_TRAJECTORY_JSON or repo root)")
+    ap.add_argument("-o", "--out", default="speedup.png", help="output image path (default: speedup.png)")
+    ap.add_argument("--ascii", action="store_true", help="print the text table even if matplotlib is available")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.trajectory):
+        print(f"no trajectory at {args.trajectory} — run `bitonic-tpu bench` first", file=sys.stderr)
+        return 1
+    curves, merge = speedup_curves(load_records(args.trajectory))
+    if not curves:
+        print("trajectory has no (quicksort, substrate) uniform-u32 pairs to compare", file=sys.stderr)
+        return 1
+
+    if not args.ascii:
+        try:
+            render_png(curves, merge, args.out)
+            return 0
+        except ImportError:
+            print("matplotlib not available — falling back to the text table\n", file=sys.stderr)
+    print(render_ascii(curves, merge))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -128,6 +128,30 @@ for d in "$d_portable" "$d_auto" "$d_simd"; do
 done
 echo "== ISA digests agree: $d_scalar =="
 
+# Hierarchical merge-parallelism equality smoke: the splitter-
+# partitioned parallel merge must produce the same bytes as the serial
+# loser tree, proven at the CLI-digest level on a size big enough
+# (2^18 > PMERGE_MIN_TOTAL) that the parallel path actually engages.
+# --no-profile keeps the tile pick deterministic across hosts.
+echo "== hier merge digest smoke (--merge-threads 1 vs 4) =="
+hier_digest() {
+    # $1: --merge-threads value.
+    cargo run --release --bin bitonic-tpu -- \
+        sort --algo hier --n 262144 --no-profile --merge-threads "$1" 2>/dev/null \
+        | grep -o 'digest [0-9a-f]*' || true
+}
+d_serial_merge=$(hier_digest 1)
+d_parallel_merge=$(hier_digest 4)
+if [ -z "$d_serial_merge" ]; then
+    echo "ERROR: hier sort with --merge-threads 1 printed no digest" >&2
+    exit 1
+fi
+if [ "$d_parallel_merge" != "$d_serial_merge" ]; then
+    echo "ERROR: hier merge digests diverge: serial=$d_serial_merge parallel=$d_parallel_merge" >&2
+    exit 1
+fi
+echo "== hier merge digests agree: $d_serial_merge =="
+
 # Bench smoke, time-bounded: the coordinator bench drives the real
 # work-stealing scheduler and the row-parallel executor end to end, so a
 # scheduler regression (deadlock, starvation, lost wakeup) fails here
