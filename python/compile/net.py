@@ -1,0 +1,268 @@
+"""1:1 python mirror of the rust wire codec (``coordinator::net::wire``).
+
+Byte-for-byte: every frame type, every offset, every validation rule and
+its error *kind* tag match the rust implementation — the golden byte
+vectors in ``python/tests/test_net.py`` and ``rust/tests/net_props.rs``
+pin the two against each other. This file is also the reference for
+writing clients in other languages.
+
+Frame layout (all integers little-endian)::
+
+    u32 length prefix        (length of the body that follows)
+    body:
+      0..4   magic  b"BTSP"
+      4      version (1)
+      5      op      1=Sort 2=Sorted 3=Error 4=Ping 5=Pong 6=Shutdown
+
+    Sort   : dtype@6 (0=u32)  order@7 (0/1)  id@8 u64  slo_us@16 u32
+             n@20 u32  keys@24 (4n bytes)
+    Sorted : path@6 (0=dev,1=cpu)  rsvd@7 (=0)  id@8 u64  latency_us@16
+             occupancy@20  n@24  keys@28
+    Error  : code@6 (1..5)  rsvd@7 (=0)  id@8 u64  message@16 (UTF-8)
+    Ping/Pong/Shutdown : token@6 u64
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import List, Tuple, Union
+
+MAGIC = b"BTSP"
+VERSION = 1
+DEFAULT_MAX_KEYS = 1 << 20
+MAX_ERROR_MSG = 1024
+
+OP_SORT = 1
+OP_SORTED = 2
+OP_ERROR = 3
+OP_PING = 4
+OP_PONG = 5
+OP_SHUTDOWN = 6
+
+_HDR = 6
+_SORT_FIXED = 24
+_SORTED_FIXED = 28
+_ERROR_FIXED = 16
+_TOKEN_BODY = 14
+
+# Error-frame codes (mirror of rust ``ErrorCode``).
+CODE_MALFORMED = 1
+CODE_UNSUPPORTED = 2
+CODE_OVERSIZE = 3
+CODE_SHED = 4
+CODE_INTERNAL = 5
+
+CODE_NAMES = {
+    CODE_MALFORMED: "malformed",
+    CODE_UNSUPPORTED: "unsupported",
+    CODE_OVERSIZE: "oversize",
+    CODE_SHED: "shed",
+    CODE_INTERNAL: "internal",
+}
+
+
+def frame_cap(max_keys: int) -> int:
+    """Largest legal body length for a given key cap (rust ``frame_cap``)."""
+    return max(_SORTED_FIXED + 4 * max_keys, _ERROR_FIXED + MAX_ERROR_MSG)
+
+
+class NetProtocolError(ValueError):
+    """Decode failure; ``kind`` matches rust ``WireError::kind()`` verbatim."""
+
+    def __init__(self, kind: str, detail: str = ""):
+        super().__init__(f"{kind}: {detail}" if detail else kind)
+        self.kind = kind
+
+    @property
+    def code(self) -> int:
+        """The error-frame code a server answers this defect with."""
+        if self.kind == "oversize":
+            return CODE_OVERSIZE
+        if self.kind in ("bad-version", "bad-op", "bad-dtype"):
+            return CODE_UNSUPPORTED
+        return CODE_MALFORMED
+
+
+@dataclass
+class Sort:
+    id: int
+    descending: bool = False
+    slo_us: int = 0
+    keys: List[int] = field(default_factory=list)
+
+
+@dataclass
+class Sorted:
+    id: int
+    cpu_path: bool = False
+    latency_us: int = 0
+    occupancy: int = 0
+    keys: List[int] = field(default_factory=list)
+
+
+@dataclass
+class Error:
+    code: int
+    id: int
+    message: str = ""
+
+
+@dataclass
+class Ping:
+    token: int
+
+
+@dataclass
+class Pong:
+    token: int
+
+
+@dataclass
+class Shutdown:
+    token: int
+
+
+Frame = Union[Sort, Sorted, Error, Ping, Pong, Shutdown]
+
+
+def _header(op: int) -> bytes:
+    return MAGIC + bytes([VERSION, op])
+
+
+def encode_body(frame: Frame) -> bytes:
+    """Mirror of rust ``Frame::encode_body``."""
+    if isinstance(frame, Sort):
+        return (
+            _header(OP_SORT)
+            + bytes([0, 1 if frame.descending else 0])
+            + struct.pack("<QII", frame.id, frame.slo_us, len(frame.keys))
+            + struct.pack(f"<{len(frame.keys)}I", *frame.keys)
+        )
+    if isinstance(frame, Sorted):
+        return (
+            _header(OP_SORTED)
+            + bytes([1 if frame.cpu_path else 0, 0])
+            + struct.pack(
+                "<QIII", frame.id, frame.latency_us, frame.occupancy, len(frame.keys)
+            )
+            + struct.pack(f"<{len(frame.keys)}I", *frame.keys)
+        )
+    if isinstance(frame, Error):
+        # Clamp to the cap on a char boundary, like the rust encoder: the
+        # clamped frame must still pass its own strict UTF-8 decode.
+        msg = frame.message.encode("utf-8")
+        if len(msg) > MAX_ERROR_MSG:
+            cut = MAX_ERROR_MSG
+            while cut > 0 and (msg[cut] & 0xC0) == 0x80:  # inside a code point
+                cut -= 1
+            msg = msg[:cut]
+        return _header(OP_ERROR) + bytes([frame.code, 0]) + struct.pack("<Q", frame.id) + msg
+    if isinstance(frame, Ping):
+        return _header(OP_PING) + struct.pack("<Q", frame.token)
+    if isinstance(frame, Pong):
+        return _header(OP_PONG) + struct.pack("<Q", frame.token)
+    if isinstance(frame, Shutdown):
+        return _header(OP_SHUTDOWN) + struct.pack("<Q", frame.token)
+    raise TypeError(f"not a frame: {frame!r}")
+
+
+def encode_frame(frame: Frame) -> bytes:
+    """Full frame: ``u32`` length prefix + body (rust ``Frame::encode``)."""
+    body = encode_body(frame)
+    return struct.pack("<I", len(body)) + body
+
+
+def _check_len(got: int, want: int) -> None:
+    if got < want:
+        raise NetProtocolError("truncated", f"need {want}, got {got}")
+    if got > want:
+        raise NetProtocolError("trailing", f"{got - want} trailing byte(s)")
+
+
+def _keys(b: bytes) -> List[int]:
+    return list(struct.unpack(f"<{len(b) // 4}I", b[: len(b) // 4 * 4]))
+
+
+def decode_body(body: bytes, max_keys: int = DEFAULT_MAX_KEYS) -> Frame:
+    """Mirror of rust ``Frame::decode_body`` — strict, same error kinds."""
+    if len(body) < _HDR:
+        raise NetProtocolError("truncated", f"need {_HDR}, got {len(body)}")
+    if body[:4] != MAGIC:
+        raise NetProtocolError("bad-magic", body[:4].hex())
+    if body[4] != VERSION:
+        raise NetProtocolError("bad-version", str(body[4]))
+    op = body[5]
+    if op == OP_SORT:
+        if len(body) < _SORT_FIXED:
+            raise NetProtocolError("truncated", f"need {_SORT_FIXED}, got {len(body)}")
+        if body[6] != 0:
+            raise NetProtocolError("bad-dtype", str(body[6]))
+        if body[7] > 1:
+            raise NetProtocolError("bad-order", str(body[7]))
+        (rid, slo_us, n) = struct.unpack_from("<QII", body, 8)
+        if n > max_keys:
+            raise NetProtocolError("oversize", f"{n} exceeds cap {max_keys}")
+        _check_len(len(body), _SORT_FIXED + 4 * n)
+        return Sort(
+            id=rid, descending=body[7] == 1, slo_us=slo_us, keys=_keys(body[_SORT_FIXED:])
+        )
+    if op == OP_SORTED:
+        if len(body) < _SORTED_FIXED:
+            raise NetProtocolError("truncated", f"need {_SORTED_FIXED}, got {len(body)}")
+        if body[6] > 1:
+            raise NetProtocolError("bad-path", str(body[6]))
+        if body[7] != 0:
+            raise NetProtocolError("bad-reserved", str(body[7]))
+        (rid, latency_us, occupancy, n) = struct.unpack_from("<QIII", body, 8)
+        if n > max_keys:
+            raise NetProtocolError("oversize", f"{n} exceeds cap {max_keys}")
+        _check_len(len(body), _SORTED_FIXED + 4 * n)
+        return Sorted(
+            id=rid,
+            cpu_path=body[6] == 1,
+            latency_us=latency_us,
+            occupancy=occupancy,
+            keys=_keys(body[_SORTED_FIXED:]),
+        )
+    if op == OP_ERROR:
+        if len(body) < _ERROR_FIXED:
+            raise NetProtocolError("truncated", f"need {_ERROR_FIXED}, got {len(body)}")
+        if body[6] not in CODE_NAMES:
+            raise NetProtocolError("bad-code", str(body[6]))
+        if body[7] != 0:
+            raise NetProtocolError("bad-reserved", str(body[7]))
+        msg = body[_ERROR_FIXED:]
+        if len(msg) > MAX_ERROR_MSG:
+            raise NetProtocolError("oversize", f"{len(msg)} exceeds cap {MAX_ERROR_MSG}")
+        try:
+            text = msg.decode("utf-8")
+        except UnicodeDecodeError:
+            raise NetProtocolError("bad-utf8") from None
+        (rid,) = struct.unpack_from("<Q", body, 8)
+        return Error(code=body[6], id=rid, message=text)
+    if op in (OP_PING, OP_PONG, OP_SHUTDOWN):
+        _check_len(len(body), _TOKEN_BODY)
+        (token,) = struct.unpack_from("<Q", body, 6)
+        return {OP_PING: Ping, OP_PONG: Pong, OP_SHUTDOWN: Shutdown}[op](token)
+    raise NetProtocolError("bad-op", str(op))
+
+
+def decode_frame(data: bytes, max_keys: int = DEFAULT_MAX_KEYS) -> Tuple[Frame, int]:
+    """Decode one length-prefixed frame from the start of ``data``.
+
+    Returns ``(frame, bytes_consumed)``. Raises ``NetProtocolError`` with
+    kind ``truncated`` when fewer bytes than one whole frame are present,
+    and ``oversize`` when the length prefix exceeds ``frame_cap``.
+    """
+    if len(data) < 4:
+        raise NetProtocolError("truncated", f"need 4, got {len(data)}")
+    (length,) = struct.unpack_from("<I", data, 0)
+    cap = frame_cap(max_keys)
+    if length > cap:
+        raise NetProtocolError("oversize", f"{length} exceeds cap {cap}")
+    if length < _HDR:
+        raise NetProtocolError("truncated", f"need {_HDR}, got {length}")
+    if len(data) < 4 + length:
+        raise NetProtocolError("truncated", f"need {4 + length}, got {len(data)}")
+    return decode_body(data[4 : 4 + length], max_keys), 4 + length

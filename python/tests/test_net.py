@@ -1,0 +1,229 @@
+"""Wire-codec mirror grid: python ``compile.net`` vs rust ``net::wire``.
+
+The golden byte vectors here are pinned in ``rust/src/coordinator/net/
+wire.rs`` (unit tests) and ``rust/tests/net_props.rs`` — all three must
+agree or an interop break slipped in. The malformed table keys on the
+rust ``WireError::kind()`` strings verbatim.
+"""
+
+import random
+
+import pytest
+
+from compile import net
+
+
+# ---------------------------------------------------------------------
+# Round-trips.
+# ---------------------------------------------------------------------
+
+FRAMES = [
+    net.Sort(id=7, descending=False, slo_us=0, keys=[1, 2]),
+    net.Sort(id=2**64 - 1, descending=True, slo_us=2**32 - 1, keys=[]),
+    net.Sorted(id=3, cpu_path=True, latency_us=123, occupancy=4, keys=[9, 9, 9]),
+    net.Error(code=net.CODE_SHED, id=9, message="shed"),
+    net.Error(code=net.CODE_INTERNAL, id=0, message=""),
+    net.Ping(token=0x0102030405060708),
+    net.Pong(token=0),
+    net.Shutdown(token=2**64 - 1),
+]
+
+
+@pytest.mark.parametrize("frame", FRAMES, ids=lambda f: type(f).__name__)
+def test_round_trip(frame):
+    body = net.encode_body(frame)
+    assert net.decode_body(body) == frame
+    decoded, used = net.decode_frame(net.encode_frame(frame))
+    assert decoded == frame
+    assert used == 4 + len(body)
+
+
+def test_randomized_round_trips():
+    rng = random.Random(0xB170)
+    for _ in range(300):
+        kind = rng.randrange(6)
+        rid = rng.getrandbits(64)
+        keys = [rng.getrandbits(32) for _ in range(rng.randrange(32))]
+        if kind == 0:
+            frame = net.Sort(
+                id=rid,
+                descending=bool(rng.getrandbits(1)),
+                slo_us=rng.getrandbits(32),
+                keys=keys,
+            )
+        elif kind == 1:
+            frame = net.Sorted(
+                id=rid,
+                cpu_path=bool(rng.getrandbits(1)),
+                latency_us=rng.getrandbits(32),
+                occupancy=rng.getrandbits(32),
+                keys=keys,
+            )
+        elif kind == 2:
+            frame = net.Error(
+                code=rng.randrange(1, 6),
+                id=rid,
+                message="".join(chr(rng.randrange(97, 123)) for _ in range(rng.randrange(48))),
+            )
+        elif kind == 3:
+            frame = net.Ping(token=rid)
+        elif kind == 4:
+            frame = net.Pong(token=rid)
+        else:
+            frame = net.Shutdown(token=rid)
+        assert net.decode_body(net.encode_body(frame)) == frame
+
+
+# ---------------------------------------------------------------------
+# Golden byte vectors — identical in wire.rs and net_props.rs.
+# ---------------------------------------------------------------------
+
+def test_golden_ping_bytes():
+    assert net.encode_frame(net.Ping(token=0x0102030405060708)) == bytes(
+        [0x0E, 0x00, 0x00, 0x00]
+        + list(b"BTSP")
+        + [0x01, 0x04]
+        + [0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01]
+    )
+
+
+def test_golden_sort_bytes():
+    assert net.encode_frame(net.Sort(id=7, keys=[1, 2])) == bytes(
+        [0x20, 0x00, 0x00, 0x00]
+        + list(b"BTSP")
+        + [0x01, 0x01]
+        + [0x00, 0x00]
+        + [0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00]
+        + [0x00, 0x00, 0x00, 0x00]
+        + [0x02, 0x00, 0x00, 0x00]
+        + [0x01, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00]
+    )
+
+
+def test_golden_error_bytes():
+    assert net.encode_frame(net.Error(code=net.CODE_SHED, id=9, message="shed")) == bytes(
+        [0x14, 0x00, 0x00, 0x00]
+        + list(b"BTSP")
+        + [0x01, 0x03]
+        + [0x04, 0x00]
+        + [0x09, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00]
+        + list(b"shed")
+    )
+
+
+# ---------------------------------------------------------------------
+# Malformed table, keyed by rust WireError::kind().
+# ---------------------------------------------------------------------
+
+def _mutate(body, index, value):
+    out = bytearray(body)
+    out[index] = value
+    return bytes(out)
+
+
+SORT = net.encode_body(net.Sort(id=1, keys=[5]))
+SORTED = net.encode_body(net.Sorted(id=1, latency_us=1, occupancy=1, keys=[]))
+ERROR = net.encode_body(net.Error(code=net.CODE_INTERNAL, id=1, message="x"))
+
+MALFORMED = [
+    (_mutate(SORT, 0, ord("X")), "bad-magic"),
+    (_mutate(SORT, 4, 99), "bad-version"),
+    (_mutate(SORT, 5, 42), "bad-op"),
+    (_mutate(SORT, 6, 7), "bad-dtype"),
+    (_mutate(SORT, 7, 2), "bad-order"),
+    (SORT[:-1], "truncated"),
+    (SORT + b"\0", "trailing"),
+    (_mutate(SORT, 20, 2), "truncated"),  # n claims 2 keys, payload has 1
+    (_mutate(SORTED, 6, 3), "bad-path"),
+    (_mutate(SORTED, 7, 1), "bad-reserved"),
+    (_mutate(ERROR, 6, 0), "bad-code"),
+    (_mutate(ERROR, 16, 0xFF), "bad-utf8"),
+    (b"", "truncated"),
+    (b"BTSP\x01", "truncated"),
+]
+
+
+@pytest.mark.parametrize("body,kind", MALFORMED, ids=[k for _, k in MALFORMED])
+def test_malformed_kind(body, kind):
+    with pytest.raises(net.NetProtocolError) as exc:
+        net.decode_body(body)
+    assert exc.value.kind == kind
+
+
+def test_oversize_n_against_small_cap():
+    body = net.encode_body(net.Sort(id=1, keys=[0] * 9))
+    with pytest.raises(net.NetProtocolError) as exc:
+        net.decode_body(body, max_keys=8)
+    assert exc.value.kind == "oversize"
+    assert exc.value.code == net.CODE_OVERSIZE
+
+
+def test_error_codes_follow_the_rust_mapping():
+    cases = {
+        "bad-magic": net.CODE_MALFORMED,
+        "bad-version": net.CODE_UNSUPPORTED,
+        "bad-op": net.CODE_UNSUPPORTED,
+        "bad-dtype": net.CODE_UNSUPPORTED,
+        "bad-order": net.CODE_MALFORMED,
+        "truncated": net.CODE_MALFORMED,
+        "oversize": net.CODE_OVERSIZE,
+    }
+    for kind, code in cases.items():
+        assert net.NetProtocolError(kind).code == code
+
+
+# ---------------------------------------------------------------------
+# Truncation sweep + fuzz.
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("frame", FRAMES, ids=lambda f: type(f).__name__)
+def test_every_truncation_is_rejected(frame):
+    # Error frames are the one variable-tail op with no length field of
+    # its own: a truncated *body* is a valid frame with a shorter
+    # message, so only cuts into the fixed part must fail. (The outer
+    # length prefix is what delimits the message on the wire.)
+    body = net.encode_body(frame)
+    end = net._ERROR_FIXED if isinstance(frame, net.Error) else len(body)
+    for cut in range(end):
+        with pytest.raises(net.NetProtocolError):
+            net.decode_body(body[:cut])
+
+
+def test_outer_frame_truncations_are_rejected():
+    data = net.encode_frame(net.Sort(id=1, keys=[1, 2, 3]))
+    for cut in range(len(data)):
+        with pytest.raises(net.NetProtocolError) as exc:
+            net.decode_frame(data[:cut])
+        assert exc.value.kind == "truncated"
+
+
+def test_oversize_length_prefix_is_rejected_before_decoding():
+    import struct
+
+    huge = struct.pack("<I", net.frame_cap(net.DEFAULT_MAX_KEYS) + 1)
+    with pytest.raises(net.NetProtocolError) as exc:
+        net.decode_frame(huge + b"\0" * 16)
+    assert exc.value.kind == "oversize"
+
+
+def test_garbage_never_crashes():
+    rng = random.Random(0xB170F422)
+    for round_no in range(2000):
+        body = bytearray(rng.getrandbits(8) for _ in range(rng.randrange(256)))
+        # Half the rounds get a valid header so the fuzz reaches the
+        # per-op validation (mirrors the rust fuzz loop).
+        if round_no % 2 == 0 and len(body) >= 6:
+            body[:4] = net.MAGIC
+            body[4] = net.VERSION
+            body[5] = 1 + rng.randrange(6)
+        try:
+            net.decode_body(bytes(body))
+        except net.NetProtocolError:
+            pass
+
+
+def test_long_error_messages_clamp_on_a_char_boundary():
+    frame = net.Error(code=net.CODE_INTERNAL, id=1, message="é" * net.MAX_ERROR_MSG)
+    decoded = net.decode_body(net.encode_body(frame))
+    assert len(decoded.message.encode("utf-8")) <= net.MAX_ERROR_MSG
+    assert decoded.message and set(decoded.message) == {"é"}

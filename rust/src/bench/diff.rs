@@ -34,6 +34,14 @@ pub const DIFF_TOLERANCE: f64 = 1.25;
 /// `new_ms / old_ms` above this fails `report --diff --gate`.
 pub const DIFF_SLOWDOWN_GATE: f64 = 2.0;
 
+/// Benches whose cells are never compared. `loadgen` records carry
+/// *client-measured serving latency* — a function of the traffic mix,
+/// connection count, and whatever else shared CI hardware was doing —
+/// not kernel throughput; across runs they jitter far past any sane
+/// gate and would make the perf gate cry wolf. They still land in the
+/// trajectory and RESULTS.md serving section; they just don't gate.
+pub const DIFF_EXCLUDED_BENCHES: &[&str] = &["loadgen"];
+
 /// One scenario measured in both trajectories.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DiffCell {
@@ -184,7 +192,7 @@ pub fn diff_trajectories(old: &Trajectory, new: &Trajectory) -> TrajectoryDiff {
     let index = |t: &Trajectory| -> Vec<(Key, f64)> {
         let mut keys: Vec<(Key, f64)> = Vec::new();
         for r in &t.records {
-            if r.ms <= 0.0 {
+            if r.ms <= 0.0 || DIFF_EXCLUDED_BENCHES.contains(&r.bench.as_str()) {
                 continue;
             }
             let key: Key = (
@@ -319,6 +327,21 @@ mod tests {
         new2.env = old.env.clone();
         new2.env.unix_secs += 3600;
         assert!(diff_trajectories(&old, &new2).env_comparable);
+    }
+
+    #[test]
+    fn serving_latency_cells_are_excluded_from_the_gate() {
+        // A 100× "slowdown" in client-measured serving latency must not
+        // trip the kernel perf gate (see DIFF_EXCLUDED_BENCHES).
+        let serving = |ms: f64| {
+            BenchRecord::new("loadgen", "sort-service-tcp", "mixed", "u32", 2048).with_ms(ms)
+        };
+        let old = trajectory(vec![rec("a", 64, 1.0), serving(1.0)]);
+        let new = trajectory(vec![rec("a", 64, 1.0), serving(100.0)]);
+        let d = diff_trajectories(&old, &new);
+        assert_eq!(d.compared.len(), 1, "loadgen cell leaked into the diff");
+        assert!(d.regressions().is_empty());
+        assert_eq!((d.only_old, d.only_new), (0, 0));
     }
 
     #[test]

@@ -1,0 +1,616 @@
+//! The serving load generator: drive a live `serve-tcp` endpoint with a
+//! deterministic [`TrafficMix`] and measure what a *client* sees.
+//!
+//! Two drive modes:
+//!
+//! * **Closed loop** — each connection sends, waits for the reply, and
+//!   immediately sends again: measures the service's sustainable
+//!   throughput and in-service latency.
+//! * **Open loop** (`--qps`) — requests are issued on a fixed schedule
+//!   regardless of how the previous ones fared, and latency is measured
+//!   from the *scheduled* send time, not the actual one. That is the
+//!   coordinated-omission correction: a server that stalls makes the
+//!   scheduled requests behind the stall look as slow as clients truly
+//!   experienced them, instead of silently thinning the load.
+//!
+//! Every worker connection draws from its own seeded [`TrafficGen`]
+//! stream ([`worker_seed`]), so a whole run is reproducible from
+//! `(mix, seed, conns)` — the determinism test in
+//! `rust/tests/service_load.rs` pins this.
+//!
+//! Results surface three ways: a stdout table ([`LoadgenReport::render`]),
+//! schema-valid [`BenchRecord`]s appended to the unified trajectory
+//! ([`LoadgenReport::to_records`], `bench = "loadgen"`), and from there
+//! the RESULTS.md serving section. Loadgen cells are excluded from the
+//! cross-run diff gate — see `bench::diff::DIFF_EXCLUDED_BENCHES`.
+
+use std::time::{Duration, Instant};
+
+use super::record::BenchRecord;
+use crate::coordinator::net::{NetClient, SortReply, DEFAULT_MAX_KEYS};
+use crate::util::metrics::{Counter, Histogram};
+use crate::util::table::Table;
+use crate::workload::{SplitMix64, TrafficGen, TrafficMix};
+
+/// How the generator paces requests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadMode {
+    /// Send → await → send again, per connection.
+    Closed,
+    /// Fixed aggregate schedule at `qps`, split evenly across
+    /// connections; latency measured from the scheduled send time.
+    Open {
+        /// Aggregate target request rate.
+        qps: f64,
+    },
+}
+
+impl LoadMode {
+    /// Stable name recorded in bench extras ("closed" / "open").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Closed => "closed",
+            Self::Open { .. } => "open",
+        }
+    }
+
+    /// The target rate (0 for closed loop).
+    pub fn qps_target(&self) -> f64 {
+        match self {
+            Self::Closed => 0.0,
+            Self::Open { qps } => *qps,
+        }
+    }
+}
+
+/// Loadgen run configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Pacing mode.
+    pub mode: LoadMode,
+    /// Concurrent client connections (each on its own thread).
+    pub conns: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Root seed; each connection derives its own via [`worker_seed`].
+    pub seed: u64,
+    /// The traffic mix to draw.
+    pub mix: TrafficMix,
+    /// Per-connection socket I/O timeout.
+    pub timeout: Duration,
+}
+
+impl LoadgenConfig {
+    /// The CI smoke shape: 2 closed-loop connections, 2 seconds, the
+    /// small fixture-friendly mix.
+    pub fn smoke(seed: u64) -> Self {
+        Self {
+            mode: LoadMode::Closed,
+            conns: 2,
+            duration: Duration::from_secs(2),
+            seed,
+            mix: TrafficMix::smoke(),
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The per-connection seed: decorrelated from neighbours by a
+/// SplitMix64 scramble of `seed ⊕ worker·φ64` (pub so the determinism
+/// test can reproduce a worker's exact stream).
+pub fn worker_seed(seed: u64, worker: usize) -> u64 {
+    SplitMix64::new(seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// Shared tallies for one traffic class (client-side view).
+#[derive(Default)]
+struct ClassTally {
+    sent: Counter,
+    ok: Counter,
+    shed: Counter,
+    slo_tracked: Counter,
+    slo_missed: Counter,
+    latency: Histogram,
+}
+
+/// Per-class slice of a finished run.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    /// Class label from the mix.
+    pub name: &'static str,
+    /// The class's input distribution name.
+    pub dist: String,
+    /// The class's largest request length.
+    pub max_len: usize,
+    /// Requests sent.
+    pub sent: u64,
+    /// Requests answered with sorted keys.
+    pub ok: u64,
+    /// Requests answered with a shed rejection.
+    pub shed: u64,
+    /// Answered requests that carried an SLO.
+    pub slo_tracked: u64,
+    /// Of those, how many blew their budget (client-measured).
+    pub slo_missed: u64,
+    /// Client-side latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    /// 99th percentile latency.
+    pub p99_ms: f64,
+    /// 99.9th percentile latency.
+    pub p999_ms: f64,
+    /// Mean latency.
+    pub mean_ms: f64,
+}
+
+impl ClassReport {
+    /// Fraction of sent requests that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.sent.max(1)) as f64
+    }
+
+    /// Fraction of SLO-tracked answers that missed their budget.
+    pub fn slo_miss_rate(&self) -> f64 {
+        self.slo_missed as f64 / (self.slo_tracked.max(1)) as f64
+    }
+}
+
+/// Aggregate view of a finished loadgen run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Pacing mode name ("closed" / "open").
+    pub mode: &'static str,
+    /// Target QPS (0 for closed loop).
+    pub qps_target: f64,
+    /// Connections driven.
+    pub conns: usize,
+    /// Wall clock actually spent.
+    pub wall: Duration,
+    /// Requests sent across all classes.
+    pub sent: u64,
+    /// Requests answered with sorted keys.
+    pub ok: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Answered requests that carried an SLO.
+    pub slo_tracked: u64,
+    /// Of those, how many missed (client-measured).
+    pub slo_missed: u64,
+    /// Transport failures + invalid payloads (a healthy run has none).
+    pub errors: u64,
+    /// Non-shed rejection frames (a healthy run has none).
+    pub rejected: u64,
+    /// Achieved request rate (sent / wall).
+    pub qps_achieved: f64,
+    /// Client-side latency percentiles over every OK answer, ms.
+    pub p50_ms: f64,
+    /// 99th percentile latency.
+    pub p99_ms: f64,
+    /// 99.9th percentile latency.
+    pub p999_ms: f64,
+    /// Mean latency.
+    pub mean_ms: f64,
+    /// Largest request length the mix can draw (the aggregate record's n).
+    pub max_len: usize,
+    /// Per-class breakdown, mix order.
+    pub classes: Vec<ClassReport>,
+}
+
+impl LoadgenReport {
+    /// Fraction of sent requests that were shed.
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.sent.max(1)) as f64
+    }
+
+    /// Fraction of SLO-tracked answers that missed their budget.
+    pub fn slo_miss_rate(&self) -> f64 {
+        self.slo_missed as f64 / (self.slo_tracked.max(1)) as f64
+    }
+
+    /// Protocol-level failures: transport errors, invalid payloads, and
+    /// non-shed rejections. The smoke gates on this being zero.
+    pub fn protocol_errors(&self) -> u64 {
+        self.errors + self.rejected
+    }
+
+    /// Per-class slice by name.
+    pub fn class(&self, name: &str) -> Option<&ClassReport> {
+        self.classes.iter().find(|c| c.name == name)
+    }
+
+    /// Render the stdout summary: one headline plus a per-class table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "loadgen: mode {} (target {:.0} qps) conns {} wall {:.2}s — \
+             sent {} ok {} shed {} ({:.2}%) errors {} achieved {:.1} qps\n\
+             latency ms: p50 {:.3} p99 {:.3} p999 {:.3} mean {:.3} — \
+             SLO tracked {} missed {} ({:.2}%)\n",
+            self.mode,
+            self.qps_target,
+            self.conns,
+            self.wall.as_secs_f64(),
+            self.sent,
+            self.ok,
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.protocol_errors(),
+            self.qps_achieved,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+            self.mean_ms,
+            self.slo_tracked,
+            self.slo_missed,
+            self.slo_miss_rate() * 100.0,
+        );
+        let mut t = Table::new(vec![
+            "class", "dist", "sent", "ok", "shed %", "SLO miss %", "p50 ms", "p99 ms",
+            "p999 ms",
+        ]);
+        for c in &self.classes {
+            t.row(vec![
+                c.name.to_string(),
+                c.dist.clone(),
+                c.sent.to_string(),
+                c.ok.to_string(),
+                format!("{:.2}", c.shed_rate() * 100.0),
+                format!("{:.2}", c.slo_miss_rate() * 100.0),
+                format!("{:.3}", c.p50_ms),
+                format!("{:.3}", c.p99_ms),
+                format!("{:.3}", c.p999_ms),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// Map the run onto trajectory records: one aggregate cell
+    /// (`dist = "mixed"`) plus one per class, all `bench = "loadgen"`,
+    /// `substrate = "sort-service-tcp"`, with the serving metrics as
+    /// extras. `ms` is the mean client latency so the record validates
+    /// even though a serving cell has no single kernel time.
+    pub fn to_records(&self) -> Vec<BenchRecord> {
+        let stamp = |r: BenchRecord, p50: f64, p99: f64, p999: f64, shed: f64, miss: f64| {
+            r.with_extra("mode", self.mode)
+                .with_extra("qps_target", self.qps_target)
+                .with_extra("p50_ms", p50)
+                .with_extra("p99_ms", p99)
+                .with_extra("p999_ms", p999)
+                .with_extra("shed_rate", shed)
+                .with_extra("slo_miss_rate", miss)
+        };
+        let mut records = Vec::with_capacity(1 + self.classes.len());
+        records.push(
+            stamp(
+                BenchRecord::new("loadgen", "sort-service-tcp", "mixed", "u32", self.max_len)
+                    .with_ms(self.mean_ms),
+                self.p50_ms,
+                self.p99_ms,
+                self.p999_ms,
+                self.shed_rate(),
+                self.slo_miss_rate(),
+            )
+            .with_extra("qps_achieved", self.qps_achieved)
+            .with_extra("conns", self.conns)
+            .with_extra("duration_s", self.wall.as_secs_f64())
+            .with_extra("requests_sent", self.sent)
+            .with_extra("requests_ok", self.ok)
+            .with_extra("protocol_errors", self.protocol_errors()),
+        );
+        for c in &self.classes {
+            records.push(
+                stamp(
+                    BenchRecord::new("loadgen", "sort-service-tcp", &c.dist, "u32", c.max_len)
+                        .with_ms(c.mean_ms),
+                    c.p50_ms,
+                    c.p99_ms,
+                    c.p999_ms,
+                    c.shed_rate(),
+                    c.slo_miss_rate(),
+                )
+                .with_extra("class", c.name)
+                .with_extra("requests_sent", c.sent),
+            );
+        }
+        records
+    }
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Drive `addr` per `cfg` and gather the client-side report. Fails on
+/// an unreachable server or an invalid config; per-request transport
+/// errors after connect are counted (and end that worker) rather than
+/// failing the run.
+pub fn run_loadgen(addr: &str, cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    cfg.mix.validate()?;
+    crate::ensure!(cfg.conns >= 1, "loadgen needs at least one connection");
+    crate::ensure!(
+        cfg.duration > Duration::ZERO,
+        "loadgen duration must be positive"
+    );
+    if let LoadMode::Open { qps } = cfg.mode {
+        crate::ensure!(qps > 0.0, "open-loop qps must be positive");
+    }
+
+    let tallies: Vec<ClassTally> = cfg.mix.classes.iter().map(|_| ClassTally::default()).collect();
+    let aggregate = Histogram::new();
+    let errors = Counter::new();
+    let rejected = Counter::new();
+    let t0 = Instant::now();
+    let deadline = t0 + cfg.duration;
+
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let mut handles = Vec::with_capacity(cfg.conns);
+        for w in 0..cfg.conns {
+            let (tallies, aggregate, errors, rejected) =
+                (&tallies, &aggregate, &errors, &rejected);
+            handles.push(scope.spawn(move || {
+                worker_loop(
+                    addr, cfg, w, t0, deadline, tallies, aggregate, errors, rejected,
+                )
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| crate::err!("loadgen worker panicked"))??;
+        }
+        Ok(())
+    })?;
+
+    let wall = t0.elapsed();
+    let classes: Vec<ClassReport> = cfg
+        .mix
+        .classes
+        .iter()
+        .zip(&tallies)
+        .map(|(c, t)| ClassReport {
+            name: c.name,
+            dist: c.dist.name().to_string(),
+            max_len: c.max_len,
+            sent: t.sent.get(),
+            ok: t.ok.get(),
+            shed: t.shed.get(),
+            slo_tracked: t.slo_tracked.get(),
+            slo_missed: t.slo_missed.get(),
+            p50_ms: ms(t.latency.quantile_ns(0.5)),
+            p99_ms: ms(t.latency.quantile_ns(0.99)),
+            p999_ms: ms(t.latency.quantile_ns(0.999)),
+            mean_ms: t.latency.mean_ns() / 1e6,
+        })
+        .collect();
+    let sent: u64 = classes.iter().map(|c| c.sent).sum();
+    Ok(LoadgenReport {
+        mode: cfg.mode.name(),
+        qps_target: cfg.mode.qps_target(),
+        conns: cfg.conns,
+        wall,
+        sent,
+        ok: classes.iter().map(|c| c.ok).sum(),
+        shed: classes.iter().map(|c| c.shed).sum(),
+        slo_tracked: classes.iter().map(|c| c.slo_tracked).sum(),
+        slo_missed: classes.iter().map(|c| c.slo_missed).sum(),
+        errors: errors.get(),
+        rejected: rejected.get(),
+        qps_achieved: sent as f64 / wall.as_secs_f64().max(1e-9),
+        p50_ms: ms(aggregate.quantile_ns(0.5)),
+        p99_ms: ms(aggregate.quantile_ns(0.99)),
+        p999_ms: ms(aggregate.quantile_ns(0.999)),
+        mean_ms: aggregate.mean_ns() / 1e6,
+        max_len: cfg.mix.max_len(),
+        classes,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    addr: &str,
+    cfg: &LoadgenConfig,
+    worker: usize,
+    t0: Instant,
+    deadline: Instant,
+    tallies: &[ClassTally],
+    aggregate: &Histogram,
+    errors: &Counter,
+    rejected: &Counter,
+) -> crate::Result<()> {
+    let mut client = NetClient::connect_with(addr, cfg.timeout, DEFAULT_MAX_KEYS)
+        .map_err(|e| crate::err!("loadgen worker {worker}: {e}"))?;
+    let mut gen = TrafficGen::new(cfg.mix.clone(), worker_seed(cfg.seed, worker));
+    let per_conn_interval = match cfg.mode {
+        LoadMode::Closed => None,
+        LoadMode::Open { qps } => Some(Duration::from_secs_f64(
+            cfg.conns as f64 / qps.max(f64::MIN_POSITIVE),
+        )),
+    };
+    let mut k: u32 = 0;
+    loop {
+        // Pacing: closed loop issues now; open loop issues on the k-th
+        // scheduled tick and measures from it (coordinated omission).
+        let issue_at = match per_conn_interval {
+            None => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Ok(());
+                }
+                now
+            }
+            Some(interval) => {
+                let sched = t0 + interval * k;
+                if sched >= deadline {
+                    return Ok(());
+                }
+                let now = Instant::now();
+                if sched > now {
+                    std::thread::sleep(sched - now);
+                }
+                sched
+            }
+        };
+        k += 1;
+        let req = gen.next_request();
+        let tally = &tallies[req.class];
+        let slo = req.slo;
+        let want_len = req.keys.len();
+        tally.sent.inc();
+        match client.sort(req.id, req.keys, req.descending, slo) {
+            Ok(SortReply::Sorted { keys, .. }) => {
+                let elapsed = issue_at.elapsed();
+                let well_formed = keys.len() == want_len
+                    && if req.descending {
+                        keys.windows(2).all(|w| w[0] >= w[1])
+                    } else {
+                        keys.windows(2).all(|w| w[0] <= w[1])
+                    };
+                if !well_formed {
+                    errors.inc();
+                    continue;
+                }
+                tally.ok.inc();
+                tally.latency.record(elapsed);
+                aggregate.record(elapsed);
+                if let Some(budget) = slo {
+                    tally.slo_tracked.inc();
+                    if elapsed > budget {
+                        tally.slo_missed.inc();
+                    }
+                }
+            }
+            Ok(SortReply::Shed { .. }) => {
+                tally.shed.inc();
+            }
+            Ok(SortReply::Rejected { .. }) => {
+                rejected.inc();
+            }
+            Err(_) => {
+                // Transport broke: count it and retire this worker; the
+                // run-level gate on protocol_errors() surfaces it.
+                errors.inc();
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_seeds_are_deterministic_and_distinct() {
+        assert_eq!(worker_seed(42, 0), worker_seed(42, 0));
+        let seeds: Vec<u64> = (0..16).map(|w| worker_seed(42, w)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "worker seeds collide: {seeds:?}");
+        assert_ne!(worker_seed(1, 0), worker_seed(2, 0));
+    }
+
+    #[test]
+    fn report_maps_onto_schema_valid_records() {
+        let report = LoadgenReport {
+            mode: "open",
+            qps_target: 500.0,
+            conns: 4,
+            wall: Duration::from_secs(2),
+            sent: 1000,
+            ok: 950,
+            shed: 50,
+            slo_tracked: 900,
+            slo_missed: 9,
+            errors: 0,
+            rejected: 0,
+            qps_achieved: 500.0,
+            p50_ms: 1.0,
+            p99_ms: 5.0,
+            p999_ms: 9.0,
+            mean_ms: 1.5,
+            max_len: 2048,
+            classes: vec![ClassReport {
+                name: "interactive",
+                dist: "uniform".into(),
+                max_len: 512,
+                sent: 800,
+                ok: 790,
+                shed: 10,
+                slo_tracked: 790,
+                slo_missed: 8,
+                p50_ms: 0.9,
+                p99_ms: 4.0,
+                p999_ms: 8.0,
+                mean_ms: 1.2,
+            }],
+        };
+        assert!((report.shed_rate() - 0.05).abs() < 1e-12);
+        assert!((report.slo_miss_rate() - 0.01).abs() < 1e-12);
+        assert_eq!(report.protocol_errors(), 0);
+        assert!(report.class("interactive").is_some());
+
+        let records = report.to_records();
+        assert_eq!(records.len(), 2);
+        let agg = &records[0];
+        assert_eq!(agg.bench, "loadgen");
+        assert_eq!(agg.substrate, "sort-service-tcp");
+        assert_eq!(agg.dist, "mixed");
+        assert_eq!(agg.n, 2048);
+        for key in [
+            "mode",
+            "qps_target",
+            "qps_achieved",
+            "p50_ms",
+            "p99_ms",
+            "p999_ms",
+            "shed_rate",
+            "slo_miss_rate",
+            "protocol_errors",
+        ] {
+            assert!(
+                agg.extra_f64(key).is_some() || agg.extra_str(key).is_some(),
+                "aggregate record lacks extra {key}"
+            );
+        }
+        assert_eq!(agg.extra_str("mode"), Some("open"));
+        assert!((agg.extra_f64("shed_rate").unwrap() - 0.05).abs() < 1e-12);
+        let class = &records[1];
+        assert_eq!(class.extra_str("class"), Some("interactive"));
+        assert_eq!(class.dist, "uniform");
+        assert_eq!(class.n, 512);
+        // Round-trip through the strict trajectory schema.
+        let mut t = super::super::record::Trajectory::new();
+        for r in report.to_records() {
+            t.push(r);
+        }
+        let json = t.to_json().render();
+        let doc = crate::util::json::Json::parse(&json).unwrap();
+        super::super::record::Trajectory::from_json(&doc)
+            .expect("loadgen records violate schema");
+    }
+
+    #[test]
+    fn empty_report_rates_do_not_divide_by_zero() {
+        let report = LoadgenReport {
+            mode: "closed",
+            qps_target: 0.0,
+            conns: 1,
+            wall: Duration::from_millis(1),
+            sent: 0,
+            ok: 0,
+            shed: 0,
+            slo_tracked: 0,
+            slo_missed: 0,
+            errors: 0,
+            rejected: 0,
+            qps_achieved: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            p999_ms: 0.0,
+            mean_ms: 0.0,
+            max_len: 16,
+            classes: vec![],
+        };
+        assert_eq!(report.shed_rate(), 0.0);
+        assert_eq!(report.slo_miss_rate(), 0.0);
+        assert!(report.render().contains("loadgen:"));
+    }
+}

@@ -28,6 +28,11 @@
 //! * [`diff`] — per-cell tolerance comparison of two trajectories at
 //!   equal env stamps, with a >2× slowdown gate. Drives
 //!   `bitonic-tpu report --diff <old> [--gate]`.
+//! * [`loadgen`] — the closed-/open-loop serving load generator:
+//!   drives a live `serve-tcp` endpoint with a seeded
+//!   [`crate::workload::TrafficMix`] and records client-side
+//!   p50/p99/p999, throughput, SLO-miss and shed rates as `loadgen`
+//!   trajectory records. Drives the `bitonic-tpu loadgen` subcommand.
 //!
 //! ```text
 //! benches/* ─┐
@@ -39,11 +44,13 @@
 pub mod diff;
 pub mod env;
 pub mod harness;
+pub mod loadgen;
 pub mod matrix;
 pub mod record;
 pub mod report;
 
 pub use diff::{diff_trajectories, TrajectoryDiff, DIFF_SLOWDOWN_GATE, DIFF_TOLERANCE};
+pub use loadgen::{run_loadgen, LoadMode, LoadgenConfig, LoadgenReport};
 pub use env::EnvStamp;
 pub use harness::{black_box, Bench, Measurement};
 pub use matrix::{MatrixConfig, MatrixDtype, Substrate};

@@ -24,6 +24,10 @@
 //! max-wait, or when a pending request's SLO budget is about to expire
 //! (`SortRequest::slo` + `BatcherConfig::slo_margin`).
 //!
+//! Off-process callers reach `submit` through the TCP front-end in
+//! [`net`] (length-prefixed binary frames over `std::net`, served by
+//! `bitonic-tpu serve-tcp`, measured by `bitonic-tpu loadgen`).
+//!
 //! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
 //! every admitted request is answered exactly once; the answer is the
 //! sorted multiset of its input; a batch never mixes size classes; queue
@@ -32,12 +36,17 @@
 
 pub mod backpressure;
 pub mod batcher;
+pub mod net;
 pub mod request;
 pub mod router;
 pub mod service;
 
 pub use backpressure::AdmissionGate;
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use net::{NetClient, NetServer, NetServerConfig, SortReply};
 pub use request::{SortRequest, SortResponse};
 pub use router::{Router, SizeClass};
-pub use service::{BatchSorter, CpuFallbackSorter, RegistrySorter, Service, ServiceConfig, ServiceStats};
+pub use service::{
+    BatchSorter, ClassStats, CpuFallbackSorter, RegistrySorter, Service, ServiceConfig,
+    ServiceStats,
+};

@@ -1,0 +1,151 @@
+//! Blocking client for the TCP sort service — used by `bitonic-tpu
+//! loadgen`, the integration tests, and anyone scripting the wire.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::wire::{read_event_blocking, ErrorCode, Frame, ReadEvent, DEFAULT_MAX_KEYS};
+
+/// The outcome of one [`NetClient::sort`] round trip.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SortReply {
+    /// The request was served.
+    Sorted {
+        /// The sorted keys.
+        keys: Vec<u32>,
+        /// True when the CPU fallback served it.
+        cpu_path: bool,
+        /// Server-measured latency in µs.
+        latency_us: u32,
+        /// Device-batch occupancy the request rode in.
+        occupancy: u32,
+    },
+    /// Rejected by admission control — retry later.
+    Shed {
+        /// Server-provided detail.
+        message: String,
+    },
+    /// Rejected for any non-shed reason (malformed, oversize, internal).
+    Rejected {
+        /// Machine-readable reason.
+        code: ErrorCode,
+        /// Server-provided detail.
+        message: String,
+    },
+}
+
+/// A blocking connection to a [`NetServer`].
+///
+/// [`NetServer`]: super::server::NetServer
+pub struct NetClient {
+    stream: TcpStream,
+    max_keys: usize,
+}
+
+impl NetClient {
+    /// Connect with 30s I/O timeouts and the default key cap.
+    pub fn connect(addr: impl ToSocketAddrs) -> crate::Result<Self> {
+        Self::connect_with(addr, Duration::from_secs(30), DEFAULT_MAX_KEYS)
+    }
+
+    /// Connect with explicit I/O timeouts and decode cap.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+        max_keys: usize,
+    ) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr).map_err(|e| crate::err!("connecting: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(timeout))
+            .map_err(|e| crate::err!("set_read_timeout: {e}"))?;
+        stream
+            .set_write_timeout(Some(timeout))
+            .map_err(|e| crate::err!("set_write_timeout: {e}"))?;
+        Ok(Self { stream, max_keys })
+    }
+
+    /// Write one frame.
+    pub fn send(&mut self, frame: &Frame) -> crate::Result<()> {
+        self.stream
+            .write_all(&frame.encode())
+            .map_err(|e| crate::err!("sending {:?} frame: {e}", frame.op()))
+    }
+
+    /// Read one frame (errors on timeout, close, or protocol defect).
+    pub fn recv(&mut self) -> crate::Result<Frame> {
+        match read_event_blocking(&mut self.stream, self.max_keys)
+            .map_err(|e| crate::err!("receiving: {e}"))?
+        {
+            ReadEvent::Frame(f) => Ok(f),
+            ReadEvent::Eof | ReadEvent::Disconnected => {
+                crate::bail!("server closed the connection")
+            }
+            ReadEvent::Protocol(e) => crate::bail!("protocol error from server: {e}"),
+        }
+    }
+
+    /// One request/response round trip. Shed and rejection frames are
+    /// `Ok` values (the transport worked); `Err` means the transport or
+    /// protocol itself failed.
+    pub fn sort(
+        &mut self,
+        id: u64,
+        keys: Vec<u32>,
+        descending: bool,
+        slo: Option<Duration>,
+    ) -> crate::Result<SortReply> {
+        let slo_us = slo
+            .map(|d| d.as_micros().clamp(1, u128::from(u32::MAX)) as u32)
+            .unwrap_or(0);
+        self.send(&Frame::Sort {
+            id,
+            descending,
+            slo_us,
+            keys,
+        })?;
+        match self.recv()? {
+            Frame::Sorted {
+                id: rid,
+                cpu_path,
+                latency_us,
+                occupancy,
+                keys,
+            } => {
+                crate::ensure!(rid == id, "response id {rid} != request id {id}");
+                Ok(SortReply::Sorted {
+                    keys,
+                    cpu_path,
+                    latency_us,
+                    occupancy,
+                })
+            }
+            Frame::Error {
+                code: ErrorCode::Shed,
+                message,
+                ..
+            } => Ok(SortReply::Shed { message }),
+            Frame::Error { code, message, .. } => Ok(SortReply::Rejected { code, message }),
+            other => crate::bail!("unexpected reply op {}", other.op()),
+        }
+    }
+
+    /// Liveness probe: Ping, expect the matching Pong.
+    pub fn ping(&mut self, token: u64) -> crate::Result<()> {
+        self.send(&Frame::Ping { token })?;
+        match self.recv()? {
+            Frame::Pong { token: t } if t == token => Ok(()),
+            other => crate::bail!("unexpected ping reply {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and exit; waits for the Pong ack.
+    pub fn shutdown_server(&mut self, token: u64) -> crate::Result<()> {
+        self.send(&Frame::Shutdown { token })?;
+        match self.recv()? {
+            Frame::Pong { token: t } if t == token => Ok(()),
+            other => crate::bail!("unexpected shutdown ack {other:?}"),
+        }
+    }
+}

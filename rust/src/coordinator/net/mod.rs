@@ -1,0 +1,28 @@
+//! The wire: a TCP front-end for the sort service (ROADMAP item 3).
+//!
+//! Zero-dependency `std::net` stack in three layers:
+//!
+//! * [`wire`] — the length-prefixed binary frame codec (magic +
+//!   version + op + payload, strict little-endian layout, mirrored
+//!   byte-for-byte by `python/compile/net.py`), plus the incremental
+//!   [`FrameReader`] that survives socket read-timeout ticks.
+//! * [`server`] — [`NetServer`]: accept loop + per-connection pumps
+//!   over an [`Arc<Service>`](super::Service), with per-connection
+//!   read/write timeouts, explicit error frames for malformed input
+//!   and shed rejections, and graceful drain on shutdown.
+//! * [`client`] — [`NetClient`]: the blocking client the loadgen
+//!   harness and the integration tests drive.
+//!
+//! `bitonic-tpu serve-tcp` owns a server over the discovered registry;
+//! `bitonic-tpu loadgen` measures one from the outside.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, SortReply};
+pub use server::{NetServer, NetServerConfig, NetStats};
+pub use wire::{
+    frame_cap, is_timeout, read_event_blocking, ErrorCode, Frame, FrameReader, ReadEvent,
+    WireError, DEFAULT_MAX_KEYS, MAGIC, MAX_ERROR_MSG, VERSION,
+};

@@ -1,0 +1,397 @@
+//! The TCP front-end: accept loop + per-connection frame pumps over a
+//! shared [`Service`].
+//!
+//! Threading model: one accept thread (non-blocking listener polled
+//! every few ms so shutdown is prompt) plus one thread per live
+//! connection. Connection sockets are blocking with a short read
+//! timeout ([`TICK`]) so each pump loop regains control often enough to
+//! observe the shutdown flag and its idle budget; partial frames
+//! survive those ticks via [`FrameReader`].
+//!
+//! Lifecycle guarantees:
+//!
+//! * **Graceful drain** — a [`Frame::Shutdown`] (or
+//!   [`NetServer::request_shutdown`]) flips one flag; connections
+//!   finish the frame (and in-flight sort) they are on, then close at
+//!   the next frame boundary, and [`NetServer::shutdown`] joins the
+//!   accept thread which joins every connection.
+//! * **No wedged workers** — a client that vanishes mid-request is a
+//!   [`ReadEvent::Disconnected`]; one that stops reading its responses
+//!   trips the socket write timeout. Both just close the connection:
+//!   the admission permit was already released when the service
+//!   replied, so capacity cannot leak.
+//! * **Malformed input answers, never panics** — every decoder defect
+//!   maps to an error frame (see [`WireError::code`]) written best
+//!   effort before the close.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::super::request::{ExecPath, SortRequest};
+use super::super::service::Service;
+use super::wire::{is_timeout, ErrorCode, Frame, FrameReader, ReadEvent, DEFAULT_MAX_KEYS};
+use crate::util::metrics::Counter;
+
+/// Socket read timeout per poll tick: how often a connection pump
+/// re-checks the shutdown flag and its idle budget.
+const TICK: Duration = Duration::from_millis(100);
+
+/// Accept-loop poll interval (the listener is non-blocking).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// TCP front-end configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// Largest key count accepted per request frame.
+    pub max_keys: usize,
+    /// Idle budget: a connection that sends nothing for this long is
+    /// closed (counted in [`NetStats::read_timeouts`]).
+    pub read_timeout: Duration,
+    /// Socket write timeout: a stalled reader trips this and the
+    /// connection closes (counted in [`NetStats::write_timeouts`]).
+    pub write_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self {
+            max_keys: DEFAULT_MAX_KEYS,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Wire-level counters (the service keeps its own [`ServiceStats`];
+/// these count what happened on the sockets).
+///
+/// [`ServiceStats`]: super::super::service::ServiceStats
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub connections: Counter,
+    /// Well-formed frames read.
+    pub frames_in: Counter,
+    /// Frames written (responses, pongs, error frames).
+    pub frames_out: Counter,
+    /// Sort requests answered with [`ErrorCode::Shed`].
+    pub sheds: Counter,
+    /// Undecodable streams answered with an error frame and closed.
+    pub protocol_errors: Counter,
+    /// Dirty closes: EOF mid-frame, or a write failing outright.
+    pub disconnects: Counter,
+    /// Connections closed for exceeding the idle read budget.
+    pub read_timeouts: Counter,
+    /// Writes abandoned because the client stopped reading.
+    pub write_timeouts: Counter,
+}
+
+impl NetStats {
+    /// One-line render for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "conns {} in {} out {} sheds {} proto-errs {} disconnects {} read-to {} write-to {}",
+            self.connections.get(),
+            self.frames_in.get(),
+            self.frames_out.get(),
+            self.sheds.get(),
+            self.protocol_errors.get(),
+            self.disconnects.get(),
+            self.read_timeouts.get(),
+            self.write_timeouts.get(),
+        )
+    }
+}
+
+/// State shared by the accept loop and every connection pump.
+struct Shared {
+    service: Arc<Service>,
+    config: NetServerConfig,
+    stats: NetStats,
+    shutdown: AtomicBool,
+}
+
+/// A running TCP front-end. Dropping it shuts it down (drain + join).
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back via
+    /// [`NetServer::local_addr`]) and start serving `service`.
+    pub fn start(
+        service: Arc<Service>,
+        addr: &str,
+        config: NetServerConfig,
+    ) -> crate::Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| crate::err!("binding {addr}: {e}"))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| crate::err!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::err!("set_nonblocking: {e}"))?;
+        let shared = Arc::new(Shared {
+            service,
+            config,
+            stats: NetStats::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("net-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| crate::err!("spawning accept thread: {e}"))?;
+        Ok(NetServer {
+            shared,
+            local_addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Wire-level counters.
+    pub fn stats(&self) -> &NetStats {
+        &self.shared.stats
+    }
+
+    /// True once a shutdown was requested (flag or Shutdown frame).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Ask the server to drain and stop (non-blocking).
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+    }
+
+    /// Block until a shutdown is requested (e.g. by a Shutdown frame).
+    pub fn wait_shutdown(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(TICK);
+        }
+    }
+
+    /// Drain and stop: request shutdown, then join the accept thread
+    /// (which joins every connection pump). Idempotent.
+    pub fn shutdown(&mut self) {
+        self.request_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats.connections.inc();
+                conns.retain(|h| !h.is_finished());
+                let sh = Arc::clone(&shared);
+                match std::thread::Builder::new()
+                    .name("net-conn".into())
+                    .spawn(move || handle_conn(sh, stream))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(e) => eprintln!("net: spawning connection thread failed: {e}"),
+                }
+            }
+            Err(e) if is_timeout(&e) => std::thread::sleep(ACCEPT_POLL),
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // Drain: every pump notices the flag at its next frame boundary.
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(sh: Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(TICK)).is_err()
+        || stream
+            .set_write_timeout(Some(sh.config.write_timeout))
+            .is_err()
+    {
+        return;
+    }
+    let mut reader = FrameReader::new();
+    let mut idle = Duration::ZERO;
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) && !reader.has_partial() {
+            return; // drain point: only ever between frames
+        }
+        let event = match reader.poll(&mut stream, sh.config.max_keys) {
+            Ok(Some(ev)) => {
+                idle = Duration::ZERO;
+                ev
+            }
+            Ok(None) => {
+                idle += TICK;
+                if idle >= sh.config.read_timeout {
+                    sh.stats.read_timeouts.inc();
+                    return;
+                }
+                continue;
+            }
+            Err(_) => {
+                sh.stats.disconnects.inc();
+                return;
+            }
+        };
+        match event {
+            ReadEvent::Eof => return,
+            ReadEvent::Disconnected => {
+                sh.stats.disconnects.inc();
+                return;
+            }
+            ReadEvent::Protocol(err) => {
+                sh.stats.protocol_errors.inc();
+                // The stream may be desynced past this point (notably
+                // after an oversize length prefix): answer and close.
+                let f = Frame::Error {
+                    code: err.code(),
+                    id: 0,
+                    message: err.to_string(),
+                };
+                let _ = write_frame(&sh, &mut stream, &f);
+                return;
+            }
+            ReadEvent::Frame(frame) => {
+                sh.stats.frames_in.inc();
+                if !handle_frame(&sh, &mut stream, frame) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Serve one decoded frame. Returns false when the connection should
+/// close (write failure or shutdown ack).
+fn handle_frame(sh: &Shared, stream: &mut TcpStream, frame: Frame) -> bool {
+    match frame {
+        Frame::Ping { token } => write_frame(sh, stream, &Frame::Pong { token }),
+        Frame::Shutdown { token } => {
+            // Ack first (the flag would close us before the write), then
+            // flip the flag every pump and the accept loop watch.
+            let _ = write_frame(sh, stream, &Frame::Pong { token });
+            sh.shutdown.store(true, Ordering::Release);
+            false
+        }
+        Frame::Sort {
+            id,
+            descending,
+            slo_us,
+            keys,
+        } => {
+            let request = SortRequest {
+                id,
+                keys,
+                descending,
+                slo: (slo_us > 0).then(|| Duration::from_micros(u64::from(slo_us))),
+            };
+            match sh.service.submit(request) {
+                Err(_rejected) => {
+                    sh.stats.sheds.inc();
+                    write_frame(
+                        sh,
+                        stream,
+                        &Frame::Error {
+                            code: ErrorCode::Shed,
+                            id,
+                            message: "admission gate full; retry later".into(),
+                        },
+                    )
+                }
+                Ok(rx) => match rx.recv() {
+                    Ok(resp) => write_frame(
+                        sh,
+                        stream,
+                        &Frame::Sorted {
+                            id: resp.id,
+                            cpu_path: resp.path == ExecPath::Cpu,
+                            latency_us: resp.latency.as_micros().min(u128::from(u32::MAX))
+                                as u32,
+                            occupancy: resp.batch_occupancy.min(u32::MAX as usize) as u32,
+                            keys: resp.keys,
+                        },
+                    ),
+                    Err(_) => write_frame(
+                        sh,
+                        stream,
+                        &Frame::Error {
+                            code: ErrorCode::Internal,
+                            id,
+                            message: "service dropped the response channel".into(),
+                        },
+                    ),
+                },
+            }
+        }
+        // Server-to-client ops arriving at the server: the frame decoded
+        // (stream still in sync), so answer and keep the connection.
+        Frame::Sorted { id, .. } | Frame::Error { id, .. } => {
+            sh.stats.protocol_errors.inc();
+            write_frame(
+                sh,
+                stream,
+                &Frame::Error {
+                    code: ErrorCode::Malformed,
+                    id,
+                    message: "unexpected server-to-client op".into(),
+                },
+            )
+        }
+        Frame::Pong { .. } => {
+            sh.stats.protocol_errors.inc();
+            write_frame(
+                sh,
+                stream,
+                &Frame::Error {
+                    code: ErrorCode::Malformed,
+                    id: 0,
+                    message: "unexpected server-to-client op".into(),
+                },
+            )
+        }
+    }
+}
+
+/// Write one frame; false means the connection must close. A timeout
+/// here is the stalled-reader case — the response is dropped but its
+/// admission permit was already released, so nothing leaks.
+fn write_frame(sh: &Shared, stream: &mut TcpStream, f: &Frame) -> bool {
+    match stream.write_all(&f.encode()) {
+        Ok(()) => {
+            sh.stats.frames_out.inc();
+            true
+        }
+        Err(e) if is_timeout(&e) => {
+            sh.stats.write_timeouts.inc();
+            false
+        }
+        Err(_) => {
+            sh.stats.disconnects.inc();
+            false
+        }
+    }
+}

@@ -1,0 +1,976 @@
+//! The length-prefixed binary wire format for the TCP sort service.
+//!
+//! Every frame is `len: u32 LE` followed by `len` body bytes. A body
+//! starts with a fixed six-byte header — magic `b"BTSP"`, a protocol
+//! version byte, and an op byte — then op-specific fields, all
+//! little-endian:
+//!
+//! ```text
+//! Sort     (op 1, client→server): dtype u8 | order u8 | id u64 |
+//!          slo_us u32 | n u32 | keys n×u32            (body 24 + 4n)
+//! Sorted   (op 2, server→client): path u8 | rsvd u8 | id u64 |
+//!          latency_us u32 | occupancy u32 | n u32 | keys (body 28 + 4n)
+//! Error    (op 3, server→client): code u8 | rsvd u8 | id u64 |
+//!          message UTF-8 (rest of body)               (body 16 + len)
+//! Ping     (op 4) / Pong (op 5) / Shutdown (op 6): token u64 (body 14)
+//! ```
+//!
+//! The codec is strict by design — reserved bytes must be zero, the key
+//! count must match the body length exactly, error messages must be
+//! UTF-8 — so the python mirror (`python/compile/net.py`) and this file
+//! pin the same bytes from both sides. Decoding never panics on
+//! arbitrary input: every malformed stream maps to a [`WireError`],
+//! which the server answers with an [`ErrorCode`] frame.
+//!
+//! An oversize length prefix is special: the stream cannot be resynced
+//! without reading (and allocating) the claimed bytes, so the reader
+//! surfaces [`WireError::Oversize`] and the connection must close after
+//! answering.
+
+use std::io::{ErrorKind, Read};
+
+/// Frame magic: every body starts with these four bytes.
+pub const MAGIC: [u8; 4] = *b"BTSP";
+
+/// Protocol version this build speaks (single version so far).
+pub const VERSION: u8 = 1;
+
+/// Default cap on keys per request frame (4 MiB of key payload).
+pub const DEFAULT_MAX_KEYS: usize = 1 << 20;
+
+/// Longest error message carried in an [`Frame::Error`] body.
+pub const MAX_ERROR_MSG: usize = 1024;
+
+const OP_SORT: u8 = 1;
+const OP_SORTED: u8 = 2;
+const OP_ERROR: u8 = 3;
+const OP_PING: u8 = 4;
+const OP_PONG: u8 = 5;
+const OP_SHUTDOWN: u8 = 6;
+
+/// Common header: magic (4) + version (1) + op (1).
+const HDR: usize = 6;
+/// Sort body length before the key payload.
+const SORT_FIXED: usize = 24;
+/// Sorted body length before the key payload.
+const SORTED_FIXED: usize = 28;
+/// Error body length before the message bytes.
+const ERROR_FIXED: usize = 16;
+/// Exact body length of Ping / Pong / Shutdown.
+const TOKEN_BODY: usize = 14;
+
+/// Largest body the reader accepts for a given key cap. The error body
+/// bound is folded in so a max-length error frame always fits.
+pub fn frame_cap(max_keys: usize) -> usize {
+    (SORTED_FIXED + 4 * max_keys).max(ERROR_FIXED + MAX_ERROR_MSG)
+}
+
+/// Error codes carried by [`Frame::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame failed to decode (bad magic, truncation, garbage…).
+    Malformed = 1,
+    /// Decodable but not something this build serves (version, op, dtype).
+    Unsupported = 2,
+    /// The request (or the claimed frame length) exceeds the key cap.
+    Oversize = 3,
+    /// Rejected by admission control — retry later.
+    Shed = 4,
+    /// The service failed internally after admission.
+    Internal = 5,
+}
+
+impl ErrorCode {
+    /// Decode a wire byte.
+    pub fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            1 => Some(Self::Malformed),
+            2 => Some(Self::Unsupported),
+            3 => Some(Self::Oversize),
+            4 => Some(Self::Shed),
+            5 => Some(Self::Internal),
+            _ => None,
+        }
+    }
+
+    /// Stable lower-case name (matches the python mirror).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Malformed => "malformed",
+            Self::Unsupported => "unsupported",
+            Self::Oversize => "oversize",
+            Self::Shed => "shed",
+            Self::Internal => "internal",
+        }
+    }
+}
+
+/// One decoded protocol frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// Client request: sort `keys` (ascending unless `descending`),
+    /// with an optional SLO in microseconds (`0` = none).
+    Sort {
+        /// Caller-chosen request id, echoed in the reply.
+        id: u64,
+        /// Sort order.
+        descending: bool,
+        /// SLO budget in µs; `0` means no SLO.
+        slo_us: u32,
+        /// The keys to sort.
+        keys: Vec<u32>,
+    },
+    /// Server reply carrying the sorted keys.
+    Sorted {
+        /// Echo of the request id.
+        id: u64,
+        /// True when the CPU fallback served the request.
+        cpu_path: bool,
+        /// Server-measured latency in µs (saturating).
+        latency_us: u32,
+        /// Rows occupied in the device batch that served this request.
+        occupancy: u32,
+        /// The sorted keys.
+        keys: Vec<u32>,
+    },
+    /// Server rejection or failure notice.
+    Error {
+        /// Machine-readable reason.
+        code: ErrorCode,
+        /// Echo of the request id (`0` when no request decoded).
+        id: u64,
+        /// Human-readable detail, at most [`MAX_ERROR_MSG`] bytes.
+        message: String,
+    },
+    /// Liveness probe; the server echoes the token in a [`Frame::Pong`].
+    Ping {
+        /// Opaque token echoed back.
+        token: u64,
+    },
+    /// Reply to [`Frame::Ping`] and ack of [`Frame::Shutdown`].
+    Pong {
+        /// Echo of the probe token.
+        token: u64,
+    },
+    /// Ask the server to drain and exit (acked with a Pong).
+    Shutdown {
+        /// Opaque token echoed in the ack.
+        token: u64,
+    },
+}
+
+/// Why a byte stream failed to decode. [`WireError::kind`] names are
+/// shared verbatim with the python mirror's test grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Body shorter than its op requires.
+    Truncated {
+        /// Bytes the op needed.
+        need: usize,
+        /// Bytes actually present.
+        got: usize,
+    },
+    /// Body longer than its op allows.
+    TrailingBytes {
+        /// Surplus byte count.
+        extra: usize,
+    },
+    /// First four body bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown op byte.
+    BadOp(u8),
+    /// Unknown dtype byte (only u32 = 0 exists today).
+    BadDtype(u8),
+    /// Order byte outside {0, 1}.
+    BadOrder(u8),
+    /// Path byte outside {0, 1}.
+    BadPath(u8),
+    /// Unknown error-code byte.
+    BadCode(u8),
+    /// A reserved byte was not zero.
+    BadReserved(u8),
+    /// Error message is not UTF-8.
+    BadUtf8,
+    /// Claimed size exceeds the configured cap.
+    Oversize {
+        /// Claimed size (body bytes or key count, per context).
+        got: usize,
+        /// The cap it exceeded.
+        cap: usize,
+    },
+}
+
+impl WireError {
+    /// Stable kebab-case kind tag (pinned by the python test grid).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Truncated { .. } => "truncated",
+            Self::TrailingBytes { .. } => "trailing",
+            Self::BadMagic(_) => "bad-magic",
+            Self::BadVersion(_) => "bad-version",
+            Self::BadOp(_) => "bad-op",
+            Self::BadDtype(_) => "bad-dtype",
+            Self::BadOrder(_) => "bad-order",
+            Self::BadPath(_) => "bad-path",
+            Self::BadCode(_) => "bad-code",
+            Self::BadReserved(_) => "bad-reserved",
+            Self::BadUtf8 => "bad-utf8",
+            Self::Oversize { .. } => "oversize",
+        }
+    }
+
+    /// The error-frame code a server answers this defect with.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            Self::Oversize { .. } => ErrorCode::Oversize,
+            Self::BadVersion(_) | Self::BadOp(_) | Self::BadDtype(_) => ErrorCode::Unsupported,
+            _ => ErrorCode::Malformed,
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated { need, got } => write!(f, "truncated frame: need {need}, got {got}"),
+            Self::TrailingBytes { extra } => write!(f, "{extra} trailing byte(s) after frame"),
+            Self::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            Self::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            Self::BadOp(o) => write!(f, "unknown op {o}"),
+            Self::BadDtype(d) => write!(f, "unsupported dtype {d}"),
+            Self::BadOrder(o) => write!(f, "bad order byte {o}"),
+            Self::BadPath(p) => write!(f, "bad path byte {p}"),
+            Self::BadCode(c) => write!(f, "unknown error code {c}"),
+            Self::BadReserved(b) => write!(f, "reserved byte not zero ({b})"),
+            Self::BadUtf8 => write!(f, "error message is not UTF-8"),
+            Self::Oversize { got, cap } => write!(f, "oversize: {got} exceeds cap {cap}"),
+        }
+    }
+}
+
+fn header(op: u8, extra: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HDR + extra);
+    b.extend_from_slice(&MAGIC);
+    b.push(VERSION);
+    b.push(op);
+    b
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+impl Frame {
+    /// The op byte this frame encodes to.
+    pub fn op(&self) -> u8 {
+        match self {
+            Self::Sort { .. } => OP_SORT,
+            Self::Sorted { .. } => OP_SORTED,
+            Self::Error { .. } => OP_ERROR,
+            Self::Ping { .. } => OP_PING,
+            Self::Pong { .. } => OP_PONG,
+            Self::Shutdown { .. } => OP_SHUTDOWN,
+        }
+    }
+
+    /// Encode the body (no length prefix).
+    pub fn encode_body(&self) -> Vec<u8> {
+        match self {
+            Self::Sort {
+                id,
+                descending,
+                slo_us,
+                keys,
+            } => {
+                let mut b = header(OP_SORT, SORT_FIXED - HDR + 4 * keys.len());
+                b.push(0); // dtype: u32
+                b.push(u8::from(*descending));
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&slo_us.to_le_bytes());
+                b.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+                for k in keys {
+                    b.extend_from_slice(&k.to_le_bytes());
+                }
+                b
+            }
+            Self::Sorted {
+                id,
+                cpu_path,
+                latency_us,
+                occupancy,
+                keys,
+            } => {
+                let mut b = header(OP_SORTED, SORTED_FIXED - HDR + 4 * keys.len());
+                b.push(u8::from(*cpu_path));
+                b.push(0); // reserved
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&latency_us.to_le_bytes());
+                b.extend_from_slice(&occupancy.to_le_bytes());
+                b.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+                for k in keys {
+                    b.extend_from_slice(&k.to_le_bytes());
+                }
+                b
+            }
+            Self::Error { code, id, message } => {
+                // Clamp to the cap on a char boundary: the clamped frame
+                // must still pass the strict UTF-8 decode.
+                let mut cut = message.len().min(MAX_ERROR_MSG);
+                while cut > 0 && !message.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                let msg = &message.as_bytes()[..cut];
+                let mut b = header(OP_ERROR, ERROR_FIXED - HDR + msg.len());
+                b.push(*code as u8);
+                b.push(0); // reserved
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(msg);
+                b
+            }
+            Self::Ping { token } | Self::Pong { token } | Self::Shutdown { token } => {
+                let mut b = header(self.op(), TOKEN_BODY - HDR);
+                b.extend_from_slice(&token.to_le_bytes());
+                b
+            }
+        }
+    }
+
+    /// Encode the full frame: `len: u32 LE` + body.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one body (the bytes after the length prefix). Strict: the
+    /// body must be exactly as long as its op demands.
+    pub fn decode_body(body: &[u8], max_keys: usize) -> Result<Frame, WireError> {
+        if body.len() < HDR {
+            return Err(WireError::Truncated {
+                need: HDR,
+                got: body.len(),
+            });
+        }
+        if body[..4] != MAGIC {
+            return Err(WireError::BadMagic(body[..4].try_into().unwrap()));
+        }
+        if body[4] != VERSION {
+            return Err(WireError::BadVersion(body[4]));
+        }
+        let op = body[5];
+        match op {
+            OP_SORT => {
+                if body.len() < SORT_FIXED {
+                    return Err(WireError::Truncated {
+                        need: SORT_FIXED,
+                        got: body.len(),
+                    });
+                }
+                if body[6] != 0 {
+                    return Err(WireError::BadDtype(body[6]));
+                }
+                if body[7] > 1 {
+                    return Err(WireError::BadOrder(body[7]));
+                }
+                let n = u32_at(body, 20) as usize;
+                if n > max_keys {
+                    return Err(WireError::Oversize {
+                        got: n,
+                        cap: max_keys,
+                    });
+                }
+                let want = SORT_FIXED + 4 * n;
+                check_len(body.len(), want)?;
+                Ok(Frame::Sort {
+                    id: u64_at(body, 8),
+                    descending: body[7] == 1,
+                    slo_us: u32_at(body, 16),
+                    keys: decode_keys(&body[SORT_FIXED..]),
+                })
+            }
+            OP_SORTED => {
+                if body.len() < SORTED_FIXED {
+                    return Err(WireError::Truncated {
+                        need: SORTED_FIXED,
+                        got: body.len(),
+                    });
+                }
+                if body[6] > 1 {
+                    return Err(WireError::BadPath(body[6]));
+                }
+                if body[7] != 0 {
+                    return Err(WireError::BadReserved(body[7]));
+                }
+                let n = u32_at(body, 24) as usize;
+                if n > max_keys {
+                    return Err(WireError::Oversize {
+                        got: n,
+                        cap: max_keys,
+                    });
+                }
+                let want = SORTED_FIXED + 4 * n;
+                check_len(body.len(), want)?;
+                Ok(Frame::Sorted {
+                    id: u64_at(body, 8),
+                    cpu_path: body[6] == 1,
+                    latency_us: u32_at(body, 16),
+                    occupancy: u32_at(body, 20),
+                    keys: decode_keys(&body[SORTED_FIXED..]),
+                })
+            }
+            OP_ERROR => {
+                if body.len() < ERROR_FIXED {
+                    return Err(WireError::Truncated {
+                        need: ERROR_FIXED,
+                        got: body.len(),
+                    });
+                }
+                let code = ErrorCode::from_u8(body[6]).ok_or(WireError::BadCode(body[6]))?;
+                if body[7] != 0 {
+                    return Err(WireError::BadReserved(body[7]));
+                }
+                let msg = &body[ERROR_FIXED..];
+                if msg.len() > MAX_ERROR_MSG {
+                    return Err(WireError::Oversize {
+                        got: msg.len(),
+                        cap: MAX_ERROR_MSG,
+                    });
+                }
+                Ok(Frame::Error {
+                    code,
+                    id: u64_at(body, 8),
+                    message: std::str::from_utf8(msg)
+                        .map_err(|_| WireError::BadUtf8)?
+                        .to_string(),
+                })
+            }
+            OP_PING | OP_PONG | OP_SHUTDOWN => {
+                check_len(body.len(), TOKEN_BODY)?;
+                let token = u64_at(body, 6);
+                Ok(match op {
+                    OP_PING => Frame::Ping { token },
+                    OP_PONG => Frame::Pong { token },
+                    _ => Frame::Shutdown { token },
+                })
+            }
+            other => Err(WireError::BadOp(other)),
+        }
+    }
+}
+
+fn check_len(got: usize, want: usize) -> Result<(), WireError> {
+    if got < want {
+        Err(WireError::Truncated { need: want, got })
+    } else if got > want {
+        Err(WireError::TrailingBytes { extra: got - want })
+    } else {
+        Ok(())
+    }
+}
+
+fn decode_keys(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// True for the error kinds a socket read timeout produces.
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// What one successful [`FrameReader::poll`] produced.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReadEvent {
+    /// A complete, well-formed frame.
+    Frame(Frame),
+    /// Clean close: EOF on a frame boundary.
+    Eof,
+    /// Dirty close: EOF in the middle of a frame.
+    Disconnected,
+    /// The stream produced undecodable bytes. The connection should be
+    /// answered (best effort) and closed — the stream may be desynced.
+    Protocol(WireError),
+}
+
+/// Incremental frame reader that survives socket read timeouts.
+///
+/// `std::io::Read::read_exact` loses its position when a timeout fires
+/// mid-frame, so the server reads through this stateful accumulator
+/// instead: [`FrameReader::poll`] returns `Ok(None)` on a timeout tick
+/// and keeps the partial frame buffered for the next call.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    head: [u8; 4],
+    head_got: usize,
+    body: Vec<u8>,
+    body_need: usize,
+}
+
+impl FrameReader {
+    /// Fresh reader at a frame boundary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when a frame is partially buffered (an EOF now would be a
+    /// dirty disconnect, and a drain point has not been reached).
+    pub fn has_partial(&self) -> bool {
+        self.head_got > 0 || self.body_need > 0
+    }
+
+    fn reset(&mut self) {
+        self.head_got = 0;
+        self.body.clear();
+        self.body_need = 0;
+    }
+
+    /// Pump the stream: returns `Ok(None)` on a read-timeout tick (call
+    /// again), `Ok(Some(event))` when a frame / close / protocol defect
+    /// surfaces, and `Err` for genuine I/O failures.
+    pub fn poll(
+        &mut self,
+        r: &mut impl Read,
+        max_keys: usize,
+    ) -> std::io::Result<Option<ReadEvent>> {
+        loop {
+            if self.body_need == 0 {
+                // Length prefix.
+                match r.read(&mut self.head[self.head_got..]) {
+                    Ok(0) => {
+                        let ev = if self.has_partial() {
+                            ReadEvent::Disconnected
+                        } else {
+                            ReadEvent::Eof
+                        };
+                        self.reset();
+                        return Ok(Some(ev));
+                    }
+                    Ok(k) => {
+                        self.head_got += k;
+                        if self.head_got < 4 {
+                            continue;
+                        }
+                        let len = u32::from_le_bytes(self.head) as usize;
+                        let cap = frame_cap(max_keys);
+                        if len > cap {
+                            self.reset();
+                            return Ok(Some(ReadEvent::Protocol(WireError::Oversize {
+                                got: len,
+                                cap,
+                            })));
+                        }
+                        if len < HDR {
+                            self.reset();
+                            return Ok(Some(ReadEvent::Protocol(WireError::Truncated {
+                                need: HDR,
+                                got: len,
+                            })));
+                        }
+                        self.body_need = len;
+                        self.body.clear();
+                        self.body.reserve(len);
+                    }
+                    Err(e) if is_timeout(&e) => return Ok(None),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            } else {
+                let mut chunk = [0u8; 8192];
+                let want = (self.body_need - self.body.len()).min(chunk.len());
+                match r.read(&mut chunk[..want]) {
+                    Ok(0) => {
+                        self.reset();
+                        return Ok(Some(ReadEvent::Disconnected));
+                    }
+                    Ok(k) => {
+                        self.body.extend_from_slice(&chunk[..k]);
+                        if self.body.len() == self.body_need {
+                            let ev = match Frame::decode_body(&self.body, max_keys) {
+                                Ok(f) => ReadEvent::Frame(f),
+                                Err(e) => ReadEvent::Protocol(e),
+                            };
+                            self.reset();
+                            return Ok(Some(ev));
+                        }
+                    }
+                    Err(e) if is_timeout(&e) => return Ok(None),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+}
+
+/// Blocking read of one event; a socket-timeout tick maps to a
+/// `TimedOut` error (clients set one long timeout, not a poll loop).
+pub fn read_event_blocking(r: &mut impl Read, max_keys: usize) -> std::io::Result<ReadEvent> {
+    match FrameReader::new().poll(r, max_keys)? {
+        Some(ev) => Ok(ev),
+        None => Err(std::io::Error::new(
+            ErrorKind::TimedOut,
+            "timed out waiting for a frame",
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let enc = f.encode();
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, enc.len() - 4, "length prefix wrong for {f:?}");
+        let dec = Frame::decode_body(&enc[4..], DEFAULT_MAX_KEYS).unwrap();
+        assert_eq!(dec, f);
+    }
+
+    #[test]
+    fn round_trips_every_frame_type() {
+        roundtrip(Frame::Sort {
+            id: 7,
+            descending: false,
+            slo_us: 0,
+            keys: vec![1, 2],
+        });
+        roundtrip(Frame::Sort {
+            id: u64::MAX,
+            descending: true,
+            slo_us: 123_456,
+            keys: vec![],
+        });
+        roundtrip(Frame::Sorted {
+            id: 9,
+            cpu_path: true,
+            latency_us: 42,
+            occupancy: 8,
+            keys: vec![0, u32::MAX],
+        });
+        roundtrip(Frame::Error {
+            code: ErrorCode::Shed,
+            id: 3,
+            message: "shed".into(),
+        });
+        roundtrip(Frame::Ping { token: 1 });
+        roundtrip(Frame::Pong { token: 2 });
+        roundtrip(Frame::Shutdown { token: 3 });
+    }
+
+    #[test]
+    fn golden_bytes_ping() {
+        // Pinned in python/tests/test_net.py too — do not change.
+        let enc = Frame::Ping {
+            token: 0x0102_0304_0506_0708,
+        }
+        .encode();
+        assert_eq!(
+            enc,
+            [
+                0x0e, 0x00, 0x00, 0x00, // len = 14
+                0x42, 0x54, 0x53, 0x50, // "BTSP"
+                0x01, 0x04, // version, op
+                0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // token LE
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_bytes_sort() {
+        // Pinned in python/tests/test_net.py too — do not change.
+        let enc = Frame::Sort {
+            id: 7,
+            descending: false,
+            slo_us: 0,
+            keys: vec![1, 2],
+        }
+        .encode();
+        let want: Vec<u8> = [
+            &[0x20, 0x00, 0x00, 0x00][..],             // len = 32
+            b"BTSP",                                   // magic
+            &[0x01, 0x01],                             // version, op
+            &[0x00, 0x00],                             // dtype, order
+            &7u64.to_le_bytes(),                       // id
+            &[0x00, 0x00, 0x00, 0x00],                 // slo_us
+            &[0x02, 0x00, 0x00, 0x00],                 // n
+            &[0x01, 0x00, 0x00, 0x00, 0x02, 0, 0, 0],  // keys
+        ]
+        .concat();
+        assert_eq!(enc, want);
+    }
+
+    #[test]
+    fn golden_bytes_error() {
+        // Pinned in python/tests/test_net.py too — do not change.
+        let enc = Frame::Error {
+            code: ErrorCode::Shed,
+            id: 9,
+            message: "shed".into(),
+        }
+        .encode();
+        let want: Vec<u8> = [
+            &[0x14, 0x00, 0x00, 0x00][..], // len = 20
+            b"BTSP",
+            &[0x01, 0x03],       // version, op
+            &[0x04, 0x00],       // code = Shed, reserved
+            &9u64.to_le_bytes(), // id
+            b"shed",
+        ]
+        .concat();
+        assert_eq!(enc, want);
+    }
+
+    /// Decode of a mutated body must yield exactly the expected kind.
+    fn expect_kind(body: &[u8], kind: &str) {
+        match Frame::decode_body(body, DEFAULT_MAX_KEYS) {
+            Err(e) => assert_eq!(e.kind(), kind, "body {body:02x?} gave {e:?}"),
+            Ok(f) => panic!("body {body:02x?} decoded to {f:?}, wanted {kind}"),
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_map_to_precise_kinds() {
+        let sort = Frame::Sort {
+            id: 1,
+            descending: false,
+            slo_us: 0,
+            keys: vec![5],
+        }
+        .encode_body();
+
+        expect_kind(&[], "truncated");
+        expect_kind(b"XTSP\x01\x01", "bad-magic");
+        let mut b = sort.clone();
+        b[4] = 9;
+        expect_kind(&b, "bad-version");
+        let mut b = sort.clone();
+        b[5] = 0x77;
+        expect_kind(&b, "bad-op");
+        let mut b = sort.clone();
+        b[6] = 1;
+        expect_kind(&b, "bad-dtype");
+        let mut b = sort.clone();
+        b[7] = 2;
+        expect_kind(&b, "bad-order");
+        // n says 2 but only 1 key present → truncated.
+        let mut b = sort.clone();
+        b[20] = 2;
+        expect_kind(&b, "truncated");
+        // n says 0 with 1 key present → trailing.
+        let mut b = sort.clone();
+        b[20] = 0;
+        expect_kind(&b, "trailing");
+        // n beyond the cap → oversize.
+        let mut b = sort.clone();
+        b[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        expect_kind(&b, "oversize");
+
+        let sorted = Frame::Sorted {
+            id: 1,
+            cpu_path: false,
+            latency_us: 1,
+            occupancy: 1,
+            keys: vec![5],
+        }
+        .encode_body();
+        let mut b = sorted.clone();
+        b[6] = 3;
+        expect_kind(&b, "bad-path");
+        let mut b = sorted;
+        b[7] = 1;
+        expect_kind(&b, "bad-reserved");
+
+        let err = Frame::Error {
+            code: ErrorCode::Internal,
+            id: 1,
+            message: "x".into(),
+        }
+        .encode_body();
+        let mut b = err.clone();
+        b[6] = 0;
+        expect_kind(&b, "bad-code");
+        let mut b = err;
+        b[16] = 0xff; // lone continuation byte
+        expect_kind(&b, "bad-utf8");
+
+        let ping = Frame::Ping { token: 1 }.encode_body();
+        let mut b = ping;
+        b.push(0);
+        expect_kind(&b, "trailing");
+    }
+
+    #[test]
+    fn every_truncation_of_a_valid_body_errors_not_panics() {
+        for f in [
+            Frame::Sort {
+                id: 2,
+                descending: true,
+                slo_us: 9,
+                keys: vec![3, 1, 2],
+            },
+            Frame::Sorted {
+                id: 2,
+                cpu_path: false,
+                latency_us: 5,
+                occupancy: 2,
+                keys: vec![1, 2, 3],
+            },
+            Frame::Shutdown { token: 77 },
+        ] {
+            let body = f.encode_body();
+            for cut in 0..body.len() {
+                assert!(
+                    Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS).is_err(),
+                    "{f:?} truncated to {cut} bytes decoded"
+                );
+            }
+        }
+        // Error is the one variable-tail op with no length field of its
+        // own (the outer prefix delimits the message), so only cuts into
+        // the fixed part are malformed — a shorter tail is just a
+        // shorter message.
+        let body = Frame::Error {
+            code: ErrorCode::Malformed,
+            id: 0,
+            message: "bad".into(),
+        }
+        .encode_body();
+        for cut in 0..ERROR_FIXED {
+            assert!(
+                Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS).is_err(),
+                "Error truncated to {cut} bytes decoded"
+            );
+        }
+        for cut in ERROR_FIXED..=body.len() {
+            assert!(
+                matches!(
+                    Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS),
+                    Ok(Frame::Error { .. })
+                ),
+                "Error with a {cut}-byte body failed"
+            );
+        }
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut rng = crate::workload::SplitMix64::new(0xB170);
+        for _ in 0..1000 {
+            let len = rng.next_below(64) as usize;
+            let mut body = vec![0u8; len];
+            for b in &mut body {
+                *b = rng.next_u32() as u8;
+            }
+            let _ = Frame::decode_body(&body, DEFAULT_MAX_KEYS);
+            // Sometimes keep a valid prefix so deeper branches run too.
+            if len >= 6 {
+                body[..4].copy_from_slice(&MAGIC);
+                body[4] = VERSION;
+                body[5] = 1 + (body[5] % 6);
+                let _ = Frame::decode_body(&body, DEFAULT_MAX_KEYS);
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_one_byte_dribble() {
+        // A reader fed one byte at a time (WouldBlock between bytes) must
+        // still assemble the frame — this is the mid-frame-timeout path.
+        struct Dribble {
+            bytes: Vec<u8>,
+            at: usize,
+            parity: bool,
+        }
+        impl Read for Dribble {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.parity = !self.parity;
+                if self.parity {
+                    return Err(std::io::Error::new(ErrorKind::WouldBlock, "tick"));
+                }
+                if self.at == self.bytes.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.bytes[self.at];
+                self.at += 1;
+                Ok(1)
+            }
+        }
+        let f = Frame::Sort {
+            id: 4,
+            descending: false,
+            slo_us: 7,
+            keys: vec![9, 8, 7],
+        };
+        let mut r = Dribble {
+            bytes: f.encode(),
+            at: 0,
+            parity: false,
+        };
+        let mut reader = FrameReader::new();
+        let mut ticks = 0;
+        loop {
+            match reader.poll(&mut r, DEFAULT_MAX_KEYS).unwrap() {
+                Some(ReadEvent::Frame(got)) => {
+                    assert_eq!(got, f);
+                    break;
+                }
+                Some(other) => panic!("unexpected event {other:?}"),
+                None => {
+                    ticks += 1;
+                    assert!(ticks < 10_000, "reader never completed");
+                }
+            }
+        }
+        assert!(!reader.has_partial());
+        // And the EOF after it is clean (frame boundary).
+        assert_eq!(
+            loop {
+                if let Some(ev) = reader.poll(&mut r, DEFAULT_MAX_KEYS).unwrap() {
+                    break ev;
+                }
+            },
+            ReadEvent::Eof
+        );
+    }
+
+    #[test]
+    fn frame_reader_reports_oversize_prefix_and_mid_frame_eof() {
+        let mut cursor = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let mut reader = FrameReader::new();
+        match reader.poll(&mut cursor, 16).unwrap() {
+            Some(ReadEvent::Protocol(WireError::Oversize { .. })) => {}
+            other => panic!("wanted oversize, got {other:?}"),
+        }
+
+        // Length prefix promising 20 bytes, stream ends after 3.
+        let mut bytes = 20u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(b"BTS");
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut reader = FrameReader::new();
+        assert_eq!(
+            reader.poll(&mut cursor, 16).unwrap(),
+            Some(ReadEvent::Disconnected)
+        );
+    }
+
+    #[test]
+    fn error_message_is_clamped_on_encode() {
+        let f = Frame::Error {
+            code: ErrorCode::Internal,
+            id: 1,
+            message: "x".repeat(MAX_ERROR_MSG * 2),
+        };
+        let body = f.encode_body();
+        assert_eq!(body.len(), ERROR_FIXED + MAX_ERROR_MSG);
+        assert!(Frame::decode_body(&body, DEFAULT_MAX_KEYS).is_ok());
+    }
+}

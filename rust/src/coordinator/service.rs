@@ -124,6 +124,29 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Per-size-class serving statistics (indexed like `Router::classes`).
+/// The wire front-end and the starvation regression tests read these:
+/// the aggregate numbers cannot show one class starving another.
+#[derive(Debug, Default)]
+pub struct ClassStats {
+    /// Keys per row of this class.
+    pub n: usize,
+    /// Rows per device batch of this class.
+    pub batch: usize,
+    /// Requests routed here and admitted.
+    pub admitted: Counter,
+    /// Requests routed here but shed by the admission gate.
+    pub shed: Counter,
+    /// Device batches dispatched for this class.
+    pub batches: Counter,
+    /// Rows occupied across those batches.
+    pub rows: Counter,
+    /// Answered requests whose latency exceeded their SLO.
+    pub slo_misses: Counter,
+    /// End-to-end latency distribution for this class.
+    pub latency: Histogram,
+}
+
 /// Aggregate service statistics.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
@@ -140,8 +163,45 @@ pub struct ServiceStats {
     /// Batches executed by a worker whose home class differs (work
     /// stealing across size classes).
     pub stolen_batches: Counter,
+    /// Answered requests whose latency exceeded their SLO.
+    pub slo_misses: Counter,
     /// End-to-end latency distribution.
     pub latency: Histogram,
+    /// Per-size-class breakdown (empty when built via `Default`).
+    pub classes: Vec<ClassStats>,
+}
+
+impl ServiceStats {
+    /// Stats with one [`ClassStats`] slot per size class.
+    fn for_classes(classes: &[SizeClass]) -> Self {
+        Self {
+            classes: classes
+                .iter()
+                .map(|c| ClassStats {
+                    n: c.n,
+                    batch: c.batch,
+                    ..ClassStats::default()
+                })
+                .collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Record one answered request: aggregate + per-class latency, and
+    /// the SLO-miss counters when a budget was attached and blown.
+    fn note_latency(&self, class: Option<usize>, slo: Option<Duration>, latency: Duration) {
+        self.latency.record(latency);
+        let missed = slo.is_some_and(|s| latency > s);
+        if missed {
+            self.slo_misses.inc();
+        }
+        if let Some(cs) = class.and_then(|c| self.classes.get(c)) {
+            cs.latency.record(latency);
+            if missed {
+                cs.slo_misses.inc();
+            }
+        }
+    }
 }
 
 /// The multi-queue scheduler: one batcher per size class behind a single
@@ -199,6 +259,7 @@ impl Service {
                 })
             })
             .collect();
+        let stats = Arc::new(ServiceStats::for_classes(router.classes()));
         let service = Arc::new(Self {
             router,
             sched: Scheduler {
@@ -208,7 +269,7 @@ impl Service {
             sorters: shaped.into_iter().map(|(_, s)| s).collect(),
             fallback: CpuFallbackSorter,
             gate: AdmissionGate::new(config.max_in_flight),
-            stats: Arc::new(ServiceStats::default()),
+            stats,
             shutdown: Arc::new(AtomicBool::new(false)),
             workers: Mutex::new(Vec::new()),
         });
@@ -250,14 +311,23 @@ impl Service {
     /// Submit a request. Returns the response channel, or `Err` when shed
     /// by admission control.
     pub fn submit(&self, request: SortRequest) -> Result<Receiver<SortResponse>, SortRequest> {
+        // Route before the gate so a shed is attributed to its class —
+        // the starvation diagnostics need to see WHICH traffic is shed.
+        let class = self.router.route(request.keys.len());
         let Some(permit) = self.gate.try_acquire() else {
             self.stats.shed.inc();
+            if let Some(cs) = class.and_then(|c| self.stats.classes.get(c)) {
+                cs.shed.inc();
+            }
             return Err(request);
         };
         self.stats.admitted.inc();
+        if let Some(cs) = class.and_then(|c| self.stats.classes.get(c)) {
+            cs.admitted.inc();
+        }
         let (tx, rx) = std::sync::mpsc::channel();
         let arrived = Instant::now();
-        match self.router.route(request.keys.len()) {
+        match class {
             Some(class) => {
                 let mut batchers = self.sched.batchers.lock().unwrap();
                 batchers[class].push(Pending {
@@ -274,7 +344,7 @@ impl Service {
                 // Oversized (or empty) request: CPU fallback, run inline —
                 // submit() is documented to be cheap for routed requests;
                 // oversized ones are the caller's explicit trade.
-                self.cpu_path(request, arrived, &tx);
+                self.cpu_path(request, None, arrived, &tx);
                 drop(permit);
             }
         }
@@ -287,11 +357,17 @@ impl Service {
         Ok(rx.recv().expect("service dropped response channel"))
     }
 
-    fn cpu_path(&self, mut request: SortRequest, arrived: Instant, tx: &Sender<SortResponse>) {
+    fn cpu_path(
+        &self,
+        mut request: SortRequest,
+        class: Option<usize>,
+        arrived: Instant,
+        tx: &Sender<SortResponse>,
+    ) {
         self.fallback.sort(&mut request.keys, request.descending);
         self.stats.cpu_fallbacks.inc();
         let latency = arrived.elapsed();
-        self.stats.latency.record(latency);
+        self.stats.note_latency(class, request.slo, latency);
         let _ = tx.send(SortResponse {
             id: request.id,
             keys: request.keys,
@@ -391,6 +467,10 @@ impl Service {
             Ok(sorted) => {
                 self.stats.device_batches.inc();
                 self.stats.device_rows.add(occupancy as u64);
+                if let Some(cs) = self.stats.classes.get(class) {
+                    cs.batches.inc();
+                    cs.rows.add(occupancy as u64);
+                }
                 for (i, item) in batch.items.into_iter().enumerate() {
                     let len = item.request.keys.len();
                     let row = &sorted[i * n..(i + 1) * n];
@@ -402,7 +482,8 @@ impl Service {
                         row[..len].to_vec()
                     };
                     let latency = item.arrived.elapsed();
-                    self.stats.latency.record(latency);
+                    self.stats
+                        .note_latency(Some(class), item.request.slo, latency);
                     let _ = item.reply.send(SortResponse {
                         id: item.request.id,
                         keys,
@@ -418,7 +499,7 @@ impl Service {
                 // no request is ever dropped.
                 eprintln!("device batch failed ({err:#}); CPU fallback");
                 for item in batch.items {
-                    self.cpu_path(item.request, item.arrived, &item.reply);
+                    self.cpu_path(item.request, Some(class), item.arrived, &item.reply);
                     drop(item.permit);
                 }
             }
@@ -583,6 +664,55 @@ mod tests {
         let second = s.submit(SortRequest::new(2, vec![2]));
         assert!(second.is_err());
         assert_eq!(s.stats().shed.get(), 1);
+        // The shed is attributed to the class it was routed to.
+        assert_eq!(s.stats().classes[0].shed.get(), 1);
+        assert_eq!(s.stats().classes[0].admitted.get(), 1);
+    }
+
+    #[test]
+    fn per_class_stats_attribute_traffic() {
+        let s = svc(&[(4, 64), (4, 1024)]);
+        assert_eq!(s.stats().classes.len(), 2);
+        assert_eq!(s.stats().classes[0].n, 64);
+        assert_eq!(s.stats().classes[1].n, 1024);
+        s.sort_blocking(SortRequest::new(1, vec![2, 1])).unwrap();
+        s.sort_blocking(SortRequest::new(2, (0..512u32).rev().collect()))
+            .unwrap();
+        let small = &s.stats().classes[0];
+        let big = &s.stats().classes[1];
+        assert_eq!(small.admitted.get(), 1);
+        assert_eq!(big.admitted.get(), 1);
+        assert_eq!(small.batches.get(), 1);
+        assert_eq!(small.rows.get(), 1);
+        assert_eq!(small.latency.count(), 1);
+        assert_eq!(big.latency.count(), 1);
+        // Oversized requests route nowhere: aggregate only.
+        s.sort_blocking(SortRequest::new(3, (0..5000u32).collect()))
+            .unwrap();
+        assert_eq!(s.stats().cpu_fallbacks.get(), 1);
+        assert_eq!(small.admitted.get() + big.admitted.get(), 2);
+    }
+
+    #[test]
+    fn slo_misses_are_counted_per_class() {
+        // A 3ms-per-batch backend cannot meet a 1ns SLO; the miss must
+        // land in both the aggregate and the class counters.
+        let s = Service::new(
+            vec![Arc::new(SlowMock {
+                batch: 1,
+                n: 64,
+                cost: Duration::from_millis(3),
+            }) as Arc<dyn BatchSorter>],
+            ServiceConfig::default(),
+        );
+        s.sort_blocking(SortRequest::new(1, vec![2, 1]).with_slo(Duration::from_nanos(1)))
+            .unwrap();
+        assert_eq!(s.stats().slo_misses.get(), 1);
+        assert_eq!(s.stats().classes[0].slo_misses.get(), 1);
+        // A generous SLO is not a miss.
+        s.sort_blocking(SortRequest::new(2, vec![2, 1]).with_slo(Duration::from_secs(60)))
+            .unwrap();
+        assert_eq!(s.stats().slo_misses.get(), 1);
     }
 
     #[test]

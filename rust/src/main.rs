@@ -4,6 +4,8 @@
 //!
 //! * `sort`      — sort one generated workload through a chosen path
 //! * `serve`     — run the sort service on a synthetic request stream
+//! * `serve-tcp` — expose the sort service over TCP (length-prefixed frames)
+//! * `loadgen`   — drive a `serve-tcp` endpoint with mixed serving traffic
 //! * `table1`    — regenerate the paper's Table 1 (also in benches)
 //! * `simulate`  — print calibrated GPU-model predictions
 //! * `network`   — print the bitonic network (paper Fig. 2)
@@ -14,28 +16,38 @@
 //! * `gen-artifacts` — synthesize HLO artifact grids beyond the 64K fixture
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use bitonic_tpu::bench::{
     matrix::{run_matrix, run_mega_cells, run_pass_ablation, DeviceCtx},
-    render_results, MatrixConfig, Substrate, Trajectory,
+    render_results, run_loadgen, LoadMode, LoadgenConfig, MatrixConfig, Substrate, Trajectory,
 };
-use bitonic_tpu::coordinator::{RegistrySorter, Service, ServiceConfig, SortRequest};
+use bitonic_tpu::coordinator::{
+    NetClient, NetServer, NetServerConfig, RegistrySorter, Service, ServiceConfig, SortRequest,
+};
 use bitonic_tpu::runtime::{
-    genart, spawn_device_host_discovered, tune, tune_tiles, ArtifactKind, HostConfig, Key,
-    Manifest, PlanConfig, PlanPolicy, TileProfile, TuneRequest, TuningProfile,
+    genart, spawn_device_host_discovered, tune, tune_tiles, ArtifactKind, DeviceHandle,
+    HostConfig, Key, Manifest, PlanConfig, PlanPolicy, TileProfile, TuneRequest, TuningProfile,
 };
 use bitonic_tpu::sim::{calibrate_from_table1, PAPER_TABLE1};
 use bitonic_tpu::sort::network::{Network, Variant};
 use bitonic_tpu::sort::{bitonic_sort_padded, bitonic_sort_parallel_padded, quicksort, KernelChoice};
 use bitonic_tpu::util::cli::Parser;
 use bitonic_tpu::util::table::{fmt_ms, fmt_size, Table};
-use bitonic_tpu::workload::{Distribution, Generator};
+use bitonic_tpu::workload::{Distribution, Generator, TrafficMix};
 
 fn main() -> bitonic_tpu::Result<()> {
     let parser = Parser::new("bitonic-tpu", "bitonic sort on the rust+JAX+Pallas stack")
         .command("sort", "sort one generated workload")
         .command("serve", "run the sort service on a synthetic stream")
+        .command(
+            "serve-tcp",
+            "serve the sort service over TCP (length-prefixed binary protocol)",
+        )
+        .command(
+            "loadgen",
+            "drive a serve-tcp endpoint with mixed traffic; append latency/shed records",
+        )
         .command("table1", "regenerate the paper's Table 1")
         .command("simulate", "GPU cost-model predictions")
         .command("network", "print the bitonic network (Fig. 2)")
@@ -135,9 +147,51 @@ fn main() -> bitonic_tpu::Result<()> {
             None,
         )
         .opt("seed", "workload seed", Some("42"))
+        .opt(
+            "addr",
+            "serve-tcp: listen address (default 127.0.0.1:7071); \
+             loadgen: target endpoint (default: self-host a loopback server)",
+            None,
+        )
+        .opt(
+            "qps",
+            "loadgen: open-loop target rate across all connections \
+             (0 = closed loop, one request in flight per connection)",
+            Some("0"),
+        )
+        .opt("duration-secs", "loadgen: wall-clock run length", Some("10"))
+        .opt("conns", "loadgen: concurrent client connections", Some("4"))
+        .opt("mix", "loadgen: traffic mix (serving|smoke)", Some("serving"))
+        .opt(
+            "max-in-flight",
+            "serve-tcp/loadgen self-host: service admission bound",
+            None,
+        )
+        .opt(
+            "max-keys",
+            "serve-tcp: largest key count accepted per request frame",
+            None,
+        )
+        .opt(
+            "read-timeout-ms",
+            "serve-tcp: close connections idle longer than this",
+            Some("30000"),
+        )
+        .opt(
+            "write-timeout-ms",
+            "serve-tcp: socket write timeout for stalled readers",
+            Some("10000"),
+        )
+        .flag(
+            "stop-server",
+            "loadgen: send a Shutdown frame to the target when done",
+        )
         .flag("no-profile", "ignore any tuning profile")
         .flag("gate", "report --diff: exit non-zero when any cell slowed down more than 2x")
-        .flag("smoke", "tune/bench/gen-artifacts: tiny CI-sized sweep")
+        .flag(
+            "smoke",
+            "tune/bench/gen-artifacts/loadgen: tiny CI-sized sweep",
+        )
         .flag(
             "hier",
             "tune: sweep the hierarchical tile axis instead (writes autotune_hier.tsv)",
@@ -148,6 +202,8 @@ fn main() -> bitonic_tpu::Result<()> {
     match args.command.as_deref() {
         Some("sort") => cmd_sort(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-tcp") => cmd_serve_tcp(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("table1") => cmd_table1(&args),
         Some("simulate") => cmd_simulate(),
         Some("network") => cmd_network(&args),
@@ -460,6 +516,186 @@ fn cmd_serve(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
         st.shed.get(),
         st.cpu_fallbacks.get(),
     );
+    Ok(())
+}
+
+/// Spawn the device host + warmed [`Service`] the way `serve` does —
+/// shared by `serve-tcp` and the self-hosting `loadgen` path so both
+/// front-ends sit on identical plumbing (same plan policy, same thread
+/// split, same admission bound).
+fn spawn_sort_service(
+    args: &bitonic_tpu::util::cli::Args,
+) -> bitonic_tpu::Result<(DeviceHandle, Arc<Service>)> {
+    let variant = Variant::parse(&args.get_or("variant", "optimized"))
+        .ok_or_else(|| bitonic_tpu::err!("bad variant"))?;
+    let dir = artifacts_dir(args);
+    let plan = plan_policy(args, &dir)?;
+    // Same split as `serve`: the profile tunes the executor pool only,
+    // never the service's work-stealing worker count.
+    let host_threads = pick_threads(args, &plan)?;
+    let service_threads: usize = args.parsed_or("threads", 8)?;
+    let (handle, manifest) =
+        spawn_device_host_discovered(&dir, HostConfig { threads: host_threads, plan })?;
+    println!(
+        "warming {} artifacts… ({host_threads} executor / {service_threads} service threads)",
+        manifest.size_classes(variant).len()
+    );
+    handle.warm_up(variant)?;
+    let sorters: Vec<Arc<dyn bitonic_tpu::coordinator::BatchSorter>> = manifest
+        .size_classes(variant)
+        .into_iter()
+        .map(|m| {
+            Arc::new(RegistrySorter::new(handle.clone(), m))
+                as Arc<dyn bitonic_tpu::coordinator::BatchSorter>
+        })
+        .collect();
+    let defaults = ServiceConfig::default();
+    let max_in_flight: usize = args.parsed_or("max-in-flight", defaults.max_in_flight)?;
+    let svc = Service::new(
+        sorters,
+        ServiceConfig {
+            threads: service_threads,
+            max_in_flight,
+            ..defaults
+        },
+    );
+    Ok((handle, svc))
+}
+
+/// Render the per-class half of a [`bitonic_tpu::coordinator::ServiceStats`]
+/// snapshot as a table — printed by `serve-tcp` at drain time and by the
+/// self-hosting `loadgen` path at teardown.
+fn print_class_stats(svc: &Service) {
+    let st = svc.stats();
+    let mut table = Table::new(vec![
+        "class n", "batch", "admitted", "shed", "batches", "rows", "slo miss", "latency",
+    ]);
+    for c in &st.classes {
+        table.row(vec![
+            c.n.to_string(),
+            c.batch.to_string(),
+            c.admitted.get().to_string(),
+            c.shed.get().to_string(),
+            c.batches.get().to_string(),
+            c.rows.get().to_string(),
+            c.slo_misses.get().to_string(),
+            c.latency.summary(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "aggregate: admitted {} shed {} cpu-fallback {} slo-miss {} — latency {}",
+        st.admitted.get(),
+        st.shed.get(),
+        st.cpu_fallbacks.get(),
+        st.slo_misses.get(),
+        st.latency.summary(),
+    );
+}
+
+/// `serve-tcp`: bind the length-prefixed binary protocol on `--addr`,
+/// serve until a Shutdown frame arrives, then drain connections and
+/// print transport + per-class service statistics.
+fn cmd_serve_tcp(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7071");
+    let config = NetServerConfig {
+        max_keys: args
+            .parsed_or("max-keys", bitonic_tpu::coordinator::net::DEFAULT_MAX_KEYS)?,
+        read_timeout: Duration::from_millis(args.parsed_or("read-timeout-ms", 30_000)?),
+        write_timeout: Duration::from_millis(args.parsed_or("write-timeout-ms", 10_000)?),
+    };
+    let (handle, svc) = spawn_sort_service(args)?;
+    let mut server = NetServer::start(Arc::clone(&svc), &addr, config)?;
+    // Greppable by scripts/verify.sh and CI, which parse the resolved
+    // ephemeral port out of this line.
+    println!(
+        "listening on {} — stop with a Shutdown frame (loadgen --stop-server)",
+        server.local_addr()
+    );
+    server.wait_shutdown();
+    println!("shutdown frame received; draining connections…");
+    server.shutdown();
+    println!("transport: {}", server.stats().summary());
+    print_class_stats(&svc);
+    svc.shutdown();
+    handle.shutdown();
+    Ok(())
+}
+
+/// `loadgen`: drive a `serve-tcp` endpoint with the seeded traffic mix.
+/// Without `--addr` it self-hosts a loopback server first, so
+/// `bitonic-tpu loadgen --smoke` is a one-command E2E check. Appends
+/// schema-valid `loadgen` records to the bench trajectory.
+fn cmd_loadgen(args: &bitonic_tpu::util::cli::Args) -> bitonic_tpu::Result<()> {
+    let seed: u64 = args.parsed_or("seed", 42)?;
+    let smoke = args.flag("smoke");
+    let mut cfg = if smoke {
+        LoadgenConfig::smoke(seed)
+    } else {
+        let qps: f64 = args.parsed_or("qps", 0.0)?;
+        LoadgenConfig {
+            mode: if qps > 0.0 { LoadMode::Open { qps } } else { LoadMode::Closed },
+            conns: args.parsed_or("conns", 4)?,
+            duration: Duration::from_secs(args.parsed_or("duration-secs", 10)?),
+            seed,
+            mix: TrafficMix::parse(&args.get_or("mix", "serving"))
+                .ok_or_else(|| bitonic_tpu::err!("bad --mix (serving|smoke)"))?,
+            timeout: Duration::from_secs(30),
+        }
+    };
+    // `--smoke --qps N` upgrades the smoke run to open-loop pacing so CI
+    // exercises both modes without paying for a full-length run.
+    if smoke {
+        let qps: f64 = args.parsed_or("qps", 0.0)?;
+        if qps > 0.0 {
+            cfg.mode = LoadMode::Open { qps };
+        }
+    }
+
+    // Self-host a loopback server when no target was given.
+    let hosted = match args.get("addr") {
+        Some(_) => None,
+        None => {
+            let (handle, svc) = spawn_sort_service(args)?;
+            let server = NetServer::start(
+                Arc::clone(&svc),
+                "127.0.0.1:0",
+                NetServerConfig::default(),
+            )?;
+            println!("self-hosting loopback server on {}", server.local_addr());
+            Some((handle, svc, server))
+        }
+    };
+    let addr = match &hosted {
+        Some((_, _, server)) => server.local_addr().to_string(),
+        None => args.get("addr").unwrap().to_string(),
+    };
+
+    let report = run_loadgen(&addr, &cfg)?;
+    println!("{}", report.render());
+
+    if args.flag("stop-server") && hosted.is_none() {
+        let mut client = NetClient::connect(addr.as_str())?;
+        client.shutdown_server(seed)?;
+        println!("sent shutdown frame to {addr}");
+    }
+    if let Some((handle, svc, mut server)) = hosted {
+        server.shutdown();
+        print_class_stats(&svc);
+        svc.shutdown();
+        handle.shutdown();
+    }
+
+    bitonic_tpu::ensure!(
+        report.protocol_errors() == 0,
+        "loadgen saw {} protocol errors/rejections — the wire path is broken",
+        report.protocol_errors()
+    );
+    let path = trajectory_path(args);
+    let records = report.to_records();
+    let added = records.len();
+    let total = Trajectory::append_to(&path, records)?;
+    println!("appended {added} loadgen record(s) to {path:?} ({total} total)");
     Ok(())
 }
 

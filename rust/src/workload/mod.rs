@@ -5,10 +5,14 @@
 //! provides the distributions used by the wider sorting literature
 //! (sorted, reverse-sorted, nearly-sorted, duplicate-heavy, Gaussian,
 //! zero-entropy) for the extended experiments (DESIGN.md E6–E9).
+//! [`traffic`] composes those distributions into weighted serving
+//! mixes for the loadgen harness.
 
 pub mod datasets;
 pub mod generator;
 pub mod rng;
+pub mod traffic;
 
 pub use generator::{Distribution, Generator};
 pub use rng::{Pcg32, SplitMix64};
+pub use traffic::{TrafficClass, TrafficGen, TrafficMix, TrafficRequest};

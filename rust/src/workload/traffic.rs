@@ -1,0 +1,286 @@
+//! Traffic mixes for the serving loadgen: weighted request classes over
+//! the existing [`Distribution`] generator.
+//!
+//! A serving front-end sees *mixed* traffic — different sizes, orders,
+//! SLOs, and input distributions at once (the regime where Božidar &
+//! Dobravec show algorithm rankings invert, and exactly what per-class
+//! autotune profiles assume away). [`TrafficMix`] names that mix;
+//! [`TrafficGen`] draws a deterministic request stream from it.
+//!
+//! Determinism contract (pinned by `rust/tests/service_load.rs`): the
+//! stream is a pure function of `(mix, seed)` — same seed, same
+//! requests, byte for byte — so latency differences between two loadgen
+//! runs are attributable to the server, never the generator.
+
+use std::time::Duration;
+
+use super::generator::{Distribution, Generator};
+use super::rng::SplitMix64;
+
+/// One weighted request class in a traffic mix.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    /// Label carried into per-class reports and bench records.
+    pub name: &'static str,
+    /// Relative draw weight (≥ 1).
+    pub weight: u32,
+    /// Smallest request length (inclusive, ≥ 1).
+    pub min_len: usize,
+    /// Largest request length (inclusive).
+    pub max_len: usize,
+    /// Input distribution of the keys.
+    pub dist: Distribution,
+    /// Sort order requested.
+    pub descending: bool,
+    /// SLO budget attached to every request of this class.
+    pub slo: Option<Duration>,
+}
+
+/// A named set of weighted classes.
+#[derive(Clone, Debug)]
+pub struct TrafficMix {
+    /// The classes, drawn proportionally to their weights.
+    pub classes: Vec<TrafficClass>,
+}
+
+impl TrafficMix {
+    /// The default serving mix: latency-sensitive small sorts dominate,
+    /// a medium batch tier rides along, and a trickle of large
+    /// descending analytics scans keeps the big classes warm.
+    pub fn serving() -> Self {
+        Self {
+            classes: vec![
+                TrafficClass {
+                    name: "interactive",
+                    weight: 6,
+                    min_len: 64,
+                    max_len: 1024,
+                    dist: Distribution::Uniform,
+                    descending: false,
+                    slo: Some(Duration::from_millis(50)),
+                },
+                TrafficClass {
+                    name: "batch",
+                    weight: 3,
+                    min_len: 1024,
+                    max_len: 16384,
+                    dist: Distribution::DupHeavy,
+                    descending: false,
+                    slo: Some(Duration::from_millis(250)),
+                },
+                TrafficClass {
+                    name: "analytics",
+                    weight: 1,
+                    min_len: 16384,
+                    max_len: 65536,
+                    dist: Distribution::Reverse,
+                    descending: true,
+                    slo: None,
+                },
+            ],
+        }
+    }
+
+    /// A tiny mix for CI smokes: both classes fit the small fixture
+    /// artifacts, so a smoke run exercises batching without paying for
+    /// 64K-row sorts.
+    pub fn smoke() -> Self {
+        Self {
+            classes: vec![
+                TrafficClass {
+                    name: "interactive",
+                    weight: 4,
+                    min_len: 16,
+                    max_len: 512,
+                    dist: Distribution::Uniform,
+                    descending: false,
+                    slo: Some(Duration::from_millis(100)),
+                },
+                TrafficClass {
+                    name: "batch",
+                    weight: 2,
+                    min_len: 512,
+                    max_len: 2048,
+                    dist: Distribution::DupHeavy,
+                    descending: false,
+                    slo: Some(Duration::from_millis(500)),
+                },
+            ],
+        }
+    }
+
+    /// Look a built-in mix up by CLI name.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "serving" => Some(Self::serving()),
+            "smoke" => Some(Self::smoke()),
+            _ => None,
+        }
+    }
+
+    /// Reject empty or degenerate mixes before a generator is built.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(!self.classes.is_empty(), "traffic mix has no classes");
+        for c in &self.classes {
+            crate::ensure!(c.weight >= 1, "class {}: weight must be >= 1", c.name);
+            crate::ensure!(c.min_len >= 1, "class {}: min_len must be >= 1", c.name);
+            crate::ensure!(
+                c.min_len <= c.max_len,
+                "class {}: min_len {} > max_len {}",
+                c.name,
+                c.min_len,
+                c.max_len
+            );
+        }
+        Ok(())
+    }
+
+    /// Sum of class weights.
+    pub fn total_weight(&self) -> u64 {
+        self.classes.iter().map(|c| u64::from(c.weight)).sum()
+    }
+
+    /// Largest request length any class can draw.
+    pub fn max_len(&self) -> usize {
+        self.classes.iter().map(|c| c.max_len).max().unwrap_or(0)
+    }
+}
+
+/// One drawn request (the wire-agnostic shape; the loadgen maps it onto
+/// a Sort frame).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrafficRequest {
+    /// Sequence number within this generator (0-based).
+    pub id: u64,
+    /// Index into the mix's `classes`.
+    pub class: usize,
+    /// The keys to sort.
+    pub keys: Vec<u32>,
+    /// Sort order.
+    pub descending: bool,
+    /// SLO budget, from the class.
+    pub slo: Option<Duration>,
+}
+
+/// Deterministic request stream over a [`TrafficMix`].
+pub struct TrafficGen {
+    mix: TrafficMix,
+    rng: SplitMix64,
+    next_id: u64,
+}
+
+impl TrafficGen {
+    /// Build a generator; panics on an invalid mix (call
+    /// [`TrafficMix::validate`] first for a recoverable error).
+    pub fn new(mix: TrafficMix, seed: u64) -> Self {
+        mix.validate().expect("invalid traffic mix");
+        Self {
+            mix,
+            rng: SplitMix64::new(seed),
+            next_id: 0,
+        }
+    }
+
+    /// The mix this generator draws from.
+    pub fn mix(&self) -> &TrafficMix {
+        &self.mix
+    }
+
+    /// Draw the next request: weighted class pick, uniform length in
+    /// the class range, keys from the class distribution.
+    pub fn next_request(&mut self) -> TrafficRequest {
+        let mut pick = self.rng.next_below(self.mix.total_weight());
+        let mut class = self.mix.classes.len() - 1;
+        for (i, c) in self.mix.classes.iter().enumerate() {
+            if pick < u64::from(c.weight) {
+                class = i;
+                break;
+            }
+            pick -= u64::from(c.weight);
+        }
+        let c = &self.mix.classes[class];
+        let span = (c.max_len - c.min_len + 1) as u64;
+        let len = c.min_len + self.rng.next_below(span) as usize;
+        let keys = Generator::new(self.rng.next_u64()).u32s(len, c.dist);
+        let id = self.next_id;
+        self.next_id += 1;
+        TrafficRequest {
+            id,
+            class,
+            keys,
+            descending: c.descending,
+            slo: c.slo,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = TrafficGen::new(TrafficMix::serving(), 7);
+        let mut b = TrafficGen::new(TrafficMix::serving(), 7);
+        for _ in 0..200 {
+            assert_eq!(a.next_request(), b.next_request());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = TrafficGen::new(TrafficMix::serving(), 1);
+        let mut b = TrafficGen::new(TrafficMix::serving(), 2);
+        let same = (0..50).filter(|_| a.next_request() == b.next_request()).count();
+        assert!(same < 50, "independent seeds produced identical streams");
+    }
+
+    #[test]
+    fn lengths_respect_class_bounds_and_weights_bias_the_draw() {
+        let mix = TrafficMix::serving();
+        let mut gen = TrafficGen::new(mix.clone(), 42);
+        let mut per_class = vec![0usize; mix.classes.len()];
+        for i in 0..600 {
+            let r = gen.next_request();
+            assert_eq!(r.id, i as u64);
+            let c = &mix.classes[r.class];
+            assert!(
+                (c.min_len..=c.max_len).contains(&r.keys.len()),
+                "class {} drew len {}",
+                c.name,
+                r.keys.len()
+            );
+            assert_eq!(r.descending, c.descending);
+            assert_eq!(r.slo, c.slo);
+            per_class[r.class] += 1;
+        }
+        // 6:3:1 weights: interactive must dominate analytics clearly.
+        assert!(per_class[0] > per_class[2] * 2, "weights ignored: {per_class:?}");
+        assert!(per_class.iter().all(|&c| c > 0), "a class never drew: {per_class:?}");
+    }
+
+    #[test]
+    fn builtin_mixes_parse_and_validate() {
+        for name in ["serving", "smoke"] {
+            let mix = TrafficMix::parse(name).unwrap();
+            mix.validate().unwrap();
+            assert!(mix.total_weight() >= 1);
+            assert!(mix.max_len() >= 1);
+        }
+        assert!(TrafficMix::parse("nope").is_none());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_mixes() {
+        assert!(TrafficMix { classes: vec![] }.validate().is_err());
+        let mut mix = TrafficMix::smoke();
+        mix.classes[0].weight = 0;
+        assert!(mix.validate().is_err());
+        let mut mix = TrafficMix::smoke();
+        mix.classes[0].min_len = 0;
+        assert!(mix.validate().is_err());
+        let mut mix = TrafficMix::smoke();
+        mix.classes[0].min_len = mix.classes[0].max_len + 1;
+        assert!(mix.validate().is_err());
+    }
+}

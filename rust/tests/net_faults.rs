@@ -1,0 +1,206 @@
+//! Fault-injection tests for the TCP front-end: misbehaving clients —
+//! mid-request and mid-response disconnects, stalled readers, and
+//! admission floods — must be absorbed without wedging a worker, and
+//! the very next well-behaved request must succeed. Each scenario also
+//! checks that the failure landed in the right [`NetStats`] /
+//! `ServiceStats` counter, so operators can see it.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitonic_tpu::coordinator::net::{Frame, NetClient, NetServer, NetServerConfig, SortReply};
+use bitonic_tpu::coordinator::{BatchSorter, Service, ServiceConfig};
+use bitonic_tpu::sort::bitonic_sort;
+
+/// CPU mock with an optional per-batch delay (holds admission permits
+/// long enough for floods to actually collide with the gate).
+struct SlowMock {
+    batch: usize,
+    n: usize,
+    delay: Duration,
+}
+
+impl BatchSorter for SlowMock {
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.n)
+    }
+    fn sort_rows(&self, mut rows: Vec<u32>) -> bitonic_tpu::Result<Vec<u32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        for r in rows.chunks_mut(self.n) {
+            bitonic_sort(r);
+        }
+        Ok(rows)
+    }
+}
+
+fn serve_with(
+    classes: Vec<(usize, usize, Duration)>,
+    service: ServiceConfig,
+    net: NetServerConfig,
+) -> (NetServer, Arc<Service>) {
+    let sorters = classes
+        .into_iter()
+        .map(|(batch, n, delay)| {
+            Arc::new(SlowMock { batch, n, delay }) as Arc<dyn BatchSorter>
+        })
+        .collect();
+    let svc = Service::new(sorters, service);
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", net).unwrap();
+    (server, svc)
+}
+
+fn teardown(mut server: NetServer, svc: Arc<Service>) {
+    server.request_shutdown();
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Poll `cond` until it holds or `deadline` passes. The counters these
+/// tests watch are bumped by server threads, so assertions must wait,
+/// not sample once.
+fn eventually(deadline: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn assert_next_request_succeeds(server: &NetServer) {
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    match client.sort(999, vec![4u32, 2, 6, 1], false, None).unwrap() {
+        SortReply::Sorted { keys, .. } => assert_eq!(keys, vec![1, 2, 4, 6]),
+        other => panic!("follow-up request failed: {other:?}"),
+    }
+}
+
+#[test]
+fn disconnect_mid_request_is_counted_and_does_not_wedge_the_server() {
+    let (server, svc) = serve_with(
+        vec![(4, 64, Duration::ZERO)],
+        ServiceConfig::default(),
+        NetServerConfig::default(),
+    );
+    {
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // A length prefix promising a 64-byte frame, then only 10 bytes
+        // of it — the connection dies mid-frame.
+        stream.write_all(&64u32.to_le_bytes()).unwrap();
+        stream.write_all(&[0u8; 10]).unwrap();
+        stream.flush().unwrap();
+    } // drop = RST/FIN with a partial frame buffered server-side
+    eventually(Duration::from_secs(20), "disconnect counter", || {
+        server.stats().disconnects.get() >= 1
+    });
+    assert_next_request_succeeds(&server);
+    teardown(server, svc);
+}
+
+#[test]
+fn disconnect_mid_response_is_absorbed() {
+    // The delay keeps the batch in flight while the client walks away,
+    // so the server's response write lands on a dead connection.
+    let (server, svc) = serve_with(
+        vec![(1, 64, Duration::from_millis(50))],
+        ServiceConfig::default(),
+        NetServerConfig::default(),
+    );
+    {
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        let frame = Frame::Sort { id: 1, descending: false, slo_us: 0, keys: vec![3, 1, 2] };
+        stream.write_all(&frame.encode()).unwrap();
+        stream.flush().unwrap();
+    } // drop before the 50ms batch completes
+    // The request still runs to completion service-side…
+    eventually(Duration::from_secs(20), "batch completion", || {
+        svc.stats().latency.count() >= 1
+    });
+    // …and the server survives the failed response write.
+    assert_next_request_succeeds(&server);
+    teardown(server, svc);
+}
+
+#[test]
+fn stalled_reader_trips_the_write_timeout() {
+    // Big rows + a tiny write timeout: a client that floods requests but
+    // never reads responses must get its connection cut, not pin a
+    // server thread forever.
+    let (server, svc) = serve_with(
+        vec![(1, 65536, Duration::ZERO)],
+        ServiceConfig::default(),
+        NetServerConfig {
+            write_timeout: Duration::from_millis(200),
+            ..NetServerConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+    let flood = std::thread::spawn(move || {
+        let Ok(mut stream) = TcpStream::connect(addr) else { return };
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+        // ~32 responses × 256KB ≫ any default socket buffering. Writes
+        // start failing once the server cuts the connection; that is the
+        // point, so errors just end the flood.
+        for id in 0..32u64 {
+            let keys: Vec<u32> = (0..65536u32).rev().collect();
+            let frame = Frame::Sort { id, descending: false, slo_us: 0, keys };
+            if stream.write_all(&frame.encode()).is_err() {
+                break;
+            }
+        }
+        // Never read; never close until the timeout fires server-side.
+        std::thread::sleep(Duration::from_secs(20));
+    });
+    eventually(Duration::from_secs(30), "write timeout counter", || {
+        server.stats().write_timeouts.get() >= 1
+    });
+    assert_next_request_succeeds(&server);
+    teardown(server, svc);
+    // The flood thread sleeps out its 20s on purpose; don't wait for it.
+    drop(flood);
+}
+
+#[test]
+fn flood_past_the_admission_gate_sheds_and_recovers() {
+    let (server, svc) = serve_with(
+        vec![(1, 256, Duration::from_millis(30))],
+        ServiceConfig { max_in_flight: 2, ..ServiceConfig::default() },
+        NetServerConfig::default(),
+    );
+    let addr = server.local_addr();
+    let workers: Vec<_> = (0..16u64)
+        .map(|id| {
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                let keys: Vec<u32> = (0..256u32).rev().collect();
+                client.sort(id, keys, false, None).unwrap()
+            })
+        })
+        .collect();
+    let replies: Vec<SortReply> = workers.into_iter().map(|h| h.join().unwrap()).collect();
+    let sheds = replies
+        .iter()
+        .filter(|r| matches!(r, SortReply::Shed { .. }))
+        .count();
+    let sorted = replies
+        .iter()
+        .filter(|r| {
+            matches!(r, SortReply::Sorted { keys, .. } if keys.windows(2).all(|w| w[0] <= w[1]))
+        })
+        .count();
+    assert_eq!(sheds + sorted, 16, "unexpected reply kind in {replies:?}");
+    assert!(sheds >= 1, "16-way flood against max_in_flight=2 never shed");
+    assert!(sorted >= 1, "every request shed — the gate admitted nothing");
+    // The shed landed in both the aggregate and the per-class counters,
+    // and on the transport's own tally.
+    let st = svc.stats();
+    assert_eq!(st.shed.get(), sheds as u64);
+    assert_eq!(st.classes[0].shed.get(), sheds as u64);
+    assert_eq!(server.stats().sheds.get(), sheds as u64);
+    // No wedged worker: a well-behaved request sails through.
+    assert_next_request_succeeds(&server);
+    teardown(server, svc);
+}

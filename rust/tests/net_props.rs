@@ -1,0 +1,506 @@
+//! Protocol property tests for `coordinator::net`: randomized codec
+//! round-trips, the pinned golden byte vectors (mirrored byte-for-byte
+//! by `python/tests/test_net.py`), a malformed-frame table, truncation
+//! sweeps, seeded garbage fuzzing, and live-socket behaviors a unit
+//! test cannot reach — garbage on the wire, oversize length prefixes,
+//! and client-sent server ops against a real `NetServer`.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitonic_tpu::coordinator::net::{
+    frame_cap, read_event_blocking, ErrorCode, Frame, FrameReader, NetClient, NetServer,
+    NetServerConfig, ReadEvent, SortReply, WireError, DEFAULT_MAX_KEYS, MAGIC, MAX_ERROR_MSG,
+    VERSION,
+};
+use bitonic_tpu::coordinator::{BatchSorter, Service, ServiceConfig};
+use bitonic_tpu::sort::bitonic_sort;
+use bitonic_tpu::workload::rng::{Pcg32, SplitMix64};
+
+// ---------------------------------------------------------------------
+// Test scaffolding: a CPU mock service behind a real TCP server.
+// ---------------------------------------------------------------------
+
+struct Mock {
+    batch: usize,
+    n: usize,
+}
+
+impl BatchSorter for Mock {
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.n)
+    }
+    fn sort_rows(&self, mut rows: Vec<u32>) -> bitonic_tpu::Result<Vec<u32>> {
+        for r in rows.chunks_mut(self.n) {
+            bitonic_sort(r);
+        }
+        Ok(rows)
+    }
+}
+
+fn serve(config: NetServerConfig) -> (NetServer, Arc<Service>) {
+    let svc = Service::new(
+        vec![
+            Arc::new(Mock { batch: 4, n: 64 }) as Arc<dyn BatchSorter>,
+            Arc::new(Mock { batch: 2, n: 1024 }) as Arc<dyn BatchSorter>,
+        ],
+        ServiceConfig::default(),
+    );
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", config).unwrap();
+    (server, svc)
+}
+
+fn teardown(mut server: NetServer, svc: Arc<Service>) {
+    server.request_shutdown();
+    server.shutdown();
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Randomized round-trips.
+// ---------------------------------------------------------------------
+
+fn random_frame(rng: &mut Pcg32) -> Frame {
+    let keys = |rng: &mut Pcg32| -> Vec<u32> {
+        let len = rng.next_below(64) as usize;
+        (0..len).map(|_| rng.next_u32()).collect()
+    };
+    let id = u64::from(rng.next_u32()) << 32 | u64::from(rng.next_u32());
+    match rng.next_below(6) {
+        0 => Frame::Sort {
+            id,
+            descending: rng.next_below(2) == 1,
+            slo_us: rng.next_u32(),
+            keys: keys(rng),
+        },
+        1 => Frame::Sorted {
+            id,
+            cpu_path: rng.next_below(2) == 1,
+            latency_us: rng.next_u32(),
+            occupancy: rng.next_u32(),
+            keys: keys(rng),
+        },
+        2 => {
+            let len = rng.next_below(48) as usize;
+            let message: String = (0..len)
+                .map(|_| char::from(b'a' + (rng.next_below(26) as u8)))
+                .collect();
+            Frame::Error {
+                code: ErrorCode::from_u8(1 + rng.next_below(5) as u8).unwrap(),
+                id,
+                message,
+            }
+        }
+        3 => Frame::Ping { token: id },
+        4 => Frame::Pong { token: id },
+        _ => Frame::Shutdown { token: id },
+    }
+}
+
+#[test]
+fn randomized_frames_round_trip() {
+    let mut rng = Pcg32::new(0x4E45_5450, 11);
+    for _ in 0..500 {
+        let frame = random_frame(&mut rng);
+        let body = frame.encode_body();
+        let back = Frame::decode_body(&body, DEFAULT_MAX_KEYS).unwrap();
+        assert_eq!(frame, back);
+        // The outer framing layer agrees with the body encoder.
+        let encoded = frame.encode();
+        assert_eq!(&encoded[4..], &body[..]);
+        assert_eq!(
+            u32::from_le_bytes(encoded[..4].try_into().unwrap()) as usize,
+            body.len()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden vectors — pinned in wire.rs unit tests AND in
+// python/tests/test_net.py. All three implementations must agree.
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_ping_frame_bytes() {
+    let encoded = Frame::Ping { token: 0x0102_0304_0506_0708 }.encode();
+    assert_eq!(
+        encoded,
+        vec![
+            0x0e, 0x00, 0x00, 0x00, // length prefix = 14
+            0x42, 0x54, 0x53, 0x50, // "BTSP"
+            0x01, 0x04, // version, op=Ping
+            0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // token LE
+        ]
+    );
+}
+
+#[test]
+fn golden_sort_frame_bytes() {
+    let encoded = Frame::Sort { id: 7, descending: false, slo_us: 0, keys: vec![1, 2] }.encode();
+    assert_eq!(
+        encoded,
+        vec![
+            0x20, 0x00, 0x00, 0x00, // length prefix = 32
+            0x42, 0x54, 0x53, 0x50, 0x01, 0x01, // header, op=Sort
+            0x00, 0x00, // dtype=u32, order=ascending
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id
+            0x00, 0x00, 0x00, 0x00, // slo_us
+            0x02, 0x00, 0x00, 0x00, // n
+            0x01, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00, // keys
+        ]
+    );
+}
+
+#[test]
+fn golden_error_frame_bytes() {
+    let encoded =
+        Frame::Error { code: ErrorCode::Shed, id: 9, message: "shed".into() }.encode();
+    assert_eq!(
+        encoded,
+        vec![
+            0x14, 0x00, 0x00, 0x00, // length prefix = 20
+            0x42, 0x54, 0x53, 0x50, 0x01, 0x03, // header, op=Error
+            0x04, 0x00, // code=Shed, reserved
+            0x09, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id
+            0x73, 0x68, 0x65, 0x64, // "shed"
+        ]
+    );
+}
+
+// ---------------------------------------------------------------------
+// Malformed frames, by kind.
+// ---------------------------------------------------------------------
+
+fn expect_kind(body: &[u8], kind: &str) {
+    match Frame::decode_body(body, DEFAULT_MAX_KEYS) {
+        Err(e) => assert_eq!(e.kind(), kind, "body {body:02x?}"),
+        Ok(f) => panic!("expected {kind}, decoded {f:?}"),
+    }
+}
+
+#[test]
+fn malformed_bodies_fail_with_the_right_kind() {
+    let sort = Frame::Sort { id: 1, descending: false, slo_us: 0, keys: vec![5] }.encode_body();
+
+    // Header damage.
+    let mut bad = sort.clone();
+    bad[0] = b'X';
+    expect_kind(&bad, "bad-magic");
+    let mut bad = sort.clone();
+    bad[4] = 99;
+    expect_kind(&bad, "bad-version");
+    let mut bad = sort.clone();
+    bad[5] = 42;
+    expect_kind(&bad, "bad-op");
+
+    // Field damage on Sort.
+    let mut bad = sort.clone();
+    bad[6] = 7; // dtype
+    expect_kind(&bad, "bad-dtype");
+    let mut bad = sort.clone();
+    bad[7] = 2; // order
+    expect_kind(&bad, "bad-order");
+
+    // Length damage.
+    expect_kind(&sort[..sort.len() - 1], "truncated");
+    let mut bad = sort.clone();
+    bad.push(0);
+    expect_kind(&bad, "trailing");
+
+    // n field larger than the payload actually carries.
+    let mut bad = sort.clone();
+    bad[20] = 2; // claims 2 keys, carries 1
+    expect_kind(&bad, "truncated");
+
+    // Sorted-specific: reserved byte and path flag.
+    let sorted = Frame::Sorted { id: 1, cpu_path: false, latency_us: 1, occupancy: 1, keys: vec![] }
+        .encode_body();
+    let mut bad = sorted.clone();
+    bad[6] = 3; // path
+    expect_kind(&bad, "bad-path");
+    let mut bad = sorted;
+    bad[7] = 1; // reserved
+    expect_kind(&bad, "bad-reserved");
+
+    // Error-specific: unknown code, non-UTF-8 message.
+    let error = Frame::Error { code: ErrorCode::Internal, id: 1, message: "x".into() }
+        .encode_body();
+    let mut bad = error.clone();
+    bad[6] = 0;
+    expect_kind(&bad, "bad-code");
+    let mut bad = error;
+    bad[16] = 0xFF;
+    expect_kind(&bad, "bad-utf8");
+
+    // Oversize n against a small cap.
+    let big = Frame::Sort { id: 1, descending: false, slo_us: 0, keys: vec![0; 9] }.encode_body();
+    match Frame::decode_body(&big, 8) {
+        Err(WireError::Oversize { got, cap }) => {
+            assert_eq!((got, cap), (9, 8));
+        }
+        other => panic!("expected oversize, got {other:?}"),
+    }
+}
+
+#[test]
+fn every_truncation_of_every_frame_type_is_rejected() {
+    let frames = vec![
+        Frame::Sort { id: 3, descending: true, slo_us: 9, keys: vec![1, 2, 3] },
+        Frame::Sorted { id: 3, cpu_path: true, latency_us: 5, occupancy: 2, keys: vec![7] },
+        Frame::Ping { token: 1 },
+        Frame::Pong { token: 2 },
+        Frame::Shutdown { token: 3 },
+    ];
+    for frame in frames {
+        let body = frame.encode_body();
+        for cut in 0..body.len() {
+            assert!(
+                Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS).is_err(),
+                "{frame:?} decoded from a {cut}-byte prefix"
+            );
+        }
+    }
+    // Error is the one variable-tail op without its own length field: a
+    // truncated body is a valid frame with a shorter message (the outer
+    // length prefix delimits it on the wire), so only cuts into the
+    // 16-byte fixed part must fail.
+    let body = Frame::Error { code: ErrorCode::Oversize, id: 3, message: "too big".into() }
+        .encode_body();
+    for cut in 0..16 {
+        assert!(
+            Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS).is_err(),
+            "Error decoded from a {cut}-byte prefix"
+        );
+    }
+    for cut in 16..=body.len() {
+        assert!(
+            matches!(
+                Frame::decode_body(&body[..cut], DEFAULT_MAX_KEYS),
+                Ok(Frame::Error { .. })
+            ),
+            "Error body with a {cut}-byte message tail failed to decode"
+        );
+    }
+}
+
+#[test]
+fn garbage_bodies_never_panic_and_never_alias_valid_frames() {
+    let mut rng = SplitMix64::new(0xB170_F422);
+    for round in 0..2000 {
+        let len = (rng.next_u64() % 256) as usize;
+        let mut body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Half the rounds get a valid header so decoding reaches the
+        // per-op field validation instead of dying on the magic check.
+        if round % 2 == 0 && body.len() >= 6 {
+            body[..4].copy_from_slice(&MAGIC);
+            body[4] = VERSION;
+            body[5] = 1 + (rng.next_u64() % 6) as u8;
+        }
+        let _ = Frame::decode_body(&body, DEFAULT_MAX_KEYS);
+    }
+}
+
+// ---------------------------------------------------------------------
+// FrameReader: incremental delivery.
+// ---------------------------------------------------------------------
+
+/// Yields one byte per `read`, with a `WouldBlock` tick between bytes —
+/// the worst-case fragmentation a non-blocking socket can produce.
+struct Dribble {
+    bytes: Vec<u8>,
+    pos: usize,
+    tick: bool,
+}
+
+impl std::io::Read for Dribble {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.tick {
+            self.tick = false;
+            return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+        }
+        self.tick = true;
+        if self.pos >= self.bytes.len() {
+            return Ok(0); // clean EOF at a frame boundary
+        }
+        buf[0] = self.bytes[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+#[test]
+fn frame_reader_reassembles_byte_dribbled_frames() {
+    let frames = vec![
+        Frame::Sort { id: 1, descending: false, slo_us: 100, keys: vec![3, 1, 2] },
+        Frame::Ping { token: 77 },
+        Frame::Error { code: ErrorCode::Malformed, id: 0, message: "nope".into() },
+    ];
+    let mut bytes = Vec::new();
+    for f in &frames {
+        bytes.extend_from_slice(&f.encode());
+    }
+    let mut src = Dribble { bytes, pos: 0, tick: false };
+    let mut reader = FrameReader::new();
+    let mut got = Vec::new();
+    loop {
+        match reader.poll(&mut src, DEFAULT_MAX_KEYS).unwrap() {
+            None => continue, // WouldBlock tick
+            Some(ReadEvent::Frame(f)) => got.push(f),
+            Some(ReadEvent::Eof) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(got, frames);
+    assert!(!reader.has_partial());
+}
+
+#[test]
+fn frame_reader_flags_oversize_prefix_and_midframe_eof() {
+    // Length prefix past the frame cap → protocol event, not an alloc.
+    let cap = frame_cap(DEFAULT_MAX_KEYS);
+    let mut bytes = (u32::try_from(cap).unwrap() + 1).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[0; 8]);
+    let mut reader = FrameReader::new();
+    match reader
+        .poll(&mut std::io::Cursor::new(bytes), DEFAULT_MAX_KEYS)
+        .unwrap()
+    {
+        Some(ReadEvent::Protocol(e)) => assert_eq!(e.kind(), "oversize"),
+        other => panic!("expected protocol event, got {other:?}"),
+    }
+
+    // EOF in the middle of a frame → Disconnected, not Eof.
+    let encoded = Frame::Ping { token: 9 }.encode();
+    let mut reader = FrameReader::new();
+    let mut cur = std::io::Cursor::new(encoded[..encoded.len() - 3].to_vec());
+    loop {
+        match reader.poll(&mut cur, DEFAULT_MAX_KEYS).unwrap() {
+            Some(ReadEvent::Disconnected) => break,
+            Some(ReadEvent::Frame(f)) => panic!("decoded {f:?} from a truncated stream"),
+            Some(ReadEvent::Eof) => panic!("mid-frame EOF reported as clean"),
+            _ => continue,
+        }
+    }
+}
+
+#[test]
+fn error_messages_clamp_to_the_wire_limit_on_a_char_boundary() {
+    // 'é' is 2 bytes; an odd limit forces the clamp off a boundary.
+    let long: String = "é".repeat(MAX_ERROR_MSG);
+    let body = Frame::Error { code: ErrorCode::Internal, id: 1, message: long }.encode_body();
+    match Frame::decode_body(&body, DEFAULT_MAX_KEYS).unwrap() {
+        Frame::Error { message, .. } => {
+            assert!(message.len() <= MAX_ERROR_MSG);
+            assert!(!message.is_empty());
+            assert!(message.chars().all(|c| c == 'é'));
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live-server protocol behaviors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_server_sorts_both_directions_over_the_wire() {
+    let (server, svc) = serve(NetServerConfig::default());
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let keys = vec![9u32, 1, 5, 3, 7];
+    match client.sort(1, keys.clone(), false, None).unwrap() {
+        SortReply::Sorted { keys: out, .. } => assert_eq!(out, vec![1, 3, 5, 7, 9]),
+        other => panic!("{other:?}"),
+    }
+    match client
+        .sort(2, keys, true, Some(Duration::from_secs(60)))
+        .unwrap()
+    {
+        SortReply::Sorted { keys: out, .. } => assert_eq!(out, vec![9, 7, 5, 3, 1]),
+        other => panic!("{other:?}"),
+    }
+    client.ping(0xDEAD).unwrap();
+    assert_eq!(server.stats().frames_in.get(), 3);
+    teardown(server, svc);
+}
+
+#[test]
+fn live_server_answers_garbage_with_an_error_frame_then_closes() {
+    let (server, svc) = serve(NetServerConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    // A plausible length prefix followed by garbage that fails the magic
+    // check once the body arrives.
+    let mut bytes = 14u32.to_le_bytes().to_vec();
+    bytes.extend_from_slice(b"XXXXxxxxxxxxxx");
+    stream.write_all(&bytes).unwrap();
+    match read_event_blocking(&mut stream, DEFAULT_MAX_KEYS).unwrap() {
+        ReadEvent::Frame(Frame::Error { code, id, .. }) => {
+            assert_eq!(code, ErrorCode::Malformed);
+            assert_eq!(id, 0);
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // The server closes after a protocol error; the next read is EOF.
+    match read_event_blocking(&mut stream, DEFAULT_MAX_KEYS).unwrap() {
+        ReadEvent::Eof => {}
+        other => panic!("expected EOF after protocol error, got {other:?}"),
+    }
+    assert!(server.stats().protocol_errors.get() >= 1);
+    teardown(server, svc);
+}
+
+#[test]
+fn live_server_rejects_oversize_length_prefix() {
+    let (server, svc) = serve(NetServerConfig { max_keys: 256, ..NetServerConfig::default() });
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let huge = u32::try_from(frame_cap(256)).unwrap() + 1;
+    stream.write_all(&huge.to_le_bytes()).unwrap();
+    match read_event_blocking(&mut stream, DEFAULT_MAX_KEYS).unwrap() {
+        ReadEvent::Frame(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Oversize),
+        other => panic!("expected an oversize error frame, got {other:?}"),
+    }
+    teardown(server, svc);
+}
+
+#[test]
+fn live_server_rejects_oversize_sort_but_keeps_smaller_requests_working() {
+    let (server, svc) = serve(NetServerConfig { max_keys: 128, ..NetServerConfig::default() });
+    // Client caps must admit the reply; only the server's cap is small.
+    let mut client =
+        NetClient::connect_with(server.local_addr(), Duration::from_secs(10), DEFAULT_MAX_KEYS)
+            .unwrap();
+    match client.sort(5, vec![0u32; 200], false, None).unwrap() {
+        SortReply::Rejected { code, .. } => assert_eq!(code, ErrorCode::Oversize),
+        other => panic!("expected oversize rejection, got {other:?}"),
+    }
+    teardown(server, svc);
+}
+
+#[test]
+fn live_server_flags_client_sent_server_ops_but_keeps_the_connection() {
+    let (server, svc) = serve(NetServerConfig::default());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let bogus = Frame::Sorted { id: 8, cpu_path: false, latency_us: 1, occupancy: 1, keys: vec![] };
+    stream.write_all(&bogus.encode()).unwrap();
+    match read_event_blocking(&mut stream, DEFAULT_MAX_KEYS).unwrap() {
+        ReadEvent::Frame(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Malformed),
+        other => panic!("expected malformed error, got {other:?}"),
+    }
+    // Connection must survive: a ping still round-trips on it.
+    stream.write_all(&Frame::Ping { token: 31 }.encode()).unwrap();
+    match read_event_blocking(&mut stream, DEFAULT_MAX_KEYS).unwrap() {
+        ReadEvent::Frame(Frame::Pong { token }) => assert_eq!(token, 31),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    teardown(server, svc);
+}

@@ -220,6 +220,87 @@ if [ "${SKIP_BENCH_SMOKE:-0}" != "1" ]; then
         --diff BENCH_trajectory.baseline.json --gate
     rm -f BENCH_trajectory.baseline.json
     echo "== trajectory diff gate clean =="
+
+    # Serving smoke 1: the one-command loopback E2E — loadgen self-hosts
+    # a serve-tcp server, drives the smoke mix closed-loop, gates itself
+    # on zero protocol errors, and appends records to the trajectory.
+    echo "== serving smoke: loadgen --smoke (self-hosted loopback) =="
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL 300 cargo run --release --bin bitonic-tpu -- loadgen --smoke
+    else
+        cargo run --release --bin bitonic-tpu -- loadgen --smoke
+    fi
+
+    # Serving smoke 2: a real out-of-process round trip — background
+    # serve-tcp on an ephemeral port, parse the bound address off its
+    # stdout, drive it open-loop, then stop it with a Shutdown frame and
+    # check it drained cleanly.
+    echo "== serving smoke: serve-tcp + loadgen over the wire =="
+    SERVE_LOG=$(mktemp)
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL 300 cargo run --release --bin bitonic-tpu -- \
+            serve-tcp --addr 127.0.0.1:0 > "$SERVE_LOG" 2>&1 &
+    else
+        cargo run --release --bin bitonic-tpu -- \
+            serve-tcp --addr 127.0.0.1:0 > "$SERVE_LOG" 2>&1 &
+    fi
+    SERVE_PID=$!
+    ADDR=""
+    for _ in $(seq 1 120); do
+        ADDR=$(grep -o 'listening on [0-9.:]*' "$SERVE_LOG" | head -1 | awk '{print $3}' || true)
+        [ -n "$ADDR" ] && break
+        if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+            echo "ERROR: serve-tcp exited before binding:" >&2
+            cat "$SERVE_LOG" >&2
+            exit 1
+        fi
+        sleep 0.5
+    done
+    if [ -z "$ADDR" ]; then
+        echo "ERROR: serve-tcp never printed its listening address" >&2
+        cat "$SERVE_LOG" >&2
+        kill "$SERVE_PID" 2>/dev/null || true
+        exit 1
+    fi
+    if command -v timeout >/dev/null 2>&1; then
+        timeout --signal=KILL 120 cargo run --release --bin bitonic-tpu -- \
+            loadgen --smoke --addr "$ADDR" --qps 200 --stop-server
+    else
+        cargo run --release --bin bitonic-tpu -- \
+            loadgen --smoke --addr "$ADDR" --qps 200 --stop-server
+    fi
+    wait "$SERVE_PID"
+    if ! grep -q "shutdown frame received" "$SERVE_LOG"; then
+        echo "ERROR: serve-tcp did not drain on the Shutdown frame:" >&2
+        cat "$SERVE_LOG" >&2
+        exit 1
+    fi
+    rm -f "$SERVE_LOG"
+
+    # The loadgen records must have landed in the trajectory with the
+    # serving extras, and the report must render the serving section.
+    python3 - <<'EOF'
+import json
+t = json.load(open("BENCH_trajectory.json"))
+recs = [r for r in t["records"] if r["bench"] == "loadgen"]
+assert recs, "no loadgen records in the trajectory"
+# Extras are flattened onto the record object; per-class records carry a
+# "class" key, the aggregate does not.
+agg = [r for r in recs if "class" not in r]
+assert agg, "no aggregate loadgen record"
+for r in agg:
+    for key in ("p50_ms", "p99_ms", "p999_ms", "shed_rate", "slo_miss_rate", "qps_achieved"):
+        assert key in r, f"aggregate loadgen record lacks {key}: {sorted(r)}"
+modes = {r.get("mode") for r in agg}
+assert {"closed", "open"} <= modes, f"expected both pacing modes, got {modes}"
+print(f"serving smoke: {len(recs)} loadgen record(s), modes={sorted(modes)}")
+EOF
+    cargo run --release --bin bitonic-tpu -- report
+    if ! grep -q "Serving over the wire" RESULTS.md; then
+        echo "ERROR: RESULTS.md lacks the serving section" >&2
+        exit 1
+    fi
+    echo "== serving smoke clean: loopback E2E + wire round trip =="
 else
     echo "== bench smoke skipped (SKIP_BENCH_SMOKE=1; CI runs it as its own step) =="
 fi
